@@ -1,0 +1,94 @@
+//! E6 — collective-algorithm scaling benches: completion time vs payload
+//! and scale for every (collective, topology) pair, plus FIFO-vs-LIFO and
+//! chunk-pipelining ablations (the design knobs DESIGN.md calls out).
+
+use modtrans::sim::{collective_ns, ChunkCfg, NetDim, Network, Policy, SimConfig, SystemConfig, TopologyKind};
+use modtrans::translator::{extract, to_workload, ConstantCompute, TranslateOpts};
+use modtrans::util::human_time;
+use modtrans::util::table::Table;
+use modtrans::workload::{CommType, Parallelism};
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+
+const MB: u64 = 1 << 20;
+
+fn main() {
+    let kinds = [
+        TopologyKind::Ring,
+        TopologyKind::FullyConnected,
+        TopologyKind::Switch,
+        TopologyKind::Torus2D,
+    ];
+
+    for comm in [CommType::AllReduce, CommType::AllGather, CommType::AllToAll] {
+        println!("## {} completion time, 64 NPUs (100 GB/s, 500 ns)\n", comm.token());
+        let mut t = Table::new(vec!["Payload", "ring", "fully_connected", "switch", "torus2d"]);
+        for mb in [1u64, 16, 256, 1024] {
+            let mut row = vec![format!("{mb} MiB")];
+            for kind in kinds {
+                let dim = NetDim { kind, npus: 64, bandwidth_gbps: 100.0, latency_ns: 500.0 };
+                row.push(human_time(collective_ns(comm, mb * MB, &dim) as f64 * 1e-9));
+            }
+            t.row(row);
+        }
+        println!("{t}");
+    }
+
+    println!("## all-reduce scaling with NPU count (64 MiB payload)\n");
+    let mut t = Table::new(vec!["NPUs", "ring", "fully_connected", "switch", "torus2d"]);
+    for n in [2usize, 8, 32, 128, 512] {
+        let mut row = vec![n.to_string()];
+        for kind in kinds {
+            let dim = NetDim { kind, npus: n, bandwidth_gbps: 100.0, latency_ns: 500.0 };
+            row.push(human_time(collective_ns(CommType::AllReduce, 64 * MB, &dim) as f64 * 1e-9));
+        }
+        t.row(row);
+    }
+    println!("{t}");
+
+    // Ablation 1: chunk pipelining on the hierarchical all-reduce.
+    println!("## ablation: hierarchical all-reduce chunk pipelining (vgg16 DP, two-tier 8x4)\n");
+    let model = zoo::get("vgg16", ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let summary = extract(&model, 16).unwrap();
+    let opts = TranslateOpts { parallelism: Parallelism::Data, npus: 32, mp_group: 4, batch: 16, zero: modtrans::translator::ZeroStage::None };
+    let w = to_workload(&summary, opts, &ConstantCompute(50_000)).unwrap();
+    let mut t2 = Table::new(vec!["Chunks", "Iteration", "Exposed comm"]);
+    for chunks in [1usize, 2, 4, 8, 16] {
+        let cfg = SimConfig {
+            network: Network::two_tier(8, 4),
+            system: SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks } },
+            iterations: 2,
+            ..Default::default()
+        };
+        let r = modtrans::sim::simulate(&w, &cfg).unwrap();
+        t2.row(vec![
+            chunks.to_string(),
+            human_time(r.iteration_ns as f64 * 1e-9),
+            human_time(r.exposed_ns as f64 * 1e-9),
+        ]);
+    }
+    println!("{t2}");
+
+    // Ablation 2: FIFO vs LIFO communication scheduling (paper §2.2).
+    println!("## ablation: FIFO vs LIFO comm scheduling (gpt2-tiny hybrid, ring 16)\n");
+    let model = zoo::get("gpt2-tiny", ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let summary = extract(&model, 8).unwrap();
+    let opts =
+        TranslateOpts { parallelism: Parallelism::HybridDataModel, npus: 16, mp_group: 4, batch: 8, zero: modtrans::translator::ZeroStage::None };
+    let w = to_workload(&summary, opts, &ConstantCompute(20_000)).unwrap();
+    let mut t3 = Table::new(vec!["Policy", "Iteration", "Exposed comm"]);
+    for (label, policy) in [("FIFO", Policy::Fifo), ("LIFO", Policy::Lifo)] {
+        let cfg = SimConfig {
+            network: Network::single(TopologyKind::Ring, 16, 100.0, 500.0),
+            system: SystemConfig { scheduling: policy, chunks: ChunkCfg { chunks: 4 } },
+            iterations: 2,
+            ..Default::default()
+        };
+        let r = modtrans::sim::simulate(&w, &cfg).unwrap();
+        t3.row(vec![
+            label.to_string(),
+            human_time(r.iteration_ns as f64 * 1e-9),
+            human_time(r.exposed_ns as f64 * 1e-9),
+        ]);
+    }
+    println!("{t3}");
+}

@@ -1,0 +1,133 @@
+//! E5 — end-to-end simulator benches: translated zoo workloads driven
+//! through the full simulator across parallelisms and networks, plus the
+//! raw event-engine throughput (DESIGN.md §Perf target: ≥ 1M events/s).
+
+use modtrans::compute::SystolicCompute;
+use modtrans::sim::{
+    simulate, Engine, Network, Policy, SimConfig, TaskGraph, TopologyKind,
+};
+use modtrans::translator::{extract, to_workload, TranslateOpts};
+use modtrans::util::bench::{black_box, Bench};
+use modtrans::util::human_time;
+use modtrans::util::table::Table;
+use modtrans::workload::Parallelism;
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+use std::time::Instant;
+
+fn main() {
+    // Simulated iteration-time table (who wins, by how much).
+    println!("## simulated iteration time: model x parallelism (16 NPUs, two-tier 4x4)\n");
+    let mut t = Table::new(vec!["Model", "DATA", "MODEL", "HYBRID_DM", "PIPELINE"]);
+    for name in ["resnet50", "vgg16", "gpt2-tiny", "mlp"] {
+        let model = zoo::get(name, ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let summary = extract(&model, 16).unwrap();
+        let compute = SystolicCompute::new(16);
+        let mut row = vec![name.to_string()];
+        for par in [
+            Parallelism::Data,
+            Parallelism::Model,
+            Parallelism::HybridDataModel,
+            Parallelism::Pipeline,
+        ] {
+            let opts = TranslateOpts { parallelism: par, npus: 16, mp_group: 4, batch: 16, zero: modtrans::translator::ZeroStage::None };
+            let w = to_workload(&summary, opts, &compute).unwrap();
+            let cfg = SimConfig {
+                network: Network::two_tier(4, 4),
+                iterations: 2,
+                stages: 4,
+                microbatches: 8,
+                boundary_bytes: summary.layers.iter().map(|l| l.out_act_bytes).max().unwrap_or(1 << 20),
+                ..Default::default()
+            };
+            let r = simulate(&w, &cfg).unwrap();
+            row.push(human_time(r.iteration_ns as f64 * 1e-9));
+        }
+        t.row(row);
+    }
+    println!("{t}");
+
+    // Wall-clock cost of simulation itself.
+    println!("## simulator wall-clock cost\n");
+    let bench = Bench::new(3, 20);
+    for (name, par) in [("resnet50", Parallelism::Data), ("gpt2-small", Parallelism::HybridDataModel)] {
+        let model = zoo::get(name, ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let summary = extract(&model, 16).unwrap();
+        let opts = TranslateOpts { parallelism: par, npus: 16, mp_group: 4, batch: 16, zero: modtrans::translator::ZeroStage::None };
+        let w = to_workload(&summary, opts, &SystolicCompute::new(16)).unwrap();
+        let cfg = SimConfig { network: Network::two_tier(4, 4), iterations: 4, ..Default::default() };
+        bench.run(&format!("simulate {name} {} x4 iters", par.token()), |_| {
+            black_box(simulate(&w, &cfg).unwrap());
+        });
+    }
+
+    // Raw engine throughput: wide synthetic graph, 200k tasks.
+    println!("\n## event-engine throughput (target >= 1M events/s)\n");
+    let n_tasks = 200_000usize;
+    let lanes = 64usize;
+    let t0 = Instant::now();
+    let mut eng = Engine::new();
+    let res: Vec<_> = (0..lanes).map(|i| eng.add_resource(format!("r{i}"), Policy::Fifo)).collect();
+    let mut g = TaskGraph::new();
+    let mut prev: Vec<Option<usize>> = vec![None; lanes];
+    for i in 0..n_tasks {
+        let lane = i % lanes;
+        let deps: Vec<usize> = prev[lane].into_iter().collect();
+        prev[lane] = Some(g.add("t", res[lane], (i % 97 + 1) as u64, &deps));
+    }
+    let build = t0.elapsed();
+    let t1 = Instant::now();
+    let s = eng.run(&g).unwrap();
+    let run = t1.elapsed();
+    println!(
+        "{} tasks: build {} run {} -> {:.2}M events/s",
+        s.events,
+        human_time(build.as_secs_f64()),
+        human_time(run.as_secs_f64()),
+        s.events as f64 / run.as_secs_f64() / 1e6
+    );
+
+    // Contended case: one resource, all tasks ready at t=0 (the shape a
+    // single network dimension sees when every layer's gradient sync
+    // queues at once). FIFO pops here are where a naive Vec::remove(0)
+    // backlog goes quadratic.
+    let n_tasks = 100_000usize;
+    let mut eng = Engine::new();
+    let r = eng.add_resource("net", Policy::Fifo);
+    let mut g = TaskGraph::new();
+    for i in 0..n_tasks {
+        g.add("t", r, (i % 97 + 1) as u64, &[]);
+    }
+    let t1 = Instant::now();
+    let s = eng.run(&g).unwrap();
+    let run = t1.elapsed();
+    println!(
+        "contended (1 resource, {} ready tasks): run {} -> {:.2}M events/s",
+        s.events,
+        human_time(run.as_secs_f64()),
+        s.events as f64 / run.as_secs_f64() / 1e6
+    );
+
+    // Torus-topology scaling of a full simulation (bonus series) — slow
+    // 10 GB/s links so gradient traffic escapes the overlap window and
+    // the scaling trend is visible.
+    println!("\n## DP iteration vs cluster size (vgg16, torus2d, 10 GB/s)\n");
+    let model = zoo::get("vgg16", ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let summary = extract(&model, 16).unwrap();
+    let mut t2 = Table::new(vec!["NPUs", "Iteration", "Exposed comm"]);
+    for npus in [4usize, 16, 64, 256] {
+        let opts = TranslateOpts { parallelism: Parallelism::Data, npus, mp_group: 4, batch: 16, zero: modtrans::translator::ZeroStage::None };
+        let w = to_workload(&summary, opts, &SystolicCompute::new(16)).unwrap();
+        let cfg = SimConfig {
+            network: Network::single(TopologyKind::Torus2D, npus, 10.0, 5000.0),
+            iterations: 2,
+            ..Default::default()
+        };
+        let r = simulate(&w, &cfg).unwrap();
+        t2.row(vec![
+            npus.to_string(),
+            human_time(r.iteration_ns as f64 * 1e-9),
+            human_time(r.exposed_ns as f64 * 1e-9),
+        ]);
+    }
+    println!("{t2}");
+}

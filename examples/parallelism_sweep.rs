@@ -1,0 +1,64 @@
+//! Parallelism sweep: which strategy wins for which model?
+//!
+//! Reproduces the design-space exploration ASTRA-sim exists for (paper
+//! §2.2): DATA / MODEL / HYBRID across batch sizes for a conv net (VGG16)
+//! and a transformer (GPT-2 tiny), on the same 16-NPU ring. The expected
+//! *shape*: data parallelism wins for CNNs at moderate batch; model/
+//! hybrid strategies close the gap as parameter traffic outgrows
+//! activation traffic.
+//!
+//! ```sh
+//! cargo run --release --example parallelism_sweep
+//! ```
+
+use modtrans::compute::SystolicCompute;
+use modtrans::sim::{simulate, Network, SimConfig, TopologyKind};
+use modtrans::translator::{extract, to_workload, TranslateOpts};
+use modtrans::util::human_time;
+use modtrans::util::table::Table;
+use modtrans::workload::Parallelism;
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+
+fn main() -> modtrans::Result<()> {
+    let strategies = [
+        ("DATA", Parallelism::Data),
+        ("MODEL", Parallelism::Model),
+        ("HYBRID_DM", Parallelism::HybridDataModel),
+    ];
+    for model_name in ["vgg16", "gpt2-tiny"] {
+        let model = zoo::get(model_name, ZooOpts { weights: WeightFill::Empty })?;
+        println!("== {model_name} on 16 NPUs (ring, 100 GB/s, 500 ns) ==");
+        let mut t = Table::new(vec!["Batch", "DATA", "MODEL", "HYBRID_DM", "Winner"]);
+        for batch in [4i64, 16, 64, 256] {
+            let summary = extract(&model, batch)?;
+            let compute = SystolicCompute::new(batch);
+            let mut times = Vec::new();
+            for (_, par) in strategies {
+                let opts = TranslateOpts { parallelism: par, npus: 16, mp_group: 4, batch, zero: modtrans::translator::ZeroStage::None };
+                let w = to_workload(&summary, opts, &compute)?;
+                let cfg = SimConfig {
+                    network: Network::single(TopologyKind::Ring, 16, 100.0, 500.0),
+                    iterations: 2,
+                    ..Default::default()
+                };
+                times.push(simulate(&w, &cfg)?.iteration_ns);
+            }
+            let winner = strategies[times
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, t)| **t)
+                .unwrap()
+                .0]
+                .0;
+            t.row(vec![
+                batch.to_string(),
+                human_time(times[0] as f64 * 1e-9),
+                human_time(times[1] as f64 * 1e-9),
+                human_time(times[2] as f64 * 1e-9),
+                winner.to_string(),
+            ]);
+        }
+        println!("{t}");
+    }
+    Ok(())
+}

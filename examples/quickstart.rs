@@ -1,0 +1,74 @@
+//! Quickstart: the 60-second ModTrans tour.
+//!
+//! Builds ResNet-50 from the zoo, serializes it to real ONNX bytes,
+//! translates it (the paper's pipeline: deserialize → extract → emit),
+//! prints the first table rows, and runs the translated workload through
+//! the distributed-training simulator.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use modtrans::compute::SystolicCompute;
+use modtrans::onnx::encode_model;
+use modtrans::sim::{simulate, Network, SimConfig};
+use modtrans::translator::{extract_from_bytes, to_workload, TranslateOpts};
+use modtrans::util::table::Table;
+use modtrans::util::{human_bytes, human_time};
+use modtrans::workload::Parallelism;
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+use std::time::Instant;
+
+fn main() -> modtrans::Result<()> {
+    // 1. "Get classic models from the model zoo by only giving the name."
+    let model = zoo::get("resnet50", ZooOpts { weights: WeightFill::Zeros })?;
+    let bytes = encode_model(&model);
+    println!(
+        "resnet50.onnx: {} on the wire, {} parameters\n",
+        human_bytes(bytes.len() as u64),
+        model.num_parameters()
+    );
+
+    // 2. Translate: ONNX bytes → layer table + ASTRA-sim workload.
+    let t0 = Instant::now();
+    let summary = extract_from_bytes(&bytes, 32)?;
+    let opts = TranslateOpts {
+        parallelism: Parallelism::Data,
+        npus: 16,
+        mp_group: 4,
+        batch: 32, zero: modtrans::translator::ZeroStage::None };
+    let workload = to_workload(&summary, opts, &SystolicCompute::new(32))?;
+    let translation = t0.elapsed();
+
+    let mut table = Table::new(vec!["Layer Name", "Variables", "Data Type", "Model Size"]);
+    for l in summary.layers.iter().take(5) {
+        table.row(vec![
+            l.name.clone(),
+            l.variables.to_string(),
+            l.dtype.to_string(),
+            l.weight_bytes.to_string(),
+        ]);
+    }
+    println!("{table}... ({} layers total)\n", summary.layers.len());
+    println!(
+        "translation took {} (paper budget: < 1 s)\n",
+        human_time(translation.as_secs_f64())
+    );
+
+    // 3. Save the workload file (the simulator input of paper Fig. 3).
+    let path = std::env::temp_dir().join("resnet50_dp.txt");
+    std::fs::write(&path, workload.emit())?;
+    println!("wrote {} ({} layers, DATA parallel)", path.display(), workload.layers.len());
+
+    // 4. Simulate 2 training iterations on an 8x4 two-tier cluster.
+    let cfg = SimConfig { network: Network::two_tier(8, 4), iterations: 2, ..Default::default() };
+    let report = simulate(&workload, &cfg)?;
+    println!(
+        "\nsimulated ResNet-50 DP training on 32 NPUs (8-NPU nodes x 4):\n  \
+         iteration: {}   compute util: {:.1}%   exposed comm: {}",
+        human_time(report.iteration_ns as f64 * 1e-9),
+        report.compute_utilization * 100.0,
+        human_time(report.exposed_ns as f64 * 1e-9),
+    );
+    Ok(())
+}

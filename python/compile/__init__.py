@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT.
+
+Python runs ONLY at build time (``make artifacts``); the rust coordinator
+loads the lowered HLO and never imports this package at runtime.
+"""

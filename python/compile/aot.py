@@ -1,0 +1,110 @@
+"""AOT lowering: JAX/Pallas graphs → HLO text artifacts for the rust
+runtime.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+* ``gemm_MxKxN.hlo.txt`` for every shape in ``MENU`` (must stay in sync
+  with ``rust/src/calibrate/mod.rs::GEMM_MENU``);
+* ``mlp_train_step.hlo.txt`` — the end-to-end training step.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Must match rust/src/calibrate/mod.rs::GEMM_MENU.
+MENU = [
+    (128, 128, 128),
+    (256, 256, 256),
+    (512, 512, 512),
+    (1024, 1024, 1024),
+    (256, 2048, 512),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm(m: int, k: int, n: int) -> str:
+    xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    ws = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return to_hlo_text(jax.jit(model.gemm_fn).lower(xs, ws))
+
+
+def lower_transformer_ffn() -> str:
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((model.FFN_TOKENS, model.FFN_D), f32),
+        jax.ShapeDtypeStruct((model.FFN_D,), f32),
+        jax.ShapeDtypeStruct((model.FFN_D,), f32),
+        jax.ShapeDtypeStruct((model.FFN_D, model.FFN_HIDDEN), f32),
+        jax.ShapeDtypeStruct((model.FFN_HIDDEN,), f32),
+        jax.ShapeDtypeStruct((model.FFN_HIDDEN, model.FFN_D), f32),
+        jax.ShapeDtypeStruct((model.FFN_D,), f32),
+    ]
+    return to_hlo_text(jax.jit(model.transformer_ffn).lower(*args))
+
+
+def lower_train_step() -> str:
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((model.MLP_IN, model.MLP_HIDDEN), f32),
+        jax.ShapeDtypeStruct((model.MLP_HIDDEN,), f32),
+        jax.ShapeDtypeStruct((model.MLP_HIDDEN, model.MLP_OUT), f32),
+        jax.ShapeDtypeStruct((model.MLP_OUT,), f32),
+        jax.ShapeDtypeStruct((model.MLP_BATCH, model.MLP_IN), f32),
+        jax.ShapeDtypeStruct((model.MLP_BATCH, model.MLP_OUT), f32),
+    ]
+    return to_hlo_text(jax.jit(model.mlp_train_step).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact names to (re)build; default all",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    jobs = {}
+    for m, k, n in MENU:
+        jobs[f"gemm_{m}x{k}x{n}"] = lambda m=m, k=k, n=n: lower_gemm(m, k, n)
+    jobs["mlp_train_step"] = lower_train_step
+    jobs["transformer_ffn"] = lower_transformer_ffn
+
+    for name, fn in jobs.items():
+        if only is not None and name not in only:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

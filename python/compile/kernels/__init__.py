@@ -1,0 +1,11 @@
+"""L1 Pallas kernels + pure-jnp references."""
+
+from .layernorm import layernorm  # noqa: F401
+from .matmul import matmul, vmem_footprint_bytes  # noqa: F401
+from .ref import (  # noqa: F401
+    layernorm_ref,
+    matmul_ref,
+    mlp_forward_ref,
+    softmax_xent_ref,
+    transformer_ffn_ref,
+)

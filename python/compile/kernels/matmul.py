@@ -1,0 +1,87 @@
+"""L1: tiled Pallas matmul kernel.
+
+The compute hot-spot of every layer ModTrans extracts (conv-as-im2col,
+dense, attention projections) is a GEMM, so the single L1 kernel is a
+block-tiled matmul shaped for the MXU:
+
+* the grid iterates ``(M/bm, N/bn, K/bk)``; each step multiplies a
+  ``(bm, bk)`` LHS tile by a ``(bk, bn)`` RHS tile and accumulates into
+  the ``(bm, bn)`` output tile in VMEM (``o_ref`` revisited across the
+  innermost k steps — Pallas keeps the block resident);
+* default 128x128x128 tiles match the 128x128 systolic array modeled by
+  ``rust/src/compute`` (SCALE-sim WS dataflow) — the same tiling story in
+  both the analytical model and the kernel (DESIGN.md
+  §Hardware-Adaptation);
+* VMEM footprint per step = (bm*bk + bk*bn + bm*bn) * 4 B = 192 KiB at
+  the defaults, far under the ~16 MiB VMEM budget, leaving room for
+  double buffering.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering in interpret mode produces plain HLO the rust
+runtime can run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """One grid step: accumulate x_tile @ w_tile into the output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    del k_steps  # shape bookkeeping only
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k")
+)
+def matmul(x, w, *, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """``x @ w`` via the tiled Pallas kernel.
+
+    Inputs of any (M, K) x (K, N) shape; non-multiples of the block sizes
+    are zero-padded and the result sliced back, so numerics match
+    ``jnp.matmul`` exactly for float32.
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(k, bk) * bk
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    block_m: int = 128, block_n: int = 128, block_k: int = 128, elem: int = 4
+) -> int:
+    """Per-step VMEM residency of the kernel (DESIGN.md §Perf)."""
+    return (block_m * block_k + block_k * block_n + block_m * block_n) * elem

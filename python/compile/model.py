@@ -1,0 +1,114 @@
+"""L2: JAX compute graphs built on the L1 Pallas matmul kernel.
+
+Two graph families are AOT-lowered for the rust runtime:
+
+* ``gemm_fn`` — a bare kernel invocation per calibration menu shape; the
+  rust `calibrate` module times these to derive measured per-layer
+  compute costs (the stand-in for the paper's SCALE-sim/GPU profiling).
+* ``mlp_train_step`` — a complete training step (forward, backward,
+  SGD update) for a 784-256-10 MLP with the forward *and* backward GEMMs
+  expressed through the Pallas kernel. Backward is written explicitly
+  (d_logits → dW2/db2 → dh → dW1/db1) because ``jax.grad`` cannot
+  differentiate through ``pallas_call`` without a custom VJP — and the
+  explicit form keeps every GEMM on the L1 kernel, which is the point.
+
+The rust end-to-end example (`examples/end_to_end.rs`) drives
+``mlp_train_step`` for a few hundred steps on synthetic data and logs the
+loss curve, proving all three layers compose.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import layernorm, matmul
+
+# MLP dimensions baked into the artifact (rust side mirrors these).
+MLP_IN, MLP_HIDDEN, MLP_OUT, MLP_BATCH = 784, 256, 10, 128
+MLP_LR = 0.05
+
+
+def gemm_fn(x, w):
+    """A single L1-kernel GEMM, the calibration unit."""
+    return (matmul(x, w),)
+
+
+# Transformer FFN dimensions baked into the artifact.
+FFN_TOKENS, FFN_D, FFN_HIDDEN = 128, 768, 3072
+
+
+def transformer_ffn(x, gamma, beta, w1, b1, w2, b2):
+    """Pre-LN transformer feed-forward block: ``x + W2·gelu(W1·LN(x))``.
+
+    Both the LayerNorm and the two GEMMs run through L1 Pallas kernels —
+    this is the per-block compute a pipeline stage of the gpt2 zoo models
+    executes; the rust runtime integration test drives this artifact.
+    """
+    h = layernorm(x, gamma, beta)
+    h = jax.nn.gelu(matmul(h, w1) + b1)
+    return (x + matmul(h, w2) + b2,)
+
+
+def _softmax_xent_and_dlogits(logits, y_onehot):
+    """Mean CE loss and its gradient wrt logits (explicit backward)."""
+    z = logits - logits.max(axis=-1, keepdims=True)
+    ez = jnp.exp(z)
+    p = ez / ez.sum(axis=-1, keepdims=True)
+    logp = z - jnp.log(ez.sum(axis=-1, keepdims=True))
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    dlogits = (p - y_onehot) / logits.shape[0]
+    return loss, dlogits
+
+
+def mlp_train_step(w1, b1, w2, b2, x, y_onehot):
+    """One SGD step; returns updated params + loss.
+
+    All four GEMMs (fwd x@W1, fwd h@W2, bwd dlogits@W2ᵀ, bwd grads) run
+    through the Pallas kernel.
+    """
+    # ---- forward ----
+    a1 = matmul(x, w1) + b1
+    h = jnp.maximum(a1, 0.0)
+    logits = matmul(h, w2) + b2
+
+    # ---- backward (explicit) ----
+    loss, dlogits = _softmax_xent_and_dlogits(logits, y_onehot)
+    dw2 = matmul(h.T, dlogits)
+    db2 = dlogits.sum(axis=0)
+    dh = matmul(dlogits, w2.T)
+    da1 = dh * (a1 > 0.0)
+    dw1 = matmul(x.T, da1)
+    db1 = da1.sum(axis=0)
+
+    # ---- SGD ----
+    return (
+        w1 - MLP_LR * dw1,
+        b1 - MLP_LR * db1,
+        w2 - MLP_LR * dw2,
+        b2 - MLP_LR * db2,
+        loss,
+    )
+
+
+def mlp_init(seed: int = 0):
+    """He-initialized MLP parameters (mirrored by the rust driver)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (MLP_IN, MLP_HIDDEN), jnp.float32) * (2.0 / MLP_IN) ** 0.5
+    b1 = jnp.zeros((MLP_HIDDEN,), jnp.float32)
+    w2 = jax.random.normal(k2, (MLP_HIDDEN, MLP_OUT), jnp.float32) * (2.0 / MLP_HIDDEN) ** 0.5
+    b2 = jnp.zeros((MLP_OUT,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+def mlp_train_step_ref(w1, b1, w2, b2, x, y_onehot):
+    """jnp-only + jax.grad reference for the explicit backward (pytest)."""
+
+    def loss_fn(params):
+        from .kernels.ref import mlp_forward_ref, softmax_xent_ref
+
+        logits = mlp_forward_ref(params, x)
+        return softmax_xent_ref(logits, y_onehot)
+
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = tuple(p - MLP_LR * g for p, g in zip(params, grads))
+    return (*new, loss)

@@ -1,0 +1,50 @@
+"""AOT lowering smoke tests: HLO text emission is well-formed."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_gemm_lowering_produces_hlo_text():
+    text = aot.lower_gemm(128, 128, 128)
+    assert text.startswith("HloModule")
+    # Parameters and a dot/conv-like op must appear.
+    assert "parameter(0)" in text
+    assert "f32[128,128]" in text
+
+
+def test_menu_matches_rust_calibrate():
+    # Keep in lock-step with rust/src/calibrate/mod.rs::GEMM_MENU.
+    assert aot.MENU == [
+        (128, 128, 128),
+        (256, 256, 256),
+        (512, 512, 512),
+        (1024, 1024, 1024),
+        (256, 2048, 512),
+    ]
+
+
+def test_train_step_lowering_has_all_outputs():
+    text = aot.lower_train_step()
+    assert text.startswith("HloModule")
+    # Root is a 5-tuple: 4 params + scalar loss.
+    assert f"f32[{model.MLP_IN},{model.MLP_HIDDEN}]" in text
+    assert "f32[]" in text
+
+
+def test_lowered_gemm_executes_in_process():
+    # Round-trip through XLA in-process (compile+run the text's source
+    # computation) — mirrors what the rust runtime does out-of-process.
+    xs = jnp.ones((128, 128), jnp.float32)
+    ws = jnp.full((128, 128), 0.5, jnp.float32)
+    (out,) = jax.jit(model.gemm_fn)(xs, ws)
+    assert out.shape == (128, 128)
+    assert abs(float(out[0, 0]) - 64.0) < 1e-3
+
+
+def test_transformer_ffn_lowering():
+    text = aot.lower_transformer_ffn()
+    assert text.startswith("HloModule")
+    assert f"f32[{model.FFN_TOKENS},{model.FFN_D}]" in text
+    assert f"f32[{model.FFN_D},{model.FFN_HIDDEN}]" in text

@@ -1,0 +1,123 @@
+"""Pallas matmul kernel vs pure-jnp reference — the core L1 correctness
+signal, swept over shapes and dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matmul_ref, vmem_footprint_bytes
+
+
+def _rand(shape, dtype, seed):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),   # exactly one block
+        (256, 256, 256),   # multi-block, divisible
+        (64, 64, 64),      # smaller than a block
+        (1, 1, 1),         # degenerate
+        (130, 257, 65),    # every dim non-divisible
+        (128, 1, 128),     # skinny K
+        (1, 512, 1),       # vector-vector-ish
+    ],
+)
+def test_matmul_matches_ref_f32(m, k, n):
+    x = _rand((m, k), jnp.float32, 0)
+    w = _rand((k, n), jnp.float32, 1)
+    got = matmul(x, w)
+    want = matmul_ref(x, w)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    bm=st.sampled_from([32, 64, 128]),
+    bn=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+)
+def test_matmul_hypothesis_shape_sweep(m, k, n, bm, bn, bk):
+    x = _rand((m, k), jnp.float32, m * 7 + k)
+    w = _rand((k, n), jnp.float32, n * 13 + k)
+    got = matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand((96, 96), dtype, 2)
+    w = _rand((96, 96), dtype, 3)
+    got = np.asarray(matmul(x, w), dtype=np.float32)
+    want = np.asarray(matmul_ref(x, w), dtype=np.float32)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_inner_dim_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    with pytest.raises(ValueError):
+        matmul(x, w)
+
+
+def test_zero_inputs_give_zero():
+    x = jnp.zeros((130, 70))
+    w = jnp.zeros((70, 33))
+    out = matmul(x, w)
+    assert out.shape == (130, 33)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_vmem_footprint_under_budget():
+    # Default tiling must fit VMEM (~16 MiB) with ample double-buffer room.
+    assert vmem_footprint_bytes() == (128 * 128 * 3) * 4
+    assert vmem_footprint_bytes() < 16 * 1024 * 1024 // 4
+
+
+# ---- layernorm kernel ----
+
+from compile.kernels import layernorm, layernorm_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("n,d", [(128, 768), (1, 16), (130, 257), (64, 64)])
+def test_layernorm_matches_ref(n, d):
+    x = _rand((n, d), jnp.float32, n + d)
+    g = _rand((d,), jnp.float32, 5)
+    b = _rand((d,), jnp.float32, 6)
+    got = layernorm(x, g, b)
+    want = layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 300), d=st.integers(2, 512), br=st.sampled_from([32, 128]))
+def test_layernorm_hypothesis_sweep(n, d, br):
+    x = _rand((n, d), jnp.float32, n * 31 + d)
+    g = _rand((d,), jnp.float32, 1)
+    b = _rand((d,), jnp.float32, 2)
+    got = layernorm(x, g, b, block_rows=br)
+    want = layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_layernorm_output_statistics():
+    # With unit gamma / zero beta each row is ~N(0, 1).
+    x = _rand((64, 1024), jnp.float32, 9) * 5.0 + 3.0
+    out = layernorm(x, jnp.ones((1024,)), jnp.zeros((1024,)))
+    assert abs(float(out.mean())) < 1e-3
+    assert abs(float(out.var()) - 1.0) < 1e-2
+
+
+def test_layernorm_bad_affine_shape_raises():
+    with pytest.raises(ValueError):
+        layernorm(jnp.zeros((4, 8)), jnp.zeros((9,)), jnp.zeros((8,)))

@@ -1,0 +1,213 @@
+//! Measured-compute calibration: executes the AOT GEMM artifacts through
+//! PJRT and turns the timings into a [`ComputeTimeModel`].
+//!
+//! The paper's workflow extracts per-layer compute times by profiling real
+//! hardware (via SCALE-sim or GPU measurement). With no accelerator in
+//! this environment, the equivalent path is: the L1 Pallas matmul kernel,
+//! lowered by `python/compile/aot.py` into `artifacts/gemm_MxKxN.hlo.txt`
+//! for a fixed shape menu, executed here with real inputs, timed, and
+//! interpolated per layer by MAC ratio (seconds-per-MAC from the nearest
+//! menu shape). The substitution is recorded in DESIGN.md.
+
+use crate::compute::Gemm;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::runtime::Runtime;
+use crate::translator::{ComputeTimeModel, LayerInfo, LayerKind};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The GEMM shape menu — MUST match `python/compile/aot.py`'s `MENU`.
+pub const GEMM_MENU: [Gemm; 5] = [
+    Gemm { m: 128, k: 128, n: 128 },
+    Gemm { m: 256, k: 256, n: 256 },
+    Gemm { m: 512, k: 512, n: 512 },
+    Gemm { m: 1024, k: 1024, n: 1024 },
+    Gemm { m: 256, k: 2048, n: 512 },
+];
+
+/// Artifact name for a menu shape (file is `<name>.hlo.txt`).
+pub fn artifact_name(g: Gemm) -> String {
+    format!("gemm_{}x{}x{}", g.m, g.k, g.n)
+}
+
+/// Measured timings for the menu.
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    /// (shape, median wall ns) pairs.
+    pub entries: Vec<(Gemm, u64)>,
+}
+
+impl Calibration {
+    /// Run every available menu artifact `reps` times.
+    pub fn measure(rt: &Runtime, reps: usize) -> Result<Calibration> {
+        let mut entries = Vec::new();
+        for g in GEMM_MENU {
+            let name = artifact_name(g);
+            if !rt.has(&name) {
+                continue;
+            }
+            let a = vec![1.0f32; (g.m * g.k) as usize];
+            let b = vec![0.5f32; (g.k * g.n) as usize];
+            let dt = rt.time_artifact(
+                &name,
+                &[(&a, &[g.m as i64, g.k as i64]), (&b, &[g.k as i64, g.n as i64])],
+                reps,
+            )?;
+            entries.push((g, dt.as_nanos() as u64));
+        }
+        if entries.is_empty() {
+            return Err(Error::Runtime(
+                "no gemm_* artifacts loaded — run `make artifacts` first".into(),
+            ));
+        }
+        Ok(Calibration { entries })
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Value {
+        let arr: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|(g, ns)| {
+                let mut m = BTreeMap::new();
+                m.insert("m".into(), Value::Num(g.m as f64));
+                m.insert("k".into(), Value::Num(g.k as f64));
+                m.insert("n".into(), Value::Num(g.n as f64));
+                m.insert("ns".into(), Value::Num(*ns as f64));
+                Value::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("gemm_timings".into(), Value::Arr(arr));
+        Value::Obj(m)
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(v: &Value) -> Result<Calibration> {
+        let arr = v
+            .get("gemm_timings")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Config("calibration: missing 'gemm_timings'".into()))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            entries.push((
+                Gemm { m: e.req_u64("m")?, k: e.req_u64("k")?, n: e.req_u64("n")? },
+                e.req_u64("ns")?,
+            ));
+        }
+        Ok(Calibration { entries })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json_pretty())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let text = std::fs::read_to_string(path)?;
+        Calibration::from_json(&json::parse(&text)?)
+    }
+
+    /// Estimate wall ns for an arbitrary GEMM: nearest menu entry by MAC
+    /// count (log distance), scaled by the MAC ratio.
+    pub fn estimate_ns(&self, g: Gemm) -> u64 {
+        assert!(!self.entries.is_empty());
+        let macs = g.macs().max(1) as f64;
+        let (best, best_ns) = self
+            .entries
+            .iter()
+            .min_by(|(a, _), (b, _)| {
+                let da = (macs.ln() - (a.macs().max(1) as f64).ln()).abs();
+                let db = (macs.ln() - (b.macs().max(1) as f64).ln()).abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap();
+        let scale = macs / best.macs().max(1) as f64;
+        ((*best_ns as f64) * scale).ceil().max(1.0) as u64
+    }
+}
+
+/// [`ComputeTimeModel`] backed by measured GEMM timings.
+#[derive(Debug, Clone)]
+pub struct MeasuredCompute {
+    /// The calibration table.
+    pub cal: Calibration,
+    /// Batch size (must match extraction batch).
+    pub batch: i64,
+}
+
+impl ComputeTimeModel for MeasuredCompute {
+    fn layer_times(&self, layer: &LayerInfo) -> (u64, u64, u64) {
+        if layer.kind == LayerKind::Embedding {
+            return (1, 1, 1);
+        }
+        let f = Gemm::from_layer(layer, self.batch);
+        let fwd = self.cal.estimate_ns(f);
+        let ig = self.cal.estimate_ns(Gemm { m: f.m, k: f.n, n: f.k });
+        let wg = self.cal.estimate_ns(Gemm { m: f.k, k: f.m, n: f.n });
+        (fwd, ig, wg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_cal() -> Calibration {
+        Calibration {
+            entries: vec![
+                (Gemm { m: 128, k: 128, n: 128 }, 10_000),
+                (Gemm { m: 1024, k: 1024, n: 1024 }, 5_000_000),
+            ],
+        }
+    }
+
+    #[test]
+    fn estimate_scales_by_mac_ratio() {
+        let cal = fake_cal();
+        // Exactly a menu shape: returns the measured value.
+        assert_eq!(cal.estimate_ns(Gemm { m: 128, k: 128, n: 128 }), 10_000);
+        // 2x the MACs of the small shape: ~2x the time.
+        let t = cal.estimate_ns(Gemm { m: 256, k: 128, n: 128 });
+        assert_eq!(t, 20_000);
+    }
+
+    #[test]
+    fn nearest_by_log_macs() {
+        let cal = fake_cal();
+        // A 512³ GEMM (134M MACs): nearer (in log space) to 1024³ (1G)
+        // than to 128³ (2M) → scaled down from the big entry.
+        let t = cal.estimate_ns(Gemm { m: 512, k: 512, n: 512 });
+        let expect = (5_000_000.0 * (512f64 * 512.0 * 512.0) / (1024f64 * 1024.0 * 1024.0)).ceil();
+        assert_eq!(t, expect as u64);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cal = fake_cal();
+        let v = cal.to_json();
+        let cal2 = Calibration::from_json(&v).unwrap();
+        assert_eq!(cal2.entries.len(), 2);
+        assert_eq!(cal2.entries[0].0, Gemm { m: 128, k: 128, n: 128 });
+        assert_eq!(cal2.entries[1].1, 5_000_000);
+    }
+
+    #[test]
+    fn menu_names_are_stable() {
+        assert_eq!(artifact_name(GEMM_MENU[0]), "gemm_128x128x128");
+        assert_eq!(artifact_name(GEMM_MENU[4]), "gemm_256x2048x512");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cal = fake_cal();
+        let p = std::env::temp_dir().join("modtrans_cal_test.json");
+        cal.save(&p).unwrap();
+        let cal2 = Calibration::load(&p).unwrap();
+        assert_eq!(cal2.entries.len(), cal.entries.len());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,626 @@
+//! Command-line interface (clap stand-in for the offline build).
+//!
+//! ```text
+//! modtrans zoo list
+//! modtrans zoo build <name> -o model.onnx [--weights zeros|random|empty]
+//! modtrans inspect <file.onnx | zoo:name> [--all] [--batch N]
+//! modtrans translate <file.onnx | zoo:name> [-o out.txt] [--parallelism P]
+//!           [--npus N] [--mp-group G] [--batch B] [--compute MODEL]
+//! modtrans simulate <workload.txt> [--network net.json] [--topology T]
+//!           [--npus N] [--iterations I] [--policy fifo|lifo] [--chunks C]
+//!           [--stages S] [--microbatches M] [--boundary-bytes B]
+//! modtrans sweep <file.onnx | zoo:name> [--npus N] [--batch B]
+//! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]
+//! ```
+
+use crate::calibrate::{Calibration, MeasuredCompute};
+use crate::compute::SystolicCompute;
+use crate::error::{Error, Result};
+use crate::onnx;
+use crate::runtime::Runtime;
+use crate::sim::{self, Network, Policy, SimConfig, TopologyKind};
+use crate::translator::{
+    self, ComputeTimeModel, ConstantCompute, RooflineCompute, TranslateOpts,
+};
+use crate::util::table::Table;
+use crate::util::{human_bytes, human_time};
+use crate::workload::{Parallelism, Workload};
+use crate::zoo::{self, WeightFill, ZooOpts};
+use std::path::Path;
+
+/// Tiny argument cursor: positionals + `--key value` options + flags.
+pub struct Args {
+    positional: Vec<String>,
+    options: Vec<(String, String)>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand names).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut options = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // Flags that take no value.
+                if matches!(key, "all" | "full-decode" | "quiet" | "breakdown") {
+                    flags.push(key.to_string());
+                } else {
+                    i += 1;
+                    let v = raw.get(i).ok_or_else(|| {
+                        Error::Usage(format!("option --{key} needs a value"))
+                    })?;
+                    options.push((key.to_string(), v.clone()));
+                }
+            } else if a == "-o" {
+                i += 1;
+                let v = raw
+                    .get(i)
+                    .ok_or_else(|| Error::Usage("-o needs a value".into()))?;
+                options.push(("out".to_string(), v.clone()));
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, options, flags })
+    }
+
+    fn pos(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(String::as_str)
+            .ok_or_else(|| Error::Usage(format!("missing <{what}>")))
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.options.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("bad value '{v}' for --{key}"))),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Entry point: dispatch a full argv (excluding binary name).
+pub fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "zoo" => cmd_zoo(&args),
+        "inspect" => cmd_inspect(&args),
+        "translate" => cmd_translate(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "memory" => cmd_memory(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "validate" => cmd_validate(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown command '{other}' (try `modtrans help`)"))),
+    }
+}
+
+const USAGE: &str = "modtrans — translate real-world models for distributed-training simulators
+
+USAGE:
+  modtrans zoo list
+  modtrans zoo build <name> -o model.onnx [--weights zeros|random|empty]
+  modtrans inspect <file.onnx|zoo:name> [--all] [--batch N]
+  modtrans translate <file.onnx|zoo:name> [-o out.txt] [--parallelism data|model|hybrid-dm|hybrid-md|pipeline]
+            [--npus N] [--mp-group G] [--batch B]
+            [--compute roofline|systolic|constant:<ns>|measured:<cal.json>] [--zero 0|1|2|3]
+  modtrans simulate <workload.txt> [--network net.json | --topology ring|fc|switch|torus2d --npus N]
+            [--iterations I] [--policy fifo|lifo] [--chunks C]
+            [--stages S] [--microbatches M] [--boundary-bytes B]
+  modtrans sweep <file.onnx|zoo:name> [--npus N] [--batch B] [--hbm-gib G]
+  modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
+            [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
+  modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]
+  modtrans validate                      (paper §4.4 ResNet-50 sanity check)";
+
+/// Load a model from `zoo:<name>` or a `.onnx` path (metadata-only).
+fn load_model(spec: &str, full: bool) -> Result<onnx::Model> {
+    if let Some(name) = spec.strip_prefix("zoo:") {
+        zoo::get(name, ZooOpts { weights: WeightFill::Empty })
+    } else {
+        let bytes = std::fs::read(spec)?;
+        if full {
+            onnx::parse_model(&bytes)
+        } else {
+            onnx::parse_model_meta(&bytes)
+        }
+    }
+}
+
+fn parse_parallelism(s: &str) -> Result<Parallelism> {
+    Ok(match s {
+        "data" | "dp" => Parallelism::Data,
+        "model" | "mp" => Parallelism::Model,
+        "hybrid-dm" | "hybrid" => Parallelism::HybridDataModel,
+        "hybrid-md" => Parallelism::HybridModelData,
+        "pipeline" | "pp" => Parallelism::Pipeline,
+        other => return Err(Error::Usage(format!("unknown parallelism '{other}'"))),
+    })
+}
+
+fn parse_compute(spec: &str, batch: i64) -> Result<Box<dyn ComputeTimeModel>> {
+    if let Some(ns) = spec.strip_prefix("constant:") {
+        let ns: u64 = ns
+            .parse()
+            .map_err(|_| Error::Usage(format!("bad constant compute '{ns}'")))?;
+        return Ok(Box::new(ConstantCompute(ns)));
+    }
+    if let Some(path) = spec.strip_prefix("measured:") {
+        let cal = Calibration::load(Path::new(path))?;
+        return Ok(Box::new(MeasuredCompute { cal, batch }));
+    }
+    match spec {
+        "roofline" => Ok(Box::new(RooflineCompute::default())),
+        "systolic" => Ok(Box::new(SystolicCompute::new(batch))),
+        other => Err(Error::Usage(format!("unknown compute model '{other}'"))),
+    }
+}
+
+fn cmd_zoo(args: &Args) -> Result<()> {
+    match args.pos(0, "zoo subcommand")? {
+        "list" => {
+            let mut t = Table::new(vec!["Name", "Description"]);
+            for m in zoo::MODELS {
+                t.row(vec![m, zoo::describe(m)]);
+            }
+            print!("{t}");
+            Ok(())
+        }
+        "build" => {
+            let name = args.pos(1, "model name")?;
+            let out = args.opt("out").unwrap_or("model.onnx");
+            let weights = match args.opt("weights").unwrap_or("zeros") {
+                "zeros" => WeightFill::Zeros,
+                "random" => WeightFill::Random(args.opt_parse("seed", 0u64)?),
+                "empty" => WeightFill::Empty,
+                w => return Err(Error::Usage(format!("unknown weight fill '{w}'"))),
+            };
+            let m = zoo::get(name, ZooOpts { weights })?;
+            let bytes = onnx::encode_model(&m);
+            std::fs::write(out, &bytes)?;
+            println!(
+                "wrote {out}: {} ({} params, {})",
+                human_bytes(bytes.len() as u64),
+                m.num_parameters(),
+                human_bytes(m.parameter_bytes()),
+            );
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown zoo subcommand '{other}'"))),
+    }
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let spec = args.pos(0, "model")?;
+    let batch = args.opt_parse("batch", 1i64)?;
+    let model = load_model(spec, false)?;
+    let summary = translator::extract(&model, batch)?;
+    if args.flag("all") {
+        let mut t = Table::new(vec!["Initializer", "Variables", "Data Type", "Size"]);
+        for (name, vars, dt, bytes) in &summary.all_initializers {
+            t.row(vec![
+                name.clone(),
+                vars.to_string(),
+                dt.to_string(),
+                bytes.to_string(),
+            ]);
+        }
+        print!("{t}");
+    } else {
+        let mut t = Table::new(vec![
+            "Layer Name",
+            "Kind",
+            "Variables",
+            "Data Type",
+            "Model Size",
+            "MACs",
+            "Out Activation",
+        ]);
+        for l in &summary.layers {
+            t.row(vec![
+                l.name.clone(),
+                l.kind.label().to_string(),
+                l.variables.to_string(),
+                l.dtype.to_string(),
+                l.weight_bytes.to_string(),
+                l.macs.to_string(),
+                human_bytes(l.out_act_bytes),
+            ]);
+        }
+        print!("{t}");
+    }
+    println!(
+        "total: {} parameters, {} ({} compute layers, batch {})",
+        summary.total_params,
+        human_bytes(summary.total_bytes),
+        summary.layers.len(),
+        batch,
+    );
+    Ok(())
+}
+
+fn cmd_translate(args: &Args) -> Result<()> {
+    let spec = args.pos(0, "model")?;
+    let batch = args.opt_parse("batch", 32i64)?;
+    let opts = TranslateOpts {
+        parallelism: parse_parallelism(args.opt("parallelism").unwrap_or("data"))?,
+        npus: args.opt_parse("npus", 16usize)?,
+        mp_group: args.opt_parse("mp-group", 4usize)?,
+        batch,
+        zero: parse_zero(args)?,
+    };
+    let compute = parse_compute(args.opt("compute").unwrap_or("systolic"), batch)?;
+    let model = load_model(spec, false)?;
+    let summary = translator::extract(&model, batch)?;
+    let workload = translator::to_workload(&summary, opts, compute.as_ref())?;
+    let text = workload.emit();
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!(
+                "wrote {path}: {} layers, {} comm volume, {} compute per pass",
+                workload.layers.len(),
+                human_bytes(workload.total_comm_bytes()),
+                human_time(workload.total_compute_ns() as f64 * 1e-9),
+            );
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn load_network(args: &Args) -> Result<Network> {
+    if let Some(path) = args.opt("network") {
+        let text = std::fs::read_to_string(path)?;
+        return Network::from_json(&crate::json::parse(&text)?);
+    }
+    let npus = args.opt_parse("npus", 16usize)?;
+    let kind = TopologyKind::from_token(args.opt("topology").unwrap_or("ring"))?;
+    Ok(Network::single(
+        kind,
+        npus,
+        args.opt_parse("bandwidth-gbps", 100.0f64)?,
+        args.opt_parse("latency-ns", 500.0f64)?,
+    ))
+}
+
+fn sim_config(args: &Args) -> Result<SimConfig> {
+    Ok(SimConfig {
+        network: load_network(args)?,
+        system: sim::SystemConfig {
+            scheduling: match args.opt("policy").unwrap_or("fifo") {
+                "fifo" => Policy::Fifo,
+                "lifo" => Policy::Lifo,
+                p => return Err(Error::Usage(format!("unknown policy '{p}'"))),
+            },
+            chunks: sim::ChunkCfg { chunks: args.opt_parse("chunks", 4usize)? },
+        },
+        iterations: args.opt_parse("iterations", 2usize)?,
+        stages: args.opt_parse("stages", 4usize)?,
+        microbatches: args.opt_parse("microbatches", 8usize)?,
+        boundary_bytes: args.opt_parse("boundary-bytes", 1u64 << 20)?,
+        schedule: match args.opt("schedule").unwrap_or("gpipe") {
+            "gpipe" => sim::PipelineSchedule::GPipe,
+            "1f1b" => sim::PipelineSchedule::OneFOneB,
+            x => return Err(Error::Usage(format!("unknown schedule '{x}'"))),
+        },
+    })
+}
+
+fn print_report(r: &sim::SimReport) {
+    println!("simulated {}", human_time(r.total_ns as f64 * 1e-9));
+    println!("  iteration time : {}", human_time(r.iteration_ns as f64 * 1e-9));
+    println!("  compute util   : {:.1}%", r.compute_utilization * 100.0);
+    println!("  exposed comm   : {}", human_time(r.exposed_ns as f64 * 1e-9));
+    for (i, b) in r.net_busy_ns.iter().enumerate() {
+        println!("  net dim {i} busy : {}", human_time(*b as f64 * 1e-9));
+    }
+    println!("  events         : {}", r.events);
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let path = args.pos(0, "workload file")?;
+    let workload = Workload::parse(&std::fs::read_to_string(path)?)?;
+    let cfg = sim_config(args)?;
+    let report = sim::simulate(&workload, &cfg)?;
+    println!(
+        "workload: {} layers, {} ({})",
+        workload.layers.len(),
+        workload.parallelism,
+        path
+    );
+    print_report(&report);
+    if args.flag("breakdown") && !report.breakdown.is_empty() {
+        let mut rows: Vec<&sim::LayerBreakdown> = report.breakdown.iter().collect();
+        rows.sort_by_key(|b| std::cmp::Reverse(b.compute_ns + b.comm_ns));
+        let mut t = Table::new(vec!["Layer", "Compute", "Comm"]);
+        for b in rows.iter().take(15) {
+            t.row(vec![
+                b.name.clone(),
+                human_time(b.compute_ns as f64 * 1e-9),
+                human_time(b.comm_ns as f64 * 1e-9),
+            ]);
+        }
+        println!("top layers by attributed time:");
+        print!("{t}");
+    }
+    Ok(())
+}
+
+/// The paper's §4.4 sanity check as a CLI verb: extract ResNet-50 and
+/// diff against the embedded ASTRA-sim reference sizes.
+fn cmd_validate(_args: &Args) -> Result<()> {
+    const TABLE3_ASTRA: [u64; 54] = [
+        37632, 16384, 147456, 65536, 65536, 65536, 147456, 65536, 65536, 147456, 65536,
+        131072, 589824, 262144, 524288, 262144, 589824, 262144, 262144, 589824, 262144,
+        262144, 589824, 262144, 524288, 2359296, 1048576, 2097152, 1048576, 2359296,
+        1048576, 1048576, 2359296, 1048576, 1048576, 2359296, 1048576, 1048576, 2359296,
+        1048576, 1048576, 2359296, 1048576, 2097152, 9437184, 4194304, 8388608, 4194304,
+        9437184, 4194304, 4194304, 9437184, 4194304, 8192000,
+    ];
+    let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Zeros })?;
+    let bytes = onnx::encode_model(&m);
+    let t0 = std::time::Instant::now();
+    let summary = translator::extract_from_bytes(&bytes, 1)?;
+    let dt = t0.elapsed();
+    let mut bad = 0usize;
+    for (l, expect) in summary.layers.iter().zip(TABLE3_ASTRA.iter()) {
+        if l.weight_bytes != *expect {
+            println!("MISMATCH {}: extracted {} reference {}", l.name, l.weight_bytes, expect);
+            bad += 1;
+        }
+    }
+    println!(
+        "sanity check: {}/{} layers identical (translated {} of ONNX in {})",
+        summary.layers.len() - bad,
+        summary.layers.len(),
+        human_bytes(bytes.len() as u64),
+        human_time(dt.as_secs_f64()),
+    );
+    if bad > 0 {
+        return Err(Error::Translate(format!("{bad} layer size mismatches")));
+    }
+    println!("PASS — matches the ASTRA-sim reference model (paper §4.4)");
+    Ok(())
+}
+
+fn mem_cell(m: &translator::MemoryReport) -> String {
+    human_bytes(m.total())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec = args.pos(0, "model")?;
+    let batch = args.opt_parse("batch", 32i64)?;
+    let npus = args.opt_parse("npus", 16usize)?;
+    let model = load_model(spec, false)?;
+    let summary = translator::extract(&model, batch)?;
+    let compute = SystolicCompute::new(batch);
+
+    let hbm = (args.opt_parse("hbm-gib", 32u64)?) << 30;
+    let mut t = Table::new(vec![
+        "Parallelism",
+        "Topology",
+        "Iteration",
+        "Compute util",
+        "Exposed comm",
+        "Mem/NPU",
+        "Fits",
+    ]);
+    for par in [Parallelism::Data, Parallelism::Model, Parallelism::HybridDataModel] {
+        for kind in [TopologyKind::Ring, TopologyKind::FullyConnected, TopologyKind::Switch] {
+            let opts = TranslateOpts { parallelism: par, npus, mp_group: 4, batch, zero: crate::translator::memory::ZeroStage::None };
+            let w = translator::to_workload(&summary, opts, &compute)?;
+            let cfg = SimConfig {
+                network: Network::single(kind, npus, 100.0, 500.0),
+                iterations: 2,
+                ..Default::default()
+            };
+            let r = sim::simulate(&w, &cfg)?;
+            let mem = translator::memory_per_npu(
+                &summary,
+                opts,
+                translator::MemoryOpts { hbm_bytes: hbm, ..Default::default() },
+            );
+            t.row(vec![
+                par.token().to_string(),
+                kind.token().to_string(),
+                human_time(r.iteration_ns as f64 * 1e-9),
+                format!("{:.1}%", r.compute_utilization * 100.0),
+                human_time(r.exposed_ns as f64 * 1e-9),
+            mem_cell(&mem),
+                if mem.fits(hbm) { "yes".into() } else { "NO".to_string() },
+            ]);
+        }
+    }
+    println!("sweep: {} at batch {batch} on {npus} NPUs", summary.model_name);
+    print!("{t}");
+    Ok(())
+}
+
+fn parse_zero(args: &Args) -> Result<translator::ZeroStage> {
+    Ok(match args.opt("zero").unwrap_or("0") {
+        "0" => translator::ZeroStage::None,
+        "1" => translator::ZeroStage::OptimizerState,
+        "2" => translator::ZeroStage::Gradients,
+        "3" => translator::ZeroStage::Parameters,
+        x => return Err(Error::Usage(format!("unknown zero stage '{x}'"))),
+    })
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let spec = args.pos(0, "model")?;
+    let batch = args.opt_parse("batch", 32i64)?;
+    let npus = args.opt_parse("npus", 16usize)?;
+    let mp_group = args.opt_parse("mp-group", 4usize)?;
+    let hbm = (args.opt_parse("hbm-gib", 32u64)?) << 30;
+    let optimizer = match args.opt("optimizer").unwrap_or("adam") {
+        "sgd" => translator::Optimizer::Sgd,
+        "momentum" => translator::Optimizer::Momentum,
+        "adam" => translator::Optimizer::Adam,
+        x => return Err(Error::Usage(format!("unknown optimizer '{x}'"))),
+    };
+    let zero = parse_zero(args)?;
+    let model = load_model(spec, false)?;
+    let summary = translator::extract(&model, batch)?;
+
+    let mem = translator::MemoryOpts {
+        optimizer,
+        zero,
+        recompute: false,
+        microbatches: 8,
+        one_f_one_b: false,
+        hbm_bytes: hbm,
+    };
+    let mut t = Table::new(vec![
+        "Parallelism",
+        "Weights",
+        "Gradients",
+        "Optimizer",
+        "Activations",
+        "Total/NPU",
+        "Fits HBM",
+    ]);
+    for par in [
+        Parallelism::Data,
+        Parallelism::Model,
+        Parallelism::HybridDataModel,
+        Parallelism::Pipeline,
+    ] {
+        let opts = TranslateOpts { parallelism: par, npus, mp_group, batch, zero };
+        let r = translator::memory_per_npu(&summary, opts, mem);
+        t.row(vec![
+            par.token().to_string(),
+            human_bytes(r.weights),
+            human_bytes(r.gradients),
+            human_bytes(r.optimizer),
+            human_bytes(r.activations),
+            human_bytes(r.total()),
+            if r.fits(hbm) { "yes".to_string() } else { "NO".to_string() },
+        ]);
+    }
+    println!(
+        "per-NPU training memory for {} (batch {batch}, {npus} NPUs, mp-group {mp_group}, {} HBM, {:?}, ZeRO {:?})",
+        summary.model_name,
+        human_bytes(hbm),
+        optimizer,
+        zero,
+    );
+    print!("{t}");
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    let reps = args.opt_parse("reps", 5usize)?;
+    let out = args.opt("out").unwrap_or("calibration.json");
+    let mut rt = Runtime::cpu()?;
+    let n = rt.load_dir(Path::new(dir))?;
+    println!("loaded {n} artifacts from {dir} on {}", rt.platform());
+    let cal = Calibration::measure(&rt, reps)?;
+    let mut t = Table::new(vec!["GEMM", "MACs", "Median wall time"]);
+    for (g, ns) in &cal.entries {
+        t.row(vec![
+            format!("{}x{}x{}", g.m, g.k, g.n),
+            g.macs().to_string(),
+            human_time(*ns as f64 * 1e-9),
+        ]);
+    }
+    print!("{t}");
+    cal.save(Path::new(out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn arg_parsing() {
+        let a = args(&["zoo:vgg16", "--batch", "8", "--all", "-o", "out.txt"]);
+        assert_eq!(a.pos(0, "m").unwrap(), "zoo:vgg16");
+        assert_eq!(a.opt_parse("batch", 1i64).unwrap(), 8);
+        assert!(a.flag("all"));
+        assert_eq!(a.opt("out"), Some("out.txt"));
+        assert!(a.pos(1, "x").is_err());
+        assert!(a.opt_parse::<i64>("batch", 0).is_ok());
+    }
+
+    #[test]
+    fn missing_option_value_is_usage_error() {
+        let raw: Vec<String> = vec!["--batch".into()];
+        assert!(Args::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn bad_option_value_is_usage_error() {
+        let a = args(&["--batch", "not-a-number"]);
+        assert!(a.opt_parse::<i64>("batch", 0).is_err());
+    }
+
+    #[test]
+    fn parallelism_tokens() {
+        assert_eq!(parse_parallelism("data").unwrap(), Parallelism::Data);
+        assert_eq!(parse_parallelism("dp").unwrap(), Parallelism::Data);
+        assert_eq!(parse_parallelism("hybrid-md").unwrap(), Parallelism::HybridModelData);
+        assert!(parse_parallelism("bogus").is_err());
+    }
+
+    #[test]
+    fn compute_model_specs() {
+        assert!(parse_compute("roofline", 1).is_ok());
+        assert!(parse_compute("systolic", 1).is_ok());
+        assert!(parse_compute("constant:5000", 1).is_ok());
+        assert!(parse_compute("constant:x", 1).is_err());
+        assert!(parse_compute("bogus", 1).is_err());
+        assert!(parse_compute("measured:/no/such/file.json", 1).is_err());
+    }
+
+    #[test]
+    fn zoo_spec_loads() {
+        let m = load_model("zoo:mlp", false).unwrap();
+        assert!(!m.graph.initializers.is_empty());
+        assert!(load_model("zoo:nope", false).is_err());
+        assert!(load_model("/no/such/file.onnx", false).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let argv: Vec<String> = vec!["frobnicate".into()];
+        assert!(run(&argv).is_err());
+    }
+
+    #[test]
+    fn sweep_runs_on_zoo_model() {
+        let argv: Vec<String> =
+            ["sweep", "zoo:mlp", "--npus", "8", "--batch", "4"].iter().map(|s| s.to_string()).collect();
+        run(&argv).unwrap();
+    }
+}

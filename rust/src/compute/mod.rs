@@ -1,0 +1,269 @@
+//! SCALE-sim-style systolic-array compute-time model.
+//!
+//! The paper (§3.1) delegates per-layer compute times to SCALE-sim, a
+//! cycle-accurate systolic CNN accelerator simulator. This module
+//! implements SCALE-sim's *analytical* timing equations for an `R×C` PE
+//! array under the three classic dataflows, plus a DRAM-bandwidth bound:
+//!
+//! * **Output-stationary (OS)** — each fold streams `K` partial sums
+//!   through the array: `cycles/fold = 2R + C + K − 2`.
+//! * **Weight-stationary (WS)** — weights preloaded per fold, activations
+//!   streamed: `cycles/fold = R + C + M − 2` (+`R` load).
+//! * **Input-stationary (IS)** — dual of WS with `N` streaming.
+//!
+//! Folds = `⌈M/R⌉ × ⌈N/C⌉` (OS) or `⌈K/R⌉ × ⌈N/C⌉` (WS/IS). Conv layers
+//! are lowered to GEMM via im2col (`M = B·H·W`, `K = Cin·kh·kw`,
+//! `N = Cout`), exactly how SCALE-sim and the L1 Pallas kernel treat them.
+//! This mapping is also the §Hardware-Adaptation story: the systolic array
+//! *is* the MXU, so the same tiling drives the TPU kernel's BlockSpec.
+
+use crate::translator::{ComputeTimeModel, LayerInfo, LayerKind};
+
+/// Systolic dataflow variants (SCALE-sim's `dataflow` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Output stationary.
+    Os,
+    /// Weight stationary.
+    Ws,
+    /// Input stationary.
+    Is,
+}
+
+/// A GEMM problem `M×K × K×N`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    /// Output rows (batch × spatial for conv-as-GEMM).
+    pub m: u64,
+    /// Inner/contraction dimension.
+    pub k: u64,
+    /// Output columns.
+    pub n: u64,
+}
+
+impl Gemm {
+    /// MAC count.
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n
+    }
+
+    /// Derive the im2col GEMM for a layer (batch folded into M).
+    pub fn from_layer(layer: &LayerInfo, batch: i64) -> Gemm {
+        match layer.kind {
+            LayerKind::Conv => {
+                // out_shape = [B, Cout, H, W]; weight vars = Cout*K.
+                let cout = layer.out_shape.get(1).copied().unwrap_or(1).max(1) as u64;
+                let spatial: u64 = layer
+                    .out_shape
+                    .iter()
+                    .skip(2)
+                    .map(|&d| d.max(1) as u64)
+                    .product();
+                let b = layer.out_shape.first().copied().unwrap_or(batch).max(1) as u64;
+                let k = (layer.variables / cout).max(1);
+                Gemm { m: b * spatial, k, n: cout }
+            }
+            LayerKind::Dense | LayerKind::MatMul => {
+                let n = *layer.out_shape.last().unwrap_or(&1) as u64;
+                let n = n.max(1);
+                let k = (layer.variables / n).max(1);
+                let m = (layer.macs / (k * n)).max(1);
+                Gemm { m, k, n }
+            }
+            LayerKind::Embedding => Gemm { m: 1, k: 1, n: 1 },
+        }
+    }
+}
+
+/// SCALE-sim-like accelerator description.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicConfig {
+    /// PE array rows.
+    pub rows: u64,
+    /// PE array columns.
+    pub cols: u64,
+    /// Clock in GHz (cycles/ns).
+    pub clock_ghz: f64,
+    /// DRAM bandwidth in GB/s.
+    pub dram_gbps: f64,
+    /// Dataflow.
+    pub dataflow: Dataflow,
+}
+
+impl Default for SystolicConfig {
+    fn default() -> Self {
+        // A 128×128 MXU-class array at 940 MHz with 1.2 TB/s HBM.
+        SystolicConfig {
+            rows: 128,
+            cols: 128,
+            clock_ghz: 0.94,
+            dram_gbps: 1200.0,
+            dataflow: Dataflow::Ws,
+        }
+    }
+}
+
+impl SystolicConfig {
+    /// Compute cycles for a GEMM under the configured dataflow.
+    pub fn gemm_cycles(&self, g: Gemm) -> u64 {
+        let (r, c) = (self.rows as f64, self.cols as f64);
+        let (m, k, n) = (g.m as f64, g.k as f64, g.n as f64);
+        let ceil = |a: f64, b: f64| (a / b).ceil();
+        let cycles = match self.dataflow {
+            Dataflow::Os => (2.0 * r + c + k - 2.0) * ceil(m, r) * ceil(n, c),
+            Dataflow::Ws => (r + c + m - 2.0) * ceil(k, r) * ceil(n, c),
+            Dataflow::Is => (r + c + n - 2.0) * ceil(k, r) * ceil(m, c),
+        };
+        cycles.ceil() as u64
+    }
+
+    /// GEMM wall time in ns: max of compute cycles and the DRAM bound on
+    /// moving `A + B + C` once.
+    pub fn gemm_ns(&self, g: Gemm, elem_bytes: u64) -> u64 {
+        let compute = self.gemm_cycles(g) as f64 / self.clock_ghz;
+        let bytes = (g.m * g.k + g.k * g.n + g.m * g.n) * elem_bytes;
+        let dram = bytes as f64 / self.dram_gbps;
+        compute.max(dram).ceil() as u64
+    }
+
+    /// Achieved MAC throughput (MACs/cycle) for a GEMM — the utilization
+    /// figure DESIGN.md's roofline discussion reports.
+    pub fn utilization(&self, g: Gemm) -> f64 {
+        let peak = (self.rows * self.cols) as f64;
+        g.macs() as f64 / (self.gemm_cycles(g) as f64 * peak)
+    }
+}
+
+/// [`ComputeTimeModel`] backed by the systolic model. Backward GEMMs
+/// (input-grad: `M×N × N×K`; weight-grad: `K×M × M×N`) are modeled with
+/// their exact transposed shapes, not assumed equal to forward.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicCompute {
+    /// Accelerator description.
+    pub cfg: SystolicConfig,
+    /// Batch size (must match the extraction batch).
+    pub batch: i64,
+}
+
+impl SystolicCompute {
+    /// Standard configuration at a given batch.
+    pub fn new(batch: i64) -> SystolicCompute {
+        SystolicCompute { cfg: SystolicConfig::default(), batch }
+    }
+}
+
+impl ComputeTimeModel for SystolicCompute {
+    fn layer_times(&self, layer: &LayerInfo) -> (u64, u64, u64) {
+        let e = layer.dtype.size_bytes().max(1);
+        let f = Gemm::from_layer(layer, self.batch);
+        if layer.kind == LayerKind::Embedding {
+            // Lookup is bandwidth-bound on the gathered rows.
+            let t = (layer.out_act_bytes as f64 / self.cfg.dram_gbps).ceil() as u64;
+            return (t.max(1), t.max(1), 1);
+        }
+        let fwd = self.cfg.gemm_ns(f, e);
+        // dX = dY × Wᵀ : (M×N)(N×K)
+        let ig = self.cfg.gemm_ns(Gemm { m: f.m, k: f.n, n: f.k }, e);
+        // dW = Xᵀ × dY : (K×M)(M×N)
+        let wg = self.cfg.gemm_ns(Gemm { m: f.k, k: f.m, n: f.n }, e);
+        (fwd.max(1), ig.max(1), wg.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::DataType;
+
+    fn cfg(df: Dataflow) -> SystolicConfig {
+        SystolicConfig { dataflow: df, ..Default::default() }
+    }
+
+    #[test]
+    fn square_gemm_cycles_sane() {
+        // 128³ GEMM on a 128×128 WS array: one fold, R+C+M-2 = 382 cycles.
+        let c = cfg(Dataflow::Ws);
+        assert_eq!(c.gemm_cycles(Gemm { m: 128, k: 128, n: 128 }), 382);
+        // OS: 2R+C+K-2 = 510.
+        assert_eq!(cfg(Dataflow::Os).gemm_cycles(Gemm { m: 128, k: 128, n: 128 }), 510);
+    }
+
+    #[test]
+    fn folds_scale_linearly() {
+        let c = cfg(Dataflow::Ws);
+        let one = c.gemm_cycles(Gemm { m: 128, k: 128, n: 128 });
+        let four = c.gemm_cycles(Gemm { m: 128, k: 256, n: 256 });
+        assert_eq!(four, one * 4);
+    }
+
+    #[test]
+    fn utilization_peaks_near_large_square() {
+        let c = cfg(Dataflow::Ws);
+        let small = c.utilization(Gemm { m: 8, k: 8, n: 8 });
+        let big = c.utilization(Gemm { m: 4096, k: 4096, n: 4096 });
+        assert!(big > 0.9, "large GEMM should near peak, got {big}");
+        assert!(small < 0.01, "tiny GEMM wastes the array, got {small}");
+    }
+
+    #[test]
+    fn dram_bound_kicks_in_when_bandwidth_starved() {
+        // Same GEMM, 12× less DRAM bandwidth → the memory bound governs.
+        let fast = cfg(Dataflow::Ws);
+        let slow = SystolicConfig { dram_gbps: 100.0, ..fast };
+        let g = Gemm { m: 1 << 20, k: 1, n: 128 };
+        let dram_ns = ((g.m * g.k + g.k * g.n + g.m * g.n) * 4) as f64 / slow.dram_gbps;
+        assert_eq!(slow.gemm_ns(g, 4), dram_ns.ceil() as u64);
+        // With the default 1.2 TB/s the fill-dominated compute bound wins.
+        assert!(fast.gemm_ns(g, 4) < dram_ns as u64);
+    }
+
+    #[test]
+    fn conv_layer_to_gemm_mapping() {
+        let layer = LayerInfo {
+            name: "conv".into(),
+            kind: LayerKind::Conv,
+            variables: 64 * 3 * 7 * 7,
+            dtype: DataType::Float,
+            weight_bytes: 64 * 3 * 7 * 7 * 4,
+            in_act_bytes: 0,
+            out_act_bytes: 0,
+            macs: 0,
+            out_shape: vec![8, 64, 112, 112],
+        };
+        let g = Gemm::from_layer(&layer, 8);
+        assert_eq!(g.m, 8 * 112 * 112);
+        assert_eq!(g.k, 3 * 7 * 7);
+        assert_eq!(g.n, 64);
+    }
+
+    #[test]
+    fn backward_times_differ_from_forward_for_rectangular() {
+        let layer = LayerInfo {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            variables: 25088 * 4096,
+            dtype: DataType::Float,
+            weight_bytes: 25088 * 4096 * 4,
+            in_act_bytes: 32 * 25088 * 4,
+            out_act_bytes: 32 * 4096 * 4,
+            macs: 32 * 25088 * 4096,
+            out_shape: vec![32, 4096],
+        };
+        let sc = SystolicCompute::new(32);
+        let (f, ig, wg) = sc.layer_times(&layer);
+        assert!(f > 0 && ig > 0 && wg > 0);
+        // wg GEMM is (25088×32)(32×4096): same MACs, different fold shape.
+        assert_ne!(f, wg);
+    }
+
+    #[test]
+    fn dataflow_changes_cycles() {
+        let g = Gemm { m: 1024, k: 64, n: 1024 };
+        let ws = cfg(Dataflow::Ws).gemm_cycles(g);
+        let os = cfg(Dataflow::Os).gemm_cycles(g);
+        let is = cfg(Dataflow::Is).gemm_cycles(g);
+        // With K << M, WS folds over K are cheap relative to OS.
+        assert_ne!(ws, os);
+        assert_ne!(os, is);
+    }
+}

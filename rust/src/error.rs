@@ -1,0 +1,69 @@
+//! Unified error type for the ModTrans library.
+
+use thiserror::Error;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for all ModTrans subsystems.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Protobuf wire-format decoding failed.
+    #[error("protobuf decode error: {0}")]
+    ProtoDecode(String),
+
+    /// ONNX model-level validation or parsing failed.
+    #[error("onnx error: {0}")]
+    Onnx(String),
+
+    /// Unknown model name requested from the zoo.
+    #[error("unknown zoo model '{0}' (try `modtrans zoo list`)")]
+    UnknownModel(String),
+
+    /// Translator could not extract the required layer information.
+    #[error("translate error: {0}")]
+    Translate(String),
+
+    /// Workload description file is malformed.
+    #[error("workload parse error at line {line}: {msg}")]
+    WorkloadParse { line: usize, msg: String },
+
+    /// Simulator configuration or execution error.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// JSON parse error with byte offset.
+    #[error("json parse error at offset {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Configuration semantic error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT runtime / artifact error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor for ONNX errors.
+    pub fn onnx(msg: impl Into<String>) -> Self {
+        Error::Onnx(msg.into())
+    }
+    /// Shorthand constructor for simulator errors.
+    pub fn sim(msg: impl Into<String>) -> Self {
+        Error::Sim(msg.into())
+    }
+    /// Shorthand constructor for translator errors.
+    pub fn translate(msg: impl Into<String>) -> Self {
+        Error::Translate(msg.into())
+    }
+}

@@ -1,0 +1,43 @@
+//! # ModTrans
+//!
+//! A production-grade reproduction of *"ModTrans: Translating Real-world
+//! Models for Distributed Training Simulator"* (CS.DC 2026): a translator
+//! from ONNX models to the layer-wise workload description consumed by
+//! ASTRA-sim-class distributed-training simulators — plus every substrate
+//! the paper depends on, built from scratch:
+//!
+//! * [`proto`] — protobuf wire-format codec (ONNX's serialization).
+//! * [`onnx`] — an ONNX IR subset with wire-compatible serialize/parse and
+//!   shape inference.
+//! * [`zoo`] — model builders (ResNet, VGG, AlexNet, MLP, transformer)
+//!   generating real ONNX graphs with exact parameter counts.
+//! * [`translator`] — the paper's contribution: layer extraction and
+//!   ASTRA-sim workload emission.
+//! * [`workload`] — the ASTRA-sim DNN-description file format.
+//! * [`sim`] — a full discrete-event distributed-training simulator
+//!   (network, collectives, system scheduler, training loop).
+//! * [`compute`] — SCALE-sim-style systolic-array compute-time model.
+//! * [`runtime`] / [`calibrate`] — PJRT execution of AOT-compiled
+//!   JAX/Pallas GEMM artifacts for measured per-layer compute times.
+//! * [`json`], [`util`], [`cli`] — config / infra substrates (no external
+//!   crates beyond `xla`, `anyhow`, `thiserror`).
+//!
+//! The three-layer architecture keeps Python strictly at build time:
+//! JAX/Pallas author + AOT-lower compute kernels to HLO text
+//! (`make artifacts`); the Rust binary loads and runs them via PJRT.
+
+pub mod calibrate;
+pub mod cli;
+pub mod compute;
+pub mod error;
+pub mod json;
+pub mod onnx;
+pub mod proto;
+pub mod runtime;
+pub mod sim;
+pub mod translator;
+pub mod util;
+pub mod workload;
+pub mod zoo;
+
+pub use error::{Error, Result};

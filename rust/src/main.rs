@@ -1,0 +1,13 @@
+//! `modtrans` binary — the L3 coordinator CLI.
+//!
+//! See [`modtrans::cli`] for the command grammar; `modtrans help` prints
+//! usage. Python is never invoked from here: AOT artifacts are built by
+//! `make artifacts` and only *loaded* at run time.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = modtrans::cli::run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

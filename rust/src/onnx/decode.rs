@@ -1,0 +1,463 @@
+//! ONNX parsing: protobuf bytes → structs.
+//!
+//! Two modes:
+//! * [`parse_model`] — full decode including tensor payloads (`raw_data`).
+//! * [`parse_model_meta`] — metadata-only: tensor payloads are *skipped*
+//!   (zero copies of the weight bytes), recording only their length. This
+//!   is the translator's hot path: layer extraction needs dims + dtype +
+//!   name, never the weights themselves, which is why ModTrans stays well
+//!   under the paper's 1-second budget even on 0.5 GiB VGG files.
+//!
+//! Unknown fields are skipped (forward compatibility with newer
+//! exporters), malformed input yields `Err`, never a panic.
+
+use super::model::*;
+use super::DataType;
+use crate::error::{Error, Result};
+use crate::proto::{Reader, WireType};
+
+/// Decode options.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeOpts {
+    /// Copy tensor payloads into [`Tensor::raw_data`]. When false, only
+    /// [`Tensor::payload_len`] is recorded.
+    pub load_payloads: bool,
+    /// Payloads at or below this many bytes are copied even when
+    /// `load_payloads` is false. Shape inference needs small constant
+    /// tensors (e.g. `Reshape` shape inputs) but never the weights.
+    pub small_payload_threshold: u64,
+}
+
+/// Full decode (payloads included).
+pub fn parse_model(bytes: &[u8]) -> Result<Model> {
+    parse_with(bytes, DecodeOpts { load_payloads: true, small_payload_threshold: 0 })
+}
+
+/// Metadata-only decode (weight payloads skipped, tiny constants kept) —
+/// the translation fast path.
+pub fn parse_model_meta(bytes: &[u8]) -> Result<Model> {
+    parse_with(bytes, DecodeOpts { load_payloads: false, small_payload_threshold: 256 })
+}
+
+/// Decode with explicit options.
+pub fn parse_with(bytes: &[u8], opts: DecodeOpts) -> Result<Model> {
+    let mut m = Model::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => m.ir_version = expect_varint(&mut r, wt, "ir_version")? as i64,
+            2 => m.producer_name = expect_str(&mut r, wt, "producer_name")?,
+            3 => m.producer_version = expect_str(&mut r, wt, "producer_version")?,
+            4 => m.domain = expect_str(&mut r, wt, "domain")?,
+            5 => m.model_version = expect_varint(&mut r, wt, "model_version")? as i64,
+            6 => m.doc_string = expect_str(&mut r, wt, "doc_string")?,
+            7 => m.graph = parse_graph(expect_bytes(&mut r, wt, "graph")?, opts)?,
+            8 => m.opset_import.push(parse_opset(expect_bytes(&mut r, wt, "opset")?)?),
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(m)
+}
+
+fn expect_bytes<'a>(r: &mut Reader<'a>, wt: WireType, what: &str) -> Result<&'a [u8]> {
+    if wt != WireType::Len {
+        return Err(Error::ProtoDecode(format!("{what}: expected LEN wire type")));
+    }
+    r.bytes()
+}
+
+fn expect_str(r: &mut Reader<'_>, wt: WireType, what: &str) -> Result<String> {
+    if wt != WireType::Len {
+        return Err(Error::ProtoDecode(format!("{what}: expected LEN wire type")));
+    }
+    Ok(r.str()?.to_string())
+}
+
+fn expect_varint(r: &mut Reader<'_>, wt: WireType, what: &str) -> Result<u64> {
+    if wt != WireType::Varint {
+        return Err(Error::ProtoDecode(format!("{what}: expected VARINT wire type")));
+    }
+    r.raw_varint()
+}
+
+fn parse_opset(bytes: &[u8]) -> Result<OperatorSetId> {
+    let mut os = OperatorSetId::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => os.domain = expect_str(&mut r, wt, "opset.domain")?,
+            2 => os.version = expect_varint(&mut r, wt, "opset.version")? as i64,
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(os)
+}
+
+fn parse_graph(bytes: &[u8], opts: DecodeOpts) -> Result<Graph> {
+    let mut g = Graph::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => g.nodes.push(parse_node(expect_bytes(&mut r, wt, "node")?)?),
+            2 => g.name = expect_str(&mut r, wt, "graph.name")?,
+            5 => g
+                .initializers
+                .push(parse_tensor(expect_bytes(&mut r, wt, "initializer")?, opts)?),
+            10 => g.doc_string = expect_str(&mut r, wt, "graph.doc_string")?,
+            11 => g.inputs.push(parse_value_info(expect_bytes(&mut r, wt, "input")?)?),
+            12 => g.outputs.push(parse_value_info(expect_bytes(&mut r, wt, "output")?)?),
+            13 => g
+                .value_infos
+                .push(parse_value_info(expect_bytes(&mut r, wt, "value_info")?)?),
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(g)
+}
+
+fn parse_node(bytes: &[u8]) -> Result<Node> {
+    let mut n = Node::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => n.inputs.push(expect_str(&mut r, wt, "node.input")?),
+            2 => n.outputs.push(expect_str(&mut r, wt, "node.output")?),
+            3 => n.name = expect_str(&mut r, wt, "node.name")?,
+            4 => n.op_type = expect_str(&mut r, wt, "node.op_type")?,
+            5 => n.attributes.push(parse_attribute(expect_bytes(&mut r, wt, "attr")?)?),
+            7 => n.domain = expect_str(&mut r, wt, "node.domain")?,
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(n)
+}
+
+fn parse_attribute(bytes: &[u8]) -> Result<Attribute> {
+    let mut name = String::new();
+    let mut value: Option<AttributeValue> = None;
+    let mut floats: Vec<f32> = Vec::new();
+    let mut ints: Vec<i64> = Vec::new();
+    let mut strings: Vec<String> = Vec::new();
+    let mut declared_type: Option<u64> = None;
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => name = expect_str(&mut r, wt, "attr.name")?,
+            2 => {
+                if wt != WireType::I32 {
+                    return Err(Error::ProtoDecode("attr.f: expected I32".into()));
+                }
+                value = Some(AttributeValue::Float(r.float()?));
+            }
+            3 => value = Some(AttributeValue::Int(expect_varint(&mut r, wt, "attr.i")? as i64)),
+            4 => value = Some(AttributeValue::String(
+                String::from_utf8_lossy(expect_bytes(&mut r, wt, "attr.s")?).into_owned(),
+            )),
+            7 => match wt {
+                // Packed floats.
+                WireType::Len => {
+                    let body = r.bytes()?;
+                    if body.len() % 4 != 0 {
+                        return Err(Error::ProtoDecode("attr.floats: bad packed length".into()));
+                    }
+                    for c in body.chunks_exact(4) {
+                        floats.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                    }
+                }
+                WireType::I32 => floats.push(r.float()?),
+                _ => return Err(Error::ProtoDecode("attr.floats: bad wire type".into())),
+            },
+            8 => match wt {
+                WireType::Len => ints.extend(Reader::new(r.bytes()?).drain_varints()?),
+                WireType::Varint => ints.push(r.raw_varint()? as i64),
+                _ => return Err(Error::ProtoDecode("attr.ints: bad wire type".into())),
+            },
+            9 => strings.push(
+                String::from_utf8_lossy(expect_bytes(&mut r, wt, "attr.strings")?).into_owned(),
+            ),
+            20 => declared_type = Some(expect_varint(&mut r, wt, "attr.type")?),
+            _ => r.skip(wt)?,
+        }
+    }
+    // Choose the value arm: prefer the declared type; repeated arms override
+    // scalar arms when present.
+    let value = match declared_type {
+        Some(6) => AttributeValue::Floats(floats),
+        Some(7) => AttributeValue::Ints(ints),
+        Some(8) => AttributeValue::Strings(strings),
+        _ if !ints.is_empty() => AttributeValue::Ints(ints),
+        _ if !floats.is_empty() => AttributeValue::Floats(floats),
+        _ if !strings.is_empty() => AttributeValue::Strings(strings),
+        _ => value.unwrap_or(AttributeValue::Int(0)),
+    };
+    Ok(Attribute { name, value })
+}
+
+fn parse_tensor(bytes: &[u8], opts: DecodeOpts) -> Result<Tensor> {
+    let mut t = Tensor::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => match wt {
+                WireType::Len => t.dims.extend(Reader::new(r.bytes()?).drain_varints()?),
+                WireType::Varint => t.dims.push(r.raw_varint()? as i64),
+                _ => return Err(Error::ProtoDecode("tensor.dims: bad wire type".into())),
+            },
+            2 => {
+                t.data_type =
+                    DataType::from_i32(expect_varint(&mut r, wt, "tensor.data_type")? as i32)?
+            }
+            8 => t.name = expect_str(&mut r, wt, "tensor.name")?,
+            9 => {
+                if wt != WireType::Len {
+                    return Err(Error::ProtoDecode("tensor.raw_data: expected LEN".into()));
+                }
+                let body = r.bytes()?;
+                t.payload_len = body.len() as u64;
+                if opts.load_payloads || t.payload_len <= opts.small_payload_threshold {
+                    t.raw_data = body.to_vec();
+                }
+            }
+            // float_data(4) / int32_data(5) / int64_data(7) / double_data(10):
+            // count toward payload length; materialized only on request.
+            4 | 5 | 7 | 10 | 11 => {
+                if wt == WireType::Len {
+                    let body = r.bytes()?;
+                    t.payload_len += body.len() as u64;
+                    if opts.load_payloads {
+                        t.raw_data.extend_from_slice(body);
+                    }
+                } else {
+                    r.skip(wt)?;
+                }
+            }
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(t)
+}
+
+fn parse_value_info(bytes: &[u8]) -> Result<ValueInfo> {
+    let mut vi = ValueInfo::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => vi.name = expect_str(&mut r, wt, "value_info.name")?,
+            2 => vi.ty = parse_type(expect_bytes(&mut r, wt, "value_info.type")?)?,
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(vi)
+}
+
+fn parse_type(bytes: &[u8]) -> Result<Option<TensorType>> {
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            // TypeProto.tensor_type
+            1 => {
+                let body = expect_bytes(&mut r, wt, "type.tensor_type")?;
+                return Ok(Some(parse_tensor_type(body)?));
+            }
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(None)
+}
+
+fn parse_tensor_type(bytes: &[u8]) -> Result<TensorType> {
+    let mut tt = TensorType::default();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => {
+                tt.elem_type =
+                    DataType::from_i32(expect_varint(&mut r, wt, "tensor_type.elem")? as i32)?
+            }
+            2 => {
+                let body = expect_bytes(&mut r, wt, "tensor_type.shape")?;
+                tt.shape = parse_shape(body)?;
+            }
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(tt)
+}
+
+fn parse_shape(bytes: &[u8]) -> Result<Vec<Dim>> {
+    let mut dims = Vec::new();
+    let mut r = Reader::new(bytes);
+    while !r.is_empty() {
+        let (f, wt) = r.tag()?;
+        match f {
+            1 => {
+                let body = expect_bytes(&mut r, wt, "shape.dim")?;
+                let mut dr = Reader::new(body);
+                let mut dim = Dim::Value(0);
+                while !dr.is_empty() {
+                    let (df, dwt) = dr.tag()?;
+                    match df {
+                        1 => dim = Dim::Value(expect_varint(&mut dr, dwt, "dim_value")? as i64),
+                        2 => dim = Dim::Param(expect_str(&mut dr, dwt, "dim_param")?),
+                        _ => dr.skip(dwt)?,
+                    }
+                }
+                dims.push(dim);
+            }
+            _ => r.skip(wt)?,
+        }
+    }
+    Ok(dims)
+}
+
+/// Extension: drain all varints from a packed-field reader.
+trait DrainVarints {
+    fn drain_varints(self) -> Result<Vec<i64>>;
+}
+impl<'a> DrainVarints for Reader<'a> {
+    fn drain_varints(mut self) -> Result<Vec<i64>> {
+        let mut out = Vec::new();
+        while !self.is_empty() {
+            out.push(self.raw_varint()? as i64);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::encode_model;
+
+    fn sample_model() -> Model {
+        let mut g = Graph {
+            name: "g".into(),
+            ..Default::default()
+        };
+        g.initializers.push(Tensor {
+            dims: vec![64, 3, 3, 3],
+            data_type: DataType::Float,
+            name: "conv0.weight".into(),
+            raw_data: vec![0u8; 64 * 27 * 4],
+            payload_len: 0,
+        });
+        g.nodes.push(Node {
+            inputs: vec!["x".into(), "conv0.weight".into(), String::new()],
+            outputs: vec!["y".into()],
+            name: "conv0".into(),
+            op_type: "Conv".into(),
+            domain: String::new(),
+            attributes: vec![
+                Attribute { name: "strides".into(), value: AttributeValue::Ints(vec![2, 2]) },
+                Attribute { name: "group".into(), value: AttributeValue::Int(1) },
+                Attribute { name: "auto_pad".into(), value: AttributeValue::String("NOTSET".into()) },
+                Attribute { name: "alpha".into(), value: AttributeValue::Float(0.5) },
+            ],
+        });
+        g.inputs.push(ValueInfo {
+            name: "x".into(),
+            ty: Some(TensorType {
+                elem_type: DataType::Float,
+                shape: vec![Dim::Param("N".into()), Dim::Value(3), Dim::Value(224), Dim::Value(224)],
+            }),
+        });
+        g.outputs.push(ValueInfo { name: "y".into(), ty: None });
+        Model::wrap(g)
+    }
+
+    #[test]
+    fn encode_parse_roundtrip_full() {
+        let m = sample_model();
+        let bytes = encode_model(&m);
+        let m2 = parse_model(&bytes).unwrap();
+        assert_eq!(m2.ir_version, 8);
+        assert_eq!(m2.producer_name, "modtrans-zoo");
+        assert_eq!(m2.opset_import.len(), 1);
+        assert_eq!(m2.opset_import[0].version, 17);
+        assert_eq!(m2.graph.name, "g");
+        assert_eq!(m2.graph.initializers.len(), 1);
+        let t = &m2.graph.initializers[0];
+        assert_eq!(t.dims, vec![64, 3, 3, 3]);
+        assert_eq!(t.data_type, DataType::Float);
+        assert_eq!(t.name, "conv0.weight");
+        assert_eq!(t.raw_data.len(), 6912);
+        assert_eq!(t.payload_len, 6912);
+        let n = &m2.graph.nodes[0];
+        assert_eq!(n.op_type, "Conv");
+        assert_eq!(n.inputs, vec!["x", "conv0.weight", ""]);
+        assert_eq!(n.attr_ints("strides"), &[2, 2]);
+        assert_eq!(n.attr_i("group", 0), 1);
+        assert_eq!(
+            n.attr("auto_pad"),
+            Some(&AttributeValue::String("NOTSET".into()))
+        );
+        assert_eq!(n.attr_f("alpha", 0.0), 0.5);
+        // Typed input survived.
+        let x = &m2.graph.inputs[0];
+        let ty = x.ty.as_ref().unwrap();
+        assert_eq!(ty.elem_type, DataType::Float);
+        assert_eq!(ty.shape[0], Dim::Param("N".into()));
+        assert_eq!(ty.shape[3], Dim::Value(224));
+    }
+
+    #[test]
+    fn meta_decode_skips_payload_but_keeps_len() {
+        let m = sample_model();
+        let bytes = encode_model(&m);
+        let m2 = parse_model_meta(&bytes).unwrap();
+        let t = &m2.graph.initializers[0];
+        assert!(t.raw_data.is_empty());
+        assert_eq!(t.payload_len, 6912);
+        assert_eq!(t.num_elements(), 1728);
+        assert_eq!(t.size_bytes(), 6912);
+    }
+
+    #[test]
+    fn truncation_fuzz_no_panics() {
+        let m = sample_model();
+        let bytes = encode_model(&m);
+        // Every truncation point must produce Err or Ok, never panic.
+        let step = (bytes.len() / 257).max(1);
+        for cut in (0..bytes.len()).step_by(step) {
+            let _ = parse_model(&bytes[..cut]);
+        }
+    }
+
+    #[test]
+    fn bitflip_fuzz_no_panics() {
+        use crate::util::rng::Rng;
+        let m = sample_model();
+        let bytes = encode_model(&m);
+        let mut rng = Rng::new(0x5eed);
+        for _ in 0..300 {
+            let mut corrupted = bytes.clone();
+            let flips = rng.range(1, 8);
+            for _ in 0..flips {
+                let i = rng.below(corrupted.len() as u64) as usize;
+                corrupted[i] ^= 1 << rng.below(8) as u8;
+            }
+            let _ = parse_model(&corrupted); // must not panic
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_skipped() {
+        // Append an unknown field (99, varint) at model level.
+        let m = sample_model();
+        let mut bytes = encode_model(&m);
+        let mut w = crate::proto::Writer::new();
+        w.uint64(99, 12345);
+        bytes.extend_from_slice(&w.into_bytes());
+        let m2 = parse_model(&bytes).unwrap();
+        assert_eq!(m2.graph.initializers.len(), 1);
+    }
+}

@@ -1,0 +1,138 @@
+//! ONNX serialization: structs → protobuf bytes (field numbers from
+//! onnx.proto3, so output is loadable by any ONNX tool).
+
+use super::model::*;
+use crate::proto::Writer;
+
+/// Serialize a [`Model`] to `.onnx` bytes.
+pub fn encode_model(m: &Model) -> Vec<u8> {
+    // Preallocate: payload bytes dominate (VGG16 ≈ 0.5 GiB), so reserve the
+    // sum of initializer payloads plus slack for structure.
+    let payload: usize =
+        m.graph.initializers.iter().map(|t| t.raw_data.len() + 64).sum::<usize>();
+    let mut w = Writer::with_capacity(payload + 4096);
+    w.int64(1, m.ir_version);
+    w.string(2, &m.producer_name);
+    w.string(3, &m.producer_version);
+    w.string(4, &m.domain);
+    w.int64(5, m.model_version);
+    w.string(6, &m.doc_string);
+    w.message(7, &encode_graph(&m.graph));
+    for os in &m.opset_import {
+        let mut ow = Writer::new();
+        ow.string(1, &os.domain);
+        ow.int64(2, os.version);
+        w.message(8, &ow);
+    }
+    w.into_bytes()
+}
+
+fn encode_graph(g: &Graph) -> Writer {
+    let payload: usize = g.initializers.iter().map(|t| t.raw_data.len() + 64).sum::<usize>();
+    let mut w = Writer::with_capacity(payload + 2048);
+    for n in &g.nodes {
+        w.message(1, &encode_node(n));
+    }
+    w.string(2, &g.name);
+    for t in &g.initializers {
+        w.message(5, &encode_tensor(t));
+    }
+    w.string(10, &g.doc_string);
+    for vi in &g.inputs {
+        w.message(11, &encode_value_info(vi));
+    }
+    for vi in &g.outputs {
+        w.message(12, &encode_value_info(vi));
+    }
+    for vi in &g.value_infos {
+        w.message(13, &encode_value_info(vi));
+    }
+    w
+}
+
+fn encode_node(n: &Node) -> Writer {
+    let mut w = Writer::new();
+    for i in &n.inputs {
+        // Written even when empty: ONNX uses empty input names for omitted
+        // optional inputs, and position is significant.
+        w.string_always(1, i);
+    }
+    for o in &n.outputs {
+        w.string_always(2, o);
+    }
+    w.string(3, &n.name);
+    w.string(4, &n.op_type);
+    for a in &n.attributes {
+        w.message(5, &encode_attribute(a));
+    }
+    w.string(7, &n.domain);
+    w
+}
+
+fn encode_attribute(a: &Attribute) -> Writer {
+    let mut w = Writer::new();
+    w.string(1, &a.name);
+    match &a.value {
+        AttributeValue::Float(f) => {
+            w.float(2, *f);
+            w.uint64(20, 1);
+        }
+        AttributeValue::Int(i) => {
+            w.int64(3, *i);
+            w.uint64(20, 2);
+        }
+        AttributeValue::String(s) => {
+            w.bytes(4, s.as_bytes());
+            w.uint64(20, 3);
+        }
+        AttributeValue::Floats(fs) => {
+            w.packed_float(7, fs);
+            w.uint64(20, 6);
+        }
+        AttributeValue::Ints(is) => {
+            w.packed_int64(8, is);
+            w.uint64(20, 7);
+        }
+        AttributeValue::Strings(ss) => {
+            for s in ss {
+                w.bytes(9, s.as_bytes());
+            }
+            w.uint64(20, 8);
+        }
+    }
+    w
+}
+
+fn encode_tensor(t: &Tensor) -> Writer {
+    let mut w = Writer::with_capacity(t.raw_data.len() + 64);
+    w.packed_int64(1, &t.dims);
+    w.uint64(2, t.data_type as i32 as u64);
+    w.string(8, &t.name);
+    w.bytes(9, &t.raw_data);
+    w
+}
+
+fn encode_value_info(vi: &ValueInfo) -> Writer {
+    let mut w = Writer::new();
+    w.string(1, &vi.name);
+    if let Some(ty) = &vi.ty {
+        // TypeProto { tensor_type = field 1 }
+        let mut tt = Writer::new();
+        tt.uint64(1, ty.elem_type as i32 as u64);
+        // TensorShapeProto at field 2.
+        let mut shape = Writer::new();
+        for d in &ty.shape {
+            let mut dw = Writer::new();
+            match d {
+                Dim::Value(v) => dw.int64(1, *v),
+                Dim::Param(p) => dw.string(2, p),
+            }
+            shape.message(1, &dw);
+        }
+        tt.message(2, &shape);
+        let mut tp = Writer::new();
+        tp.message(1, &tt);
+        w.message(2, &tp);
+    }
+    w
+}

@@ -1,0 +1,159 @@
+//! Graph utilities: name indices, producer/consumer maps, topological
+//! ordering. Used by shape inference and the translator's layer walk.
+
+use super::model::{Graph, Node, Tensor};
+use crate::error::{Error, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Index over a [`Graph`]: initializers by name, node producing each edge,
+/// and a verified topological order of node indices.
+pub struct GraphIndex<'g> {
+    /// The indexed graph.
+    pub graph: &'g Graph,
+    init_by_name: HashMap<&'g str, &'g Tensor>,
+    producer: HashMap<&'g str, usize>,
+    topo: Vec<usize>,
+}
+
+impl<'g> GraphIndex<'g> {
+    /// Build the index; fails if the graph contains a cycle or an output
+    /// name is produced twice.
+    pub fn new(graph: &'g Graph) -> Result<GraphIndex<'g>> {
+        let mut init_by_name = HashMap::with_capacity(graph.initializers.len());
+        for t in &graph.initializers {
+            init_by_name.insert(t.name.as_str(), t);
+        }
+        let mut producer: HashMap<&str, usize> = HashMap::new();
+        for (i, n) in graph.nodes.iter().enumerate() {
+            for o in &n.outputs {
+                if o.is_empty() {
+                    continue;
+                }
+                if producer.insert(o.as_str(), i).is_some() {
+                    return Err(Error::onnx(format!("edge '{o}' produced by two nodes")));
+                }
+            }
+        }
+        let topo = topo_sort(graph, &producer)?;
+        Ok(GraphIndex { graph, init_by_name, producer, topo })
+    }
+
+    /// Look up an initializer by edge name.
+    pub fn initializer(&self, name: &str) -> Option<&'g Tensor> {
+        self.init_by_name.get(name).copied()
+    }
+
+    /// True if the edge is a constant parameter (weight).
+    pub fn is_initializer(&self, name: &str) -> bool {
+        self.init_by_name.contains_key(name)
+    }
+
+    /// The node index producing an edge, if any.
+    pub fn producer_of(&self, name: &str) -> Option<usize> {
+        self.producer.get(name).copied()
+    }
+
+    /// Node indices in topological order.
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Nodes in topological order.
+    pub fn topo_nodes(&self) -> impl Iterator<Item = &'g Node> + '_ {
+        self.topo.iter().map(move |&i| &self.graph.nodes[i])
+    }
+}
+
+/// Kahn's algorithm over node-index dependencies; detects cycles.
+///
+/// Ready nodes are popped in *node-index order* (min-heap), so when the
+/// original node list is already a valid execution order — true for every
+/// real exporter and for the zoo builders — the topological order equals
+/// the authored order. This keeps layer extraction aligned with the
+/// paper's table ordering (e.g. a ResNet projection shortcut appearing
+/// after the block's main-path convs).
+fn topo_sort(graph: &Graph, producer: &HashMap<&str, usize>) -> Result<Vec<usize>> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = graph.nodes.len();
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let mut seen: HashSet<usize> = HashSet::new();
+        for input in &node.inputs {
+            if let Some(&p) = producer.get(input.as_str()) {
+                if p != i && seen.insert(p) {
+                    succs[p].push(i);
+                    indeg[i] += 1;
+                }
+            }
+        }
+    }
+    let mut q: BinaryHeap<Reverse<usize>> =
+        (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
+    let mut out = Vec::with_capacity(n);
+    while let Some(Reverse(i)) = q.pop() {
+        out.push(i);
+        for &s in &succs[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                q.push(Reverse(s));
+            }
+        }
+    }
+    if out.len() != n {
+        return Err(Error::onnx("graph contains a cycle"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::model::*;
+    use crate::onnx::DataType;
+
+    fn node(name: &str, op: &str, ins: &[&str], outs: &[&str]) -> Node {
+        Node {
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            outputs: outs.iter().map(|s| s.to_string()).collect(),
+            name: name.into(),
+            op_type: op.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let mut g = Graph::default();
+        // Intentionally out of order: b consumes a's output but appears first.
+        g.nodes.push(node("b", "Relu", &["t0"], &["t1"]));
+        g.nodes.push(node("a", "Conv", &["x", "w"], &["t0"]));
+        g.initializers.push(Tensor {
+            name: "w".into(),
+            data_type: DataType::Float,
+            dims: vec![1],
+            ..Default::default()
+        });
+        let idx = GraphIndex::new(&g).unwrap();
+        assert_eq!(idx.topo_order(), &[1, 0]);
+        assert!(idx.is_initializer("w"));
+        assert_eq!(idx.producer_of("t1"), Some(0));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::default();
+        g.nodes.push(node("a", "Add", &["t1", "x"], &["t0"]));
+        g.nodes.push(node("b", "Relu", &["t0"], &["t1"]));
+        assert!(GraphIndex::new(&g).is_err());
+    }
+
+    #[test]
+    fn duplicate_producer_rejected() {
+        let mut g = Graph::default();
+        g.nodes.push(node("a", "Relu", &["x"], &["t"]));
+        g.nodes.push(node("b", "Relu", &["x"], &["t"]));
+        assert!(GraphIndex::new(&g).is_err());
+    }
+}

@@ -1,0 +1,279 @@
+//! ONNX message structs (the subset of onnx.proto3 that real CNN/MLP/
+//! transformer exporters emit).
+
+use super::DataType;
+
+/// `ModelProto` — the top-level serialized unit of an `.onnx` file.
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    /// ONNX IR version (field 1). Exporters currently emit 7–10.
+    pub ir_version: i64,
+    /// Tool that produced the model (field 2), e.g. `"modtrans-zoo"`.
+    pub producer_name: String,
+    /// Producer version string (field 3).
+    pub producer_version: String,
+    /// Model namespace/domain (field 4).
+    pub domain: String,
+    /// Model version number (field 5).
+    pub model_version: i64,
+    /// Free-text documentation (field 6).
+    pub doc_string: String,
+    /// The computation graph (field 7).
+    pub graph: Graph,
+    /// Operator-set requirements (field 8).
+    pub opset_import: Vec<OperatorSetId>,
+}
+
+/// `OperatorSetIdProto` (domain + version).
+#[derive(Debug, Clone, Default)]
+pub struct OperatorSetId {
+    /// Operator domain; empty string is the default ai.onnx domain.
+    pub domain: String,
+    /// Opset version (field 2).
+    pub version: i64,
+}
+
+/// `GraphProto` — nodes, initializers, and the graph signature.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Topologically sorted compute nodes (field 1).
+    pub nodes: Vec<Node>,
+    /// Graph name (field 2).
+    pub name: String,
+    /// Constant parameters: the model's weights (field 5). ModTrans's
+    /// layer extraction walks exactly this list (paper §3.3).
+    pub initializers: Vec<Tensor>,
+    /// Graph inputs (field 11). Real exporters list only data inputs here;
+    /// initializers provide the rest.
+    pub inputs: Vec<ValueInfo>,
+    /// Graph outputs (field 12).
+    pub outputs: Vec<ValueInfo>,
+    /// Optional per-edge type annotations (field 13).
+    pub value_infos: Vec<ValueInfo>,
+    /// Documentation (field 10).
+    pub doc_string: String,
+}
+
+/// `NodeProto` — one operator application.
+#[derive(Debug, Clone, Default)]
+pub struct Node {
+    /// Input edge names (field 1); positional per operator spec.
+    pub inputs: Vec<String>,
+    /// Output edge names (field 2).
+    pub outputs: Vec<String>,
+    /// Optional node name (field 3).
+    pub name: String,
+    /// Operator type, e.g. `"Conv"`, `"Gemm"` (field 4).
+    pub op_type: String,
+    /// Operator domain (field 7); empty = ai.onnx.
+    pub domain: String,
+    /// Operator attributes (field 5).
+    pub attributes: Vec<Attribute>,
+}
+
+impl Node {
+    /// Fetch an attribute by name.
+    pub fn attr(&self, name: &str) -> Option<&AttributeValue> {
+        self.attributes.iter().find(|a| a.name == name).map(|a| &a.value)
+    }
+
+    /// Integer attribute with default.
+    pub fn attr_i(&self, name: &str, default: i64) -> i64 {
+        match self.attr(name) {
+            Some(AttributeValue::Int(v)) => *v,
+            _ => default,
+        }
+    }
+
+    /// Integer-list attribute (empty slice if missing).
+    pub fn attr_ints(&self, name: &str) -> &[i64] {
+        match self.attr(name) {
+            Some(AttributeValue::Ints(v)) => v,
+            _ => &[],
+        }
+    }
+
+    /// Float attribute with default.
+    pub fn attr_f(&self, name: &str, default: f32) -> f32 {
+        match self.attr(name) {
+            Some(AttributeValue::Float(v)) => *v,
+            _ => default,
+        }
+    }
+}
+
+/// `AttributeProto` — a named, typed constant hung off a node.
+#[derive(Debug, Clone)]
+pub struct Attribute {
+    /// Attribute name (field 1), e.g. `"kernel_shape"`.
+    pub name: String,
+    /// The typed payload (discriminated by field 20 on the wire).
+    pub value: AttributeValue,
+}
+
+/// The value arm of an `AttributeProto`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttributeValue {
+    /// FLOAT (type 1, field 2)
+    Float(f32),
+    /// INT (type 2, field 3)
+    Int(i64),
+    /// STRING (type 3, field 4)
+    String(String),
+    /// FLOATS (type 6, field 7)
+    Floats(Vec<f32>),
+    /// INTS (type 7, field 8)
+    Ints(Vec<i64>),
+    /// STRINGS (type 8, field 9)
+    Strings(Vec<String>),
+}
+
+/// `TensorProto` — a constant tensor (initializer).
+#[derive(Debug, Clone, Default)]
+pub struct Tensor {
+    /// Shape (field 1).
+    pub dims: Vec<i64>,
+    /// Element type (field 2, `DataType` enum).
+    pub data_type: DataType,
+    /// Tensor name (field 8) — the paper's "Layer Name" column comes from
+    /// these names.
+    pub name: String,
+    /// Raw little-endian payload (field 9). Empty in metadata-only decode.
+    pub raw_data: Vec<u8>,
+    /// Length of the payload on the wire, recorded even when
+    /// `raw_data` is skipped (metadata-only decode).
+    pub payload_len: u64,
+}
+
+impl Default for DataType {
+    fn default() -> Self {
+        DataType::Undefined
+    }
+}
+
+impl Tensor {
+    /// Number of elements = ∏ dims (the paper's "Variables" column).
+    pub fn num_elements(&self) -> u64 {
+        self.dims.iter().map(|&d| d.max(0) as u64).product()
+    }
+
+    /// Bytes = elements × sizeof(dtype) (the paper's "Model Size" column).
+    pub fn size_bytes(&self) -> u64 {
+        self.num_elements() * self.data_type.size_bytes()
+    }
+}
+
+/// `ValueInfoProto` — name + tensor type for a graph edge.
+#[derive(Debug, Clone, Default)]
+pub struct ValueInfo {
+    /// Edge name (field 1).
+    pub name: String,
+    /// Tensor type; `None` when the exporter omitted it.
+    pub ty: Option<TensorType>,
+}
+
+/// `TypeProto.Tensor` — element type + symbolic/concrete shape.
+#[derive(Debug, Clone, Default)]
+pub struct TensorType {
+    /// Element dtype.
+    pub elem_type: DataType,
+    /// Dimensions (each concrete or a named symbol like `"batch"`).
+    pub shape: Vec<Dim>,
+}
+
+/// One dimension of a `TensorShapeProto`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dim {
+    /// Concrete extent (`dim_value`, field 1).
+    Value(i64),
+    /// Symbolic name (`dim_param`, field 2), e.g. `"N"`.
+    Param(String),
+}
+
+impl Dim {
+    /// Concrete value if present.
+    pub fn value(&self) -> Option<i64> {
+        match self {
+            Dim::Value(v) => Some(*v),
+            Dim::Param(_) => None,
+        }
+    }
+}
+
+impl Model {
+    /// Construct a model wrapper with the conventional metadata the zoo
+    /// uses (IR version 8, ai.onnx opset 17).
+    pub fn wrap(graph: Graph) -> Model {
+        Model {
+            ir_version: 8,
+            producer_name: "modtrans-zoo".into(),
+            producer_version: env!("CARGO_PKG_VERSION").into(),
+            domain: String::new(),
+            model_version: 1,
+            doc_string: String::new(),
+            graph,
+            opset_import: vec![OperatorSetId { domain: String::new(), version: 17 }],
+        }
+    }
+
+    /// Total parameter count across all initializers.
+    pub fn num_parameters(&self) -> u64 {
+        self.graph.initializers.iter().map(Tensor::num_elements).sum()
+    }
+
+    /// Total parameter bytes across all initializers.
+    pub fn parameter_bytes(&self) -> u64 {
+        self.graph.initializers.iter().map(Tensor::size_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_size_math() {
+        let t = Tensor {
+            dims: vec![64, 3, 3, 3],
+            data_type: DataType::Float,
+            name: "w".into(),
+            raw_data: vec![],
+            payload_len: 0,
+        };
+        assert_eq!(t.num_elements(), 1728); // vgg16-conv0 row of Table 1
+        assert_eq!(t.size_bytes(), 6912);
+    }
+
+    #[test]
+    fn node_attr_helpers() {
+        let n = Node {
+            op_type: "Conv".into(),
+            attributes: vec![
+                Attribute { name: "strides".into(), value: AttributeValue::Ints(vec![2, 2]) },
+                Attribute { name: "group".into(), value: AttributeValue::Int(1) },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(n.attr_ints("strides"), &[2, 2]);
+        assert_eq!(n.attr_i("group", 7), 1);
+        assert_eq!(n.attr_i("missing", 7), 7);
+    }
+
+    #[test]
+    fn model_param_totals() {
+        let mut g = Graph::default();
+        g.initializers.push(Tensor {
+            dims: vec![10, 10],
+            data_type: DataType::Float,
+            ..Default::default()
+        });
+        g.initializers.push(Tensor {
+            dims: vec![10],
+            data_type: DataType::Float,
+            ..Default::default()
+        });
+        let m = Model::wrap(g);
+        assert_eq!(m.num_parameters(), 110);
+        assert_eq!(m.parameter_bytes(), 440);
+    }
+}

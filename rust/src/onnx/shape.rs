@@ -1,0 +1,500 @@
+//! Shape inference over ONNX graphs.
+//!
+//! Propagates concrete tensor shapes from the graph inputs through every
+//! node, yielding per-edge shapes. The translator uses these to size
+//! activations (model-parallel communication volumes) and the compute
+//! model uses them to count MACs per layer.
+//!
+//! Covers the operator set emitted by the model zoo and by common CNN /
+//! MLP / transformer exporters. Symbolic dims (e.g. `"N"`) are bound to a
+//! caller-supplied batch size.
+
+use super::graph::GraphIndex;
+use super::model::{Dim, Graph, Node};
+use super::DataType;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Edge name → (dtype, concrete shape).
+pub type ShapeMap = HashMap<String, (DataType, Vec<i64>)>;
+
+/// Infer shapes for every edge of `graph`, binding symbolic input dims to
+/// `batch`.
+pub fn infer_shapes(graph: &Graph, batch: i64) -> Result<ShapeMap> {
+    let idx = GraphIndex::new(graph)?;
+    let mut shapes: ShapeMap = HashMap::new();
+
+    for t in &graph.initializers {
+        shapes.insert(t.name.clone(), (t.data_type, t.dims.clone()));
+    }
+    for vi in &graph.inputs {
+        if shapes.contains_key(&vi.name) {
+            continue; // initializer also listed as input (IR < 4 style)
+        }
+        let ty = vi
+            .ty
+            .as_ref()
+            .ok_or_else(|| Error::onnx(format!("input '{}' has no type", vi.name)))?;
+        let dims: Vec<i64> = ty
+            .shape
+            .iter()
+            .map(|d| match d {
+                Dim::Value(v) => *v,
+                Dim::Param(_) => batch,
+            })
+            .collect();
+        shapes.insert(vi.name.clone(), (ty.elem_type, dims));
+    }
+
+    for node in idx.topo_nodes() {
+        infer_node(node, &idx, &mut shapes)?;
+    }
+    Ok(shapes)
+}
+
+fn get<'a>(
+    shapes: &'a ShapeMap,
+    node: &Node,
+    input: usize,
+) -> Result<&'a (DataType, Vec<i64>)> {
+    let name = node.inputs.get(input).ok_or_else(|| {
+        Error::onnx(format!("{}: missing input #{input}", node.op_type))
+    })?;
+    shapes.get(name).ok_or_else(|| {
+        Error::onnx(format!(
+            "{}: input '{name}' has no inferred shape (unsupported producer?)",
+            node.op_type
+        ))
+    })
+}
+
+fn set(shapes: &mut ShapeMap, node: &Node, output: usize, dtype: DataType, dims: Vec<i64>) {
+    if let Some(name) = node.outputs.get(output) {
+        if !name.is_empty() {
+            shapes.insert(name.clone(), (dtype, dims));
+        }
+    }
+}
+
+/// Spatial output extent for a conv/pool window.
+fn window_out(input: i64, kernel: i64, pad_total: i64, stride: i64, ceil: bool) -> i64 {
+    let num = input + pad_total - kernel;
+    if ceil {
+        (num + stride - 1) / stride + 1
+    } else {
+        num / stride + 1
+    }
+}
+
+/// Resolve conv/pool padding: explicit `pads` or `auto_pad` SAME variants.
+fn resolve_pads(node: &Node, spatial: usize, kernel: &[i64], strides: &[i64], input: &[i64]) -> Vec<i64> {
+    // Returns per-axis total padding (begin+end).
+    let pads = node.attr_ints("pads");
+    if !pads.is_empty() {
+        return (0..spatial).map(|i| pads[i] + pads[i + spatial]).collect();
+    }
+    match node.attr("auto_pad") {
+        Some(super::model::AttributeValue::String(s)) if s.starts_with("SAME") => (0..spatial)
+            .map(|i| {
+                let out = (input[i] + strides[i] - 1) / strides[i];
+                ((out - 1) * strides[i] + kernel[i] - input[i]).max(0)
+            })
+            .collect(),
+        _ => vec![0; spatial],
+    }
+}
+
+fn infer_node(node: &Node, idx: &GraphIndex<'_>, shapes: &mut ShapeMap) -> Result<()> {
+    let op = node.op_type.as_str();
+    match op {
+        // ---- shape-preserving elementwise / normalization ----
+        "Relu" | "LeakyRelu" | "Sigmoid" | "Tanh" | "Erf" | "Gelu" | "Softmax"
+        | "LogSoftmax" | "Identity" | "Dropout" | "LRN" | "Clip" | "Sqrt" | "Neg"
+        | "Cast" | "BatchNormalization" | "LayerNormalization" | "Pow" => {
+            let (dt, dims) = get(shapes, node, 0)?.clone();
+            set(shapes, node, 0, dt, dims);
+        }
+
+        // ---- broadcast binary ----
+        "Add" | "Sub" | "Mul" | "Div" => {
+            let (dt, a) = get(shapes, node, 0)?.clone();
+            let (_, b) = get(shapes, node, 1)?.clone();
+            set(shapes, node, 0, dt, broadcast(&a, &b)?);
+        }
+
+        // ---- convolution ----
+        "Conv" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let (_, w) = get(shapes, node, 1)?.clone();
+            if x.len() < 3 || w.len() != x.len() {
+                return Err(Error::onnx(format!("Conv: bad ranks {x:?} {w:?}")));
+            }
+            let spatial = x.len() - 2;
+            let kernel: Vec<i64> = if node.attr_ints("kernel_shape").is_empty() {
+                w[2..].to_vec()
+            } else {
+                node.attr_ints("kernel_shape").to_vec()
+            };
+            let strides = normalize(node.attr_ints("strides"), spatial, 1);
+            let dil = normalize(node.attr_ints("dilations"), spatial, 1);
+            let eff_kernel: Vec<i64> =
+                (0..spatial).map(|i| (kernel[i] - 1) * dil[i] + 1).collect();
+            let pads = resolve_pads(node, spatial, &eff_kernel, &strides, &x[2..]);
+            let mut out = vec![x[0], w[0]];
+            for i in 0..spatial {
+                out.push(window_out(x[2 + i], eff_kernel[i], pads[i], strides[i], false));
+            }
+            set(shapes, node, 0, dt, out);
+        }
+
+        // ---- pooling ----
+        "MaxPool" | "AveragePool" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let spatial = x.len() - 2;
+            let kernel = node.attr_ints("kernel_shape").to_vec();
+            if kernel.len() != spatial {
+                return Err(Error::onnx(format!("{op}: kernel_shape rank mismatch")));
+            }
+            let strides = normalize(node.attr_ints("strides"), spatial, 1);
+            let pads = resolve_pads(node, spatial, &kernel, &strides, &x[2..]);
+            let ceil = node.attr_i("ceil_mode", 0) == 1;
+            let mut out = vec![x[0], x[1]];
+            for i in 0..spatial {
+                out.push(window_out(x[2 + i], kernel[i], pads[i], strides[i], ceil));
+            }
+            set(shapes, node, 0, dt, out);
+        }
+        "GlobalAveragePool" | "GlobalMaxPool" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let mut out = vec![x[0], x[1]];
+            out.extend(std::iter::repeat(1).take(x.len() - 2));
+            set(shapes, node, 0, dt, out);
+        }
+
+        // ---- linear algebra ----
+        "Gemm" => {
+            let (dt, a) = get(shapes, node, 0)?.clone();
+            let (_, b) = get(shapes, node, 1)?.clone();
+            let ta = node.attr_i("transA", 0) == 1;
+            let tb = node.attr_i("transB", 0) == 1;
+            let m = if ta { a[1] } else { a[0] };
+            let n = if tb { b[0] } else { b[1] };
+            set(shapes, node, 0, dt, vec![m, n]);
+        }
+        "MatMul" => {
+            let (dt, a) = get(shapes, node, 0)?.clone();
+            let (_, b) = get(shapes, node, 1)?.clone();
+            set(shapes, node, 0, dt, matmul_shape(&a, &b)?);
+        }
+
+        // ---- reshaping ----
+        "Flatten" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let axis = node.attr_i("axis", 1).clamp(0, x.len() as i64) as usize;
+            let d0: i64 = x[..axis].iter().product();
+            let d1: i64 = x[axis..].iter().product();
+            set(shapes, node, 0, dt, vec![d0, d1]);
+        }
+        "Reshape" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let shape_name = node
+                .inputs
+                .get(1)
+                .ok_or_else(|| Error::onnx("Reshape: missing shape input"))?;
+            let t = idx
+                .initializer(shape_name)
+                .ok_or_else(|| Error::onnx("Reshape: shape input must be an initializer"))?;
+            let target = int64_payload(&t.raw_data, t.num_elements() as usize)?;
+            set(shapes, node, 0, dt, resolve_reshape(&x, &target)?);
+        }
+        "Transpose" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let perm = node.attr_ints("perm");
+            let out: Vec<i64> = if perm.is_empty() {
+                x.iter().rev().copied().collect()
+            } else {
+                perm.iter().map(|&p| x[p as usize]).collect()
+            };
+            set(shapes, node, 0, dt, out);
+        }
+        "Concat" => {
+            let axis = node.attr_i("axis", 0);
+            let (dt, mut out) = get(shapes, node, 0)?.clone();
+            let ax = if axis < 0 { (out.len() as i64 + axis) as usize } else { axis as usize };
+            for i in 1..node.inputs.len() {
+                let (_, s) = get(shapes, node, i)?;
+                out[ax] += s[ax];
+            }
+            set(shapes, node, 0, dt, out);
+        }
+        "Gather" => {
+            // axis-0 embedding lookup: out = indices_shape ++ data_shape[1:]
+            let (dt, data) = get(shapes, node, 0)?.clone();
+            let (_, indices) = get(shapes, node, 1)?.clone();
+            let axis = node.attr_i("axis", 0);
+            if axis != 0 {
+                return Err(Error::onnx("Gather: only axis=0 supported"));
+            }
+            let mut out = indices;
+            out.extend_from_slice(&data[1..]);
+            set(shapes, node, 0, dt, out);
+        }
+        "ReduceMean" => {
+            let (dt, x) = get(shapes, node, 0)?.clone();
+            let axes = node.attr_ints("axes");
+            let keep = node.attr_i("keepdims", 1) == 1;
+            let mut out = Vec::new();
+            for (i, &d) in x.iter().enumerate() {
+                let reduced = axes
+                    .iter()
+                    .any(|&a| (if a < 0 { x.len() as i64 + a } else { a }) as usize == i);
+                if reduced {
+                    if keep {
+                        out.push(1);
+                    }
+                } else {
+                    out.push(d);
+                }
+            }
+            set(shapes, node, 0, dt, out);
+        }
+
+        other => {
+            return Err(Error::onnx(format!(
+                "shape inference: unsupported op '{other}' (node '{}')",
+                node.name
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn normalize(attr: &[i64], n: usize, default: i64) -> Vec<i64> {
+    if attr.is_empty() {
+        vec![default; n]
+    } else {
+        attr.to_vec()
+    }
+}
+
+/// Numpy-style broadcasting of two shapes.
+fn broadcast(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
+    let n = a.len().max(b.len());
+    let mut out = vec![0i64; n];
+    for i in 0..n {
+        let da = if i < n - a.len() { 1 } else { a[i - (n - a.len())] };
+        let db = if i < n - b.len() { 1 } else { b[i - (n - b.len())] };
+        out[i] = match (da, db) {
+            (x, y) if x == y => x,
+            (1, y) => y,
+            (x, 1) => x,
+            _ => return Err(Error::onnx(format!("cannot broadcast {a:?} with {b:?}"))),
+        };
+    }
+    Ok(out)
+}
+
+/// Batched matmul shape per numpy semantics.
+fn matmul_shape(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
+    if a.is_empty() || b.is_empty() {
+        return Err(Error::onnx("MatMul: scalar input"));
+    }
+    if a.len() == 1 || b.len() == 1 {
+        return Err(Error::onnx("MatMul: vector operands unsupported in zoo models"));
+    }
+    let (m, ka) = (a[a.len() - 2], a[a.len() - 1]);
+    let (kb, n) = (b[b.len() - 2], b[b.len() - 1]);
+    if ka != kb {
+        return Err(Error::onnx(format!("MatMul: inner dims {ka} != {kb}")));
+    }
+    let batch = broadcast(&a[..a.len() - 2], &b[..b.len() - 2])?;
+    let mut out = batch;
+    out.push(m);
+    out.push(n);
+    Ok(out)
+}
+
+/// Read little-endian int64 payload (Reshape shape constants).
+fn int64_payload(raw: &[u8], n: usize) -> Result<Vec<i64>> {
+    if raw.len() < n * 8 {
+        return Err(Error::onnx("int64 initializer payload missing (metadata-only decode dropped it?)"));
+    }
+    Ok(raw[..n * 8]
+        .chunks_exact(8)
+        .map(|c| i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// Resolve a Reshape target with 0 (copy) and -1 (infer) conventions.
+fn resolve_reshape(input: &[i64], target: &[i64]) -> Result<Vec<i64>> {
+    let total: i64 = input.iter().product();
+    let mut out: Vec<i64> = Vec::with_capacity(target.len());
+    let mut infer_at: Option<usize> = None;
+    for (i, &t) in target.iter().enumerate() {
+        match t {
+            0 => out.push(*input.get(i).ok_or_else(|| Error::onnx("Reshape: 0-dim out of range"))?),
+            -1 => {
+                if infer_at.is_some() {
+                    return Err(Error::onnx("Reshape: multiple -1 dims"));
+                }
+                infer_at = Some(i);
+                out.push(1);
+            }
+            t if t > 0 => out.push(t),
+            _ => return Err(Error::onnx("Reshape: negative dim")),
+        }
+    }
+    if let Some(i) = infer_at {
+        let known: i64 = out.iter().product();
+        if known == 0 || total % known != 0 {
+            return Err(Error::onnx(format!("Reshape: cannot infer dim ({input:?} -> {target:?})")));
+        }
+        out[i] = total / known;
+    }
+    let out_total: i64 = out.iter().product();
+    if out_total != total {
+        return Err(Error::onnx(format!("Reshape: element count mismatch ({input:?} -> {out:?})")));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::model::*;
+
+    fn conv_node(name: &str, x: &str, w: &str, y: &str, stride: i64, pad: i64) -> Node {
+        Node {
+            inputs: vec![x.into(), w.into()],
+            outputs: vec![y.into()],
+            name: name.into(),
+            op_type: "Conv".into(),
+            attributes: vec![
+                Attribute { name: "strides".into(), value: AttributeValue::Ints(vec![stride, stride]) },
+                Attribute { name: "pads".into(), value: AttributeValue::Ints(vec![pad, pad, pad, pad]) },
+            ],
+            ..Default::default()
+        }
+    }
+
+    fn weight(name: &str, dims: Vec<i64>) -> Tensor {
+        Tensor { dims, data_type: DataType::Float, name: name.into(), ..Default::default() }
+    }
+
+    fn input(name: &str, dims: Vec<i64>) -> ValueInfo {
+        ValueInfo {
+            name: name.into(),
+            ty: Some(TensorType {
+                elem_type: DataType::Float,
+                shape: dims.into_iter().map(Dim::Value).collect(),
+            }),
+        }
+    }
+
+    #[test]
+    fn conv_7x7_s2_resnet_stem() {
+        // ResNet-50 stem: 3x224x224, 64 filters of 7x7, stride 2, pad 3 → 64x112x112.
+        let mut g = Graph::default();
+        g.inputs.push(input("x", vec![1, 3, 224, 224]));
+        g.initializers.push(weight("w", vec![64, 3, 7, 7]));
+        g.nodes.push(conv_node("stem", "x", "w", "y", 2, 3));
+        let s = infer_shapes(&g, 1).unwrap();
+        assert_eq!(s["y"].1, vec![1, 64, 112, 112]);
+    }
+
+    #[test]
+    fn maxpool_ceil_and_floor() {
+        let mut g = Graph::default();
+        g.inputs.push(input("x", vec![1, 64, 112, 112]));
+        g.nodes.push(Node {
+            inputs: vec!["x".into()],
+            outputs: vec!["y".into()],
+            op_type: "MaxPool".into(),
+            attributes: vec![
+                Attribute { name: "kernel_shape".into(), value: AttributeValue::Ints(vec![3, 3]) },
+                Attribute { name: "strides".into(), value: AttributeValue::Ints(vec![2, 2]) },
+                Attribute { name: "pads".into(), value: AttributeValue::Ints(vec![1, 1, 1, 1]) },
+            ],
+            ..Default::default()
+        });
+        let s = infer_shapes(&g, 1).unwrap();
+        assert_eq!(s["y"].1, vec![1, 64, 56, 56]);
+    }
+
+    #[test]
+    fn gemm_and_flatten() {
+        let mut g = Graph::default();
+        g.inputs.push(input("x", vec![2, 512, 7, 7]));
+        g.initializers.push(weight("w", vec![4096, 25088]));
+        g.nodes.push(Node {
+            inputs: vec!["x".into()],
+            outputs: vec!["f".into()],
+            op_type: "Flatten".into(),
+            ..Default::default()
+        });
+        g.nodes.push(Node {
+            inputs: vec!["f".into(), "w".into()],
+            outputs: vec!["y".into()],
+            op_type: "Gemm".into(),
+            attributes: vec![Attribute { name: "transB".into(), value: AttributeValue::Int(1) }],
+            ..Default::default()
+        });
+        let s = infer_shapes(&g, 2).unwrap();
+        assert_eq!(s["f"].1, vec![2, 25088]);
+        assert_eq!(s["y"].1, vec![2, 4096]);
+    }
+
+    #[test]
+    fn batched_matmul_broadcast() {
+        assert_eq!(matmul_shape(&[8, 12, 64, 64], &[8, 12, 64, 128]).unwrap(), vec![8, 12, 64, 128]);
+        assert_eq!(matmul_shape(&[5, 3, 4], &[4, 7]).unwrap(), vec![5, 3, 7]);
+        assert!(matmul_shape(&[2, 3], &[4, 5]).is_err());
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert_eq!(broadcast(&[1, 64, 56, 56], &[64, 1, 1]).unwrap(), vec![1, 64, 56, 56]);
+        assert!(broadcast(&[2, 3], &[4, 3]).is_err());
+    }
+
+    #[test]
+    fn reshape_with_infer() {
+        assert_eq!(resolve_reshape(&[2, 3, 4], &[0, -1]).unwrap(), vec![2, 12]);
+        assert_eq!(resolve_reshape(&[6, 4], &[2, 3, 4]).unwrap(), vec![2, 3, 4]);
+        assert!(resolve_reshape(&[6, 4], &[5, -1]).is_err());
+        assert!(resolve_reshape(&[6, 4], &[-1, -1]).is_err());
+    }
+
+    #[test]
+    fn unsupported_op_is_error() {
+        let mut g = Graph::default();
+        g.inputs.push(input("x", vec![1, 3]));
+        g.nodes.push(Node {
+            inputs: vec!["x".into()],
+            outputs: vec!["y".into()],
+            op_type: "TotallyMadeUpOp".into(),
+            ..Default::default()
+        });
+        assert!(infer_shapes(&g, 1).is_err());
+    }
+
+    #[test]
+    fn symbolic_batch_binding() {
+        let mut g = Graph::default();
+        g.inputs.push(ValueInfo {
+            name: "x".into(),
+            ty: Some(TensorType {
+                elem_type: DataType::Float,
+                shape: vec![Dim::Param("N".into()), Dim::Value(10)],
+            }),
+        });
+        g.nodes.push(Node {
+            inputs: vec!["x".into()],
+            outputs: vec!["y".into()],
+            op_type: "Relu".into(),
+            ..Default::default()
+        });
+        let s = infer_shapes(&g, 32).unwrap();
+        assert_eq!(s["y"].1, vec![32, 10]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Protobuf wire-format decoder.
+
+use super::WireType;
+use crate::error::{Error, Result};
+
+/// Zero-copy protobuf reader over a byte slice.
+///
+/// All methods return `Err` (never panic) on truncated or malformed input —
+/// the translator consumes untrusted `.onnx` files.
+#[derive(Debug, Clone)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Wrap a byte slice.
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// True when all bytes are consumed.
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.remaining() < n {
+            Err(Error::ProtoDecode(format!(
+                "truncated input: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Read a raw varint (up to 10 bytes).
+    pub fn raw_varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            self.need(1)?;
+            let b = self.buf[self.pos];
+            self.pos += 1;
+            if shift == 63 && b > 1 {
+                return Err(Error::ProtoDecode("varint overflows u64".into()));
+            }
+            v |= ((b & 0x7F) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(Error::ProtoDecode("varint longer than 10 bytes".into()));
+            }
+        }
+    }
+
+    /// Read a field tag; returns (field number, wire type).
+    pub fn tag(&mut self) -> Result<(u32, WireType)> {
+        let t = self.raw_varint()?;
+        let field = (t >> 3) as u32;
+        if field == 0 {
+            return Err(Error::ProtoDecode("field number 0 is invalid".into()));
+        }
+        Ok((field, WireType::from_u64(t & 0x7)?))
+    }
+
+    /// Read a length-delimited payload as a subslice (zero copy).
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let len = self.raw_varint()? as usize;
+        self.need(len)?;
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    /// Read a length-delimited payload as UTF-8.
+    pub fn str(&mut self) -> Result<&'a str> {
+        std::str::from_utf8(self.bytes()?)
+            .map_err(|e| Error::ProtoDecode(format!("invalid utf-8 in string field: {e}")))
+    }
+
+    /// Read a little-endian fixed64.
+    pub fn fixed64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read a little-endian fixed32.
+    pub fn fixed32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
+        self.pos += 4;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    /// Read a `double`.
+    pub fn double(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.fixed64()?))
+    }
+
+    /// Read a `float`.
+    pub fn float(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.fixed32()?))
+    }
+
+    /// Read an `int64` varint (two's complement).
+    pub fn int64(&mut self) -> Result<i64> {
+        Ok(self.raw_varint()? as i64)
+    }
+
+    /// Skip a field of the given wire type (unknown-field tolerance —
+    /// required to parse `.onnx` files produced by newer exporters).
+    pub fn skip(&mut self, wt: WireType) -> Result<()> {
+        match wt {
+            WireType::Varint => {
+                self.raw_varint()?;
+            }
+            WireType::I64 => {
+                self.need(8)?;
+                self.pos += 8;
+            }
+            WireType::Len => {
+                let len = self.raw_varint()? as usize;
+                self.need(len)?;
+                self.pos += len;
+            }
+            WireType::I32 => {
+                self.need(4)?;
+                self.pos += 4;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a packed (or single unpacked) repeated int64 field body.
+    pub fn packed_int64(&mut self) -> Result<Vec<i64>> {
+        let body = self.bytes()?;
+        let mut rd = Reader::new(body);
+        let mut out = Vec::new();
+        while !rd.is_empty() {
+            out.push(rd.raw_varint()? as i64);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,191 @@
+//! Protobuf wire-format encoder.
+
+use super::WireType;
+
+/// Append-only protobuf message writer.
+///
+/// Field helpers follow proto3 semantics: default values (0, "", empty
+/// bytes) are *omitted* unless written via the `raw_*` methods, matching
+/// what real ONNX exporters emit.
+#[derive(Debug, Default, Clone)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Empty writer.
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    /// Writer with preallocated capacity (hot path for big initializers).
+    pub fn with_capacity(cap: usize) -> Writer {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Finish, returning the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Current encoded length.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Write a raw (untagged) varint.
+    pub fn raw_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// Write a field tag (field number + wire type).
+    pub fn tag(&mut self, field: u32, wt: WireType) {
+        self.raw_varint(((field as u64) << 3) | wt as u64);
+    }
+
+    /// `uint64`/`int64`/`uint32`/`int32` (non-negative) field. Omits zero.
+    pub fn uint64(&mut self, field: u32, v: u64) {
+        if v != 0 {
+            self.tag(field, WireType::Varint);
+            self.raw_varint(v);
+        }
+    }
+
+    /// `int64` field with two's-complement varint encoding (negative values
+    /// take 10 bytes, like real protobuf `int64`). Omits zero.
+    pub fn int64(&mut self, field: u32, v: i64) {
+        if v != 0 {
+            self.tag(field, WireType::Varint);
+            self.raw_varint(v as u64);
+        }
+    }
+
+    /// `sint64` field (zigzag). Omits zero.
+    pub fn sint64(&mut self, field: u32, v: i64) {
+        if v != 0 {
+            self.tag(field, WireType::Varint);
+            self.raw_varint(super::zigzag_encode(v));
+        }
+    }
+
+    /// `bool` field. Omits false.
+    pub fn bool(&mut self, field: u32, v: bool) {
+        if v {
+            self.tag(field, WireType::Varint);
+            self.raw_varint(1);
+        }
+    }
+
+    /// `double` field. Omits +0.0.
+    pub fn double(&mut self, field: u32, v: f64) {
+        if v != 0.0 || v.is_sign_negative() {
+            self.tag(field, WireType::I64);
+            self.buf.extend_from_slice(&v.to_le_bits_bytes());
+        }
+    }
+
+    /// `float` field. Omits +0.0.
+    pub fn float(&mut self, field: u32, v: f32) {
+        if v != 0.0 || v.is_sign_negative() {
+            self.tag(field, WireType::I32);
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// `fixed64` field. Omits zero.
+    pub fn fixed64(&mut self, field: u32, v: u64) {
+        if v != 0 {
+            self.tag(field, WireType::I64);
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Append raw pre-encoded bytes (caller is responsible for validity).
+    pub fn extend_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// `string` field written even when empty (tag + zero length).
+    /// ONNX `NodeProto.input` uses empty strings for omitted optional
+    /// inputs, where position is significant.
+    pub fn string_always(&mut self, field: u32, s: &str) {
+        self.tag(field, WireType::Len);
+        self.raw_varint(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// `string` field. Omits empty.
+    pub fn string(&mut self, field: u32, s: &str) {
+        if !s.is_empty() {
+            self.tag(field, WireType::Len);
+            self.raw_varint(s.len() as u64);
+            self.buf.extend_from_slice(s.as_bytes());
+        }
+    }
+
+    /// `bytes` field. Omits empty.
+    pub fn bytes(&mut self, field: u32, b: &[u8]) {
+        if !b.is_empty() {
+            self.tag(field, WireType::Len);
+            self.raw_varint(b.len() as u64);
+            self.buf.extend_from_slice(b);
+        }
+    }
+
+    /// Embedded message field (always written, even when empty, so that
+    /// presence is preserved — matches `prost`'s `Option<Message>`).
+    pub fn message(&mut self, field: u32, m: &Writer) {
+        self.tag(field, WireType::Len);
+        self.raw_varint(m.buf.len() as u64);
+        self.buf.extend_from_slice(&m.buf);
+    }
+
+    /// Packed repeated `int64` field (proto3 default packing).
+    pub fn packed_int64(&mut self, field: u32, vs: &[i64]) {
+        if vs.is_empty() {
+            return;
+        }
+        let mut inner = Writer::new();
+        for &v in vs {
+            inner.raw_varint(v as u64);
+        }
+        self.tag(field, WireType::Len);
+        self.raw_varint(inner.buf.len() as u64);
+        self.buf.extend_from_slice(&inner.buf);
+    }
+
+    /// Packed repeated `float`.
+    pub fn packed_float(&mut self, field: u32, vs: &[f32]) {
+        if vs.is_empty() {
+            return;
+        }
+        self.tag(field, WireType::Len);
+        self.raw_varint((vs.len() * 4) as u64);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Helper so `double` can share the byte-writing shape with `float`.
+trait F64Bytes {
+    fn to_le_bits_bytes(self) -> [u8; 8];
+}
+impl F64Bytes for f64 {
+    fn to_le_bits_bytes(self) -> [u8; 8] {
+        self.to_le_bytes()
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! This is the rust end of the three-layer architecture: Python/JAX (+ the
+//! Pallas kernel) lowers the compute graphs ONCE at build time
+//! (`make artifacts` → `artifacts/*.hlo.txt`, HLO **text** — see
+//! DESIGN.md for why not serialized protos), and this module loads,
+//! compiles and runs them through the `xla` crate's PJRT CPU client.
+//! Python is never on the simulation path.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn xe(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A loaded PJRT client plus the compiled executables by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        Ok(Runtime { client, exes: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xe)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory (artifact name = file stem
+    /// without the `.hlo` suffix). Returns how many were loaded.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<usize> {
+        let mut n = 0;
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::Runtime(format!("artifacts dir {dir:?}: {e}")))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let stem = p
+                .file_name()
+                .unwrap()
+                .to_string_lossy()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            self.load_artifact(&stem, &p)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// True if an executable named `name` is loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Loaded artifact names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Execute artifact `name` with f32 inputs `(data, shape)`, returning
+    /// the first output (flattened) and the wall-clock execution time.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the raw result
+    /// is a 1-tuple (see `/opt/xla-example/gen_hlo.py`).
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<(Vec<f32>, Duration)> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not loaded")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data).reshape(shape).map_err(xe)?;
+            literals.push(lit);
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let dt = t0.elapsed();
+        let out = result.to_tuple1().map_err(xe)?;
+        let values = out.to_vec::<f32>().map_err(xe)?;
+        Ok((values, dt))
+    }
+
+    /// Execute artifact `name` and return all `expect` tuple outputs as
+    /// flattened f32 vectors (e.g. the 5-output MLP train step).
+    pub fn execute_f32_tuple(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+        expect: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not loaded")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            literals.push(xla::Literal::vec1(data).reshape(shape).map_err(xe)?);
+        }
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let parts = result.to_tuple().map_err(xe)?;
+        if parts.len() != expect {
+            return Err(Error::Runtime(format!(
+                "'{name}': expected {expect} outputs, got {}",
+                parts.len()
+            )));
+        }
+        parts.into_iter().map(|l| l.to_vec::<f32>().map_err(xe)).collect()
+    }
+
+    /// Execute `name` `reps` times and return the median wall time.
+    pub fn time_artifact(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+        reps: usize,
+    ) -> Result<Duration> {
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let (_, dt) = self.execute_f32(name, inputs)?;
+            times.push(dt);
+        }
+        times.sort();
+        Ok(times[times.len() / 2])
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.names())
+            .finish()
+    }
+}
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trips live in `rust/tests/runtime_integration.rs`
+    // (they need `make artifacts`). Here: client + error paths only.
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        assert!(rt.names().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.execute_f32("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        let mut rt = Runtime::cpu().unwrap();
+        assert!(rt.load_dir(Path::new("/definitely/not/here")).is_err());
+    }
+
+    #[test]
+    fn bad_hlo_file_is_error() {
+        let mut rt = Runtime::cpu().unwrap();
+        let dir = std::env::temp_dir();
+        let p = dir.join("modtrans_bad.hlo.txt");
+        std::fs::write(&p, "this is not hlo").unwrap();
+        assert!(rt.load_artifact("bad", &p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

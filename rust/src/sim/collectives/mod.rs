@@ -1,0 +1,261 @@
+//! Topology-aware collective algorithms (the ASTRA-sim system layer's
+//! collective scheduler).
+//!
+//! Completion-time models follow the standard α-β formulation
+//! (`steps × latency + moved_bytes / bandwidth`), e.g. ring all-reduce
+//! `2(N-1)(α + (M/N)/β)`. Ring-style schedules keep every link busy every
+//! phase, so chunking cannot speed up a single collective; chunk
+//! pipelining pays off when a collective spans *multiple* network
+//! dimensions, which [`crate::sim::system`] realizes by splitting the
+//! payload into [`ChunkCfg::chunks`] sub-collectives whose legs overlap
+//! across dimension resources.
+//!
+//! Per topology:
+//! * **Ring** — bandwidth-optimal ring schedules.
+//! * **FullyConnected** — direct single-phase exchanges.
+//! * **Switch** — recursive halving/doubling through the switch
+//!   (`log2 N` phases), full payload serialized at the NIC each phase.
+//! * **Torus2D** — dimension-ordered: reduce-scatter on rows, all-reduce
+//!   on columns over the row-sharded payload, all-gather on rows.
+
+use super::network::{NetDim, TopologyKind};
+use crate::workload::CommType;
+
+/// Chunking configuration for hierarchical (multi-dimension) pipelining.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkCfg {
+    /// Number of pipeline chunks a multi-dimension collective is split
+    /// into (≥ 1); 1 disables pipelining.
+    pub chunks: usize,
+}
+
+impl Default for ChunkCfg {
+    fn default() -> Self {
+        ChunkCfg { chunks: 4 }
+    }
+}
+
+/// Completion time in ns for `comm` moving `bytes` across `dim.npus`
+/// participants of `dim`.
+///
+/// `bytes` semantics match the workload file: for ALLREDUCE it is the full
+/// gradient buffer per NPU; for ALLGATHER the gathered output size; for
+/// REDUCESCATTER the input size; for ALLTOALL the per-NPU send total.
+pub fn collective_ns(comm: CommType, bytes: u64, dim: &NetDim) -> u64 {
+    let n = dim.npus as f64;
+    if dim.npus <= 1 || bytes == 0 {
+        return 0;
+    }
+    let m = bytes as f64;
+    let t = match comm {
+        CommType::None => 0.0,
+        CommType::AllReduce => match dim.kind {
+            // Reduce-scatter + all-gather, each N-1 phases of M/N chunks.
+            TopologyKind::Ring => phases(2.0 * (n - 1.0), m / n, dim),
+            // Direct: each NPU sends its shard to every peer, twice
+            // (reduce then broadcast), all links in parallel.
+            TopologyKind::FullyConnected => 2.0 * dim.hop_ns(m / n),
+            // Halving/doubling through the switch: 2·log2(N) phases, the
+            // i-th moving M/2^i; total bytes ≈ 2M(N-1)/N at the NIC.
+            TopologyKind::Switch => {
+                let steps = 2.0 * n.log2().ceil();
+                steps * dim.latency_ns + 2.0 * dim.ser_ns(m * (n - 1.0) / n)
+            }
+            TopologyKind::Torus2D => {
+                let (r, cdim) = dim.torus_dims();
+                let (r, cd) = (r as f64, cdim as f64);
+                // RS along rows (r-1 phases of M/r), AR along cols on the
+                // row shard (2(c-1) phases of M/(r·c)), AG along rows.
+                phases(r - 1.0, m / r, dim)
+                    + phases(2.0 * (cd - 1.0), m / (r * cd), dim)
+                    + phases(r - 1.0, m / r, dim)
+            }
+        },
+        CommType::AllGather | CommType::ReduceScatter => match dim.kind {
+            TopologyKind::Ring => phases(n - 1.0, m / n, dim),
+            TopologyKind::FullyConnected => dim.hop_ns(m / n),
+            TopologyKind::Switch => {
+                n.log2().ceil() * dim.latency_ns + dim.ser_ns(m * (n - 1.0) / n)
+            }
+            TopologyKind::Torus2D => {
+                let (r, cdim) = dim.torus_dims();
+                let (r, cd) = (r as f64, cdim as f64);
+                phases(r - 1.0, m / r, dim) + phases(cd - 1.0, m / (r * cd), dim)
+            }
+        },
+        CommType::AllToAll => match dim.kind {
+            // Each NPU exchanges M/N with every peer.
+            TopologyKind::FullyConnected => dim.hop_ns(m / n),
+            // Ring: average hop distance N/4 (bidirectional), N-1 partners.
+            TopologyKind::Ring => {
+                (n - 1.0) * dim.latency_ns + dim.ser_ns(m * (n - 1.0) / n) * (n / 4.0).max(1.0)
+            }
+            // Switch: serialized at the NIC: M(N-1)/N out.
+            TopologyKind::Switch => {
+                2.0 * dim.latency_ns + dim.ser_ns(m * (n - 1.0) / n)
+            }
+            TopologyKind::Torus2D => {
+                let (r, cdim) = dim.torus_dims();
+                let (r, cd) = (r as f64, cdim as f64);
+                (r + cd - 2.0) * dim.latency_ns
+                    + dim.ser_ns(m * (n - 1.0) / n) * ((r + cd) / 4.0).max(1.0)
+            }
+        },
+    };
+    t.ceil() as u64
+}
+
+/// `steps` sequential phases, each moving `phase_bytes` on every link
+/// concurrently (ring-style schedules keep all links busy every phase, so
+/// intra-collective chunking cannot reduce this — pipelining gains come
+/// from overlapping *dimensions*, which the system layer's chunked
+/// hierarchical route provides).
+fn phases(steps: f64, phase_bytes: f64, dim: &NetDim) -> f64 {
+    steps * dim.hop_ns(phase_bytes)
+}
+
+/// Point-to-point transfer time (pipeline-parallel stage boundary).
+pub fn p2p_ns(bytes: u64, dim: &NetDim) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    dim.hop_ns(bytes as f64).ceil() as u64
+}
+
+/// Theoretical lower bound for an all-reduce on any topology: each NPU
+/// must send and receive `2·M·(N-1)/N` bytes through its slowest port.
+pub fn allreduce_lower_bound_ns(bytes: u64, dim: &NetDim) -> u64 {
+    let n = dim.npus as f64;
+    if dim.npus <= 1 {
+        return 0;
+    }
+    (2.0 * bytes as f64 * (n - 1.0) / n / dim.bandwidth_gbps).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> NetDim {
+        NetDim { kind: TopologyKind::Ring, npus: n, bandwidth_gbps: 100.0, latency_ns: 500.0 }
+    }
+
+    fn dim(kind: TopologyKind, n: usize) -> NetDim {
+        NetDim { kind, npus: n, bandwidth_gbps: 100.0, latency_ns: 500.0 }
+    }
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn ring_allreduce_matches_textbook() {
+        let d = ring(8);
+        let t = collective_ns(CommType::AllReduce, 8 * MB, &d);
+        // 2(N-1) × (α + (M/N)/β) = 14 × (500 + 1MiB/100GBps)
+        let expect = 14.0 * (500.0 + (MB as f64) / 100.0);
+        assert!((t as f64 - expect).abs() < 2.0, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn linearity_in_bandwidth_term() {
+        // Doubling bandwidth should roughly halve the serialization part.
+        let slow = ring(8);
+        let fast = NetDim { bandwidth_gbps: 200.0, ..slow };
+        let big = 256 * MB;
+        let ts = collective_ns(CommType::AllReduce, big, &slow) as f64;
+        let tf = collective_ns(CommType::AllReduce, big, &fast) as f64;
+        let ratio = ts / tf;
+        assert!(ratio > 1.9 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn respects_lower_bound() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+            TopologyKind::Switch,
+            TopologyKind::Torus2D,
+        ] {
+            for n in [2usize, 4, 8, 16, 64] {
+                let d = dim(kind, n);
+                let t = collective_ns(CommType::AllReduce, 64 * MB, &d);
+                let lb = allreduce_lower_bound_ns(64 * MB, &d);
+                // The port bound assumes one link per NPU; FullyConnected
+                // has N-1 parallel links, so its aggregate-bandwidth bound
+                // is lb/(N-1). No topology may beat that.
+                let relaxed = lb / (n as u64 - 1).max(1);
+                assert!(t >= relaxed, "{kind:?} N={n}: {t} < relaxed lb {relaxed}");
+                if kind == TopologyKind::Ring {
+                    // Single-port topology must respect the full bound.
+                    assert!(t >= lb, "Ring N={n}: {t} < lb {lb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monotonic_in_bytes_and_npus() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+            TopologyKind::Switch,
+            TopologyKind::Torus2D,
+        ] {
+            let d8 = dim(kind, 8);
+            let mut prev = 0;
+            for mb in [1u64, 4, 16, 64, 256] {
+                let t = collective_ns(CommType::AllReduce, mb * MB, &d8);
+                assert!(t > prev, "{kind:?}: not monotone in bytes");
+                prev = t;
+            }
+            // Ring time grows with N at fixed payload; others stay ~flat
+            // or grow slowly — only assert no pathological shrink to zero.
+            let t2 = collective_ns(CommType::AllReduce, 64 * MB, &dim(kind, 2));
+            assert!(t2 > 0);
+        }
+    }
+
+    #[test]
+    fn trivial_cases_are_free() {
+        let d = ring(1);
+        assert_eq!(collective_ns(CommType::AllReduce, MB, &d), 0);
+        let d8 = ring(8);
+        assert_eq!(collective_ns(CommType::AllReduce, 0, &d8), 0);
+        assert_eq!(collective_ns(CommType::None, MB, &d8), 0);
+    }
+
+    #[test]
+    fn allgather_is_half_of_allreduce_on_ring() {
+        let d = ring(8);
+        let ar = collective_ns(CommType::AllReduce, 8 * MB, &d);
+        let ag = collective_ns(CommType::AllGather, 8 * MB, &d);
+        // Equal up to the two formulas' independent ceil() rounding.
+        assert!((ar as i64 - (ag as i64) * 2).abs() <= 2, "{ar} vs 2x{ag}");
+    }
+
+    #[test]
+    fn fc_beats_ring_for_large_payload() {
+        let big = 256 * MB;
+        let r = collective_ns(CommType::AllReduce, big, &ring(16));
+        let f = collective_ns(CommType::AllReduce, big, &dim(TopologyKind::FullyConnected, 16));
+        assert!(f < r, "fully-connected should beat ring: {f} vs {r}");
+    }
+
+    #[test]
+    fn p2p_is_single_hop() {
+        let d = ring(8);
+        assert_eq!(p2p_ns(0, &d), 0);
+        let t = p2p_ns(MB, &d);
+        assert!((t as f64 - d.hop_ns(MB as f64)).abs() < 1.0);
+    }
+
+    #[test]
+    fn alltoall_scales_with_fanout() {
+        let d = dim(TopologyKind::FullyConnected, 8);
+        let t8 = collective_ns(CommType::AllToAll, 8 * MB, &d);
+        let d64 = dim(TopologyKind::FullyConnected, 64);
+        let t64 = collective_ns(CommType::AllToAll, 8 * MB, &d64);
+        // Same per-NPU payload spread across more peers → smaller per-link
+        // messages → cheaper per-phase on FC.
+        assert!(t64 < t8);
+    }
+}

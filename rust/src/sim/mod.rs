@@ -1,0 +1,84 @@
+//! The distributed-training simulator (ASTRA-sim-class substrate).
+//!
+//! Layered exactly like the system the paper targets (§2.2, Fig. 2):
+//!
+//! * [`engine`] — discrete-event core (task graph over exclusive
+//!   resources with FIFO/LIFO queueing).
+//! * [`network`] — analytical network layer: multi-dimensional topologies
+//!   with per-link latency + bandwidth (the Garnet/ns-3 stand-in).
+//! * [`collectives`] — topology-aware collective completion-time models
+//!   with chunk pipelining.
+//! * [`system`] — maps workload collectives onto network dimensions
+//!   (hierarchical all-reduce, scale-up activation traffic) and applies
+//!   the communication scheduling policy.
+//! * [`training`] — the workload layer: training-loop schedules for
+//!   DATA / MODEL / HYBRID / PIPELINE parallelism, consuming the
+//!   [`crate::workload::Workload`] descriptions ModTrans emits.
+
+pub mod collectives;
+pub mod engine;
+pub mod network;
+pub mod system;
+pub mod training;
+
+pub use collectives::{collective_ns, ChunkCfg};
+pub use engine::{Engine, Policy, Schedule, TaskGraph};
+pub use network::{NetDim, Network, TopologyKind};
+pub use system::{CommRouter, SystemConfig};
+pub use training::{simulate, LayerBreakdown, PipelineSchedule, SimConfig, SimReport};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::translator::{to_workload, ConstantCompute, RooflineCompute, TranslateOpts};
+    use crate::workload::Parallelism;
+    use crate::zoo::{self, WeightFill, ZooOpts};
+
+    /// End-to-end inside the library: zoo → translate → simulate.
+    #[test]
+    fn resnet50_translated_workload_simulates() {
+        let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let summary = crate::translator::extract(&m, 32).unwrap();
+        let opts = TranslateOpts { parallelism: Parallelism::Data, ..Default::default() };
+        let w = to_workload(&summary, opts, &RooflineCompute::default()).unwrap();
+        let cfg = SimConfig { iterations: 2, ..Default::default() };
+        let r = simulate(&w, &cfg).unwrap();
+        assert!(r.total_ns > 0);
+        assert!(r.events > 54 * 4);
+        assert!(r.compute_utilization > 0.0 && r.compute_utilization <= 1.0);
+    }
+
+    #[test]
+    fn dp_beats_mp_for_conv_nets_on_fast_interconnect() {
+        // The classic result the simulator must reproduce: CNNs with small
+        // weights & large activations prefer data parallelism.
+        let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let summary = crate::translator::extract(&m, 32).unwrap();
+        let compute = ConstantCompute(20_000);
+        let cfg = SimConfig { iterations: 2, ..Default::default() };
+        let dp = {
+            let w = to_workload(
+                &summary,
+                TranslateOpts { parallelism: Parallelism::Data, ..Default::default() },
+                &compute,
+            )
+            .unwrap();
+            simulate(&w, &cfg).unwrap()
+        };
+        let mp = {
+            let w = to_workload(
+                &summary,
+                TranslateOpts { parallelism: Parallelism::Model, ..Default::default() },
+                &compute,
+            )
+            .unwrap();
+            simulate(&w, &cfg).unwrap()
+        };
+        assert!(
+            dp.iteration_ns < mp.iteration_ns,
+            "DP {} should beat MP {} for ResNet-50 at batch 32",
+            dp.iteration_ns,
+            mp.iteration_ns
+        );
+    }
+}

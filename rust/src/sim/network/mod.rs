@@ -1,0 +1,248 @@
+//! Analytical network layer (the Garnet / ns-3 stand-in).
+//!
+//! ASTRA-sim separates the *logical* topology (what the collectives see)
+//! from the *physical* one (what the packets traverse); its analytical
+//! backend — which this module reproduces — models each physical link as
+//! `latency + bytes/bandwidth` and composes collective phases over the
+//! logical dimensions. A [`Network`] is an ordered list of dimensions
+//! (e.g. intra-package ring + inter-package switch), mirroring the
+//! scale-up/scale-out fabric split of Fig. 1.
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Physical arrangement of one network dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Unidirectional ring (NVLink-style neighbor mesh).
+    Ring,
+    /// Every pair directly connected.
+    FullyConnected,
+    /// All NPUs hang off one switch (store-and-forward).
+    Switch,
+    /// 2-D torus; collectives run dimension-ordered rings.
+    Torus2D,
+}
+
+impl TopologyKind {
+    /// Parse a config token.
+    pub fn from_token(s: &str) -> Result<TopologyKind> {
+        Ok(match s {
+            "ring" => TopologyKind::Ring,
+            "fully_connected" | "fc" => TopologyKind::FullyConnected,
+            "switch" => TopologyKind::Switch,
+            "torus2d" => TopologyKind::Torus2D,
+            other => return Err(Error::Config(format!("unknown topology '{other}'"))),
+        })
+    }
+
+    /// Canonical token.
+    pub fn token(self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::FullyConnected => "fully_connected",
+            TopologyKind::Switch => "switch",
+            TopologyKind::Torus2D => "torus2d",
+        }
+    }
+}
+
+/// One network dimension: topology + size + per-link characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct NetDim {
+    /// Physical arrangement.
+    pub kind: TopologyKind,
+    /// NPUs in this dimension's group.
+    pub npus: usize,
+    /// Per-link bandwidth in GB/s (= bytes/ns).
+    pub bandwidth_gbps: f64,
+    /// Per-hop latency in ns.
+    pub latency_ns: f64,
+}
+
+impl NetDim {
+    /// Serialization time for `bytes` on one link (ns), excluding latency.
+    pub fn ser_ns(&self, bytes: f64) -> f64 {
+        bytes / self.bandwidth_gbps
+    }
+
+    /// One-hop transfer time for `bytes` (ns).
+    pub fn hop_ns(&self, bytes: f64) -> f64 {
+        self.latency_ns + self.ser_ns(bytes)
+    }
+
+    /// Rows/cols factorization for Torus2D (nearest square).
+    pub fn torus_dims(&self) -> (usize, usize) {
+        let mut r = (self.npus as f64).sqrt() as usize;
+        while r > 1 && self.npus % r != 0 {
+            r -= 1;
+        }
+        (r.max(1), self.npus / r.max(1))
+    }
+
+    /// Validate the dimension parameters.
+    pub fn validate(&self) -> Result<()> {
+        if self.npus == 0 {
+            return Err(Error::Config("dimension with 0 npus".into()));
+        }
+        if self.bandwidth_gbps <= 0.0 {
+            return Err(Error::Config("bandwidth must be positive".into()));
+        }
+        if self.latency_ns < 0.0 {
+            return Err(Error::Config("latency must be non-negative".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A multi-dimensional network: `dims[0]` is the innermost (scale-up)
+/// dimension; later dimensions scale out. Total NPUs = ∏ dims.npus.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Ordered dimensions.
+    pub dims: Vec<NetDim>,
+}
+
+impl Network {
+    /// Single-dimension network.
+    pub fn single(kind: TopologyKind, npus: usize, bandwidth_gbps: f64, latency_ns: f64) -> Network {
+        Network { dims: vec![NetDim { kind, npus, bandwidth_gbps, latency_ns }] }
+    }
+
+    /// A typical two-tier cluster: `local` NPUs on a fast ring per node,
+    /// `nodes` nodes behind a switch.
+    pub fn two_tier(local: usize, nodes: usize) -> Network {
+        Network {
+            dims: vec![
+                NetDim {
+                    kind: TopologyKind::Ring,
+                    npus: local,
+                    bandwidth_gbps: 300.0, // NVLink-class
+                    latency_ns: 700.0,
+                },
+                NetDim {
+                    kind: TopologyKind::Switch,
+                    npus: nodes,
+                    bandwidth_gbps: 25.0, // 200 Gb NIC-class
+                    latency_ns: 5000.0,
+                },
+            ],
+        }
+    }
+
+    /// Total NPU count.
+    pub fn total_npus(&self) -> usize {
+        self.dims.iter().map(|d| d.npus).product()
+    }
+
+    /// Validate all dimensions.
+    pub fn validate(&self) -> Result<()> {
+        if self.dims.is_empty() {
+            return Err(Error::Config("network needs at least one dimension".into()));
+        }
+        for d in &self.dims {
+            d.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON config value:
+    /// `{"dims": [{"topology": "ring", "npus": 8, "bandwidth_gbps": 300,
+    ///             "latency_ns": 700}, ...]}`
+    pub fn from_json(v: &Value) -> Result<Network> {
+        let dims_v = v
+            .get("dims")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Config("network config: missing 'dims' array".into()))?;
+        let mut dims = Vec::with_capacity(dims_v.len());
+        for d in dims_v {
+            dims.push(NetDim {
+                kind: TopologyKind::from_token(d.req_str("topology")?)?,
+                npus: d.req_u64("npus")? as usize,
+                bandwidth_gbps: d.req_f64("bandwidth_gbps")?,
+                latency_ns: d.req_f64("latency_ns")?,
+            });
+        }
+        let n = Network { dims };
+        n.validate()?;
+        Ok(n)
+    }
+
+    /// Emit the JSON config form.
+    pub fn to_json(&self) -> Value {
+        use std::collections::BTreeMap;
+        let dims: Vec<Value> = self
+            .dims
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("topology".to_string(), Value::Str(d.kind.token().into()));
+                m.insert("npus".to_string(), Value::Num(d.npus as f64));
+                m.insert("bandwidth_gbps".to_string(), Value::Num(d.bandwidth_gbps));
+                m.insert("latency_ns".to_string(), Value::Num(d.latency_ns));
+                Value::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("dims".to_string(), Value::Arr(dims));
+        Value::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_time_math() {
+        let d = NetDim {
+            kind: TopologyKind::Ring,
+            npus: 8,
+            bandwidth_gbps: 100.0,
+            latency_ns: 500.0,
+        };
+        // 1 MB at 100 GB/s = 10486 ns serialization + 500 latency.
+        assert!((d.hop_ns(1_048_576.0) - (500.0 + 10485.76)).abs() < 0.01);
+    }
+
+    #[test]
+    fn torus_factorization() {
+        let mk = |n| NetDim {
+            kind: TopologyKind::Torus2D,
+            npus: n,
+            bandwidth_gbps: 1.0,
+            latency_ns: 0.0,
+        };
+        assert_eq!(mk(16).torus_dims(), (4, 4));
+        assert_eq!(mk(12).torus_dims(), (3, 4));
+        assert_eq!(mk(7).torus_dims(), (1, 7));
+    }
+
+    #[test]
+    fn totals_and_validation() {
+        let n = Network::two_tier(8, 16);
+        assert_eq!(n.total_npus(), 128);
+        assert!(n.validate().is_ok());
+        let bad = Network::single(TopologyKind::Ring, 0, 1.0, 0.0);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let n = Network::two_tier(4, 2);
+        let v = n.to_json();
+        let n2 = Network::from_json(&v).unwrap();
+        assert_eq!(n2.dims.len(), 2);
+        assert_eq!(n2.dims[0].npus, 4);
+        assert_eq!(n2.dims[1].kind, TopologyKind::Switch);
+        assert_eq!(n2.dims[1].bandwidth_gbps, 25.0);
+    }
+
+    #[test]
+    fn json_rejects_bad_config() {
+        let v = crate::json::parse(r#"{"dims": [{"topology": "blimp", "npus": 2, "bandwidth_gbps": 1, "latency_ns": 0}]}"#).unwrap();
+        assert!(Network::from_json(&v).is_err());
+        let v = crate::json::parse(r#"{}"#).unwrap();
+        assert!(Network::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-parallelism communication planning (DESIGN.md "Parallelism →
+//! communication mapping").
+//!
+//! Given a layer's parameter and activation sizes, decide which collective
+//! each phase issues and how many bytes it moves, following ASTRA-sim's
+//! workload conventions:
+//!
+//! * **DATA** — weights are replicated; after the weight-gradient GEMM an
+//!   `ALLREDUCE(weight_bytes)` synchronizes gradients. No activation comm.
+//! * **MODEL** — weights are sharded; each NPU computes a slice of the
+//!   output and `ALLGATHER(out_act_bytes)` reassembles it in the forward
+//!   pass; the input-gradient pass gathers the same volume back. Weight
+//!   grads stay local.
+//! * **HYBRID_DATA_MODEL** — model-parallel inside a group of `mp_group`
+//!   NPUs (activation all-gathers within the group), data-parallel across
+//!   the `npus/mp_group` groups (`ALLREDUCE(weight_bytes/mp_group)`: each
+//!   group member owns a weight shard).
+//! * **HYBRID_MODEL_DATA** — the dual: data-parallel inside the group,
+//!   model-parallel across groups.
+//! * **PIPELINE** — stage-to-stage activation sends are point-to-point and
+//!   handled by the simulator's pipeline engine, not collectives; rows
+//!   carry the DP all-reduce within each stage replica group if any.
+//! * **Embedding layers** under MODEL/HYBRID shard the vocabulary and use
+//!   `ALLTOALL` on the looked-up rows (Megatron-style).
+
+use super::extract::{LayerInfo, LayerKind};
+use super::memory::ZeroStage;
+use super::TranslateOpts;
+use crate::workload::{CommType, Parallelism};
+
+/// The (comm type, bytes) choice for each phase of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommPlan {
+    /// Forward pass.
+    pub fwd: (CommType, u64),
+    /// Input-gradient pass.
+    pub ig: (CommType, u64),
+    /// Weight-gradient pass.
+    pub wg: (CommType, u64),
+}
+
+const NONE: (CommType, u64) = (CommType::None, 0);
+
+/// Plan communication for one layer under the chosen strategy.
+pub fn comm_for_layer(layer: &LayerInfo, opts: TranslateOpts) -> CommPlan {
+    match opts.parallelism {
+        // ZeRO replaces the gradient all-reduce on the DP axis:
+        //   stage 1 — unchanged traffic (state sharding is local);
+        //   stage 2 — reduce-scatter gradients, re-gather updated params
+        //             before the next forward;
+        //   stage 3 — parameters sharded too: gather them in BOTH passes.
+        Parallelism::Data => match opts.zero {
+            ZeroStage::None | ZeroStage::OptimizerState => CommPlan {
+                fwd: NONE,
+                ig: NONE,
+                wg: (CommType::AllReduce, layer.weight_bytes),
+            },
+            ZeroStage::Gradients => CommPlan {
+                fwd: (CommType::AllGather, layer.weight_bytes),
+                ig: NONE,
+                wg: (CommType::ReduceScatter, layer.weight_bytes),
+            },
+            ZeroStage::Parameters => CommPlan {
+                fwd: (CommType::AllGather, layer.weight_bytes),
+                ig: (CommType::AllGather, layer.weight_bytes),
+                wg: (CommType::ReduceScatter, layer.weight_bytes),
+            },
+        },
+        Parallelism::Model => match layer.kind {
+            LayerKind::Embedding => CommPlan {
+                fwd: (CommType::AllToAll, layer.out_act_bytes),
+                ig: (CommType::AllToAll, layer.out_act_bytes),
+                wg: NONE,
+            },
+            _ => CommPlan {
+                fwd: (CommType::AllGather, layer.out_act_bytes),
+                ig: (CommType::AllGather, layer.in_act_bytes),
+                wg: NONE,
+            },
+        },
+        Parallelism::HybridDataModel => {
+            let g = opts.mp_group.max(1) as u64;
+            let act = match layer.kind {
+                LayerKind::Embedding => (CommType::AllToAll, layer.out_act_bytes / g),
+                _ => (CommType::AllGather, layer.out_act_bytes),
+            };
+            CommPlan {
+                fwd: act,
+                ig: (CommType::AllGather, layer.in_act_bytes),
+                wg: (CommType::AllReduce, layer.weight_bytes / g),
+            }
+        }
+        Parallelism::HybridModelData => {
+            let groups = (opts.npus / opts.mp_group.max(1)).max(1) as u64;
+            CommPlan {
+                fwd: (CommType::AllGather, layer.out_act_bytes / groups),
+                ig: (CommType::AllGather, layer.in_act_bytes / groups),
+                wg: (CommType::AllReduce, layer.weight_bytes / groups),
+            }
+        }
+        Parallelism::Pipeline => CommPlan {
+            // Stage-boundary sends are handled by the pipeline engine; the
+            // workload rows keep the within-stage DP all-reduce.
+            fwd: NONE,
+            ig: NONE,
+            wg: (CommType::AllReduce, layer.weight_bytes),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::DataType;
+
+    fn layer(kind: LayerKind) -> LayerInfo {
+        LayerInfo {
+            name: "l".into(),
+            kind,
+            variables: 1000,
+            dtype: DataType::Float,
+            weight_bytes: 4000,
+            in_act_bytes: 256,
+            out_act_bytes: 512,
+            macs: 1_000_000,
+            out_shape: vec![1, 8, 8, 8],
+        }
+    }
+
+    fn opts(p: Parallelism) -> TranslateOpts {
+        TranslateOpts { parallelism: p, npus: 16, mp_group: 4, batch: 1, zero: ZeroStage::None }
+    }
+
+    #[test]
+    fn zero_stages_change_dp_collectives() {
+        let l = layer(LayerKind::Dense);
+        let mut o = opts(Parallelism::Data);
+        o.zero = ZeroStage::OptimizerState;
+        assert_eq!(comm_for_layer(&l, o).wg.0, CommType::AllReduce);
+        o.zero = ZeroStage::Gradients;
+        let p = comm_for_layer(&l, o);
+        assert_eq!(p.wg.0, CommType::ReduceScatter);
+        assert_eq!(p.fwd.0, CommType::AllGather);
+        assert_eq!(p.ig, NONE);
+        o.zero = ZeroStage::Parameters;
+        let p = comm_for_layer(&l, o);
+        assert_eq!(p.ig.0, CommType::AllGather);
+    }
+
+    #[test]
+    fn data_parallel_only_wg_allreduce() {
+        let p = comm_for_layer(&layer(LayerKind::Conv), opts(Parallelism::Data));
+        assert_eq!(p.fwd, NONE);
+        assert_eq!(p.ig, NONE);
+        assert_eq!(p.wg, (CommType::AllReduce, 4000));
+    }
+
+    #[test]
+    fn model_parallel_gathers_activations() {
+        let p = comm_for_layer(&layer(LayerKind::Dense), opts(Parallelism::Model));
+        assert_eq!(p.fwd, (CommType::AllGather, 512));
+        assert_eq!(p.ig, (CommType::AllGather, 256));
+        assert_eq!(p.wg, NONE);
+    }
+
+    #[test]
+    fn model_parallel_embedding_uses_alltoall() {
+        let p = comm_for_layer(&layer(LayerKind::Embedding), opts(Parallelism::Model));
+        assert_eq!(p.fwd.0, CommType::AllToAll);
+    }
+
+    #[test]
+    fn hybrid_dm_shards_weight_allreduce() {
+        let p = comm_for_layer(&layer(LayerKind::Conv), opts(Parallelism::HybridDataModel));
+        assert_eq!(p.wg, (CommType::AllReduce, 1000)); // 4000 / mp_group=4
+        assert_eq!(p.fwd.0, CommType::AllGather);
+    }
+
+    #[test]
+    fn hybrid_md_divides_by_group_count() {
+        let p = comm_for_layer(&layer(LayerKind::Conv), opts(Parallelism::HybridModelData));
+        // 16 npus / 4 per group = 4 groups.
+        assert_eq!(p.wg, (CommType::AllReduce, 1000));
+        assert_eq!(p.fwd, (CommType::AllGather, 128));
+    }
+
+    #[test]
+    fn pipeline_keeps_dp_allreduce() {
+        let p = comm_for_layer(&layer(LayerKind::Conv), opts(Parallelism::Pipeline));
+        assert_eq!(p.wg.0, CommType::AllReduce);
+        assert_eq!(p.fwd, NONE);
+    }
+}

@@ -1,0 +1,288 @@
+//! Layer-information extraction from ONNX graphs (paper §3.3).
+//!
+//! Walks the graph in topological order, identifies weight-bearing compute
+//! layers (Conv / Gemm / MatMul), and records for each: name, parameter
+//! count ("Variables"), dtype, byte size ("Model Size"), activation sizes,
+//! and MAC count. Also keeps the full initializer listing for
+//! `modtrans inspect --all`.
+
+use crate::error::{Error, Result};
+use crate::onnx::{infer_shapes, DataType, GraphIndex, Model, Node};
+
+/// Classification of a compute layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution.
+    Conv,
+    /// Fully connected (Gemm).
+    Dense,
+    /// Generic matrix multiply (transformer projections).
+    MatMul,
+    /// Embedding lookup (Gather on a parameter table).
+    Embedding,
+}
+
+impl LayerKind {
+    /// Short label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Dense => "dense",
+            LayerKind::MatMul => "matmul",
+            LayerKind::Embedding => "embedding",
+        }
+    }
+}
+
+/// Extracted information for one weight-bearing layer.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    /// Layer name: the weight initializer's name with a trailing
+    /// `-weight`/`.weight` stripped (paper table convention).
+    pub name: String,
+    /// Operator classification.
+    pub kind: LayerKind,
+    /// Parameter count of the weight tensor (paper "Variables").
+    pub variables: u64,
+    /// Weight dtype (paper "Data Type").
+    pub dtype: DataType,
+    /// Weight bytes (paper "Model Size").
+    pub weight_bytes: u64,
+    /// Input activation bytes at the translation batch size.
+    pub in_act_bytes: u64,
+    /// Output activation bytes at the translation batch size.
+    pub out_act_bytes: u64,
+    /// Multiply-accumulate count for one forward pass at the translation
+    /// batch size.
+    pub macs: u64,
+    /// Output spatial/feature shape (diagnostics).
+    pub out_shape: Vec<i64>,
+}
+
+/// Full-model extraction result.
+#[derive(Debug, Clone)]
+pub struct ModelSummary {
+    /// Graph name from the model.
+    pub model_name: String,
+    /// Weight-bearing compute layers, in topological order.
+    pub layers: Vec<LayerInfo>,
+    /// Every initializer as (name, variables, dtype, bytes) — the
+    /// unfiltered view (`inspect --all`).
+    pub all_initializers: Vec<(String, u64, DataType, u64)>,
+    /// Batch size activations were sized at.
+    pub batch: i64,
+    /// Total parameters across all initializers.
+    pub total_params: u64,
+    /// Total parameter bytes.
+    pub total_bytes: u64,
+}
+
+/// Extract from raw `.onnx` bytes (metadata-only decode; weight payloads
+/// are never copied).
+pub fn extract_from_bytes(bytes: &[u8], batch: i64) -> Result<ModelSummary> {
+    let model = crate::onnx::parse_model_meta(bytes)?;
+    extract(&model, batch)
+}
+
+/// Extract from an in-memory model.
+pub fn extract(model: &Model, batch: i64) -> Result<ModelSummary> {
+    let graph = &model.graph;
+    let idx = GraphIndex::new(graph)?;
+    let shapes = infer_shapes(graph, batch)?;
+
+    let act_bytes = |edge: &str| -> u64 {
+        shapes
+            .get(edge)
+            .map(|(dt, dims)| {
+                dims.iter().map(|&d| d.max(0) as u64).product::<u64>() * dt.size_bytes()
+            })
+            .unwrap_or(0)
+    };
+
+    let mut layers = Vec::new();
+    for node in idx.topo_nodes() {
+        let Some((kind, weight_input)) = classify(node, &idx) else {
+            continue;
+        };
+        let wname = &node.inputs[weight_input];
+        let w = idx
+            .initializer(wname)
+            .ok_or_else(|| Error::translate(format!("weight '{wname}' not an initializer")))?;
+        let out_edge = node
+            .outputs
+            .first()
+            .ok_or_else(|| Error::translate(format!("node '{}' has no output", node.name)))?;
+        let (_, out_dims) = shapes
+            .get(out_edge)
+            .ok_or_else(|| Error::translate(format!("no shape for '{out_edge}'")))?;
+        let macs = macs_for(node, kind, w.dims.as_slice(), out_dims);
+        layers.push(LayerInfo {
+            name: layer_name(wname, node),
+            kind,
+            variables: w.num_elements(),
+            dtype: w.data_type,
+            weight_bytes: w.size_bytes(),
+            in_act_bytes: act_bytes(&node.inputs[if kind == LayerKind::Embedding { 1 } else { 0 }]),
+            out_act_bytes: act_bytes(out_edge),
+            macs,
+            out_shape: out_dims.clone(),
+        });
+    }
+
+    let all_initializers = graph
+        .initializers
+        .iter()
+        .map(|t| (t.name.clone(), t.num_elements(), t.data_type, t.size_bytes()))
+        .collect();
+
+    Ok(ModelSummary {
+        model_name: graph.name.clone(),
+        layers,
+        all_initializers,
+        batch,
+        total_params: model.num_parameters(),
+        total_bytes: model.parameter_bytes(),
+    })
+}
+
+/// Identify weight-bearing compute nodes and which input is the weight.
+fn classify(node: &Node, idx: &GraphIndex<'_>) -> Option<(LayerKind, usize)> {
+    match node.op_type.as_str() {
+        "Conv" if node.inputs.len() >= 2 && idx.is_initializer(&node.inputs[1]) => {
+            Some((LayerKind::Conv, 1))
+        }
+        "Gemm" if node.inputs.len() >= 2 && idx.is_initializer(&node.inputs[1]) => {
+            Some((LayerKind::Dense, 1))
+        }
+        "MatMul" if node.inputs.len() == 2 && idx.is_initializer(&node.inputs[1]) => {
+            Some((LayerKind::MatMul, 1))
+        }
+        "Gather" if !node.inputs.is_empty() && idx.is_initializer(&node.inputs[0]) => {
+            Some((LayerKind::Embedding, 0))
+        }
+        _ => None,
+    }
+}
+
+/// Derive the table layer name from the weight tensor name (strip the
+/// `-weight` / `.weight` suffix); fall back to the node name.
+fn layer_name(weight_name: &str, node: &Node) -> String {
+    for suffix in ["-weight", ".weight", "_weight"] {
+        if let Some(stripped) = weight_name.strip_suffix(suffix) {
+            return stripped.to_string();
+        }
+    }
+    if !node.name.is_empty() {
+        node.name.clone()
+    } else {
+        weight_name.to_string()
+    }
+}
+
+/// MAC count for one forward pass.
+fn macs_for(node: &Node, kind: LayerKind, w_dims: &[i64], out_dims: &[i64]) -> u64 {
+    let prod = |ds: &[i64]| ds.iter().map(|&d| d.max(0) as u64).product::<u64>();
+    match kind {
+        // Conv: out_elems × (cin/group × kh × kw). The weight's dim 1 is
+        // already cin/group, so grouping needs no extra correction.
+        LayerKind::Conv => prod(out_dims) * prod(&w_dims[1..]),
+        // Dense/MatMul: out_elems × K (K = shared inner dim).
+        LayerKind::Dense => {
+            let tb = node.attr_i("transB", 0) == 1;
+            let k = if tb { w_dims[1] } else { w_dims[0] } as u64;
+            prod(out_dims) * k
+        }
+        LayerKind::MatMul => {
+            let k = w_dims[w_dims.len() - 2] as u64;
+            prod(out_dims) * k
+        }
+        // Embedding lookup is a copy, not MACs.
+        LayerKind::Embedding => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::encode_model;
+    use crate::zoo::{self, WeightFill, ZooOpts};
+
+    fn summary_of(name: &str, batch: i64) -> ModelSummary {
+        let m = zoo::get(name, ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let bytes = encode_model(&m);
+        extract_from_bytes(&bytes, batch).unwrap()
+    }
+
+    #[test]
+    fn vgg16_layer_table_matches_paper() {
+        let s = summary_of("vgg16", 1);
+        assert_eq!(s.layers.len(), 16);
+        assert_eq!(s.layers[0].name, "vgg16-conv0");
+        assert_eq!(s.layers[0].variables, 1728);
+        assert_eq!(s.layers[0].dtype, DataType::Float);
+        assert_eq!(s.layers[0].weight_bytes, 6912);
+        assert_eq!(s.layers[13].name, "vgg16-dense0");
+        assert_eq!(s.layers[13].variables, 102_760_448);
+        assert_eq!(s.layers[13].weight_bytes, 411_041_792);
+    }
+
+    #[test]
+    fn resnet50_table3_order_and_sizes() {
+        let s = summary_of("resnet50", 1);
+        assert_eq!(s.layers.len(), 54);
+        assert_eq!(s.layers[0].name, "resnet-conv0");
+        assert_eq!(s.layers[0].weight_bytes, 37632);
+        assert_eq!(s.layers[1].name, "resnet-stage1-conv0");
+        assert_eq!(s.layers[1].weight_bytes, 16384);
+        assert_eq!(s.layers[53].name, "resnet-dense0");
+        assert_eq!(s.layers[53].weight_bytes, 8_192_000);
+    }
+
+    #[test]
+    fn conv_macs_are_exact() {
+        // vgg16-conv0 at batch 1: out 64x224x224, per-out 3*3*3=27 MACs.
+        let s = summary_of("vgg16", 1);
+        let c0 = &s.layers[0];
+        assert_eq!(c0.macs, 64 * 224 * 224 * 27);
+        // Activations: in 3*224*224*4 bytes, out 64*224*224*4 bytes.
+        assert_eq!(c0.in_act_bytes, 3 * 224 * 224 * 4);
+        assert_eq!(c0.out_act_bytes, 64 * 224 * 224 * 4);
+    }
+
+    #[test]
+    fn batch_scales_activations_and_macs_not_weights() {
+        let s1 = summary_of("vgg16", 1);
+        let s8 = summary_of("vgg16", 8);
+        assert_eq!(s1.layers[0].weight_bytes, s8.layers[0].weight_bytes);
+        assert_eq!(s8.layers[0].out_act_bytes, 8 * s1.layers[0].out_act_bytes);
+        assert_eq!(s8.layers[0].macs, 8 * s1.layers[0].macs);
+    }
+
+    #[test]
+    fn dense_macs() {
+        // mlp-dense0: 784→4096 at batch B: B*4096*784 MACs.
+        let s = summary_of("mlp", 4);
+        assert_eq!(s.layers[0].macs, 4 * 4096 * 784);
+        assert_eq!(s.layers[0].kind, LayerKind::Dense);
+    }
+
+    #[test]
+    fn transformer_has_embedding_and_matmul_layers() {
+        let s = summary_of("gpt2-tiny", 1);
+        assert!(s.layers.iter().any(|l| l.kind == LayerKind::Embedding));
+        assert!(s.layers.iter().any(|l| l.kind == LayerKind::MatMul));
+        // Embedding contributes no MACs.
+        let emb = s.layers.iter().find(|l| l.kind == LayerKind::Embedding).unwrap();
+        assert_eq!(emb.macs, 0);
+    }
+
+    #[test]
+    fn totals_cover_every_initializer() {
+        let s = summary_of("resnet50", 1);
+        assert_eq!(s.total_params, 25_610_152);
+        // 54 layer weights + 53 BN × 4 tensors + dense bias = 267.
+        assert_eq!(s.all_initializers.len(), 54 + 53 * 4 + 1);
+        let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Empty }).unwrap();
+        assert_eq!(s.all_initializers.len(), m.graph.initializers.len());
+    }
+}

@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion stand-in for the offline build).
+//!
+//! Provides warmup, fixed-count timed iterations, and summary statistics
+//! (mean / stddev / min / max / p50) so the `benches/` targets can print
+//! the same mean-and-variance series the paper's Figure 6 reports.
+
+use std::time::Instant;
+
+/// Summary statistics over per-iteration wall-clock samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed samples.
+    pub n: usize,
+    /// Arithmetic mean (s).
+    pub mean: f64,
+    /// Sample standard deviation (s).
+    pub stddev: f64,
+    /// Minimum sample (s).
+    pub min: f64,
+    /// Maximum sample (s).
+    pub max: f64,
+    /// Median sample (s).
+    pub p50: f64,
+}
+
+impl Stats {
+    /// Compute statistics from raw samples.
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            name: name.to_string(),
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+            p50: samples[n / 2],
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} n={:<4} mean={:>12} ± {:<12} min={:>12} p50={:>12} max={:>12}",
+            self.name,
+            self.n,
+            crate::util::human_time(self.mean),
+            crate::util::human_time(self.stddev),
+            crate::util::human_time(self.min),
+            crate::util::human_time(self.p50),
+            crate::util::human_time(self.max),
+        )
+    }
+}
+
+/// Benchmark runner: `warmup` untimed runs followed by `samples` timed runs.
+pub struct Bench {
+    warmup: usize,
+    samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, samples: 30 }
+    }
+}
+
+impl Bench {
+    /// Create a runner with explicit warmup/sample counts.
+    pub fn new(warmup: usize, samples: usize) -> Bench {
+        Bench { warmup, samples }
+    }
+
+    /// Run `f` and collect statistics. `f` is passed the iteration index
+    /// (warmup iterations get indices `0..warmup`).
+    pub fn run<F: FnMut(usize)>(&self, name: &str, mut f: F) -> Stats {
+        for i in 0..self.warmup {
+            f(i);
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for i in 0..self.samples {
+            let t0 = Instant::now();
+            f(self.warmup + i);
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Stats::from_samples(name, samples);
+        println!("{}", s.line());
+        s
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (`std::hint::black_box` wrapper, kept for call-site clarity).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples("c", vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn stats_mean_stddev() {
+        let s = Stats::from_samples("x", vec![1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.stddev - 1.0).abs() < 1e-12);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let b = Bench::new(2, 5);
+        let s = b.run("iters", |_| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+}

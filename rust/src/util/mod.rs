@@ -1,0 +1,57 @@
+//! Infrastructure substrates that would normally come from external crates
+//! (`rand`, `criterion`, prettytable) — implemented in-repo because the
+//! build is fully offline.
+
+pub mod bench;
+pub mod rng;
+pub mod table;
+
+/// Format a byte count with binary-prefix units (e.g. `411041792` →
+/// `"392.0 MiB"`). Used by `modtrans inspect` and the report writers.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit (`ns`/`µs`/`ms`/`s`).
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(411_041_792), "392.0 MiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(0.5e-9 * 2.0), "1.0 ns");
+        assert_eq!(human_time(1.5e-3), "1.500 ms");
+        assert_eq!(human_time(2.0), "2.000 s");
+    }
+}

@@ -1,0 +1,115 @@
+//! Plain-text table rendering for CLI reports and the bench harness
+//! (reproduces the paper's Tables 1–3 layout).
+
+/// A simple left-aligned text table with a header row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a data row; must match the header arity.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with `|`-separated columns and a rule under the header,
+    /// matching the paper's table style.
+    pub fn render(&self) -> String {
+        // Widths in characters, not bytes (cells may contain 'µ').
+        let w = |s: &str| s.chars().count();
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| w(h)).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(w(c));
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(widths[i] - w(&cells[i])));
+                s.push_str(" |");
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let rule: String = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('|');
+            }
+            s
+        };
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new(vec!["Layer Name", "Variables"]);
+        t.row(vec!["vgg16-conv0-weight", "1728"]);
+        t.row(vec!["x", "36864"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines same width.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        // Multi-byte cells still align (char width, not byte width).
+        let mut t2 = Table::new(vec!["a"]);
+        t2.row(vec!["1.2 µs"]);
+        t2.row(vec!["123456"]);
+        let r2 = t2.render();
+        let lens: Vec<usize> = r2.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.iter().all(|&l| l == lens[0]), "{r2}");
+        assert!(lines[0].contains("Layer Name"));
+        assert!(lines[2].contains("1728"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

@@ -1,0 +1,399 @@
+//! The ASTRA-sim DNN-description workload format (paper Fig. 3).
+//!
+//! A workload file is:
+//!
+//! ```text
+//! <ParallelismType>
+//! <NumberOfLayers>
+//! <name> <reserved> <fwd_ns> <fwd_comm> <fwd_bytes> <ig_ns> <ig_comm> <ig_bytes> \
+//!        <wg_ns> <wg_comm> <wg_bytes> <update_ns>
+//! ...one line per layer...
+//! ```
+//!
+//! Times are integer nanoseconds, sizes integer bytes, comm types one of
+//! `NONE | ALLREDUCE | ALLGATHER | REDUCESCATTER | ALLTOALL`. This is the
+//! layer-wise interface the paper targets ("applicable to any simulator
+//! that takes layer-wise information as input", §1) and the input the
+//! [`crate::sim`] workload layer executes.
+
+use crate::error::{Error, Result};
+use std::fmt;
+
+/// Collective communication type attached to a layer phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommType {
+    /// No communication in this phase.
+    None,
+    /// All-reduce (data-parallel weight-gradient sync).
+    AllReduce,
+    /// All-gather (model-parallel activation exchange).
+    AllGather,
+    /// Reduce-scatter.
+    ReduceScatter,
+    /// All-to-all (expert/model sharding).
+    AllToAll,
+}
+
+impl CommType {
+    /// Canonical file token.
+    pub fn token(self) -> &'static str {
+        match self {
+            CommType::None => "NONE",
+            CommType::AllReduce => "ALLREDUCE",
+            CommType::AllGather => "ALLGATHER",
+            CommType::ReduceScatter => "REDUCESCATTER",
+            CommType::AllToAll => "ALLTOALL",
+        }
+    }
+
+    /// Parse a file token.
+    pub fn from_token(s: &str) -> Result<CommType> {
+        Ok(match s {
+            "NONE" => CommType::None,
+            "ALLREDUCE" => CommType::AllReduce,
+            "ALLGATHER" => CommType::AllGather,
+            "REDUCESCATTER" => CommType::ReduceScatter,
+            "ALLTOALL" => CommType::AllToAll,
+            other => {
+                return Err(Error::WorkloadParse {
+                    line: 0,
+                    msg: format!("unknown comm type '{other}'"),
+                })
+            }
+        })
+    }
+}
+
+impl fmt::Display for CommType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// Parallelization strategy for the whole workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Pure data parallelism.
+    Data,
+    /// Pure model parallelism.
+    Model,
+    /// Model parallel inside a group, data parallel across groups.
+    HybridDataModel,
+    /// Data parallel inside a group, model parallel across groups.
+    HybridModelData,
+    /// Microbatch pipeline parallelism (stage-partitioned).
+    Pipeline,
+}
+
+impl Parallelism {
+    /// Canonical file token.
+    pub fn token(self) -> &'static str {
+        match self {
+            Parallelism::Data => "DATA",
+            Parallelism::Model => "MODEL",
+            Parallelism::HybridDataModel => "HYBRID_DATA_MODEL",
+            Parallelism::HybridModelData => "HYBRID_MODEL_DATA",
+            Parallelism::Pipeline => "PIPELINE",
+        }
+    }
+
+    /// Parse a file token.
+    pub fn from_token(s: &str) -> Result<Parallelism> {
+        Ok(match s {
+            "DATA" => Parallelism::Data,
+            "MODEL" => Parallelism::Model,
+            "HYBRID_DATA_MODEL" => Parallelism::HybridDataModel,
+            "HYBRID_MODEL_DATA" => Parallelism::HybridModelData,
+            "PIPELINE" => Parallelism::Pipeline,
+            other => {
+                return Err(Error::WorkloadParse {
+                    line: 1,
+                    msg: format!("unknown parallelism '{other}'"),
+                })
+            }
+        })
+    }
+}
+
+impl fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// One phase (forward / input-grad / weight-grad) of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Phase {
+    /// Compute time in nanoseconds.
+    pub compute_ns: u64,
+    /// Collective issued after the compute.
+    pub comm: CommType,
+    /// Collective payload in bytes.
+    pub comm_bytes: u64,
+}
+
+impl Phase {
+    /// A compute-only phase.
+    pub fn compute_only(ns: u64) -> Phase {
+        Phase { compute_ns: ns, comm: CommType::None, comm_bytes: 0 }
+    }
+}
+
+/// One layer row of the description file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Layer name (paper's "Layer Name" column).
+    pub name: String,
+    /// Reserved field (ASTRA-sim keeps `-1` here).
+    pub reserved: i64,
+    /// Forward pass.
+    pub fwd: Phase,
+    /// Input-gradient (backward wrt activations).
+    pub input_grad: Phase,
+    /// Weight-gradient (backward wrt parameters).
+    pub weight_grad: Phase,
+    /// Local optimizer update time in ns.
+    pub update_ns: u64,
+}
+
+/// A complete DNN description: parallelism + layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workload {
+    /// Strategy announced on line 1.
+    pub parallelism: Parallelism,
+    /// Layer rows.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Workload {
+    /// Serialize to the description-file text format.
+    pub fn emit(&self) -> String {
+        let mut out = String::new();
+        out.push_str(self.parallelism.token());
+        out.push('\n');
+        out.push_str(&self.layers.len().to_string());
+        out.push('\n');
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{} {} {} {} {} {} {} {} {} {} {} {}\n",
+                l.name,
+                l.reserved,
+                l.fwd.compute_ns,
+                l.fwd.comm,
+                l.fwd.comm_bytes,
+                l.input_grad.compute_ns,
+                l.input_grad.comm,
+                l.input_grad.comm_bytes,
+                l.weight_grad.compute_ns,
+                l.weight_grad.comm,
+                l.weight_grad.comm_bytes,
+                l.update_ns,
+            ));
+        }
+        out
+    }
+
+    /// Parse a description file.
+    pub fn parse(text: &str) -> Result<Workload> {
+        let mut lines = text
+            .lines()
+            .enumerate()
+            .map(|(i, l)| (i + 1, l.trim()))
+            .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+
+        let (_, ptok) = lines
+            .next()
+            .ok_or(Error::WorkloadParse { line: 1, msg: "empty file".into() })?;
+        let parallelism = Parallelism::from_token(ptok)?;
+
+        let (nline, ntok) = lines
+            .next()
+            .ok_or(Error::WorkloadParse { line: 2, msg: "missing layer count".into() })?;
+        let count: usize = ntok.parse().map_err(|_| Error::WorkloadParse {
+            line: nline,
+            msg: format!("bad layer count '{ntok}'"),
+        })?;
+
+        let mut layers = Vec::with_capacity(count);
+        for (lineno, line) in lines {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 12 {
+                return Err(Error::WorkloadParse {
+                    line: lineno,
+                    msg: format!("expected 12 fields, got {}", f.len()),
+                });
+            }
+            let num = |s: &str, what: &str| -> Result<u64> {
+                s.parse().map_err(|_| Error::WorkloadParse {
+                    line: lineno,
+                    msg: format!("bad {what} '{s}'"),
+                })
+            };
+            let comm = |s: &str| -> Result<CommType> {
+                CommType::from_token(s).map_err(|_| Error::WorkloadParse {
+                    line: lineno,
+                    msg: format!("unknown comm type '{s}'"),
+                })
+            };
+            layers.push(LayerSpec {
+                name: f[0].to_string(),
+                reserved: f[1].parse().map_err(|_| Error::WorkloadParse {
+                    line: lineno,
+                    msg: format!("bad reserved field '{}'", f[1]),
+                })?,
+                fwd: Phase {
+                    compute_ns: num(f[2], "fwd compute")?,
+                    comm: comm(f[3])?,
+                    comm_bytes: num(f[4], "fwd comm size")?,
+                },
+                input_grad: Phase {
+                    compute_ns: num(f[5], "ig compute")?,
+                    comm: comm(f[6])?,
+                    comm_bytes: num(f[7], "ig comm size")?,
+                },
+                weight_grad: Phase {
+                    compute_ns: num(f[8], "wg compute")?,
+                    comm: comm(f[9])?,
+                    comm_bytes: num(f[10], "wg comm size")?,
+                },
+                update_ns: num(f[11], "update time")?,
+            });
+        }
+        if layers.len() != count {
+            return Err(Error::WorkloadParse {
+                line: 2,
+                msg: format!("declared {count} layers, found {}", layers.len()),
+            });
+        }
+        Ok(Workload { parallelism, layers })
+    }
+
+    /// Total declared communication volume in bytes (all phases).
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.fwd.comm_bytes + l.input_grad.comm_bytes + l.weight_grad.comm_bytes)
+            .sum()
+    }
+
+    /// Total per-NPU compute time in ns (one fwd+bwd pass, no overlap).
+    pub fn total_compute_ns(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.fwd.compute_ns + l.input_grad.compute_ns + l.weight_grad.compute_ns
+                    + l.update_ns
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Workload {
+        Workload {
+            parallelism: Parallelism::Data,
+            layers: vec![
+                LayerSpec {
+                    name: "conv0".into(),
+                    reserved: -1,
+                    fwd: Phase::compute_only(1000),
+                    input_grad: Phase::compute_only(900),
+                    weight_grad: Phase {
+                        compute_ns: 800,
+                        comm: CommType::AllReduce,
+                        comm_bytes: 37632,
+                    },
+                    update_ns: 10,
+                },
+                LayerSpec {
+                    name: "dense0".into(),
+                    reserved: -1,
+                    fwd: Phase {
+                        compute_ns: 2000,
+                        comm: CommType::AllGather,
+                        comm_bytes: 4096,
+                    },
+                    input_grad: Phase::compute_only(1800),
+                    weight_grad: Phase {
+                        compute_ns: 1600,
+                        comm: CommType::AllReduce,
+                        comm_bytes: 8192000,
+                    },
+                    update_ns: 20,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let w = sample();
+        let text = w.emit();
+        let w2 = Workload::parse(&text).unwrap();
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn emit_format_shape() {
+        let text = sample().emit();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "DATA");
+        assert_eq!(lines[1], "2");
+        assert!(lines[2].starts_with("conv0 -1 1000 NONE 0 900 NONE 0 800 ALLREDUCE 37632 10"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Workload::parse("").is_err());
+        assert!(Workload::parse("BOGUS\n0\n").is_err());
+        assert!(Workload::parse("DATA\nxyz\n").is_err());
+        // wrong field count
+        assert!(Workload::parse("DATA\n1\nconv0 -1 1000\n").is_err());
+        // count mismatch
+        assert!(Workload::parse("DATA\n2\nc -1 1 NONE 0 1 NONE 0 1 NONE 0 1\n").is_err());
+        // bad comm type
+        assert!(
+            Workload::parse("DATA\n1\nc -1 1 FOO 0 1 NONE 0 1 NONE 0 1\n").is_err()
+        );
+    }
+
+    #[test]
+    fn parse_tolerates_comments_and_blanks() {
+        let text = "# generated by modtrans\nDATA\n\n1\nc -1 1 NONE 0 1 NONE 0 1 ALLREDUCE 64 1\n";
+        let w = Workload::parse(text).unwrap();
+        assert_eq!(w.layers.len(), 1);
+        assert_eq!(w.layers[0].weight_grad.comm_bytes, 64);
+    }
+
+    #[test]
+    fn totals() {
+        let w = sample();
+        assert_eq!(w.total_comm_bytes(), 37632 + 4096 + 8192000);
+        assert_eq!(w.total_compute_ns(), 1000 + 900 + 800 + 10 + 2000 + 1800 + 1600 + 20);
+    }
+
+    #[test]
+    fn all_tokens_roundtrip() {
+        for c in [
+            CommType::None,
+            CommType::AllReduce,
+            CommType::AllGather,
+            CommType::ReduceScatter,
+            CommType::AllToAll,
+        ] {
+            assert_eq!(CommType::from_token(c.token()).unwrap(), c);
+        }
+        for p in [
+            Parallelism::Data,
+            Parallelism::Model,
+            Parallelism::HybridDataModel,
+            Parallelism::HybridModelData,
+            Parallelism::Pipeline,
+        ] {
+            assert_eq!(Parallelism::from_token(p.token()).unwrap(), p);
+        }
+    }
+}

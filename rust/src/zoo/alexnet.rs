@@ -1,0 +1,59 @@
+//! AlexNet builder (torchvision single-tower variant).
+
+use super::builder::{GraphBuilder, ZooOpts};
+use crate::onnx::Model;
+
+/// Build AlexNet: 5 convs + 3 dense layers, 224x224 input.
+pub fn build(opts: ZooOpts) -> Model {
+    let mut b = GraphBuilder::new("alexnet", opts);
+    let x = b.input("data", &[3, 224, 224]);
+
+    // conv0: 64 x 11x11 / 4, pad 2 → 64x55x55
+    let mut t = b.conv("alexnet-conv0", &x, 3, 64, 11, 4, 2, true);
+    t = b.relu(&t);
+    t = b.lrn(&t);
+    t = b.maxpool(&t, 3, 2, 0); // 64x27x27
+    // conv1: 192 x 5x5, pad 2
+    t = b.conv("alexnet-conv1", &t, 64, 192, 5, 1, 2, true);
+    t = b.relu(&t);
+    t = b.lrn(&t);
+    t = b.maxpool(&t, 3, 2, 0); // 192x13x13
+    // conv2-4: 3x3 pad 1
+    t = b.conv("alexnet-conv2", &t, 192, 384, 3, 1, 1, true);
+    t = b.relu(&t);
+    t = b.conv("alexnet-conv3", &t, 384, 256, 3, 1, 1, true);
+    t = b.relu(&t);
+    t = b.conv("alexnet-conv4", &t, 256, 256, 3, 1, 1, true);
+    t = b.relu(&t);
+    t = b.maxpool(&t, 3, 2, 0); // 256x6x6
+
+    t = b.flatten(&t);
+    t = b.dense("alexnet-dense0", &t, 256 * 6 * 6, 4096, true);
+    t = b.relu(&t);
+    t = b.dense("alexnet-dense1", &t, 4096, 4096, true);
+    t = b.relu(&t);
+    t = b.dense("alexnet-dense2", &t, 4096, 1000, true);
+    let out = b.softmax(&t);
+    b.finish(Some(&out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::infer_shapes;
+    use crate::zoo::builder::WeightFill;
+
+    #[test]
+    fn alexnet_param_count() {
+        let m = build(ZooOpts { weights: WeightFill::Empty });
+        // torchvision alexnet: 61,100,840 parameters.
+        assert_eq!(m.num_parameters(), 61_100_840);
+    }
+
+    #[test]
+    fn alexnet_shapes() {
+        let m = build(ZooOpts { weights: WeightFill::Empty });
+        let shapes = infer_shapes(&m.graph, 8).unwrap();
+        assert_eq!(shapes[&m.graph.outputs[0].name].1, vec![8, 1000]);
+    }
+}

@@ -1,0 +1,371 @@
+//! Fluent ONNX graph builder used by every zoo model.
+//!
+//! Handles edge naming, initializer registration with a configurable
+//! weight-fill policy, and the input/output signature. Builders produce
+//! graphs that pass [`crate::onnx::infer_shapes`], so translation can size
+//! every activation.
+
+use crate::onnx::{
+    Attribute, AttributeValue, DataType, Dim, Graph, Model, Node, Tensor, TensorType, ValueInfo,
+};
+use crate::util::rng::Rng;
+
+/// How initializer payloads are materialized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightFill {
+    /// Zero bytes of the exact on-disk size (fast; default for benches —
+    /// deserialization cost only depends on length).
+    Zeros,
+    /// Deterministic pseudo-random bytes from the given seed.
+    Random(u64),
+    /// No payload at all (structure-only models; smallest files).
+    Empty,
+}
+
+/// Zoo build options.
+#[derive(Debug, Clone, Copy)]
+pub struct ZooOpts {
+    /// Initializer payload policy.
+    pub weights: WeightFill,
+}
+
+impl Default for ZooOpts {
+    fn default() -> Self {
+        ZooOpts { weights: WeightFill::Zeros }
+    }
+}
+
+/// Incremental graph builder.
+pub struct GraphBuilder {
+    graph: Graph,
+    fill: WeightFill,
+    rng: Rng,
+    next_edge: usize,
+}
+
+impl GraphBuilder {
+    /// Start a graph named `name` with the given weight policy.
+    pub fn new(name: &str, opts: ZooOpts) -> GraphBuilder {
+        let seed = match opts.weights {
+            WeightFill::Random(s) => s,
+            _ => 0,
+        };
+        GraphBuilder {
+            graph: Graph { name: name.into(), ..Default::default() },
+            fill: opts.weights,
+            rng: Rng::new(seed),
+            next_edge: 0,
+        }
+    }
+
+    /// Allocate a fresh intermediate edge name.
+    pub fn edge(&mut self) -> String {
+        let e = format!("t{}", self.next_edge);
+        self.next_edge += 1;
+        e
+    }
+
+    /// Declare a float graph input with a symbolic leading batch dim.
+    pub fn input(&mut self, name: &str, dims_after_batch: &[i64]) -> String {
+        self.input_typed(name, dims_after_batch, DataType::Float)
+    }
+
+    /// Declare a typed graph input with a symbolic leading batch dim.
+    pub fn input_typed(&mut self, name: &str, dims_after_batch: &[i64], dt: DataType) -> String {
+        let mut shape = vec![Dim::Param("N".into())];
+        shape.extend(dims_after_batch.iter().map(|&d| Dim::Value(d)));
+        self.graph.inputs.push(ValueInfo {
+            name: name.into(),
+            ty: Some(TensorType { elem_type: dt, shape }),
+        });
+        name.to_string()
+    }
+
+    /// Declare a graph output.
+    pub fn output(&mut self, edge: &str) {
+        self.graph.outputs.push(ValueInfo { name: edge.into(), ty: None });
+    }
+
+    fn payload(&mut self, bytes: usize) -> Vec<u8> {
+        match self.fill {
+            WeightFill::Zeros => vec![0u8; bytes],
+            WeightFill::Empty => Vec::new(),
+            WeightFill::Random(_) => {
+                let mut v = vec![0u8; bytes];
+                // Fill 8 bytes at a time; fast enough for half-GiB models.
+                let mut chunks = v.chunks_exact_mut(8);
+                for c in &mut chunks {
+                    c.copy_from_slice(&self.rng.next_u64().to_le_bytes());
+                }
+                let rem = chunks.into_remainder();
+                if !rem.is_empty() {
+                    let b = self.rng.next_u64().to_le_bytes();
+                    rem.copy_from_slice(&b[..rem.len()]);
+                }
+                v
+            }
+        }
+    }
+
+    /// Register a float initializer (weight/bias/BN param) named `name`.
+    pub fn weight(&mut self, name: &str, dims: &[i64]) -> String {
+        let n: i64 = dims.iter().product();
+        let raw = self.payload(n as usize * 4);
+        let payload_len = raw.len() as u64;
+        self.graph.initializers.push(Tensor {
+            dims: dims.to_vec(),
+            data_type: DataType::Float,
+            name: name.into(),
+            raw_data: raw,
+            payload_len,
+        });
+        name.to_string()
+    }
+
+    /// Register an int64 constant initializer (e.g. Reshape shapes).
+    pub fn const_i64(&mut self, name: &str, values: &[i64]) -> String {
+        let mut raw = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let payload_len = raw.len() as u64;
+        self.graph.initializers.push(Tensor {
+            dims: vec![values.len() as i64],
+            data_type: DataType::Int64,
+            name: name.into(),
+            raw_data: raw,
+            payload_len,
+        });
+        name.to_string()
+    }
+
+    /// Append a node; returns its first output edge.
+    pub fn node(
+        &mut self,
+        op: &str,
+        name: &str,
+        inputs: &[&str],
+        attrs: Vec<Attribute>,
+    ) -> String {
+        let out = self.edge();
+        self.graph.nodes.push(Node {
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: vec![out.clone()],
+            name: name.into(),
+            op_type: op.into(),
+            domain: String::new(),
+            attributes: attrs,
+        });
+        out
+    }
+
+    /// 2-D convolution. Weight is `{prefix}-weight` with dims
+    /// `[cout, cin/group, k, k]`; optional `{prefix}-bias`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        prefix: &str,
+        x: &str,
+        cin: i64,
+        cout: i64,
+        k: i64,
+        stride: i64,
+        pad: i64,
+        bias: bool,
+    ) -> String {
+        let w = self.weight(&format!("{prefix}-weight"), &[cout, cin, k, k]);
+        let attrs = vec![
+            ints_attr("kernel_shape", &[k, k]),
+            ints_attr("strides", &[stride, stride]),
+            ints_attr("pads", &[pad, pad, pad, pad]),
+        ];
+        if bias {
+            let b = self.weight(&format!("{prefix}-bias"), &[cout]);
+            self.node("Conv", prefix, &[x, &w, &b], attrs)
+        } else {
+            self.node("Conv", prefix, &[x, &w], attrs)
+        }
+    }
+
+    /// BatchNormalization with `{prefix}-{gamma,beta,mean,var}` params.
+    pub fn batchnorm(&mut self, prefix: &str, x: &str, c: i64) -> String {
+        let g = self.weight(&format!("{prefix}-gamma"), &[c]);
+        let b = self.weight(&format!("{prefix}-beta"), &[c]);
+        let m = self.weight(&format!("{prefix}-mean"), &[c]);
+        let v = self.weight(&format!("{prefix}-var"), &[c]);
+        self.node("BatchNormalization", prefix, &[x, &g, &b, &m, &v], vec![])
+    }
+
+    /// ReLU.
+    pub fn relu(&mut self, x: &str) -> String {
+        let name = format!("relu_{}", self.next_edge);
+        self.node("Relu", &name, &[x], vec![])
+    }
+
+    /// Max pooling.
+    pub fn maxpool(&mut self, x: &str, k: i64, stride: i64, pad: i64) -> String {
+        let name = format!("pool_{}", self.next_edge);
+        self.node(
+            "MaxPool",
+            &name,
+            &[x],
+            vec![
+                ints_attr("kernel_shape", &[k, k]),
+                ints_attr("strides", &[stride, stride]),
+                ints_attr("pads", &[pad, pad, pad, pad]),
+            ],
+        )
+    }
+
+    /// Global average pooling.
+    pub fn global_avg_pool(&mut self, x: &str) -> String {
+        let name = format!("gap_{}", self.next_edge);
+        self.node("GlobalAveragePool", &name, &[x], vec![])
+    }
+
+    /// Flatten from axis 1.
+    pub fn flatten(&mut self, x: &str) -> String {
+        let name = format!("flatten_{}", self.next_edge);
+        self.node("Flatten", &name, &[x], vec![])
+    }
+
+    /// Fully connected layer via Gemm with `transB=1`; weight dims
+    /// `[out_features, in_features]` (torch convention, which produces the
+    /// paper's dense layer sizes).
+    pub fn dense(&mut self, prefix: &str, x: &str, in_f: i64, out_f: i64, bias: bool) -> String {
+        let w = self.weight(&format!("{prefix}-weight"), &[out_f, in_f]);
+        let attrs = vec![int_attr("transB", 1)];
+        if bias {
+            let b = self.weight(&format!("{prefix}-bias"), &[out_f]);
+            self.node("Gemm", prefix, &[x, &w, &b], attrs)
+        } else {
+            self.node("Gemm", prefix, &[x, &w], attrs)
+        }
+    }
+
+    /// Elementwise add of two edges.
+    pub fn add(&mut self, a: &str, b: &str) -> String {
+        let name = format!("add_{}", self.next_edge);
+        self.node("Add", &name, &[a, b], vec![])
+    }
+
+    /// Softmax along the last axis.
+    pub fn softmax(&mut self, x: &str) -> String {
+        let name = format!("softmax_{}", self.next_edge);
+        self.node("Softmax", &name, &[x], vec![int_attr("axis", -1)])
+    }
+
+    /// Local response normalization (AlexNet).
+    pub fn lrn(&mut self, x: &str) -> String {
+        let name = format!("lrn_{}", self.next_edge);
+        self.node("LRN", &name, &[x], vec![int_attr("size", 5)])
+    }
+
+    /// MatMul.
+    pub fn matmul(&mut self, a: &str, b: &str) -> String {
+        let name = format!("matmul_{}", self.next_edge);
+        self.node("MatMul", &name, &[a, b], vec![])
+    }
+
+    /// Reshape via an int64 constant initializer.
+    pub fn reshape(&mut self, x: &str, target: &[i64]) -> String {
+        let cname = format!("shape_{}", self.next_edge);
+        let c = self.const_i64(&cname, target);
+        let name = format!("reshape_{}", self.next_edge);
+        self.node("Reshape", &name, &[x, &c], vec![])
+    }
+
+    /// Transpose with explicit permutation.
+    pub fn transpose(&mut self, x: &str, perm: &[i64]) -> String {
+        let name = format!("transpose_{}", self.next_edge);
+        self.node("Transpose", &name, &[x], vec![ints_attr("perm", perm)])
+    }
+
+    /// LayerNormalization with `{prefix}-{gamma,beta}` over `d` features.
+    pub fn layernorm(&mut self, prefix: &str, x: &str, d: i64) -> String {
+        let g = self.weight(&format!("{prefix}-gamma"), &[d]);
+        let b = self.weight(&format!("{prefix}-beta"), &[d]);
+        self.node("LayerNormalization", prefix, &[x, &g, &b], vec![int_attr("axis", -1)])
+    }
+
+    /// GELU activation.
+    pub fn gelu(&mut self, x: &str) -> String {
+        let name = format!("gelu_{}", self.next_edge);
+        self.node("Gelu", &name, &[x], vec![])
+    }
+
+    /// Gather (axis-0 embedding lookup).
+    pub fn gather(&mut self, table: &str, indices: &str) -> String {
+        let name = format!("gather_{}", self.next_edge);
+        self.node("Gather", &name, &[table, indices], vec![int_attr("axis", 0)])
+    }
+
+    /// Finish: wrap into a [`Model`] with standard zoo metadata.
+    pub fn finish(self, output_edge: Option<&str>) -> Model {
+        let mut graph = self.graph;
+        if let Some(e) = output_edge {
+            graph.outputs.push(ValueInfo { name: e.into(), ty: None });
+        }
+        Model::wrap(graph)
+    }
+}
+
+/// Build an INTS attribute.
+pub fn ints_attr(name: &str, vals: &[i64]) -> Attribute {
+    Attribute { name: name.into(), value: AttributeValue::Ints(vals.to_vec()) }
+}
+
+/// Build an INT attribute.
+pub fn int_attr(name: &str, val: i64) -> Attribute {
+    Attribute { name: name.into(), value: AttributeValue::Int(val) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::infer_shapes;
+
+    #[test]
+    fn tiny_cnn_builds_and_infers() {
+        let mut b = GraphBuilder::new("tiny", ZooOpts::default());
+        let x = b.input("data", &[3, 32, 32]);
+        let c = b.conv("conv0", &x, 3, 8, 3, 1, 1, true);
+        let r = b.relu(&c);
+        let p = b.maxpool(&r, 2, 2, 0);
+        let g = b.global_avg_pool(&p);
+        let f = b.flatten(&g);
+        let d = b.dense("fc", &f, 8, 10, true);
+        let s = b.softmax(&d);
+        let m = b.finish(Some(&s));
+        assert_eq!(m.graph.initializers.len(), 4); // w, b, fc-w, fc-b
+        let shapes = infer_shapes(&m.graph, 2).unwrap();
+        assert_eq!(shapes[&s].1, vec![2, 10]);
+        // conv0 output 8x32x32
+        let conv_out = &m.graph.nodes[0].outputs[0];
+        assert_eq!(shapes[conv_out].1, vec![2, 8, 32, 32]);
+    }
+
+    #[test]
+    fn weight_fill_policies() {
+        for (fill, expect_len) in [
+            (WeightFill::Zeros, 40usize),
+            (WeightFill::Random(1), 40),
+            (WeightFill::Empty, 0),
+        ] {
+            let mut b = GraphBuilder::new("t", ZooOpts { weights: fill });
+            b.weight("w", &[10]);
+            let m = b.finish(None);
+            assert_eq!(m.graph.initializers[0].raw_data.len(), expect_len);
+        }
+    }
+
+    #[test]
+    fn random_fill_is_deterministic() {
+        let build = || {
+            let mut b = GraphBuilder::new("t", ZooOpts { weights: WeightFill::Random(7) });
+            b.weight("w", &[100]);
+            b.finish(None).graph.initializers[0].raw_data.clone()
+        };
+        assert_eq!(build(), build());
+    }
+}

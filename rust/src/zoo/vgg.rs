@@ -1,0 +1,137 @@
+//! VGG-11/13/16/19 builders (Simonyan & Zisserman, 2014).
+//!
+//! Layer naming follows the paper's Tables 1–2: `vgg16-convN-weight`,
+//! `vgg16-denseN-weight`. Conv layers carry biases (like the ONNX model
+//! zoo exports); the paper's tables list only the `-weight` tensors, which
+//! is what the table renderers filter on.
+
+use super::builder::{GraphBuilder, ZooOpts};
+use crate::onnx::Model;
+
+/// The per-stage conv channel plan: entry = output channels; `M` = maxpool.
+/// Standard VGG configurations A/B/D/E.
+fn plan(depth: usize) -> &'static [i64] {
+    // 0 encodes a maxpool.
+    match depth {
+        11 => &[64, 0, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0],
+        13 => &[64, 64, 0, 128, 128, 0, 256, 256, 0, 512, 512, 0, 512, 512, 0],
+        16 => &[
+            64, 64, 0, 128, 128, 0, 256, 256, 256, 0, 512, 512, 512, 0, 512, 512, 512, 0,
+        ],
+        19 => &[
+            64, 64, 0, 128, 128, 0, 256, 256, 256, 256, 0, 512, 512, 512, 512, 0, 512, 512,
+            512, 512, 0,
+        ],
+        _ => panic!("unsupported VGG depth {depth}"),
+    }
+}
+
+/// Build a VGG model of the given depth (11/13/16/19).
+pub fn build(depth: usize, opts: ZooOpts) -> Model {
+    let name = format!("vgg{depth}");
+    let mut b = GraphBuilder::new(&name, opts);
+    let mut x = b.input("data", &[3, 224, 224]);
+    let mut cin = 3i64;
+    let mut conv_idx = 0usize;
+    for &c in plan(depth) {
+        if c == 0 {
+            x = b.maxpool(&x, 2, 2, 0);
+        } else {
+            let prefix = format!("{name}-conv{conv_idx}");
+            x = b.conv(&prefix, &x, cin, c, 3, 1, 1, true);
+            x = b.relu(&x);
+            cin = c;
+            conv_idx += 1;
+        }
+    }
+    // Classifier: 7x7x512 = 25088 → 4096 → 4096 → 1000.
+    x = b.flatten(&x);
+    x = b.dense(&format!("{name}-dense0"), &x, 25088, 4096, true);
+    x = b.relu(&x);
+    x = b.dense(&format!("{name}-dense1"), &x, 4096, 4096, true);
+    x = b.relu(&x);
+    x = b.dense(&format!("{name}-dense2"), &x, 4096, 1000, true);
+    let out = b.softmax(&x);
+    b.finish(Some(&out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::infer_shapes;
+
+    /// Paper Table 1: exact Variables column for VGG16 weights.
+    const VGG16_WEIGHTS: [(&str, u64); 16] = [
+        ("vgg16-conv0-weight", 1728),
+        ("vgg16-conv1-weight", 36864),
+        ("vgg16-conv2-weight", 73728),
+        ("vgg16-conv3-weight", 147456),
+        ("vgg16-conv4-weight", 294912),
+        ("vgg16-conv5-weight", 589824),
+        ("vgg16-conv6-weight", 589824),
+        ("vgg16-conv7-weight", 1179648),
+        ("vgg16-conv8-weight", 2359296),
+        ("vgg16-conv9-weight", 2359296),
+        ("vgg16-conv10-weight", 2359296),
+        ("vgg16-conv11-weight", 2359296),
+        ("vgg16-conv12-weight", 2359296),
+        ("vgg16-dense0-weight", 102760448),
+        ("vgg16-dense1-weight", 16777216),
+        ("vgg16-dense2-weight", 4096000),
+    ];
+
+    #[test]
+    fn vgg16_matches_paper_table1() {
+        let m = build(16, ZooOpts { weights: super::super::builder::WeightFill::Empty });
+        let weights: Vec<(&str, u64)> = m
+            .graph
+            .initializers
+            .iter()
+            .filter(|t| t.name.ends_with("-weight"))
+            .map(|t| (t.name.as_str(), t.num_elements()))
+            .collect();
+        assert_eq!(weights.len(), 16);
+        for (i, (name, vars)) in VGG16_WEIGHTS.iter().enumerate() {
+            assert_eq!(weights[i].0, *name);
+            assert_eq!(weights[i].1, *vars, "mismatch at {name}");
+            // Model Size column = 4 × Variables (FLOAT).
+        }
+        // Total = the well-known VGG16 parameter count (weights + biases).
+        assert_eq!(m.num_parameters(), 138_357_544);
+    }
+
+    #[test]
+    fn vgg19_matches_paper_table2() {
+        let m = build(19, ZooOpts { weights: super::super::builder::WeightFill::Empty });
+        let expected: [u64; 19] = [
+            1728, 36864, 73728, 147456, 294912, 589824, 589824, 589824, 1179648, 2359296,
+            2359296, 2359296, 2359296, 2359296, 2359296, 2359296, // conv0..conv15
+            102760448, 16777216, 4096000, // dense0..2
+        ];
+        let weights: Vec<u64> = m
+            .graph
+            .initializers
+            .iter()
+            .filter(|t| t.name.ends_with("-weight"))
+            .map(|t| t.num_elements())
+            .collect();
+        assert_eq!(weights, expected);
+        assert_eq!(m.num_parameters(), 143_667_240);
+    }
+
+    #[test]
+    fn vgg16_shapes_infer_end_to_end() {
+        let m = build(16, ZooOpts { weights: super::super::builder::WeightFill::Empty });
+        let shapes = infer_shapes(&m.graph, 4).unwrap();
+        let out = &m.graph.outputs[0].name;
+        assert_eq!(shapes[out].1, vec![4, 1000]);
+    }
+
+    #[test]
+    fn vgg11_and_13_build() {
+        for d in [11, 13] {
+            let m = build(d, ZooOpts { weights: super::super::builder::WeightFill::Empty });
+            assert!(infer_shapes(&m.graph, 1).is_ok(), "vgg{d}");
+        }
+    }
+}

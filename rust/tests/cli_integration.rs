@@ -1,0 +1,147 @@
+//! CLI integration: drive the `modtrans` binary end to end through a
+//! temp directory — build a real .onnx, inspect it, translate it,
+//! simulate the translation, and check memory/sweep/zoo output shapes.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_modtrans"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("spawn modtrans");
+    assert!(
+        out.status.success(),
+        "modtrans {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("modtrans_cli_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn zoo_list_names_every_model() {
+    let out = run_ok(&["zoo", "list"]);
+    for m in modtrans::zoo::MODELS {
+        assert!(out.contains(m), "zoo list missing {m}");
+    }
+}
+
+#[test]
+fn build_inspect_translate_simulate_roundtrip() {
+    let onnx = tmp("resnet18.onnx");
+    let wl = tmp("resnet18_dp.txt");
+    let out = run_ok(&["zoo", "build", "resnet18", "-o", onnx.to_str().unwrap()]);
+    assert!(out.contains("params"));
+    assert!(onnx.exists());
+
+    // Inspect the file (not the zoo) — exercises the ONNX parse path.
+    let out = run_ok(&["inspect", onnx.to_str().unwrap(), "--batch", "4"]);
+    assert!(out.contains("resnet18-conv0"));
+    assert!(out.contains("FLOAT"));
+
+    let out = run_ok(&[
+        "translate",
+        onnx.to_str().unwrap(),
+        "-o",
+        wl.to_str().unwrap(),
+        "--parallelism",
+        "data",
+        "--npus",
+        "8",
+        "--batch",
+        "4",
+    ]);
+    assert!(out.contains("layers"));
+    let text = std::fs::read_to_string(&wl).unwrap();
+    assert!(text.starts_with("DATA\n"));
+
+    let out = run_ok(&[
+        "simulate",
+        wl.to_str().unwrap(),
+        "--topology",
+        "ring",
+        "--npus",
+        "8",
+        "--iterations",
+        "2",
+    ]);
+    assert!(out.contains("iteration time"));
+    assert!(out.contains("compute util"));
+
+    let _ = std::fs::remove_file(&onnx);
+    let _ = std::fs::remove_file(&wl);
+}
+
+#[test]
+fn memory_command_reports_feasibility() {
+    let out = run_ok(&["memory", "zoo:gpt2-small", "--batch", "8", "--hbm-gib", "16"]);
+    assert!(out.contains("DATA"));
+    assert!(out.contains("PIPELINE"));
+    assert!(out.contains("Fits HBM"));
+}
+
+#[test]
+fn translate_zero3_emits_reducescatter() {
+    let wl = tmp("zero3.txt");
+    run_ok(&[
+        "translate",
+        "zoo:mlp",
+        "-o",
+        wl.to_str().unwrap(),
+        "--parallelism",
+        "data",
+        "--zero",
+        "3",
+    ]);
+    let text = std::fs::read_to_string(&wl).unwrap();
+    assert!(text.contains("REDUCESCATTER"));
+    assert!(text.contains("ALLGATHER"));
+    let _ = std::fs::remove_file(&wl);
+}
+
+#[test]
+fn bad_usage_fails_with_message() {
+    let out = bin().args(["translate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("missing"));
+    let out = bin().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = run_ok(&["help"]);
+    assert!(out.contains("USAGE"));
+    assert!(out.contains("modtrans translate"));
+}
+
+#[test]
+fn validate_passes_sanity_check() {
+    let out = run_ok(&["validate"]);
+    assert!(out.contains("54/54"));
+    assert!(out.contains("PASS"));
+}
+
+#[test]
+fn simulate_with_network_config_and_breakdown() {
+    let wl = tmp("cfg_wl.txt");
+    run_ok(&["translate", "zoo:resnet18", "-o", wl.to_str().unwrap(), "--batch", "8"]);
+    let cfg = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/two_tier_8x4.json");
+    let out = run_ok(&[
+        "simulate",
+        wl.to_str().unwrap(),
+        "--network",
+        cfg.to_str().unwrap(),
+        "--breakdown",
+    ]);
+    assert!(out.contains("net dim 1 busy"));
+    assert!(out.contains("top layers by attributed time"));
+    assert!(out.contains("resnet18-"));
+    let _ = std::fs::remove_file(&wl);
+}

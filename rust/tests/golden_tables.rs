@@ -1,0 +1,136 @@
+//! Golden reproduction of the paper's Tables 1–3 through the full
+//! pipeline: zoo build → ONNX encode → byte-level parse → extract.
+//!
+//! Table 3's right-hand column is the ASTRA-sim repository's reference
+//! ResNet-50 — the paper's sanity check (§4.4) is that extraction matches
+//! it layer for layer. (The published table contains two transcription
+//! typos — `1049576` for 1048576 and `1121221` for 2097152 — and swaps
+//! four stage3/stage4 rows between columns; the embedded golden uses the
+//! arithmetically consistent values, as EXPERIMENTS.md documents.)
+
+use modtrans::onnx::{encode_model, DataType};
+use modtrans::translator::extract_from_bytes;
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+
+fn layer_rows(name: &str) -> Vec<(String, u64, DataType, u64)> {
+    let m = zoo::get(name, ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let bytes = encode_model(&m);
+    let s = extract_from_bytes(&bytes, 1).unwrap();
+    s.layers
+        .iter()
+        .map(|l| (l.name.clone(), l.variables, l.dtype, l.weight_bytes))
+        .collect()
+}
+
+/// Paper Table 1 — VGG16 (name, variables, FLOAT, size).
+const TABLE1: [(&str, u64, u64); 16] = [
+    ("vgg16-conv0", 1728, 6912),
+    ("vgg16-conv1", 36864, 147456),
+    ("vgg16-conv2", 73728, 294912),
+    ("vgg16-conv3", 147456, 589824),
+    ("vgg16-conv4", 294912, 1179648),
+    ("vgg16-conv5", 589824, 2359296),
+    ("vgg16-conv6", 589824, 2359296),
+    ("vgg16-conv7", 1179648, 4718592),
+    ("vgg16-conv8", 2359296, 9437184),
+    ("vgg16-conv9", 2359296, 9437184),
+    ("vgg16-conv10", 2359296, 9437184),
+    ("vgg16-conv11", 2359296, 9437184),
+    ("vgg16-conv12", 2359296, 9437184),
+    ("vgg16-dense0", 102760448, 411041792),
+    ("vgg16-dense1", 16777216, 67108864),
+    ("vgg16-dense2", 4096000, 16384000),
+];
+
+/// Paper Table 2 — VGG19 variables column.
+const TABLE2_VARS: [u64; 19] = [
+    1728, 36864, 73728, 147456, 294912, 589824, 589824, 589824, 1179648, 2359296, 2359296,
+    2359296, 2359296, 2359296, 2359296, 2359296, 102760448, 16777216, 4096000,
+];
+
+/// Paper Table 3 — ResNet-50, ASTRA-sim reference column (bytes),
+/// typo-corrected (see module docs).
+const TABLE3_ASTRA_BYTES: [u64; 54] = [
+    37632, // resnet-conv0
+    16384, 147456, 65536, 65536, 65536, 147456, 65536, 65536, 147456, 65536, // stage1
+    131072, 589824, 262144, 524288, 262144, 589824, 262144, 262144, 589824, 262144, 262144,
+    589824, 262144, // stage2
+    524288, 2359296, 1048576, 2097152, 1048576, 2359296, 1048576, 1048576, 2359296, 1048576,
+    1048576, 2359296, 1048576, 1048576, 2359296, 1048576, 1048576, 2359296, 1048576, // stage3
+    2097152, 9437184, 4194304, 8388608, 4194304, 9437184, 4194304, 4194304, 9437184,
+    4194304, // stage4
+    8192000, // resnet-dense0
+];
+
+#[test]
+fn table1_vgg16_exact() {
+    let rows = layer_rows("vgg16");
+    assert_eq!(rows.len(), TABLE1.len());
+    for ((name, vars, dt, bytes), (en, ev, eb)) in rows.iter().zip(TABLE1.iter()) {
+        assert_eq!(name, en);
+        assert_eq!(vars, ev, "{name} variables");
+        assert_eq!(*dt, DataType::Float, "{name} dtype");
+        assert_eq!(bytes, eb, "{name} size");
+    }
+}
+
+#[test]
+fn table2_vgg19_exact() {
+    let rows = layer_rows("vgg19");
+    assert_eq!(rows.len(), 19);
+    for (i, (row, expect)) in rows.iter().zip(TABLE2_VARS.iter()).enumerate() {
+        assert_eq!(row.1, *expect, "row {i} ({})", row.0);
+        assert_eq!(row.3, expect * 4, "row {i} size");
+    }
+}
+
+#[test]
+fn table3_sanity_check_extracted_equals_astra_reference() {
+    // The paper's §4.4 experiment: every extracted layer size must match
+    // the ASTRA-sim-provided reference model.
+    let rows = layer_rows("resnet50");
+    assert_eq!(rows.len(), TABLE3_ASTRA_BYTES.len());
+    let mut mismatches = Vec::new();
+    for ((name, _, _, bytes), expect) in rows.iter().zip(TABLE3_ASTRA_BYTES.iter()) {
+        if bytes != expect {
+            mismatches.push(format!("{name}: extracted {bytes} != reference {expect}"));
+        }
+    }
+    assert!(mismatches.is_empty(), "sanity check failed:\n{}", mismatches.join("\n"));
+}
+
+#[test]
+fn tables_survive_full_payload_roundtrip() {
+    // Same result when weights carry real payloads (the Fig. 6 config).
+    let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Zeros }).unwrap();
+    let bytes = encode_model(&m);
+    // ~100 MB serialized, like the real ResNet50.onnx.
+    assert!(bytes.len() > 90 << 20 && bytes.len() < 120 << 20);
+    let s = extract_from_bytes(&bytes, 1).unwrap();
+    assert_eq!(s.layers.len(), 54);
+    assert_eq!(s.layers[0].weight_bytes, 37632);
+    assert_eq!(s.layers[53].weight_bytes, 8_192_000);
+}
+
+#[test]
+fn workload_emission_golden_first_row() {
+    use modtrans::translator::{to_workload, ConstantCompute, TranslateOpts};
+    use modtrans::workload::Parallelism;
+    let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let bytes = encode_model(&m);
+    let s = extract_from_bytes(&bytes, 32).unwrap();
+    let w = to_workload(
+        &s,
+        TranslateOpts { parallelism: Parallelism::Data, ..Default::default() },
+        &ConstantCompute(1000),
+    )
+    .unwrap();
+    let text = w.emit();
+    let mut lines = text.lines();
+    assert_eq!(lines.next(), Some("DATA"));
+    assert_eq!(lines.next(), Some("54"));
+    assert_eq!(
+        lines.next(),
+        Some("resnet-conv0 -1 1000 NONE 0 1000 NONE 0 1000 ALLREDUCE 37632 1128")
+    );
+}

@@ -1,0 +1,165 @@
+//! Property-style roundtrip tests over randomized models and workloads
+//! (hand-rolled proptest — see DESIGN.md's offline-dependency note).
+
+use modtrans::onnx::{encode_model, parse_model, parse_model_meta};
+use modtrans::translator::{extract, to_workload, ConstantCompute, TranslateOpts};
+use modtrans::util::rng::Rng;
+use modtrans::workload::{CommType, LayerSpec, Parallelism, Phase, Workload};
+use modtrans::zoo::{mlp, GraphBuilder, WeightFill, ZooOpts};
+
+/// Random MLP widths → build → encode → parse → extract must agree with
+/// the in-memory model, for both decode modes.
+#[test]
+fn random_mlps_roundtrip_and_extract() {
+    let mut rng = Rng::new(0x6d0d);
+    for case in 0..40 {
+        let depth = rng.range(2, 6);
+        let widths: Vec<i64> = (0..depth).map(|_| rng.range_u64(1, 2048) as i64).collect();
+        let m = mlp::build(&widths, ZooOpts { weights: WeightFill::Zeros });
+        let bytes = encode_model(&m);
+
+        let full = parse_model(&bytes).unwrap();
+        let meta = parse_model_meta(&bytes).unwrap();
+        assert_eq!(full.num_parameters(), m.num_parameters(), "case {case}");
+        assert_eq!(meta.num_parameters(), m.num_parameters(), "case {case}");
+        // Meta mode records payload lengths without copying.
+        for (t_meta, t_full) in
+            meta.graph.initializers.iter().zip(full.graph.initializers.iter())
+        {
+            assert_eq!(t_meta.payload_len, t_full.payload_len);
+            assert_eq!(t_full.raw_data.len() as u64, t_full.payload_len);
+        }
+
+        let batch = rng.range_u64(1, 64) as i64;
+        let s_full = extract(&full, batch).unwrap();
+        let s_meta = extract(&meta, batch).unwrap();
+        assert_eq!(s_full.layers.len(), s_meta.layers.len());
+        assert_eq!(s_full.layers.len(), widths.len() - 1);
+        for (a, b) in s_full.layers.iter().zip(s_meta.layers.iter()) {
+            assert_eq!(a.variables, b.variables);
+            assert_eq!(a.macs, b.macs);
+            assert_eq!(a.out_act_bytes, b.out_act_bytes);
+        }
+    }
+}
+
+/// Random workloads emit → parse → emit as a fixed point.
+#[test]
+fn random_workloads_roundtrip() {
+    let mut rng = Rng::new(77);
+    let comms = [
+        CommType::None,
+        CommType::AllReduce,
+        CommType::AllGather,
+        CommType::ReduceScatter,
+        CommType::AllToAll,
+    ];
+    let pars = [
+        Parallelism::Data,
+        Parallelism::Model,
+        Parallelism::HybridDataModel,
+        Parallelism::HybridModelData,
+        Parallelism::Pipeline,
+    ];
+    for _ in 0..100 {
+        let n = rng.range(1, 40);
+        let layers: Vec<LayerSpec> = (0..n)
+            .map(|i| {
+                let mut phase = |always_none: bool| Phase {
+                    compute_ns: rng.range_u64(0, 1 << 40),
+                    comm: if always_none { CommType::None } else { *rng.choose(&comms) },
+                    comm_bytes: rng.range_u64(0, 1 << 44),
+                };
+                LayerSpec {
+                    name: format!("layer-{i}"),
+                    reserved: -1,
+                    fwd: phase(false),
+                    input_grad: phase(false),
+                    weight_grad: phase(false),
+                    update_ns: rng.range_u64(0, 1 << 30),
+                }
+            })
+            .collect();
+        let w = Workload { parallelism: *rng.choose(&pars), layers };
+        let text = w.emit();
+        let w2 = Workload::parse(&text).unwrap();
+        assert_eq!(w, w2);
+        assert_eq!(w2.emit(), text, "emit must be a fixed point");
+    }
+}
+
+/// Translation invariants across every strategy, for every zoo model:
+/// comm bytes are bounded by what the strategy can legally move.
+#[test]
+fn translation_comm_invariants_all_models_all_strategies() {
+    let compute = ConstantCompute(100);
+    for name in modtrans::zoo::MODELS {
+        let m = modtrans::zoo::get(name, ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let s = extract(&m, 4).unwrap();
+        for par in [
+            Parallelism::Data,
+            Parallelism::Model,
+            Parallelism::HybridDataModel,
+            Parallelism::HybridModelData,
+            Parallelism::Pipeline,
+        ] {
+            let opts = TranslateOpts { parallelism: par, npus: 16, mp_group: 4, batch: 4, zero: modtrans::translator::ZeroStage::None };
+            let w = to_workload(&s, opts, &compute).unwrap();
+            assert_eq!(w.layers.len(), s.layers.len(), "{name}/{par:?}");
+            for (l, info) in w.layers.iter().zip(s.layers.iter()) {
+                // Weight-gradient traffic never exceeds the full weights.
+                assert!(
+                    l.weight_grad.comm_bytes <= info.weight_bytes,
+                    "{name}/{par:?}/{}: wg {} > weights {}",
+                    l.name,
+                    l.weight_grad.comm_bytes,
+                    info.weight_bytes
+                );
+                // Activation traffic never exceeds the activation sizes.
+                assert!(l.fwd.comm_bytes <= info.out_act_bytes.max(info.in_act_bytes));
+                // DATA never moves activations; MODEL never moves weights.
+                match par {
+                    Parallelism::Data => {
+                        assert_eq!(l.fwd.comm, CommType::None);
+                        assert_eq!(l.input_grad.comm, CommType::None);
+                    }
+                    Parallelism::Model => {
+                        assert_eq!(l.weight_grad.comm, CommType::None);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+/// Builder-level fuzz: random tiny CNNs encode/parse/extract without
+/// panics and with consistent totals.
+#[test]
+fn random_tiny_cnns_extract() {
+    let mut rng = Rng::new(2024);
+    for _ in 0..25 {
+        let mut b = GraphBuilder::new("fuzz", ZooOpts { weights: WeightFill::Zeros });
+        let size = 32;
+        let x = b.input("data", &[3, size, size]);
+        let mut edge = x;
+        let mut cin = 3i64;
+        let convs = rng.range(1, 5);
+        for i in 0..convs {
+            let cout = rng.range_u64(1, 32) as i64;
+            let k = *rng.choose(&[1i64, 3, 5]);
+            let pad = (k - 1) / 2;
+            edge = b.conv(&format!("c{i}"), &edge, cin, cout, k, 1, pad, rng.chance(0.5));
+            edge = b.relu(&edge);
+            cin = cout;
+        }
+        edge = b.global_avg_pool(&edge);
+        edge = b.flatten(&edge);
+        edge = b.dense("fc", &edge, cin, 10, true);
+        let m = b.finish(Some(&edge));
+        let bytes = encode_model(&m);
+        let s = modtrans::translator::extract_from_bytes(&bytes, 2).unwrap();
+        assert_eq!(s.layers.len(), convs + 1);
+        assert!(s.layers.iter().all(|l| l.macs > 0));
+    }
+}

@@ -1,0 +1,217 @@
+//! Simulator-level invariants across strategies, topologies and
+//! configurations — the properties a distributed-training simulator must
+//! satisfy regardless of absolute calibration.
+
+use modtrans::sim::{
+    simulate, ChunkCfg, Network, Policy, SimConfig, SystemConfig, TopologyKind,
+};
+use modtrans::translator::{extract, to_workload, ConstantCompute, TranslateOpts};
+use modtrans::workload::{Parallelism, Workload};
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+
+fn workload_for(model: &str, par: Parallelism, npus: usize, batch: i64) -> Workload {
+    let m = zoo::get(model, ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let s = extract(&m, batch).unwrap();
+    to_workload(
+        &s,
+        TranslateOpts { parallelism: par, npus, mp_group: 4, batch, zero: modtrans::translator::ZeroStage::None },
+        &ConstantCompute(20_000),
+    )
+    .unwrap()
+}
+
+fn cfg(kind: TopologyKind, npus: usize) -> SimConfig {
+    SimConfig {
+        network: Network::single(kind, npus, 100.0, 500.0),
+        iterations: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn makespan_at_least_compute_lower_bound() {
+    // For every strategy and topology: iteration ≥ serial compute on the
+    // critical path (compute is a single stream in flat strategies).
+    for par in [Parallelism::Data, Parallelism::Model, Parallelism::HybridDataModel] {
+        let w = workload_for("resnet50", par, 16, 16);
+        let lb = w.total_compute_ns();
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+            TopologyKind::Switch,
+            TopologyKind::Torus2D,
+        ] {
+            let r = simulate(&w, &cfg(kind, 16)).unwrap();
+            assert!(
+                r.iteration_ns >= lb,
+                "{par:?}/{kind:?}: iteration {} < compute bound {lb}",
+                r.iteration_ns
+            );
+        }
+    }
+}
+
+#[test]
+fn faster_network_never_hurts() {
+    let w = workload_for("vgg16", Parallelism::Data, 16, 16);
+    let mut slow = cfg(TopologyKind::Ring, 16);
+    slow.network.dims[0].bandwidth_gbps = 10.0;
+    let mut fast = cfg(TopologyKind::Ring, 16);
+    fast.network.dims[0].bandwidth_gbps = 400.0;
+    let rs = simulate(&w, &slow).unwrap();
+    let rf = simulate(&w, &fast).unwrap();
+    assert!(rf.iteration_ns <= rs.iteration_ns);
+    // VGG16's 500 MB of gradients at 10 GB/s must be network-dominated.
+    assert!(rs.compute_utilization < 0.9);
+}
+
+#[test]
+fn hybrid_sits_between_pure_strategies_for_transformer() {
+    // For GPT-2-tiny (big dense layers), hybrid data/model on 16 NPUs
+    // should not be worse than BOTH pure strategies.
+    let dp = simulate(
+        &workload_for("gpt2-tiny", Parallelism::Data, 16, 8),
+        &cfg(TopologyKind::Ring, 16),
+    )
+    .unwrap();
+    let mp = simulate(
+        &workload_for("gpt2-tiny", Parallelism::Model, 16, 8),
+        &cfg(TopologyKind::Ring, 16),
+    )
+    .unwrap();
+    let hy = simulate(
+        &workload_for("gpt2-tiny", Parallelism::HybridDataModel, 16, 8),
+        &cfg(TopologyKind::Ring, 16),
+    )
+    .unwrap();
+    // On a single flat ring, hybrid does activation gathers AND sharded
+    // all-reduces on the same fabric, so it may trail slightly; it must
+    // stay within 15% of the worst pure strategy and is expected to beat
+    // pure-DP's gradient bill or pure-MP's activation bill outright on at
+    // least one side.
+    let worst = dp.iteration_ns.max(mp.iteration_ns);
+    assert!(
+        hy.iteration_ns <= worst + worst / 7,
+        "hybrid {} should be within 15% of worst pure strategy {}",
+        hy.iteration_ns,
+        worst
+    );
+    // On a two-tier network the sharded gradient bill is structural:
+    // hybrid's scale-out dimension must carry strictly less all-reduce
+    // traffic than pure DP's.
+    let tt = SimConfig { network: Network::two_tier(4, 4), iterations: 2, ..Default::default() };
+    let dp_tt = simulate(&workload_for("gpt2-tiny", Parallelism::Data, 16, 8), &tt).unwrap();
+    let hy_tt =
+        simulate(&workload_for("gpt2-tiny", Parallelism::HybridDataModel, 16, 8), &tt).unwrap();
+    assert!(
+        hy_tt.net_busy_ns[1] < dp_tt.net_busy_ns[1],
+        "hybrid scale-out traffic {} should undercut DP's {}",
+        hy_tt.net_busy_ns[1],
+        dp_tt.net_busy_ns[1]
+    );
+}
+
+#[test]
+fn conservation_network_busy_equals_collective_cost() {
+    // Under DATA on a single dimension the network busy time must equal
+    // the sum of per-layer all-reduce durations × iterations (no traffic
+    // invented or lost).
+    use modtrans::sim::collective_ns;
+    let w = workload_for("resnet50", Parallelism::Data, 8, 8);
+    let c = cfg(TopologyKind::Ring, 8);
+    let r = simulate(&w, &c).unwrap();
+    let per_iter: u64 = w
+        .layers
+        .iter()
+        .map(|l| {
+            collective_ns(l.weight_grad.comm, l.weight_grad.comm_bytes, &c.network.dims[0])
+        })
+        .sum();
+    assert_eq!(r.net_busy_ns[0], per_iter * 2);
+}
+
+#[test]
+fn pipeline_stage_scaling_shows_bubble_tradeoff() {
+    // Synthetic compute-only workload so the GPipe bubble is the only
+    // effect in play (translated VGG16 buries it under optimizer-update
+    // and gradient-sync time — covered by other tests).
+    use modtrans::workload::{LayerSpec, Phase};
+    let w = Workload {
+        parallelism: Parallelism::Pipeline,
+        layers: (0..32)
+            .map(|i| LayerSpec {
+                name: format!("l{i}"),
+                reserved: -1,
+                fwd: Phase::compute_only(100_000),
+                input_grad: Phase::compute_only(100_000),
+                weight_grad: Phase::compute_only(100_000),
+                update_ns: 10,
+            })
+            .collect(),
+    };
+    let run = |stages: usize, micro: usize| {
+        let mut c = cfg(TopologyKind::Ring, 8);
+        c.stages = stages;
+        c.microbatches = micro;
+        c.boundary_bytes = 1 << 16;
+        simulate(&w, &c).unwrap()
+    };
+    // GPipe bubble fraction (S−1)/(M+S−1): utilization falls as stages
+    // grow at fixed microbatches...
+    let u2 = run(2, 4).compute_utilization;
+    let u8 = run(8, 4).compute_utilization;
+    assert!(u2 > u8, "more stages, same microbatches → more bubble ({u2} vs {u8})");
+    // ...and recovers as microbatches grow.
+    let u8m32 = run(8, 32).compute_utilization;
+    assert!(u8m32 > u8);
+}
+
+#[test]
+fn fifo_and_lifo_complete_identical_work() {
+    let w = workload_for("resnet50", Parallelism::HybridDataModel, 16, 16);
+    for kind in [TopologyKind::Ring, TopologyKind::Switch] {
+        let mut base = cfg(kind, 16);
+        base.system = SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks: 4 } };
+        let f = simulate(&w, &base).unwrap();
+        base.system.scheduling = Policy::Lifo;
+        let l = simulate(&w, &base).unwrap();
+        assert_eq!(f.net_busy_ns, l.net_busy_ns, "{kind:?}: work must be conserved");
+        assert_eq!(f.events, l.events);
+    }
+}
+
+#[test]
+fn two_tier_beats_flat_switch_for_dp_when_local_bw_high() {
+    // Hierarchical all-reduce exploits the fast scale-up ring: a 8x4
+    // two-tier network should beat 32 NPUs hanging off one slow switch.
+    let w = workload_for("vgg16", Parallelism::Data, 32, 16);
+    let two_tier = SimConfig {
+        network: Network::two_tier(8, 4),
+        iterations: 2,
+        ..Default::default()
+    };
+    let flat = SimConfig {
+        network: Network::single(TopologyKind::Switch, 32, 25.0, 5000.0),
+        iterations: 2,
+        ..Default::default()
+    };
+    let rt = simulate(&w, &two_tier).unwrap();
+    let rf = simulate(&w, &flat).unwrap();
+    assert!(
+        rt.iteration_ns < rf.iteration_ns,
+        "two-tier {} should beat flat switch {}",
+        rt.iteration_ns,
+        rf.iteration_ns
+    );
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let w = workload_for("resnet50", Parallelism::HybridDataModel, 16, 8);
+    let c = SimConfig { network: Network::two_tier(4, 4), iterations: 3, ..Default::default() };
+    let a = simulate(&w, &c).unwrap();
+    let b = simulate(&w, &c).unwrap();
+    assert_eq!(a.total_ns, b.total_ns);
+    assert_eq!(a.net_busy_ns, b.net_busy_ns);
+    assert_eq!(a.events, b.events);
+}
