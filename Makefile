@@ -1,0 +1,38 @@
+# Local developer entry points. `make ci` reproduces the full CI matrix
+# (.github/workflows/ci.yml) in one command — the documented pre-push
+# check. Individual targets mirror the CI jobs one to one.
+
+CARGO ?= cargo
+
+.PHONY: ci build test fmt clippy bench-smoke sweep-determinism clean
+
+ci: build test fmt clippy bench-smoke sweep-determinism
+	@echo "CI matrix green"
+
+build:
+	$(CARGO) build --release --workspace
+
+test:
+	$(CARGO) test -q --workspace
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+# Advisory, like CI's continue-on-error: report findings, don't fail.
+clippy:
+	-$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+bench-smoke:
+	for b in collectives table_layer_extraction sim_end_to_end fig6_translation_time; do \
+		MODTRANS_BENCH_SAMPLES=2 $(CARGO) bench --bench $$b || exit 1; \
+	done
+
+sweep-determinism: build
+	./target/release/modtrans sweep --threads 1 -o sweep_t1.json
+	./target/release/modtrans sweep --threads 8 -o sweep_t8.json
+	diff sweep_t1.json sweep_t8.json
+	rm -f sweep_t1.json sweep_t8.json
+
+clean:
+	$(CARGO) clean
+	rm -f sweep_t1.json sweep_t8.json

@@ -12,6 +12,7 @@
 use crate::compute::Gemm;
 use crate::error::{Error, Result};
 use crate::json::{self, Value};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::translator::{ComputeTimeModel, LayerInfo, LayerKind};
 use std::collections::BTreeMap;
@@ -39,7 +40,10 @@ pub struct Calibration {
 }
 
 impl Calibration {
-    /// Run every available menu artifact `reps` times.
+    /// Run every available menu artifact `reps` times (requires the
+    /// `pjrt` feature — the only part of this module that executes
+    /// artifacts; loading saved calibrations is pure JSON).
+    #[cfg(feature = "pjrt")]
     pub fn measure(rt: &Runtime, reps: usize) -> Result<Calibration> {
         let mut entries = Vec::new();
         for g in GEMM_MENU {

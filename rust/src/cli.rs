@@ -9,16 +9,19 @@
 //! modtrans simulate <workload.txt> [--network net.json] [--topology T]
 //!           [--npus N] [--iterations I] [--policy fifo|lifo] [--chunks C]
 //!           [--stages S] [--microbatches M] [--boundary-bytes B]
-//! modtrans sweep <file.onnx | zoo:name> [--npus N] [--batch B]
-//! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]
+//! modtrans sweep [model[,model...]] [--parallelisms L] [--topologies L]
+//!           [--collectives L] [--npus N] [--batch B] [--threads T]
+//! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (pjrt feature)
 //! ```
 
 use crate::calibrate::{Calibration, MeasuredCompute};
 use crate::compute::SystolicCompute;
 use crate::error::{Error, Result};
 use crate::onnx;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::sim::{self, Network, Policy, SimConfig, TopologyKind};
+use crate::sweep::{self, CollectiveAlgo, SweepConfig, SweepGrid};
 use crate::translator::{
     self, ComputeTimeModel, ConstantCompute, RooflineCompute, TranslateOpts,
 };
@@ -130,10 +133,13 @@ USAGE:
   modtrans simulate <workload.txt> [--network net.json | --topology ring|fc|switch|torus2d --npus N]
             [--iterations I] [--policy fifo|lifo] [--chunks C]
             [--stages S] [--microbatches M] [--boundary-bytes B]
-  modtrans sweep <file.onnx|zoo:name> [--npus N] [--batch B] [--hbm-gib G]
+  modtrans sweep [model[,model...]] [--models LIST] [--parallelisms data,model,...]
+            [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
+            [--npus N] [--batch B] [--mp-group G] [--iterations I]
+            [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [-o results.json]
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
-  modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]
+  modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (needs --features pjrt)
   modtrans validate                      (paper §4.4 ResNet-50 sanity check)";
 
 /// Load a model from `zoo:<name>` or a `.onnx` path (metadata-only).
@@ -407,56 +413,76 @@ fn cmd_validate(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn mem_cell(m: &translator::MemoryReport) -> String {
-    human_bytes(m.total())
+/// Parse a comma-separated list with a per-item parser.
+fn parse_list<T>(spec: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(parse)
+        .collect()
 }
 
+/// Grid sweep: (model × parallelism × topology × collective) scenarios,
+/// translated once per model into a shared cache and simulated across a
+/// worker pool. See [`crate::sweep`].
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let spec = args.pos(0, "model")?;
-    let batch = args.opt_parse("batch", 32i64)?;
-    let npus = args.opt_parse("npus", 16usize)?;
-    let model = load_model(spec, false)?;
-    let summary = translator::extract(&model, batch)?;
-    let compute = SystolicCompute::new(batch);
-
-    let hbm = (args.opt_parse("hbm-gib", 32u64)?) << 30;
-    let mut t = Table::new(vec![
-        "Parallelism",
-        "Topology",
-        "Iteration",
-        "Compute util",
-        "Exposed comm",
-        "Mem/NPU",
-        "Fits",
-    ]);
-    for par in [Parallelism::Data, Parallelism::Model, Parallelism::HybridDataModel] {
-        for kind in [TopologyKind::Ring, TopologyKind::FullyConnected, TopologyKind::Switch] {
-            let opts = TranslateOpts { parallelism: par, npus, mp_group: 4, batch, zero: crate::translator::memory::ZeroStage::None };
-            let w = translator::to_workload(&summary, opts, &compute)?;
-            let cfg = SimConfig {
-                network: Network::single(kind, npus, 100.0, 500.0),
-                iterations: 2,
-                ..Default::default()
-            };
-            let r = sim::simulate(&w, &cfg)?;
-            let mem = translator::memory_per_npu(
-                &summary,
-                opts,
-                translator::MemoryOpts { hbm_bytes: hbm, ..Default::default() },
-            );
-            t.row(vec![
-                par.token().to_string(),
-                kind.token().to_string(),
-                human_time(r.iteration_ns as f64 * 1e-9),
-                format!("{:.1}%", r.compute_utilization * 100.0),
-                human_time(r.exposed_ns as f64 * 1e-9),
-            mem_cell(&mem),
-                if mem.fits(hbm) { "yes".into() } else { "NO".to_string() },
-            ]);
-        }
+    let positional = args.positional.first().map(String::as_str);
+    let flagged = args.opt("models");
+    if positional.is_some() && flagged.is_some() {
+        return Err(Error::Usage(
+            "give the model list either positionally or via --models, not both".into(),
+        ));
     }
-    println!("sweep: {} at batch {batch} on {npus} NPUs", summary.model_name);
-    print!("{t}");
+    let models_spec = positional.or(flagged).unwrap_or("mlp,resnet18");
+    let models = parse_list(models_spec, |s| {
+        if s.ends_with(".onnx") {
+            return Err(Error::Usage(format!(
+                "sweep takes zoo model names, not ONNX files (got '{s}') — \
+                 see `modtrans zoo list`"
+            )));
+        }
+        Ok(s.trim_start_matches("zoo:").to_string())
+    })?;
+    let grid = SweepGrid {
+        models,
+        parallelisms: parse_list(
+            args.opt("parallelisms").unwrap_or("data,model,hybrid-dm"),
+            parse_parallelism,
+        )?,
+        topologies: parse_list(
+            args.opt("topologies").unwrap_or("ring,fc,switch"),
+            TopologyKind::from_token,
+        )?,
+        collectives: parse_list(
+            args.opt("collectives").unwrap_or("pipelined"),
+            CollectiveAlgo::from_token,
+        )?,
+    };
+    let cfg = SweepConfig {
+        npus: args.opt_parse("npus", 16usize)?,
+        mp_group: args.opt_parse("mp-group", 4usize)?,
+        batch: args.opt_parse("batch", 32i64)?,
+        iterations: args.opt_parse("iterations", 2usize)?,
+        threads: args.opt_parse("threads", 4usize)?,
+        bandwidth_gbps: args.opt_parse("bandwidth-gbps", 100.0f64)?,
+        latency_ns: args.opt_parse("latency-ns", 500.0f64)?,
+        hbm_bytes: (args.opt_parse("hbm-gib", 32u64)?) << 30,
+        zero: parse_zero(args)?,
+    };
+    let report = sweep::run_sweep(&grid, &cfg)?;
+    println!(
+        "sweep: {} scenarios over {} models on {} worker threads \
+         ({} translations — one per model, shared by all scenarios)",
+        report.ranked.len(),
+        report.models,
+        cfg.threads.max(1),
+        report.translations,
+    );
+    print!("{}", report.render_text());
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, report.to_json().to_json_pretty())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -532,6 +558,7 @@ fn cmd_memory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let dir = args.opt("artifacts").unwrap_or("artifacts");
     let reps = args.opt_parse("reps", 5usize)?;
@@ -552,6 +579,18 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     cal.save(Path::new(out))?;
     println!("wrote {out}");
     Ok(())
+}
+
+/// Without the `pjrt` feature there is no PJRT client to run artifacts
+/// through; previously measured calibrations still load fine via the
+/// `measured:<cal.json>` compute model.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    Err(Error::Usage(
+        "calibrate needs the PJRT runtime — rebuild with `--features pjrt` \
+         (saved calibrations still work via --compute measured:<cal.json>)"
+            .into(),
+    ))
 }
 
 #[cfg(test)]
@@ -622,5 +661,28 @@ mod tests {
         let argv: Vec<String> =
             ["sweep", "zoo:mlp", "--npus", "8", "--batch", "4"].iter().map(|s| s.to_string()).collect();
         run(&argv).unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_model_and_tokens() {
+        let run_args = |v: &[&str]| {
+            let argv: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+            run(&argv)
+        };
+        assert!(run_args(&["sweep", "zoo:nope"]).is_err());
+        assert!(run_args(&["sweep", "mlp", "--topologies", "blimp"]).is_err());
+        assert!(run_args(&["sweep", "mlp", "--collectives", "psychic"]).is_err());
+        assert!(run_args(&["sweep", "mlp", "--parallelisms", "bogus"]).is_err());
+        // Conflicting model specs and ONNX paths get clear usage errors.
+        assert!(run_args(&["sweep", "mlp", "--models", "resnet18"]).is_err());
+        assert!(run_args(&["sweep", "model.onnx"]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn calibrate_requires_pjrt_feature() {
+        let argv: Vec<String> = vec!["calibrate".into()];
+        let err = run(&argv).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
     }
 }

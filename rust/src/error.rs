@@ -1,56 +1,99 @@
 //! Unified error type for the ModTrans library.
+//!
+//! Hand-implemented `Display`/`Error` (no `thiserror`) so the default
+//! build has zero external dependencies and compiles with no registry
+//! access — the same offline constraint the rest of the crate's
+//! substrates (protobuf, JSON, PRNG, tables) are built under.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Unified error for all ModTrans subsystems.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Protobuf wire-format decoding failed.
-    #[error("protobuf decode error: {0}")]
     ProtoDecode(String),
 
     /// ONNX model-level validation or parsing failed.
-    #[error("onnx error: {0}")]
     Onnx(String),
 
     /// Unknown model name requested from the zoo.
-    #[error("unknown zoo model '{0}' (try `modtrans zoo list`)")]
     UnknownModel(String),
 
     /// Translator could not extract the required layer information.
-    #[error("translate error: {0}")]
     Translate(String),
 
     /// Workload description file is malformed.
-    #[error("workload parse error at line {line}: {msg}")]
-    WorkloadParse { line: usize, msg: String },
+    WorkloadParse {
+        /// 1-based line number of the offending row.
+        line: usize,
+        /// What went wrong.
+        msg: String,
+    },
 
     /// Simulator configuration or execution error.
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// JSON parse error with byte offset.
-    #[error("json parse error at offset {offset}: {msg}")]
-    Json { offset: usize, msg: String },
+    Json {
+        /// Byte offset of the parse failure.
+        offset: usize,
+        /// What went wrong.
+        msg: String,
+    },
 
     /// Configuration semantic error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// PJRT runtime / artifact error.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ProtoDecode(m) => write!(f, "protobuf decode error: {m}"),
+            Error::Onnx(m) => write!(f, "onnx error: {m}"),
+            Error::UnknownModel(m) => {
+                write!(f, "unknown zoo model '{m}' (try `modtrans zoo list`)")
+            }
+            Error::Translate(m) => write!(f, "translate error: {m}"),
+            Error::WorkloadParse { line, msg } => {
+                write!(f, "workload parse error at line {line}: {msg}")
+            }
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at offset {offset}: {msg}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -65,5 +108,40 @@ impl Error {
     /// Shorthand constructor for translator errors.
     pub fn translate(msg: impl Into<String>) -> Self {
         Error::Translate(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        assert_eq!(
+            Error::ProtoDecode("bad tag".into()).to_string(),
+            "protobuf decode error: bad tag"
+        );
+        assert_eq!(
+            Error::WorkloadParse { line: 3, msg: "nope".into() }.to_string(),
+            "workload parse error at line 3: nope"
+        );
+        assert_eq!(
+            Error::UnknownModel("resnet999".into()).to_string(),
+            "unknown zoo model 'resnet999' (try `modtrans zoo list`)"
+        );
+        assert_eq!(
+            Error::Json { offset: 12, msg: "trailing".into() }.to_string(),
+            "json parse error at offset 12: trailing"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(e.source().is_some());
+        assert!(Error::Sim("x".into()).source().is_none());
     }
 }

@@ -17,14 +17,51 @@
 //! * [`sim`] — a full discrete-event distributed-training simulator
 //!   (network, collectives, system scheduler, training loop).
 //! * [`compute`] — SCALE-sim-style systolic-array compute-time model.
-//! * [`runtime`] / [`calibrate`] — PJRT execution of AOT-compiled
-//!   JAX/Pallas GEMM artifacts for measured per-layer compute times.
+//! * [`sweep`] — the experiment-scale batch runner: expands a
+//!   (model × parallelism × topology × collective) grid, translates each
+//!   model once into a shared cache, fans simulations out across a
+//!   `std::thread` worker pool, and emits a deterministic ranked report.
+//! * `runtime` / [`calibrate`] — PJRT execution of AOT-compiled
+//!   JAX/Pallas GEMM artifacts for measured per-layer compute times
+//!   (behind the `pjrt` feature; see below).
 //! * [`json`], [`util`], [`cli`] — config / infra substrates (no external
-//!   crates beyond `xla`, `anyhow`, `thiserror`).
+//!   crates).
 //!
 //! The three-layer architecture keeps Python strictly at build time:
 //! JAX/Pallas author + AOT-lower compute kernels to HLO text
 //! (`make artifacts`); the Rust binary loads and runs them via PJRT.
+//!
+//! # Building & CI
+//!
+//! The default build is **dependency-free and fully offline**: protobuf,
+//! JSON, PRNG, table rendering and the bench harness are implemented
+//! in-crate, so `cargo build --release && cargo test -q` works from a
+//! clean checkout with no network and no registry cache.
+//!
+//! ## The `pjrt` feature flag
+//!
+//! The PJRT execution path — the `runtime` module and
+//! [`calibrate::Calibration::measure`] — needs the external `xla` crate
+//! and real AOT artifacts (`make artifacts`). It is gated behind the
+//! **off-by-default** `pjrt` cargo feature:
+//!
+//! ```sh
+//! cargo build --release                  # default: no PJRT, no deps
+//! cargo build --release --features pjrt  # requires a vendored `xla` crate
+//! ```
+//!
+//! With the feature off, `modtrans calibrate` exits with a usage error
+//! and the `measured:<cal.json>` compute model still loads previously
+//! saved calibration files (loading is pure JSON).
+//!
+//! ## CI
+//!
+//! `.github/workflows/ci.yml` runs build, test, `cargo fmt --check`,
+//! `cargo clippy -- -D warnings` (advisory for now), a bench smoke pass
+//! (`MODTRANS_BENCH_SAMPLES=2` caps every bench target to seconds), a
+//! 1-thread-vs-8-thread `sweep` determinism diff, and a check that every
+//! PR touches `CHANGES.md`. Reproduce the full matrix locally with
+//! `make ci` before pushing.
 
 pub mod calibrate;
 pub mod cli;
@@ -33,8 +70,10 @@ pub mod error;
 pub mod json;
 pub mod onnx;
 pub mod proto;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod translator;
 pub mod util;
 pub mod workload;

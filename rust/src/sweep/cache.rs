@@ -1,0 +1,93 @@
+//! Shared workload cache: translate each model once, reuse everywhere.
+//!
+//! Translation — building the zoo graph and extracting the layer summary
+//! from it — is the expensive, model-shaped part of a scenario; deriving
+//! a parallelism-specific workload from the summary is a cheap linear
+//! pass. The cache therefore stores one [`ModelSummary`] per model and
+//! counts how many translations actually ran, so callers (and the sweep
+//! smoke test) can assert **translation count == model count**, not
+//! scenario count.
+
+use crate::error::Result;
+use crate::translator::{self, ModelSummary};
+use crate::zoo::{self, WeightFill, ZooOpts};
+use std::collections::BTreeMap;
+
+/// Per-model translated summaries, built once up front and shared
+/// (immutably, hence freely across worker threads) by every scenario.
+#[derive(Debug)]
+pub struct WorkloadCache {
+    summaries: BTreeMap<String, ModelSummary>,
+    translations: usize,
+}
+
+impl WorkloadCache {
+    /// Translate every unique model in `models` at the given batch size.
+    /// Duplicate names are translated only once.
+    pub fn build(models: &[String], batch: i64) -> Result<WorkloadCache> {
+        let mut summaries = BTreeMap::new();
+        let mut translations = 0usize;
+        for name in models {
+            if summaries.contains_key(name.as_str()) {
+                continue;
+            }
+            let model = zoo::get(name, ZooOpts { weights: WeightFill::Empty })?;
+            let summary = translator::extract(&model, batch)?;
+            translations += 1;
+            summaries.insert(name.clone(), summary);
+        }
+        Ok(WorkloadCache { summaries, translations })
+    }
+
+    /// The cached summary for a model, if present.
+    pub fn summary(&self, model: &str) -> Option<&ModelSummary> {
+        self.summaries.get(model)
+    }
+
+    /// How many translations ran while building the cache.
+    pub fn translations(&self) -> usize {
+        self.translations
+    }
+
+    /// Number of cached models.
+    pub fn len(&self) -> usize {
+        self.summaries.len()
+    }
+
+    /// True when no models are cached.
+    pub fn is_empty(&self) -> bool {
+        self.summaries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplicates_translate_once() {
+        let models = vec!["mlp".to_string(), "mlp".to_string(), "mlp".to_string()];
+        let cache = WorkloadCache::build(&models, 4).unwrap();
+        assert_eq!(cache.translations(), 1);
+        assert_eq!(cache.len(), 1);
+        assert!(!cache.is_empty());
+        let s = cache.summary("mlp").unwrap();
+        assert_eq!(s.batch, 4);
+        assert!(!s.layers.is_empty());
+        assert!(cache.summary("resnet18").is_none());
+    }
+
+    #[test]
+    fn translation_count_tracks_unique_models() {
+        let models = vec!["mlp".to_string(), "alexnet".to_string(), "mlp".to_string()];
+        let cache = WorkloadCache::build(&models, 2).unwrap();
+        assert_eq!(cache.translations(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn unknown_model_fails_the_build() {
+        let models = vec!["mlp".to_string(), "not-a-model".to_string()];
+        assert!(WorkloadCache::build(&models, 2).is_err());
+    }
+}

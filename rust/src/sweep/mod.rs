@@ -1,0 +1,370 @@
+//! Parallel scenario-sweep engine: run the whole design space in one go.
+//!
+//! ASTRA-sim's payoff is sweeping large (model × parallelism × topology ×
+//! collective-algorithm) spaces, and ModTrans's payoff is that getting a
+//! real model *into* the simulator is cheap enough to do at experiment
+//! scale (the paper's cost-is-negligible claim, Fig. 6). This module puts
+//! the two together:
+//!
+//! 1. [`SweepGrid::expand`] turns the per-axis lists into a deduplicated
+//!    scenario list (deterministic order).
+//! 2. [`cache::WorkloadCache`] translates **each model once** — zoo build
+//!    + layer extraction, the expensive step — and every scenario derives
+//!    its workload from the shared summary (translation count == model
+//!    count, never scenario count).
+//! 3. [`pool::run_indexed`] fans the simulations out over a `std::thread`
+//!    worker pool fed by a channel-based work queue.
+//! 4. [`report::SweepReport`] ranks the results (fastest simulated step
+//!    first, key-ordered tiebreak) and emits text + JSON. Because every
+//!    scenario is simulated deterministically and ranking is a total
+//!    order, the report is **byte-identical regardless of thread count**.
+//!
+//! ```no_run
+//! use modtrans::sweep::{run_sweep, SweepConfig, SweepGrid};
+//! let grid = SweepGrid::default();
+//! let report = run_sweep(&grid, &SweepConfig::default()).unwrap();
+//! print!("{}", report.render_text());
+//! ```
+
+pub mod cache;
+pub mod pool;
+pub mod report;
+
+pub use cache::WorkloadCache;
+pub use report::{ScenarioResult, SweepReport};
+
+use crate::compute::SystolicCompute;
+use crate::error::{Error, Result};
+use crate::sim::{
+    simulate, ChunkCfg, Network, PipelineSchedule, Policy, SimConfig, SystemConfig, TopologyKind,
+};
+use crate::translator::{self, memory_per_npu, MemoryOpts, TranslateOpts, ZeroStage};
+use crate::workload::Parallelism;
+use std::collections::BTreeSet;
+
+/// Collective scheduling algorithm for a scenario — the system-layer
+/// knobs (chunked hierarchical pipelining + queue discipline) that
+/// ASTRA-sim exposes as its collective scheduler configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Single-shot collectives (no chunk pipelining), FIFO queues.
+    Direct,
+    /// Chunk-pipelined hierarchical collectives (4 chunks), FIFO queues.
+    Pipelined,
+    /// Chunk-pipelined collectives with LIFO communication scheduling
+    /// (the paper §2.2's alternative policy).
+    PipelinedLifo,
+}
+
+impl CollectiveAlgo {
+    /// Canonical config token.
+    pub fn token(self) -> &'static str {
+        match self {
+            CollectiveAlgo::Direct => "direct",
+            CollectiveAlgo::Pipelined => "pipelined",
+            CollectiveAlgo::PipelinedLifo => "pipelined-lifo",
+        }
+    }
+
+    /// Parse a config token.
+    pub fn from_token(s: &str) -> Result<CollectiveAlgo> {
+        Ok(match s {
+            "direct" => CollectiveAlgo::Direct,
+            "pipelined" => CollectiveAlgo::Pipelined,
+            "pipelined-lifo" | "lifo" => CollectiveAlgo::PipelinedLifo,
+            other => {
+                return Err(Error::Config(format!("unknown collective algorithm '{other}'")))
+            }
+        })
+    }
+
+    /// The system-layer configuration this algorithm corresponds to.
+    pub fn system(self) -> SystemConfig {
+        match self {
+            CollectiveAlgo::Direct => {
+                SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks: 1 } }
+            }
+            CollectiveAlgo::Pipelined => {
+                SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks: 4 } }
+            }
+            CollectiveAlgo::PipelinedLifo => {
+                SystemConfig { scheduling: Policy::Lifo, chunks: ChunkCfg { chunks: 4 } }
+            }
+        }
+    }
+}
+
+/// One point of the design space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    /// Zoo model name.
+    pub model: String,
+    /// Parallelization strategy.
+    pub parallelism: Parallelism,
+    /// Network topology (single-dimension fabric of `SweepConfig::npus`).
+    pub topology: TopologyKind,
+    /// Collective scheduling algorithm.
+    pub collective: CollectiveAlgo,
+}
+
+impl Scenario {
+    /// Stable identity string — used for dedup and as the deterministic
+    /// ranking tiebreak.
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.model,
+            self.parallelism.token(),
+            self.topology.token(),
+            self.collective.token()
+        )
+    }
+}
+
+/// The sweep axes. The cartesian product of the four lists (after dedup)
+/// is the scenario set.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    /// Zoo model names.
+    pub models: Vec<String>,
+    /// Parallelism strategies.
+    pub parallelisms: Vec<Parallelism>,
+    /// Topologies.
+    pub topologies: Vec<TopologyKind>,
+    /// Collective algorithms.
+    pub collectives: Vec<CollectiveAlgo>,
+}
+
+impl Default for SweepGrid {
+    /// The CLI's default grid: 2 models × 3 strategies × 3 topologies —
+    /// 18 scenarios sharing 2 translations.
+    fn default() -> Self {
+        SweepGrid {
+            models: vec!["mlp".into(), "resnet18".into()],
+            parallelisms: vec![
+                Parallelism::Data,
+                Parallelism::Model,
+                Parallelism::HybridDataModel,
+            ],
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::FullyConnected,
+                TopologyKind::Switch,
+            ],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        }
+    }
+}
+
+impl SweepGrid {
+    /// Expand to the deduplicated scenario list, in deterministic
+    /// (models-major) order.
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::new();
+        for m in &self.models {
+            for &p in &self.parallelisms {
+                for &t in &self.topologies {
+                    for &c in &self.collectives {
+                        let sc = Scenario {
+                            model: m.clone(),
+                            parallelism: p,
+                            topology: t,
+                            collective: c,
+                        };
+                        if seen.insert(sc.key()) {
+                            out.push(sc);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Unique model names, first-appearance order.
+    pub fn unique_models(&self) -> Vec<String> {
+        let mut seen = BTreeSet::new();
+        self.models.iter().filter(|m| seen.insert(m.as_str())).cloned().collect()
+    }
+}
+
+/// Fixed (non-axis) sweep parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepConfig {
+    /// NPUs per scenario (sizes both translation groups and the fabric).
+    pub npus: usize,
+    /// Model-parallel group size / pipeline stage count.
+    pub mp_group: usize,
+    /// Batch size used for extraction and compute modeling.
+    pub batch: i64,
+    /// Training iterations to simulate per scenario.
+    pub iterations: usize,
+    /// Worker threads in the simulation pool (clamped to ≥ 1).
+    pub threads: usize,
+    /// Per-link bandwidth in GB/s for the swept fabrics.
+    pub bandwidth_gbps: f64,
+    /// Per-hop latency in ns.
+    pub latency_ns: f64,
+    /// HBM capacity per NPU for the feasibility column.
+    pub hbm_bytes: u64,
+    /// ZeRO sharding stage on the data-parallel axis.
+    pub zero: ZeroStage,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            npus: 16,
+            mp_group: 4,
+            batch: 32,
+            iterations: 2,
+            threads: 4,
+            bandwidth_gbps: 100.0,
+            latency_ns: 500.0,
+            hbm_bytes: 32 << 30,
+            zero: ZeroStage::None,
+        }
+    }
+}
+
+/// Simulate one scenario against the shared cache. Pure: the result
+/// depends only on `(sc, cache, cfg)`, which is what makes the ranked
+/// report independent of worker count and scheduling order.
+fn run_scenario(
+    sc: &Scenario,
+    cache: &WorkloadCache,
+    cfg: &SweepConfig,
+) -> Result<ScenarioResult> {
+    let summary = cache.summary(&sc.model).ok_or_else(|| {
+        Error::Config(format!("model '{}' missing from the workload cache", sc.model))
+    })?;
+    let opts = TranslateOpts {
+        parallelism: sc.parallelism,
+        npus: cfg.npus,
+        mp_group: cfg.mp_group,
+        batch: cfg.batch,
+        zero: cfg.zero,
+    };
+    let w = translator::to_workload(summary, opts, &SystolicCompute::new(cfg.batch))?;
+    let sim_cfg = SimConfig {
+        network: Network::single(sc.topology, cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns),
+        system: sc.collective.system(),
+        iterations: cfg.iterations,
+        stages: cfg.mp_group.max(1),
+        microbatches: 8,
+        boundary_bytes: summary.layers.iter().map(|l| l.out_act_bytes).max().unwrap_or(1 << 20),
+        schedule: PipelineSchedule::GPipe,
+    };
+    let r = simulate(&w, &sim_cfg)?;
+    let mem = memory_per_npu(summary, opts, MemoryOpts { hbm_bytes: cfg.hbm_bytes, ..Default::default() });
+    Ok(ScenarioResult {
+        scenario: sc.clone(),
+        iteration_ns: r.iteration_ns,
+        total_ns: r.total_ns,
+        compute_busy_ns: r.compute_busy_ns.iter().copied().max().unwrap_or(0),
+        net_busy_ns: r.net_busy_ns.iter().sum(),
+        exposed_ns: r.exposed_ns,
+        compute_utilization: r.compute_utilization,
+        events: r.events,
+        mem_per_npu_bytes: mem.total(),
+        fits_hbm: mem.fits(cfg.hbm_bytes),
+    })
+}
+
+/// Run the full sweep: expand, translate-once-per-model, simulate across
+/// the worker pool, rank.
+pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
+    let scenarios = grid.expand();
+    if scenarios.is_empty() {
+        return Err(Error::Config(
+            "sweep grid is empty — every axis needs at least one entry".into(),
+        ));
+    }
+    let models = grid.unique_models();
+    let cache = WorkloadCache::build(&models, cfg.batch)?;
+    let results =
+        pool::run_indexed(scenarios.len(), cfg.threads, |i| run_scenario(&scenarios[i], &cache, cfg))?;
+    let mut ranked = results;
+    ranked.sort_by(|a, b| {
+        a.iteration_ns
+            .cmp(&b.iteration_ns)
+            .then_with(|| a.scenario.key().cmp(&b.scenario.key()))
+    });
+    Ok(SweepReport { models: models.len(), translations: cache.translations(), ranked })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expansion_counts_and_dedups() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into(), "mlp".into(), "resnet18".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring],
+            collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Direct],
+        };
+        let scenarios = grid.expand();
+        // Duplicates collapse: 2 models × 2 strategies × 1 × 1.
+        assert_eq!(scenarios.len(), 4);
+        assert_eq!(grid.unique_models(), vec!["mlp".to_string(), "resnet18".to_string()]);
+        // Deterministic order: models-major.
+        assert_eq!(scenarios[0].model, "mlp");
+        assert_eq!(scenarios[3].model, "resnet18");
+        // Keys are unique.
+        let keys: BTreeSet<String> = scenarios.iter().map(Scenario::key).collect();
+        assert_eq!(keys.len(), scenarios.len());
+    }
+
+    #[test]
+    fn collective_algo_tokens_roundtrip() {
+        for algo in [
+            CollectiveAlgo::Direct,
+            CollectiveAlgo::Pipelined,
+            CollectiveAlgo::PipelinedLifo,
+        ] {
+            assert_eq!(CollectiveAlgo::from_token(algo.token()).unwrap(), algo);
+        }
+        assert!(CollectiveAlgo::from_token("bogus").is_err());
+    }
+
+    #[test]
+    fn collective_algo_maps_to_system_config() {
+        assert_eq!(CollectiveAlgo::Direct.system().chunks.chunks, 1);
+        assert_eq!(CollectiveAlgo::Pipelined.system().chunks.chunks, 4);
+        assert_eq!(CollectiveAlgo::PipelinedLifo.system().scheduling, Policy::Lifo);
+    }
+
+    #[test]
+    fn empty_grid_is_config_error() {
+        let grid = SweepGrid { models: vec![], ..Default::default() };
+        assert!(run_sweep(&grid, &SweepConfig::default()).is_err());
+    }
+
+    #[test]
+    fn unknown_model_is_reported() {
+        let grid = SweepGrid { models: vec!["made-up".into()], ..Default::default() };
+        assert!(run_sweep(&grid, &SweepConfig::default()).is_err());
+    }
+
+    #[test]
+    fn small_sweep_ranks_deterministically() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        let a = run_sweep(&grid, &cfg).unwrap();
+        assert_eq!(a.ranked.len(), 4);
+        assert_eq!(a.translations, 1);
+        assert!(a.ranked.windows(2).all(|w| w[0].iteration_ns <= w[1].iteration_ns));
+        assert!(a.ranked.iter().all(|r| r.iteration_ns > 0 && r.events > 0));
+        // Same grid, different thread counts: identical report.
+        let b = run_sweep(&grid, &SweepConfig { threads: 1, ..cfg }).unwrap();
+        assert_eq!(a.to_json().to_json_pretty(), b.to_json().to_json_pretty());
+    }
+}

@@ -1,0 +1,117 @@
+//! Channel-fed worker pool over scoped `std::thread`s.
+//!
+//! All job indices are queued on an mpsc channel up front; workers pull
+//! from the shared receiver (behind a mutex — the standard multi-consumer
+//! pattern for `std::sync::mpsc`) and push `(index, result)` pairs back
+//! on a results channel. Collected results are re-ordered by index, so
+//! the output is independent of worker count and OS scheduling — the
+//! property the sweep's determinism guarantee rests on.
+
+use crate::error::{Error, Result};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Run `f(0..jobs)` across `threads` workers (clamped to ≥ 1), returning
+/// the results in index order. If any job fails, the error with the
+/// lowest job index is returned (every job still runs to completion, so
+/// the choice of surfaced error is deterministic too).
+pub fn run_indexed<T, F>(jobs: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    if jobs == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.max(1).min(jobs);
+
+    // Work queue: every index queued up front, sender dropped so workers
+    // see Err(Disconnected) once the queue drains.
+    let (job_tx, job_rx) = mpsc::channel::<usize>();
+    for i in 0..jobs {
+        let _ = job_tx.send(i);
+    }
+    drop(job_tx);
+    let job_rx = Mutex::new(job_rx);
+
+    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<T>)>();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let res_tx = res_tx.clone();
+            let job_rx = &job_rx;
+            let f = &f;
+            s.spawn(move || loop {
+                // Hold the lock only while pulling the next index, never
+                // while running the job.
+                let next = { job_rx.lock().expect("job queue poisoned").recv() };
+                let Ok(i) = next else { break };
+                if res_tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(res_tx); // workers hold the only remaining senders
+    });
+
+    let mut buf: Vec<(usize, Result<T>)> = res_rx.iter().collect();
+    if buf.len() != jobs {
+        return Err(Error::Sim(format!(
+            "worker pool lost results: got {}/{} jobs back",
+            buf.len(),
+            jobs
+        )));
+    }
+    buf.sort_by_key(|(i, _)| *i);
+    buf.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1usize, 2, 4, 9] {
+            let out = run_indexed(50, threads, |i| Ok(i * i)).unwrap();
+            assert_eq!(out.len(), 50);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_jobs_is_empty() {
+        let out: Vec<usize> = run_indexed(0, 4, |i| Ok(i)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn thread_count_exceeding_jobs_is_fine() {
+        let out = run_indexed(3, 64, |i| Ok(i + 1)).unwrap();
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn job_error_propagates() {
+        let r: Result<Vec<usize>> = run_indexed(20, 4, |i| {
+            if i == 13 {
+                Err(Error::Sim("unlucky".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn uneven_job_durations_still_order() {
+        let out = run_indexed(16, 4, |i| {
+            // Stagger work so completion order differs from index order.
+            std::thread::sleep(std::time::Duration::from_millis(((16 - i) % 5) as u64));
+            Ok(i)
+        })
+        .unwrap();
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+}

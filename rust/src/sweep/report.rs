@@ -1,0 +1,178 @@
+//! Ranked sweep results: text table + machine-readable JSON.
+//!
+//! Both renderings are fully deterministic: scenarios are ranked by
+//! simulated iteration time with the scenario key as total-order
+//! tiebreak, JSON objects use the crate's `BTreeMap`-backed [`Value`]
+//! (sorted keys), and no wall-clock, thread-count or host information is
+//! included — so a 1-thread run and an N-thread run of the same grid
+//! produce byte-identical output.
+
+use super::Scenario;
+use crate::json::{obj, Value};
+use crate::util::table::Table;
+use crate::util::{human_bytes, human_time};
+
+/// Simulation outcome for one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// The design-space point.
+    pub scenario: Scenario,
+    /// Simulated time per training iteration (ns) — the ranking metric.
+    pub iteration_ns: u64,
+    /// End-to-end simulated time for all iterations (ns).
+    pub total_ns: u64,
+    /// Busiest worker's compute-busy time (ns).
+    pub compute_busy_ns: u64,
+    /// Network busy time summed across fabric dimensions (ns).
+    pub net_busy_ns: u64,
+    /// Communication time not hidden by compute (ns).
+    pub exposed_ns: u64,
+    /// Compute utilization of the busiest worker, 0..1.
+    pub compute_utilization: f64,
+    /// Simulator events processed.
+    pub events: usize,
+    /// Modeled training memory per NPU (bytes).
+    pub mem_per_npu_bytes: u64,
+    /// Whether the footprint fits the configured HBM capacity.
+    pub fits_hbm: bool,
+}
+
+/// The ranked sweep outcome.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Unique models in the grid.
+    pub models: usize,
+    /// Translations performed while building the cache (== `models`).
+    pub translations: usize,
+    /// Results, fastest simulated iteration first.
+    pub ranked: Vec<ScenarioResult>,
+}
+
+impl SweepReport {
+    /// Machine-readable form (deterministic key order and ranking).
+    pub fn to_json(&self) -> Value {
+        let ranked: Vec<Value> = self
+            .ranked
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                obj(vec![
+                    ("rank", Value::Num((i + 1) as f64)),
+                    ("model", Value::Str(r.scenario.model.clone())),
+                    ("parallelism", Value::Str(r.scenario.parallelism.token().into())),
+                    ("topology", Value::Str(r.scenario.topology.token().into())),
+                    ("collective", Value::Str(r.scenario.collective.token().into())),
+                    ("iteration_ns", Value::Num(r.iteration_ns as f64)),
+                    ("total_ns", Value::Num(r.total_ns as f64)),
+                    ("compute_busy_ns", Value::Num(r.compute_busy_ns as f64)),
+                    ("net_busy_ns", Value::Num(r.net_busy_ns as f64)),
+                    ("exposed_ns", Value::Num(r.exposed_ns as f64)),
+                    // Permille as an integer: exact, compact, and immune
+                    // to float-formatting surprises across platforms.
+                    (
+                        "compute_utilization_permille",
+                        Value::Num((r.compute_utilization * 1000.0).round()),
+                    ),
+                    ("events", Value::Num(r.events as f64)),
+                    ("mem_per_npu_bytes", Value::Num(r.mem_per_npu_bytes as f64)),
+                    ("fits_hbm", Value::Bool(r.fits_hbm)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("models", Value::Num(self.models as f64)),
+            ("translations", Value::Num(self.translations as f64)),
+            ("scenarios", Value::Num(self.ranked.len() as f64)),
+            ("ranked", Value::Arr(ranked)),
+        ])
+    }
+
+    /// Human-readable ranked table.
+    pub fn render_text(&self) -> String {
+        let mut t = Table::new(vec![
+            "Rank",
+            "Model",
+            "Parallelism",
+            "Topology",
+            "Collective",
+            "Iteration",
+            "Compute util",
+            "Exposed comm",
+            "Mem/NPU",
+            "Fits",
+        ]);
+        for (i, r) in self.ranked.iter().enumerate() {
+            t.row(vec![
+                (i + 1).to_string(),
+                r.scenario.model.clone(),
+                r.scenario.parallelism.token().to_string(),
+                r.scenario.topology.token().to_string(),
+                r.scenario.collective.token().to_string(),
+                human_time(r.iteration_ns as f64 * 1e-9),
+                format!("{:.1}%", r.compute_utilization * 100.0),
+                human_time(r.exposed_ns as f64 * 1e-9),
+                human_bytes(r.mem_per_npu_bytes),
+                if r.fits_hbm { "yes".to_string() } else { "NO".to_string() },
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::TopologyKind;
+    use crate::sweep::CollectiveAlgo;
+    use crate::workload::Parallelism;
+
+    fn sample() -> SweepReport {
+        let mk = |model: &str, ns: u64| ScenarioResult {
+            scenario: Scenario {
+                model: model.into(),
+                parallelism: Parallelism::Data,
+                topology: TopologyKind::Ring,
+                collective: CollectiveAlgo::Pipelined,
+            },
+            iteration_ns: ns,
+            total_ns: ns * 2,
+            compute_busy_ns: ns / 2,
+            net_busy_ns: ns / 3,
+            exposed_ns: ns / 4,
+            compute_utilization: 0.5,
+            events: 100,
+            mem_per_npu_bytes: 1 << 30,
+            fits_hbm: true,
+        };
+        SweepReport { models: 2, translations: 2, ranked: vec![mk("mlp", 10), mk("vgg16", 20)] }
+    }
+
+    #[test]
+    fn json_is_deterministic_and_parseable() {
+        let r = sample();
+        let a = r.to_json().to_json_pretty();
+        let b = r.to_json().to_json_pretty();
+        assert_eq!(a, b);
+        let v = crate::json::parse(&a).unwrap();
+        assert_eq!(v.get("scenarios").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("translations").unwrap().as_u64(), Some(2));
+        let ranked = v.get("ranked").unwrap().as_arr().unwrap();
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].get("rank").unwrap().as_u64(), Some(1));
+        assert_eq!(ranked[0].get("model").unwrap().as_str(), Some("mlp"));
+        assert_eq!(ranked[0].get("iteration_ns").unwrap().as_u64(), Some(10));
+        assert_eq!(ranked[0].get("fits_hbm").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn text_table_lists_every_scenario() {
+        let r = sample();
+        let text = r.render_text();
+        assert!(text.contains("Rank"));
+        assert!(text.contains("mlp"));
+        assert!(text.contains("vgg16"));
+        assert!(text.contains("DATA"));
+        assert!(text.contains("pipelined"));
+        assert_eq!(text.lines().count(), 2 + r.ranked.len());
+    }
+}

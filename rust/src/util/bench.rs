@@ -71,14 +71,24 @@ pub struct Bench {
 
 impl Default for Bench {
     fn default() -> Self {
-        Bench { warmup: 3, samples: 30 }
+        Bench::new(3, 30)
     }
 }
 
 impl Bench {
     /// Create a runner with explicit warmup/sample counts.
+    ///
+    /// CI's bench-smoke job sets `MODTRANS_BENCH_SAMPLES=<n>` to cap the
+    /// sample count (and drop warmup to at most 1) so every bench binary
+    /// finishes in seconds while still exercising its full code path.
     pub fn new(warmup: usize, samples: usize) -> Bench {
-        Bench { warmup, samples }
+        match std::env::var("MODTRANS_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(cap) => Bench { warmup: warmup.min(1), samples: samples.min(cap.max(1)) },
+            None => Bench { warmup, samples },
+        }
     }
 
     /// Run `f` and collect statistics. `f` is passed the iteration index
@@ -129,7 +139,9 @@ mod tests {
     #[test]
     fn bench_runs_expected_iterations() {
         let mut count = 0;
-        let b = Bench::new(2, 5);
+        // Direct construction bypasses the MODTRANS_BENCH_SAMPLES cap so
+        // this test's counts hold even under a smoke-capped environment.
+        let b = Bench { warmup: 2, samples: 5 };
         let s = b.run("iters", |_| count += 1);
         assert_eq!(count, 7);
         assert_eq!(s.n, 5);

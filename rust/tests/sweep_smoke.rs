@@ -1,0 +1,108 @@
+//! Tier-1 sweep integration: a 2-model × 2-parallelism grid must
+//! complete, translate each model exactly once, and produce
+//! thread-count-independent ranked output.
+
+use modtrans::sim::TopologyKind;
+use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid, WorkloadCache};
+use modtrans::workload::Parallelism;
+
+fn grid_2x2() -> SweepGrid {
+    SweepGrid {
+        models: vec!["mlp".into(), "resnet18".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    }
+}
+
+fn cfg(threads: usize) -> SweepConfig {
+    SweepConfig { threads, batch: 8, npus: 8, ..Default::default() }
+}
+
+#[test]
+fn two_by_two_grid_completes_with_one_translation_per_model() {
+    let grid = grid_2x2();
+    let report = run_sweep(&grid, &cfg(4)).unwrap();
+    // 2 models × 2 parallelisms × 2 topologies × 1 collective.
+    assert_eq!(report.ranked.len(), 8);
+    // The cache translated each model once — NOT once per scenario.
+    assert_eq!(report.translations, 2);
+    assert_eq!(report.models, 2);
+    // Every scenario simulated something real.
+    for r in &report.ranked {
+        assert!(r.iteration_ns > 0, "{}: empty simulation", r.scenario.key());
+        assert!(r.events > 0);
+        assert!(r.total_ns >= r.iteration_ns);
+        assert!(r.compute_utilization > 0.0 && r.compute_utilization <= 1.0);
+    }
+    // Ranked fastest-first with a total order.
+    assert!(report.ranked.windows(2).all(|w| {
+        (w[0].iteration_ns, w[0].scenario.key()) <= (w[1].iteration_ns, w[1].scenario.key())
+    }));
+}
+
+#[test]
+fn ranked_output_is_identical_across_thread_counts() {
+    let grid = grid_2x2();
+    let baseline = run_sweep(&grid, &cfg(1)).unwrap().to_json().to_json_pretty();
+    for threads in [2usize, 4, 7] {
+        let out = run_sweep(&grid, &cfg(threads)).unwrap().to_json().to_json_pretty();
+        assert_eq!(out, baseline, "thread count {threads} changed the ranked output");
+    }
+}
+
+#[test]
+fn cache_reuse_scales_with_scenarios_not_models() {
+    // Widen the non-model axes: translations must stay at the model count.
+    let grid = SweepGrid {
+        models: vec!["mlp".into(), "resnet18".into()],
+        parallelisms: vec![
+            Parallelism::Data,
+            Parallelism::Model,
+            Parallelism::HybridDataModel,
+        ],
+        topologies: vec![
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+            TopologyKind::Switch,
+        ],
+        collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
+    };
+    let report = run_sweep(&grid, &cfg(4)).unwrap();
+    assert_eq!(report.ranked.len(), 2 * 3 * 3 * 2);
+    assert_eq!(report.translations, 2);
+}
+
+#[test]
+fn workload_cache_is_shareable_across_threads() {
+    // The cache is read-only after build; hammer it from several threads.
+    let models = vec!["mlp".to_string(), "alexnet".to_string()];
+    let cache = WorkloadCache::build(&models, 4).unwrap();
+    assert_eq!(cache.translations(), 2);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let cache = &cache;
+            s.spawn(move || {
+                for _ in 0..50 {
+                    let mlp = cache.summary("mlp").unwrap();
+                    let alex = cache.summary("alexnet").unwrap();
+                    assert!(!mlp.layers.is_empty());
+                    assert!(!alex.layers.is_empty());
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn pipeline_scenarios_simulate_too() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into()],
+        parallelisms: vec![Parallelism::Pipeline],
+        topologies: vec![TopologyKind::Ring],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    };
+    let report = run_sweep(&grid, &cfg(2)).unwrap();
+    assert_eq!(report.ranked.len(), 1);
+    assert!(report.ranked[0].iteration_ns > 0);
+}
