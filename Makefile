@@ -4,9 +4,11 @@
 
 CARGO ?= cargo
 
-.PHONY: ci build test fmt clippy bench-smoke sweep-determinism clean
+BENCHES := collectives table_layer_extraction sim_end_to_end fig6_translation_time sweep_throughput
 
-ci: build test fmt clippy bench-smoke sweep-determinism
+.PHONY: ci build test fmt clippy hot-path-alloc-guard bench-smoke sweep-determinism clean
+
+ci: build test fmt clippy hot-path-alloc-guard bench-smoke sweep-determinism
 	@echo "CI matrix green"
 
 build:
@@ -18,21 +20,41 @@ test:
 fmt:
 	$(CARGO) fmt --all -- --check
 
-# Advisory, like CI's continue-on-error: report findings, don't fail.
+# Gating, like CI: clippy findings fail the build.
 clippy:
-	-$(CARGO) clippy --workspace --all-targets -- -D warnings
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
 
+# The allocation-free invariant: no label-string allocation in the sim
+# hot paths (graph builders + collective router, non-test regions).
+hot-path-alloc-guard:
+	@fail=0; \
+	for f in rust/src/sim/training/mod.rs rust/src/sim/system/mod.rs; do \
+		if sed -n '1,/#\[cfg(test)\]/p' $$f | grep -nE 'format!|to_string\(|to_owned\(|String::(new|from|with_capacity)'; then \
+			echo "per-task string allocation found in $$f hot path"; fail=1; \
+		fi; \
+	done; \
+	if grep -n 'label: String' rust/src/sim/engine.rs; then \
+		echo "Task label regressed to a heap String"; fail=1; \
+	fi; \
+	exit $$fail
+
+# Writes BENCH_<name>.json per bench into bench-out/ (perf trajectory).
 bench-smoke:
-	for b in collectives table_layer_extraction sim_end_to_end fig6_translation_time; do \
-		MODTRANS_BENCH_SAMPLES=2 $(CARGO) bench --bench $$b || exit 1; \
+	mkdir -p bench-out
+	for b in $(BENCHES); do \
+		MODTRANS_BENCH_SAMPLES=2 MODTRANS_BENCH_OUT=bench-out $(CARGO) bench --bench $$b || exit 1; \
 	done
 
 sweep-determinism: build
 	./target/release/modtrans sweep --threads 1 -o sweep_t1.json
 	./target/release/modtrans sweep --threads 8 -o sweep_t8.json
 	diff sweep_t1.json sweep_t8.json
-	rm -f sweep_t1.json sweep_t8.json
+	./target/release/modtrans sweep --threads 1 --hbm-gib 1 --skip-infeasible -o sweep_p1.json
+	./target/release/modtrans sweep --threads 8 --hbm-gib 1 --skip-infeasible -o sweep_p8.json
+	diff sweep_p1.json sweep_p8.json
+	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json
 
 clean:
 	$(CARGO) clean
-	rm -f sweep_t1.json sweep_t8.json
+	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json
+	rm -rf bench-out

@@ -1,9 +1,12 @@
 //! E6 — collective-algorithm scaling benches: completion time vs payload
 //! and scale for every (collective, topology) pair, plus FIFO-vs-LIFO and
 //! chunk-pipelining ablations (the design knobs DESIGN.md calls out).
+//!
+//! Emits `BENCH_collectives.json` for the CI-tracked perf trajectory.
 
 use modtrans::sim::{collective_ns, ChunkCfg, NetDim, Network, Policy, SimConfig, SystemConfig, TopologyKind};
 use modtrans::translator::{extract, to_workload, ConstantCompute, TranslateOpts};
+use modtrans::util::bench::{black_box, Bench, BenchReport};
 use modtrans::util::human_time;
 use modtrans::util::table::Table;
 use modtrans::workload::{CommType, Parallelism};
@@ -91,4 +94,33 @@ fn main() {
         ]);
     }
     println!("{t3}");
+
+    // Wall-clock series for the perf trajectory: the analytical model
+    // evaluation loop and the hierarchical-collective simulation.
+    println!("## wall-clock cost\n");
+    let mut report = BenchReport::new("collectives");
+    let bench = Bench::new(3, 30);
+    report.run(&bench, "collective_ns 4 topologies x 4 sizes x 1k evals", |_| {
+        let mut acc = 0u64;
+        for kind in kinds {
+            let dim = NetDim { kind, npus: 64, bandwidth_gbps: 100.0, latency_ns: 500.0 };
+            for mb in [1u64, 16, 256, 1024] {
+                for _ in 0..1000 {
+                    acc = acc.wrapping_add(collective_ns(CommType::AllReduce, mb * MB, &dim));
+                }
+            }
+        }
+        black_box(acc);
+    });
+    let cfg = SimConfig {
+        network: Network::two_tier(8, 4),
+        system: SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks: 4 } },
+        iterations: 2,
+        ..Default::default()
+    };
+    report.run(&bench, "simulate gpt2-tiny hybrid two-tier 8x4", |_| {
+        black_box(modtrans::sim::simulate(&w, &cfg).unwrap());
+    });
+    let path = report.write().unwrap();
+    println!("wrote {}", path.display());
 }

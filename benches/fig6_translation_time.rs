@@ -14,7 +14,7 @@
 use modtrans::compute::SystolicCompute;
 use modtrans::onnx::{encode_model, parse_model};
 use modtrans::translator::{extract_from_bytes, to_workload, TranslateOpts};
-use modtrans::util::bench::{black_box, Bench, Stats};
+use modtrans::util::bench::{black_box, Bench, BenchReport, Stats};
 use modtrans::util::human_bytes;
 use modtrans::workload::Parallelism;
 use modtrans::zoo::{self, WeightFill, ZooOpts};
@@ -45,6 +45,7 @@ fn emit(summary: modtrans::translator::ModelSummary) -> usize {
 
 fn main() {
     println!("## Figure 6 — ModTrans execution time (mean of 30, warmup 3)\n");
+    let mut report = BenchReport::new("fig6_translation_time");
     let bench = Bench::new(3, 30);
     let full_bench = Bench::new(1, 10);
     let mut results: Vec<(String, Stats)> = Vec::new();
@@ -53,26 +54,30 @@ fn main() {
         let model = zoo::get(name, ZooOpts { weights: WeightFill::Zeros }).unwrap();
         let bytes = encode_model(&model);
         let label = format!("translate {name} ({})", human_bytes(bytes.len() as u64));
-        let s = bench.run(&label, |_| {
-            black_box(translate(&bytes));
-        });
+        let s = report
+            .run(&bench, &label, |_| {
+                black_box(translate(&bytes));
+            })
+            .clone();
         results.push((name.to_string(), s));
         // Paper-comparable full-deserialize mode (Fig. 6's cost model:
         // time tracks serialized size, VGG >> ResNet).
-        let s = full_bench.run(&format!("translate {name} (full deserialize)"), |_| {
-            black_box(translate_full(&bytes));
-        });
+        let s = report
+            .run(&full_bench, &format!("translate {name} (full deserialize)"), |_| {
+                black_box(translate_full(&bytes));
+            })
+            .clone();
         full_results.push((name.to_string(), s));
     }
 
     println!("\n## ablation: metadata-only vs full-payload decode (vgg16)\n");
     let model = zoo::get("vgg16", ZooOpts { weights: WeightFill::Zeros }).unwrap();
     let bytes = encode_model(&model);
-    bench.run("vgg16 decode (metadata-only, translator path)", |_| {
+    report.run(&bench, "vgg16 decode (metadata-only, translator path)", |_| {
         black_box(modtrans::onnx::parse_model_meta(&bytes).unwrap());
     });
     let full = Bench::new(1, 10);
-    full.run("vgg16 decode (full payload copy)", |_| {
+    report.run(&full, "vgg16 decode (full payload copy)", |_| {
         black_box(parse_model(&bytes).unwrap());
     });
 
@@ -89,4 +94,7 @@ fn main() {
             (1.0 / s.mean) as u64
         );
     }
+
+    let path = report.write().unwrap();
+    println!("wrote {}", path.display());
 }

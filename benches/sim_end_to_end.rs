@@ -1,13 +1,17 @@
 //! E5 — end-to-end simulator benches: translated zoo workloads driven
 //! through the full simulator across parallelisms and networks, plus the
 //! raw event-engine throughput (DESIGN.md §Perf target: ≥ 1M events/s).
+//!
+//! Emits `BENCH_sim_end_to_end.json` (summary + raw samples per series)
+//! for the CI-tracked perf trajectory.
 
 use modtrans::compute::SystolicCompute;
 use modtrans::sim::{
-    simulate, Engine, Network, Policy, SimConfig, TaskGraph, TopologyKind,
+    simulate, simulate_with, Engine, Network, Policy, SimConfig, SimScratch, TaskGraph, TaskTag,
+    TopologyKind,
 };
 use modtrans::translator::{extract, to_workload, TranslateOpts};
-use modtrans::util::bench::{black_box, Bench};
+use modtrans::util::bench::{black_box, Bench, BenchReport, Stats};
 use modtrans::util::human_time;
 use modtrans::util::table::Table;
 use modtrans::workload::Parallelism;
@@ -15,6 +19,8 @@ use modtrans::zoo::{self, WeightFill, ZooOpts};
 use std::time::Instant;
 
 fn main() {
+    let mut report = BenchReport::new("sim_end_to_end");
+
     // Simulated iteration-time table (who wins, by how much).
     println!("## simulated iteration time: model x parallelism (16 NPUs, two-tier 4x4)\n");
     let mut t = Table::new(vec!["Model", "DATA", "MODEL", "HYBRID_DM", "PIPELINE"]);
@@ -46,7 +52,9 @@ fn main() {
     }
     println!("{t}");
 
-    // Wall-clock cost of simulation itself.
+    // Wall-clock cost of simulation itself. One series per model with a
+    // fresh scratch per call (the one-shot path), one with a reused
+    // scratch (the sweep steady-state path — the allocation-free target).
     println!("## simulator wall-clock cost\n");
     let bench = Bench::new(3, 20);
     for (name, par) in [("resnet50", Parallelism::Data), ("gpt2-small", Parallelism::HybridDataModel)] {
@@ -55,8 +63,12 @@ fn main() {
         let opts = TranslateOpts { parallelism: par, npus: 16, mp_group: 4, batch: 16, zero: modtrans::translator::ZeroStage::None };
         let w = to_workload(&summary, opts, &SystolicCompute::new(16)).unwrap();
         let cfg = SimConfig { network: Network::two_tier(4, 4), iterations: 4, ..Default::default() };
-        bench.run(&format!("simulate {name} {} x4 iters", par.token()), |_| {
+        report.run(&bench, &format!("simulate {name} {} x4 iters", par.token()), |_| {
             black_box(simulate(&w, &cfg).unwrap());
+        });
+        let mut scratch = SimScratch::new();
+        report.run(&bench, &format!("simulate {name} {} x4 iters (scratch)", par.token()), |_| {
+            black_box(simulate_with(&w, &cfg, &mut scratch).unwrap());
         });
     }
 
@@ -66,13 +78,13 @@ fn main() {
     let lanes = 64usize;
     let t0 = Instant::now();
     let mut eng = Engine::new();
-    let res: Vec<_> = (0..lanes).map(|i| eng.add_resource(format!("r{i}"), Policy::Fifo)).collect();
+    let res: Vec<_> = (0..lanes).map(|_| eng.add_resource(Policy::Fifo)).collect();
     let mut g = TaskGraph::new();
     let mut prev: Vec<Option<usize>> = vec![None; lanes];
     for i in 0..n_tasks {
         let lane = i % lanes;
         let deps: Vec<usize> = prev[lane].into_iter().collect();
-        prev[lane] = Some(g.add("t", res[lane], (i % 97 + 1) as u64, &deps));
+        prev[lane] = Some(g.add(TaskTag::adhoc(i), res[lane], (i % 97 + 1) as u64, &deps));
     }
     let build = t0.elapsed();
     let t1 = Instant::now();
@@ -85,6 +97,8 @@ fn main() {
         human_time(run.as_secs_f64()),
         s.events as f64 / run.as_secs_f64() / 1e6
     );
+    report.add(Stats::from_samples("engine_64lane_200k_build", vec![build.as_secs_f64()]));
+    report.add(Stats::from_samples("engine_64lane_200k_run", vec![run.as_secs_f64()]));
 
     // Contended case: one resource, all tasks ready at t=0 (the shape a
     // single network dimension sees when every layer's gradient sync
@@ -92,10 +106,10 @@ fn main() {
     // backlog goes quadratic.
     let n_tasks = 100_000usize;
     let mut eng = Engine::new();
-    let r = eng.add_resource("net", Policy::Fifo);
+    let r = eng.add_resource(Policy::Fifo);
     let mut g = TaskGraph::new();
     for i in 0..n_tasks {
-        g.add("t", r, (i % 97 + 1) as u64, &[]);
+        g.add(TaskTag::adhoc(i), r, (i % 97 + 1) as u64, &[]);
     }
     let t1 = Instant::now();
     let s = eng.run(&g).unwrap();
@@ -106,6 +120,7 @@ fn main() {
         human_time(run.as_secs_f64()),
         s.events as f64 / run.as_secs_f64() / 1e6
     );
+    report.add(Stats::from_samples("engine_contended_100k_run", vec![run.as_secs_f64()]));
 
     // Torus-topology scaling of a full simulation (bonus series) — slow
     // 10 GB/s links so gradient traffic escapes the overlap window and
@@ -130,4 +145,7 @@ fn main() {
         ]);
     }
     println!("{t2}");
+
+    let path = report.write().unwrap();
+    println!("wrote {}", path.display());
 }

@@ -1,0 +1,38 @@
+//! E7 — sweep-engine throughput: scenarios per second over the default
+//! 18-scenario grid (2 models × 3 parallelisms × 3 topologies), 1 thread
+//! vs 8 threads. This is the metric the scenario-sweep engine optimizes:
+//! with per-worker `SimScratch` arenas, steady-state scenario execution
+//! is allocation-free, so throughput tracks raw event math.
+//!
+//! Emits `BENCH_sweep_throughput.json` for the CI-tracked perf
+//! trajectory.
+
+use modtrans::sweep::{run_sweep, SweepConfig, SweepGrid};
+use modtrans::util::bench::{black_box, Bench, BenchReport};
+
+fn main() {
+    let grid = SweepGrid::default();
+    let scenarios = grid.expand().len();
+    println!("## sweep throughput (default grid: {scenarios} scenarios)\n");
+
+    let mut report = BenchReport::new("sweep_throughput");
+    let bench = Bench::new(1, 10);
+    for threads in [1usize, 8] {
+        let cfg = SweepConfig { threads, ..Default::default() };
+        let label = format!("sweep_{scenarios}_scenarios_{threads}thread");
+        let s = report.run(&bench, &label, |_| {
+            black_box(run_sweep(&grid, &cfg).unwrap());
+        });
+        println!("  -> {:.1} scenarios/s on {threads} thread(s)", scenarios as f64 / s.mean);
+    }
+
+    // Pruning fast path: with a tiny HBM budget every scenario is pruned
+    // before the pool, so this measures the analytic memory check alone.
+    let cfg = SweepConfig { threads: 1, hbm_bytes: 1, skip_infeasible: true, ..Default::default() };
+    report.run(&bench, "sweep_all_pruned_1thread", |_| {
+        black_box(run_sweep(&grid, &cfg).unwrap());
+    });
+
+    let path = report.write().unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,10 +1,13 @@
 //! E2/E3/E4 — paper Tables 1–3: layer-by-layer extraction, printed in the
 //! paper's format, plus the Table 3 sanity-check diff against the
 //! ASTRA-sim reference column and an extraction-throughput bench.
+//!
+//! Emits `BENCH_table_layer_extraction.json` for the CI-tracked perf
+//! trajectory.
 
 use modtrans::onnx::encode_model;
 use modtrans::translator::extract_from_bytes;
-use modtrans::util::bench::{black_box, Bench};
+use modtrans::util::bench::{black_box, Bench, BenchReport};
 use modtrans::util::table::Table;
 use modtrans::zoo::{self, WeightFill, ZooOpts};
 
@@ -67,12 +70,15 @@ fn main() {
 
     // Extraction throughput bench (structure only, no payloads).
     println!("## extraction throughput (metadata decode + layer walk)\n");
+    let mut report = BenchReport::new("table_layer_extraction");
     let bench = Bench::new(3, 30);
     for name in ["resnet50", "vgg16", "gpt2-small"] {
         let model = zoo::get(name, ZooOpts { weights: WeightFill::Empty }).unwrap();
         let b = encode_model(&model);
-        bench.run(&format!("extract {name} (structure-only onnx)"), |_| {
+        report.run(&bench, &format!("extract {name} (structure-only onnx)"), |_| {
             black_box(extract_from_bytes(&b, 32).unwrap());
         });
     }
+    let path = report.write().unwrap();
+    println!("wrote {}", path.display());
 }

@@ -49,7 +49,10 @@ impl Args {
             let a = &raw[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Flags that take no value.
-                if matches!(key, "all" | "full-decode" | "quiet" | "breakdown") {
+                if matches!(
+                    key,
+                    "all" | "full-decode" | "quiet" | "breakdown" | "skip-infeasible"
+                ) {
                     flags.push(key.to_string());
                 } else {
                     i += 1;
@@ -136,7 +139,7 @@ USAGE:
   modtrans sweep [model[,model...]] [--models LIST] [--parallelisms data,model,...]
             [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
             [--npus N] [--batch B] [--mp-group G] [--iterations I]
-            [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [-o results.json]
+            [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible] [-o results.json]
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
   modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (needs --features pjrt)
@@ -314,6 +317,13 @@ fn load_network(args: &Args) -> Result<Network> {
 }
 
 fn sim_config(args: &Args) -> Result<SimConfig> {
+    let chunks = args.opt_parse("chunks", 4usize)?;
+    if chunks > sim::system::MAX_CHUNKS {
+        return Err(Error::Usage(format!(
+            "--chunks {chunks} exceeds the supported maximum of {}",
+            sim::system::MAX_CHUNKS
+        )));
+    }
     Ok(SimConfig {
         network: load_network(args)?,
         system: sim::SystemConfig {
@@ -322,7 +332,7 @@ fn sim_config(args: &Args) -> Result<SimConfig> {
                 "lifo" => Policy::Lifo,
                 p => return Err(Error::Usage(format!("unknown policy '{p}'"))),
             },
-            chunks: sim::ChunkCfg { chunks: args.opt_parse("chunks", 4usize)? },
+            chunks: sim::ChunkCfg { chunks },
         },
         iterations: args.opt_parse("iterations", 2usize)?,
         stages: args.opt_parse("stages", 4usize)?,
@@ -468,6 +478,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         latency_ns: args.opt_parse("latency-ns", 500.0f64)?,
         hbm_bytes: (args.opt_parse("hbm-gib", 32u64)?) << 30,
         zero: parse_zero(args)?,
+        skip_infeasible: args.flag("skip-infeasible"),
     };
     let report = sweep::run_sweep(&grid, &cfg)?;
     println!(
@@ -660,6 +671,30 @@ mod tests {
     fn sweep_runs_on_zoo_model() {
         let argv: Vec<String> =
             ["sweep", "zoo:mlp", "--npus", "8", "--batch", "4"].iter().map(|s| s.to_string()).collect();
+        run(&argv).unwrap();
+    }
+
+    #[test]
+    fn chunk_count_beyond_router_maximum_is_rejected() {
+        // The collective router expands chunks into a fixed stack buffer;
+        // rather than silently clamping a CLI request, reject it.
+        let a = args(&["--chunks", "65"]);
+        let err = sim_config(&a).unwrap_err();
+        assert!(err.to_string().contains("chunks"));
+        let a = args(&["--chunks", "64"]);
+        assert!(sim_config(&a).is_ok());
+    }
+
+    #[test]
+    fn skip_infeasible_is_a_flag_not_an_option() {
+        let a = args(&["mlp", "--skip-infeasible", "--npus", "8"]);
+        assert!(a.flag("skip-infeasible"));
+        assert_eq!(a.opt_parse("npus", 0usize).unwrap(), 8);
+        // A sweep with pruning enabled still runs end to end.
+        let argv: Vec<String> = ["sweep", "mlp", "--npus", "8", "--batch", "4", "--skip-infeasible"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
         run(&argv).unwrap();
     }
 

@@ -57,11 +57,49 @@
 //! ## CI
 //!
 //! `.github/workflows/ci.yml` runs build, test, `cargo fmt --check`,
-//! `cargo clippy -- -D warnings` (advisory for now), a bench smoke pass
-//! (`MODTRANS_BENCH_SAMPLES=2` caps every bench target to seconds), a
-//! 1-thread-vs-8-thread `sweep` determinism diff, and a check that every
-//! PR touches `CHANGES.md`. Reproduce the full matrix locally with
-//! `make ci` before pushing.
+//! `cargo clippy -- -D warnings` (gating), the hot-path allocation
+//! guard, a bench smoke pass (`MODTRANS_BENCH_SAMPLES=2` caps every
+//! bench target to seconds) that uploads `BENCH_*.json` artifacts, a
+//! 1-thread-vs-8-thread `sweep` determinism diff (plain and
+//! `--skip-infeasible`), and a check that every PR touches `CHANGES.md`.
+//! Reproduce the full matrix locally with `make ci` before pushing.
+//!
+//! # Performance
+//!
+//! The simulate hot path — graph construction and the event loop — is
+//! **allocation-free in steady state** (only the report assembly at the
+//! end of a scenario allocates its O(layers)/O(resources) output
+//! structures):
+//!
+//! * Tasks carry a compact `Copy` [`sim::TaskTag`]
+//!   (iteration × phase × layer × comm annotation) instead of a label
+//!   `String`; human-readable labels are rendered only on demand (error
+//!   paths, reports). CI's `hot-path-alloc-guard` job greps the graph
+//!   builders and the collective router to keep it that way.
+//! * Dependency lists live in one shared pool inside [`sim::TaskGraph`]
+//!   (CSR layout), not in per-task `Vec`s; the run loop's pending
+//!   counts, dependents CSR, event heap and spans live in a reusable
+//!   [`sim::RunScratch`].
+//! * [`sim::SimScratch`] bundles graph + engine + run buffers + the
+//!   graph builders' temporaries. The **reuse contract**: any sequence
+//!   of workloads and configs may go through one scratch via
+//!   [`sim::simulate_with`], and every result is identical to a
+//!   fresh-scratch run — scratch contents never leak into results
+//!   (regression-tested in `tests/determinism_regression.rs`). Each
+//!   sweep worker thread carries one `SimScratch` across all its
+//!   scenarios, so steady-state graph build + execution performs no
+//!   heap allocation.
+//!
+//! ## Reading `BENCH_<name>.json`
+//!
+//! Every bench binary writes `BENCH_<name>.json` (into
+//! `$MODTRANS_BENCH_OUT`, default `.`): `{"name", "series": [{"name",
+//! "n", "mean", "stddev", "p50", "min", "max", "samples": [..]}]}` —
+//! all times in seconds, `samples` in measurement order. CI's
+//! bench-smoke job uploads them as artifacts; diff the same series name
+//! across PRs (mean/p50) to read the perf trajectory. Smoke runs use 2
+//! samples — for real comparisons run the benches locally without
+//! `MODTRANS_BENCH_SAMPLES`.
 
 pub mod calibrate;
 pub mod cli;

@@ -8,7 +8,22 @@
 //! releasing dependents as their inputs complete. Resources serve one task
 //! at a time and order their backlog FIFO or LIFO — the two communication
 //! scheduling policies the paper's §2.2 describes.
+//!
+//! # Allocation discipline
+//!
+//! The hot path is allocation-free in steady state:
+//!
+//! * Tasks carry a `Copy` [`TaskTag`] instead of a label `String`, and
+//!   their dependency lists live in one shared pool inside the
+//!   [`TaskGraph`] (CSR layout) instead of a per-task `Vec`.
+//! * All O(tasks) run-loop buffers (pending counts, the dependents CSR,
+//!   the completion-event heap, per-task spans) live in a reusable
+//!   [`RunScratch`]; [`Engine::run_into`] only grows them, never
+//!   reallocates once warm.
+//! * [`Engine`] resource slots (and their backlog vectors) are reused
+//!   across [`Engine::reset`] / [`Engine::add_resource`] cycles.
 
+use super::tag::TaskTag;
 use crate::error::{Error, Result};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -28,23 +43,27 @@ pub enum Policy {
     Lifo,
 }
 
-/// A node in the task graph.
-#[derive(Debug, Clone)]
+/// A node in the task graph. `Copy`: the dependency list lives in the
+/// graph's shared pool, referenced by range.
+#[derive(Debug, Clone, Copy)]
 pub struct Task {
     /// Service time in nanoseconds once the resource is acquired.
     pub duration_ns: u64,
     /// Resource this task occupies exclusively while running.
     pub resource: ResourceId,
-    /// Tasks that must finish before this one becomes ready.
-    pub deps: Vec<TaskId>,
-    /// Free-form label (layer/phase) used in reports.
-    pub label: String,
+    /// Compact identity (rendered to a string only on demand).
+    pub tag: TaskTag,
+    deps_start: u32,
+    deps_len: u32,
 }
 
-/// A task graph under construction.
+/// A task graph under construction. Reusable: [`TaskGraph::clear`] drops
+/// the tasks but keeps both buffers' capacity, so rebuilding the next
+/// scenario's graph allocates nothing once warm.
 #[derive(Debug, Default, Clone)]
 pub struct TaskGraph {
     tasks: Vec<Task>,
+    dep_pool: Vec<TaskId>,
 }
 
 impl TaskGraph {
@@ -56,17 +75,20 @@ impl TaskGraph {
     /// Add a task; returns its id.
     pub fn add(
         &mut self,
-        label: impl Into<String>,
+        tag: TaskTag,
         resource: ResourceId,
         duration_ns: u64,
         deps: &[TaskId],
     ) -> TaskId {
         let id = self.tasks.len();
+        let deps_start = self.dep_pool.len() as u32;
+        self.dep_pool.extend_from_slice(deps);
         self.tasks.push(Task {
             duration_ns,
             resource,
-            deps: deps.to_vec(),
-            label: label.into(),
+            tag,
+            deps_start,
+            deps_len: deps.len() as u32,
         });
         id
     }
@@ -85,6 +107,24 @@ impl TaskGraph {
     pub fn task(&self, id: TaskId) -> &Task {
         &self.tasks[id]
     }
+
+    /// The dependency list of a task.
+    pub fn deps_of(&self, id: TaskId) -> &[TaskId] {
+        let t = &self.tasks[id];
+        &self.dep_pool[t.deps_start as usize..(t.deps_start + t.deps_len) as usize]
+    }
+
+    /// Drop all tasks but keep the allocated capacity (scratch reuse).
+    pub fn clear(&mut self) {
+        self.tasks.clear();
+        self.dep_pool.clear();
+    }
+
+    /// Pre-size both buffers (e.g. from the workload's layer count).
+    pub fn reserve(&mut self, tasks: usize, deps: usize) {
+        self.tasks.reserve(tasks);
+        self.dep_pool.reserve(deps);
+    }
 }
 
 /// A registered resource.
@@ -101,7 +141,8 @@ struct Resource {
     running: Option<TaskId>,
     /// Accumulated busy time.
     busy_ns: u64,
-    label: String,
+    /// Accumulated queueing delay (start − ready) over dispatched tasks.
+    queue_ns: u64,
 }
 
 impl Resource {
@@ -131,7 +172,7 @@ impl Resource {
 }
 
 /// Execution record for one task.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Span {
     /// Time the task became ready (all deps finished).
     pub ready_ns: u64,
@@ -141,15 +182,17 @@ pub struct Span {
     pub finish_ns: u64,
 }
 
-/// Simulation output: per-task spans and per-resource utilization.
-#[derive(Debug, Clone)]
+/// Simulation output: per-task spans and per-resource totals. Reusable —
+/// [`Engine::run_into`] clears and refills it in place.
+#[derive(Debug, Clone, Default)]
 pub struct Schedule {
     /// Span per task id.
     pub spans: Vec<Span>,
     /// Busy nanoseconds per resource id.
     pub busy_ns: Vec<u64>,
-    /// Resource labels (index-aligned with `busy_ns`).
-    pub resource_labels: Vec<String>,
+    /// Total queueing delay (start − ready) per resource id, accumulated
+    /// during the run (no post-hoc O(tasks) scan).
+    pub queueing: Vec<u64>,
     /// Makespan: completion time of the last task.
     pub makespan_ns: u64,
     /// Number of events processed (== number of tasks).
@@ -157,21 +200,32 @@ pub struct Schedule {
 }
 
 impl Schedule {
-    /// Total queueing delay (start - ready) across tasks on a resource.
-    pub fn queueing_ns(&self, resource: ResourceId, graph: &TaskGraph) -> u64 {
-        self.spans
-            .iter()
-            .enumerate()
-            .filter(|(id, _)| graph.task(*id).resource == resource)
-            .map(|(_, s)| s.start_ns - s.ready_ns)
-            .sum()
+    /// Total queueing delay (start − ready) across tasks on a resource.
+    pub fn queueing_ns(&self, resource: ResourceId) -> u64 {
+        self.queueing.get(resource).copied().unwrap_or(0)
     }
 }
 
-/// The engine: resources + run loop.
+/// Reusable O(tasks) run-loop buffers plus the [`Schedule`] they fill.
+/// Carried across [`Engine::run_into`] calls so steady-state runs do not
+/// touch the allocator.
+#[derive(Debug, Default)]
+pub struct RunScratch {
+    /// The schedule produced by the latest run.
+    pub schedule: Schedule,
+    pending: Vec<usize>,
+    dep_off: Vec<usize>,
+    dep_cursor: Vec<usize>,
+    dependents: Vec<TaskId>,
+    heap: BinaryHeap<Reverse<(u64, u64, TaskId)>>,
+}
+
+/// The engine: resources + run loop. Resource slots (and their backlog
+/// buffers) are reused across [`Engine::reset`] cycles.
 #[derive(Debug, Default)]
 pub struct Engine {
     resources: Vec<Resource>,
+    live: usize,
 }
 
 impl Engine {
@@ -180,61 +234,113 @@ impl Engine {
         Engine::default()
     }
 
-    /// Register a resource; returns its id.
-    pub fn add_resource(&mut self, label: impl Into<String>, policy: Policy) -> ResourceId {
-        let id = self.resources.len();
-        self.resources.push(Resource {
-            policy,
-            backlog: Vec::new(),
-            head: 0,
-            running: None,
-            busy_ns: 0,
-            label: label.into(),
-        });
+    /// Forget all registered resources but keep their slots (and backlog
+    /// capacity) for reuse by subsequent [`Engine::add_resource`] calls.
+    pub fn reset(&mut self) {
+        self.live = 0;
+    }
+
+    /// Register a resource; returns its id. After a [`Engine::reset`],
+    /// slots left over from the previous scenario are reused in place.
+    pub fn add_resource(&mut self, policy: Policy) -> ResourceId {
+        let id = self.live;
+        if let Some(r) = self.resources.get_mut(id) {
+            r.policy = policy;
+            r.backlog.clear();
+            r.head = 0;
+            r.running = None;
+            r.busy_ns = 0;
+            r.queue_ns = 0;
+        } else {
+            self.resources.push(Resource {
+                policy,
+                backlog: Vec::new(),
+                head: 0,
+                running: None,
+                busy_ns: 0,
+                queue_ns: 0,
+            });
+        }
+        self.live += 1;
         id
     }
 
-    /// Execute the graph to completion. Fails on dangling resource ids or
-    /// if the graph deadlocks (dependency cycle).
+    /// Number of live resources.
+    pub fn num_resources(&self) -> usize {
+        self.live
+    }
+
+    /// Execute the graph to completion, allocating fresh buffers.
+    /// Convenience wrapper over [`Engine::run_into`] for one-shot runs.
     pub fn run(&mut self, graph: &TaskGraph) -> Result<Schedule> {
+        let mut scratch = RunScratch::default();
+        self.run_into(graph, &mut scratch)?;
+        Ok(scratch.schedule)
+    }
+
+    /// Execute the graph to completion into `scratch` (the result lands
+    /// in `scratch.schedule`). Fails on dangling resource ids or if the
+    /// graph deadlocks (dependency cycle). Steady-state reuse of the same
+    /// scratch performs no heap allocation.
+    pub fn run_into(&mut self, graph: &TaskGraph, scratch: &mut RunScratch) -> Result<()> {
         let n = graph.len();
-        for t in &graph.tasks {
-            if t.resource >= self.resources.len() {
+        let live = self.live;
+        for (id, t) in graph.tasks.iter().enumerate() {
+            if t.resource >= live {
                 return Err(Error::sim(format!(
                     "task '{}' references unknown resource {}",
-                    t.label, t.resource
+                    t.tag, t.resource
                 )));
             }
-            for &d in &t.deps {
+            for &d in graph.deps_of(id) {
                 if d >= n {
                     return Err(Error::sim(format!(
                         "task '{}' depends on unknown task {d}",
-                        t.label
+                        t.tag
                     )));
                 }
             }
         }
 
-        // Dependency bookkeeping.
-        let mut pending: Vec<usize> = graph.tasks.iter().map(|t| t.deps.len()).collect();
-        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
-        for (id, t) in graph.tasks.iter().enumerate() {
-            for &d in &t.deps {
-                dependents[d].push(id);
+        let sc = scratch;
+
+        // Dependency bookkeeping: pending counts + dependents in CSR form
+        // (offsets into one shared buffer — no per-task Vec).
+        sc.pending.clear();
+        sc.pending.extend(graph.tasks.iter().map(|t| t.deps_len as usize));
+        sc.dep_off.clear();
+        sc.dep_off.resize(n + 1, 0);
+        for &d in &graph.dep_pool {
+            sc.dep_off[d + 1] += 1;
+        }
+        for i in 0..n {
+            sc.dep_off[i + 1] += sc.dep_off[i];
+        }
+        sc.dep_cursor.clear();
+        sc.dep_cursor.extend_from_slice(&sc.dep_off[..n]);
+        sc.dependents.clear();
+        sc.dependents.resize(graph.dep_pool.len(), 0);
+        for id in 0..n {
+            for &d in graph.deps_of(id) {
+                sc.dependents[sc.dep_cursor[d]] = id;
+                sc.dep_cursor[d] += 1;
             }
         }
 
-        let mut spans = vec![Span { ready_ns: 0, start_ns: 0, finish_ns: 0 }; n];
+        let spans = &mut sc.schedule.spans;
+        spans.clear();
+        spans.resize(n, Span::default());
         // Completion event heap: (finish time, seq, task). seq keeps
         // deterministic FIFO order among equal-time completions.
-        let mut heap: BinaryHeap<Reverse<(u64, u64, TaskId)>> = BinaryHeap::new();
+        sc.heap.clear();
         let mut seq: u64 = 0;
 
-        for r in &mut self.resources {
+        for r in &mut self.resources[..live] {
             r.backlog.clear();
             r.head = 0;
             r.running = None;
             r.busy_ns = 0;
+            r.queue_ns = 0;
         }
 
         let mut now: u64 = 0;
@@ -242,16 +348,15 @@ impl Engine {
 
         // Seed: tasks with no deps are ready at t=0.
         for id in 0..n {
-            if pending[id] == 0 {
-                spans[id].ready_ns = 0;
-                self.resources[graph.tasks[id].resource].backlog.push(id);
+            if sc.pending[id] == 0 {
+                self.resources[graph.tasks[id].resource].push(id);
             }
         }
-        for rid in 0..self.resources.len() {
-            Self::dispatch(&mut self.resources[rid], graph, &mut spans, 0, &mut heap, &mut seq);
+        for rid in 0..live {
+            Self::dispatch(&mut self.resources[rid], graph, spans, 0, &mut sc.heap, &mut seq);
         }
 
-        while let Some(Reverse((t, _, id))) = heap.pop() {
+        while let Some(Reverse((t, _, id))) = sc.heap.pop() {
             now = t;
             completed += 1;
             spans[id].finish_ns = now;
@@ -259,26 +364,25 @@ impl Engine {
             self.resources[rid].running = None;
 
             // Wake dependents.
-            for &dep in &dependents[id] {
-                pending[dep] -= 1;
-                if pending[dep] == 0 {
+            let (lo, hi) = (sc.dep_off[id], sc.dep_off[id + 1]);
+            for &dep in &sc.dependents[lo..hi] {
+                sc.pending[dep] -= 1;
+                if sc.pending[dep] == 0 {
                     spans[dep].ready_ns = now;
                     self.resources[graph.tasks[dep].resource].push(dep);
                 }
             }
-            // Re-dispatch every resource that may have gained work (the
-            // completing task's own resource plus dependents' resources).
-            Self::dispatch(&mut self.resources[rid], graph, &mut spans, now, &mut heap, &mut seq);
-            for &dep in &dependents[id] {
+            // Re-dispatch the completing task's resource, then each
+            // dependent's resource — skipping the completing resource,
+            // which was already dispatched above (it is common for a
+            // dependent to share the completing task's resource).
+            Self::dispatch(&mut self.resources[rid], graph, spans, now, &mut sc.heap, &mut seq);
+            for &dep in &sc.dependents[lo..hi] {
                 let drid = graph.tasks[dep].resource;
-                Self::dispatch(
-                    &mut self.resources[drid],
-                    graph,
-                    &mut spans,
-                    now,
-                    &mut heap,
-                    &mut seq,
-                );
+                if drid != rid {
+                    let res = &mut self.resources[drid];
+                    Self::dispatch(res, graph, spans, now, &mut sc.heap, &mut seq);
+                }
             }
         }
 
@@ -288,13 +392,13 @@ impl Engine {
             )));
         }
 
-        Ok(Schedule {
-            spans,
-            busy_ns: self.resources.iter().map(|r| r.busy_ns).collect(),
-            resource_labels: self.resources.iter().map(|r| r.label.clone()).collect(),
-            makespan_ns: now,
-            events: completed,
-        })
+        sc.schedule.makespan_ns = now;
+        sc.schedule.events = completed;
+        sc.schedule.busy_ns.clear();
+        sc.schedule.busy_ns.extend(self.resources[..live].iter().map(|r| r.busy_ns));
+        sc.schedule.queueing.clear();
+        sc.schedule.queueing.extend(self.resources[..live].iter().map(|r| r.queue_ns));
+        Ok(())
     }
 
     /// If `res` is idle and has backlog, start its next task per policy.
@@ -312,6 +416,7 @@ impl Engine {
         let id = res.pop();
         let dur = graph.tasks[id].duration_ns;
         spans[id].start_ns = now;
+        res.queue_ns += now - spans[id].ready_ns;
         res.running = Some(id);
         res.busy_ns += dur;
         heap.push(Reverse((now + dur, *seq, id)));
@@ -322,15 +427,20 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::tag::TagPhase;
+
+    fn tag(i: usize) -> TaskTag {
+        TaskTag::adhoc(i)
+    }
 
     #[test]
     fn serial_chain_sums_durations() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let cpu = eng.add_resource("cpu", Policy::Fifo);
-        let a = g.add("a", cpu, 10, &[]);
-        let b = g.add("b", cpu, 20, &[a]);
-        let c = g.add("c", cpu, 30, &[b]);
+        let cpu = eng.add_resource(Policy::Fifo);
+        let a = g.add(tag(0), cpu, 10, &[]);
+        let b = g.add(tag(1), cpu, 20, &[a]);
+        let c = g.add(tag(2), cpu, 30, &[b]);
         let s = eng.run(&g).unwrap();
         assert_eq!(s.makespan_ns, 60);
         assert_eq!(s.spans[c].start_ns, 30);
@@ -341,52 +451,52 @@ mod tests {
     fn independent_tasks_on_distinct_resources_overlap() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let r0 = eng.add_resource("r0", Policy::Fifo);
-        let r1 = eng.add_resource("r1", Policy::Fifo);
-        g.add("a", r0, 100, &[]);
-        g.add("b", r1, 70, &[]);
+        let r0 = eng.add_resource(Policy::Fifo);
+        let r1 = eng.add_resource(Policy::Fifo);
+        g.add(tag(0), r0, 100, &[]);
+        g.add(tag(1), r1, 70, &[]);
         let s = eng.run(&g).unwrap();
         assert_eq!(s.makespan_ns, 100);
     }
 
     #[test]
-    fn contention_serializes() {
+    fn contention_serializes_and_queueing_is_precomputed() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let r = eng.add_resource("net", Policy::Fifo);
-        g.add("a", r, 100, &[]);
-        g.add("b", r, 100, &[]);
+        let r = eng.add_resource(Policy::Fifo);
+        g.add(tag(0), r, 100, &[]);
+        g.add(tag(1), r, 100, &[]);
         let s = eng.run(&g).unwrap();
         assert_eq!(s.makespan_ns, 200);
-        assert_eq!(s.queueing_ns(r, &g), 100);
+        // Second task waits 100 ns; totals are accumulated during the
+        // run, not recomputed by scanning tasks.
+        assert_eq!(s.queueing_ns(r), 100);
+        assert_eq!(s.queueing, vec![100]);
     }
 
     #[test]
     fn fifo_vs_lifo_ordering() {
-        // Three comm tasks become ready in order a, b, c while the resource
-        // is busy with "hold". FIFO runs a,b,c; LIFO runs c,b,a.
-        let build = TaskGraph::new;
-        for (policy, expect_first) in [(Policy::Fifo, "a"), (Policy::Lifo, "c")] {
-            let mut g = build();
+        // Three comm tasks become ready in order a, b, c while the
+        // resource is busy with "hold". FIFO runs a first; LIFO runs c.
+        for (policy, pick_expected) in [(Policy::Fifo, 0usize), (Policy::Lifo, 2usize)] {
+            let mut g = TaskGraph::new();
             let mut eng = Engine::new();
-            let cpu = eng.add_resource("cpu", Policy::Fifo);
-            let net = eng.add_resource("net", policy);
-            let hold = g.add("hold", net, 100, &[]);
+            let cpu = eng.add_resource(Policy::Fifo);
+            let net = eng.add_resource(policy);
+            let hold = g.add(tag(0), net, 100, &[]);
             // Ready at staggered times via cpu chain.
-            let t1 = g.add("cpu1", cpu, 10, &[]);
-            let t2 = g.add("cpu2", cpu, 10, &[t1]);
-            let t3 = g.add("cpu3", cpu, 10, &[t2]);
-            let a = g.add("a", net, 50, &[t1]);
-            let b = g.add("b", net, 50, &[t2]);
-            let c = g.add("c", net, 50, &[t3]);
+            let t1 = g.add(tag(1), cpu, 10, &[]);
+            let t2 = g.add(tag(2), cpu, 10, &[t1]);
+            let t3 = g.add(tag(3), cpu, 10, &[t2]);
+            let a = g.add(tag(4), net, 50, &[t1]);
+            let b = g.add(tag(5), net, 50, &[t2]);
+            let c = g.add(tag(6), net, 50, &[t3]);
             let s = eng.run(&g).unwrap();
             let _ = hold;
             // First net task to start after hold finishes at t=100:
-            let first = [a, b, c]
-                .into_iter()
-                .min_by_key(|&id| s.spans[id].start_ns)
-                .unwrap();
-            assert_eq!(g.task(first).label, expect_first, "{policy:?}");
+            let abc = [a, b, c];
+            let first = abc.into_iter().min_by_key(|&id| s.spans[id].start_ns).unwrap();
+            assert_eq!(first, abc[pick_expected], "{policy:?}");
         }
     }
 
@@ -394,25 +504,26 @@ mod tests {
     fn diamond_dependencies() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let r0 = eng.add_resource("r0", Policy::Fifo);
-        let r1 = eng.add_resource("r1", Policy::Fifo);
-        let a = g.add("a", r0, 10, &[]);
-        let b = g.add("b", r0, 20, &[a]);
-        let c = g.add("c", r1, 5, &[a]);
-        let d = g.add("d", r0, 1, &[b, c]);
+        let r0 = eng.add_resource(Policy::Fifo);
+        let r1 = eng.add_resource(Policy::Fifo);
+        let a = g.add(tag(0), r0, 10, &[]);
+        let b = g.add(tag(1), r0, 20, &[a]);
+        let c = g.add(tag(2), r1, 5, &[a]);
+        let d = g.add(tag(3), r0, 1, &[b, c]);
         let s = eng.run(&g).unwrap();
         assert_eq!(s.spans[d].ready_ns, 30); // max(b=30, c=15)
         assert_eq!(s.makespan_ns, 31);
+        assert_eq!(g.deps_of(d), &[b, c]);
     }
 
     #[test]
     fn cycle_is_detected_not_hung() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let r = eng.add_resource("r", Policy::Fifo);
+        let r = eng.add_resource(Policy::Fifo);
         // Manual cycle: a → b → a. Construct via deps on future ids.
-        let a = g.add("a", r, 1, &[1]);
-        let _b = g.add("b", r, 1, &[a]);
+        let a = g.add(tag(0), r, 1, &[1]);
+        let _b = g.add(tag(1), r, 1, &[a]);
         assert!(eng.run(&g).is_err());
     }
 
@@ -420,8 +531,8 @@ mod tests {
     fn bad_resource_id_is_error() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let _ = eng.add_resource("r", Policy::Fifo);
-        g.add("a", 5, 1, &[]);
+        let _ = eng.add_resource(Policy::Fifo);
+        g.add(tag(0), 5, 1, &[]);
         assert!(eng.run(&g).is_err());
     }
 
@@ -429,9 +540,9 @@ mod tests {
     fn zero_duration_tasks_complete() {
         let mut g = TaskGraph::new();
         let mut eng = Engine::new();
-        let r = eng.add_resource("r", Policy::Fifo);
-        let a = g.add("a", r, 0, &[]);
-        let b = g.add("b", r, 0, &[a]);
+        let r = eng.add_resource(Policy::Fifo);
+        let a = g.add(tag(0), r, 0, &[]);
+        let b = g.add(tag(1), r, 0, &[a]);
         let s = eng.run(&g).unwrap();
         assert_eq!(s.makespan_ns, 0);
         assert_eq!(s.spans[b].finish_ns, 0);
@@ -442,18 +553,87 @@ mod tests {
         let build_and_run = || {
             let mut g = TaskGraph::new();
             let mut eng = Engine::new();
-            let cpu = eng.add_resource("cpu", Policy::Fifo);
-            let net = eng.add_resource("net", Policy::Lifo);
+            let cpu = eng.add_resource(Policy::Fifo);
+            let net = eng.add_resource(Policy::Lifo);
             let mut prev: Option<TaskId> = None;
-            for i in 0..50 {
+            for i in 0..50u64 {
                 let deps: Vec<TaskId> = prev.into_iter().collect();
-                let c = g.add(format!("c{i}"), cpu, 7 + (i % 5), &deps);
-                g.add(format!("n{i}"), net, 13 + (i % 3), &[c]);
+                let c = g.add(TaskTag::flat(0, TagPhase::Fwd, i as usize), cpu, 7 + (i % 5), &deps);
+                g.add(TaskTag::flat(0, TagPhase::Wg, i as usize), net, 13 + (i % 3), &[c]);
                 prev = Some(c);
             }
             let s = eng.run(&g).unwrap();
             (s.makespan_ns, s.spans.iter().map(|x| x.start_ns).collect::<Vec<_>>())
         };
         assert_eq!(build_and_run(), build_and_run());
+    }
+
+    #[test]
+    fn scratch_reuse_reproduces_one_shot_run() {
+        // run_into with a warm scratch must match Engine::run exactly.
+        let build = |g: &mut TaskGraph, eng: &mut Engine| {
+            g.clear();
+            eng.reset();
+            let cpu = eng.add_resource(Policy::Fifo);
+            let net = eng.add_resource(Policy::Fifo);
+            let mut prev: Option<TaskId> = None;
+            for i in 0..40u64 {
+                let deps: Vec<TaskId> = prev.into_iter().collect();
+                let c = g.add(tag(i as usize), cpu, 5 + (i % 7), &deps);
+                g.add(tag(100 + i as usize), net, 11 + (i % 4), &[c]);
+                prev = Some(c);
+            }
+        };
+        let mut g = TaskGraph::new();
+        let mut eng = Engine::new();
+        build(&mut g, &mut eng);
+        let one_shot = eng.run(&g).unwrap();
+
+        let mut scratch = RunScratch::default();
+        for _ in 0..3 {
+            build(&mut g, &mut eng);
+            eng.run_into(&g, &mut scratch).unwrap();
+            assert_eq!(scratch.schedule.makespan_ns, one_shot.makespan_ns);
+            assert_eq!(scratch.schedule.spans, one_shot.spans);
+            assert_eq!(scratch.schedule.busy_ns, one_shot.busy_ns);
+            assert_eq!(scratch.schedule.queueing, one_shot.queueing);
+        }
+    }
+
+    #[test]
+    fn engine_reset_reuses_slots_with_fresh_state() {
+        let mut eng = Engine::new();
+        let r0 = eng.add_resource(Policy::Fifo);
+        let mut g = TaskGraph::new();
+        g.add(tag(0), r0, 50, &[]);
+        let s = eng.run(&g).unwrap();
+        assert_eq!(s.busy_ns[r0], 50);
+
+        eng.reset();
+        assert_eq!(eng.num_resources(), 0);
+        let r0 = eng.add_resource(Policy::Lifo);
+        assert_eq!(r0, 0);
+        assert_eq!(eng.num_resources(), 1);
+        g.clear();
+        g.add(tag(0), r0, 7, &[]);
+        let s = eng.run(&g).unwrap();
+        assert_eq!(s.busy_ns, vec![7]);
+        // A task referencing the now-dead second slot must error.
+        g.clear();
+        g.add(tag(0), 1, 1, &[]);
+        assert!(eng.run(&g).is_err());
+    }
+
+    #[test]
+    fn graph_clear_keeps_capacity_and_resets_ids() {
+        let mut g = TaskGraph::new();
+        let a = g.add(tag(0), 0, 1, &[]);
+        g.add(tag(1), 0, 1, &[a]);
+        assert_eq!(g.len(), 2);
+        g.clear();
+        assert!(g.is_empty());
+        let b = g.add(tag(0), 0, 1, &[]);
+        assert_eq!(b, 0);
+        assert!(g.deps_of(b).is_empty());
     }
 }

@@ -11,6 +11,8 @@
 //! * [`system`] — maps workload collectives onto network dimensions
 //!   (hierarchical all-reduce, scale-up activation traffic) and applies
 //!   the communication scheduling policy.
+//! * [`tag`] — compact `Copy` task identity ([`tag::TaskTag`]), the
+//!   allocation-free replacement for label strings.
 //! * [`training`] — the workload layer: training-loop schedules for
 //!   DATA / MODEL / HYBRID / PIPELINE parallelism, consuming the
 //!   [`crate::workload::Workload`] descriptions ModTrans emits.
@@ -19,13 +21,17 @@ pub mod collectives;
 pub mod engine;
 pub mod network;
 pub mod system;
+pub mod tag;
 pub mod training;
 
 pub use collectives::{collective_ns, ChunkCfg};
-pub use engine::{Engine, Policy, Schedule, TaskGraph};
+pub use engine::{Engine, Policy, RunScratch, Schedule, TaskGraph};
 pub use network::{NetDim, Network, TopologyKind};
 pub use system::{CommRouter, SystemConfig};
-pub use training::{simulate, LayerBreakdown, PipelineSchedule, SimConfig, SimReport};
+pub use tag::{TagComm, TagPhase, TaskTag};
+pub use training::{
+    simulate, simulate_with, LayerBreakdown, PipelineSchedule, SimConfig, SimReport, SimScratch,
+};
 
 #[cfg(test)]
 mod tests {

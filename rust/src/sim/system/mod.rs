@@ -10,11 +10,21 @@
 //!   dimension(s), all-gather back — each leg occupying its dimension's
 //!   resource, so concurrent collectives contend per fabric exactly like
 //!   ASTRA-sim's queue model.
+//!
+//! The expansion is allocation-free per collective: tasks are identified
+//! by [`TaskTag`]s (no label strings) and the per-chunk tails live in a
+//! fixed stack buffer.
 
 use super::collectives::{collective_ns, ChunkCfg};
 use super::engine::{Policy, ResourceId, TaskGraph, TaskId};
 use super::network::Network;
+use super::tag::{TagComm, TaskTag};
 use crate::workload::CommType;
+
+/// Upper bound on chunk pipelining; keeps the hierarchical expansion's
+/// per-chunk tail list in a fixed stack buffer (no heap allocation in the
+/// hot loop). Configured chunk counts are clamped to this.
+pub const MAX_CHUNKS: usize = 64;
 
 /// System-layer configuration.
 #[derive(Debug, Clone, Copy)]
@@ -32,19 +42,20 @@ impl Default for SystemConfig {
 }
 
 /// Routes collectives to network-dimension resources.
-pub struct CommRouter<'n> {
+pub struct CommRouter<'a> {
     /// The network description.
-    pub net: &'n Network,
-    /// Engine resource id per network dimension.
-    pub dim_resources: Vec<ResourceId>,
+    pub net: &'a Network,
+    /// Engine resource id per network dimension (index-aligned with
+    /// `net.dims`; borrowed so sweep workers can reuse one buffer).
+    pub dim_resources: &'a [ResourceId],
     /// Chunking config.
     pub chunks: ChunkCfg,
 }
 
-impl<'n> CommRouter<'n> {
+impl<'a> CommRouter<'a> {
     /// Create a router (dimension resources must be pre-registered, one
     /// per `net.dims` entry, in order).
-    pub fn new(net: &'n Network, dim_resources: Vec<ResourceId>, chunks: ChunkCfg) -> Self {
+    pub fn new(net: &'a Network, dim_resources: &'a [ResourceId], chunks: ChunkCfg) -> Self {
         assert_eq!(net.dims.len(), dim_resources.len());
         CommRouter { net, dim_resources, chunks }
     }
@@ -53,13 +64,14 @@ impl<'n> CommRouter<'n> {
     /// after `deps`. Returns the id of the final task (or `None` for
     /// `CommType::None` / zero bytes — callers keep their deps).
     ///
-    /// `prefer_scale_up` pins single-dimension collectives (activations)
-    /// to dim 0; otherwise weight-grad traffic uses the hierarchical
-    /// all-dim route.
+    /// `base` is the issuing task's tag; every emitted task carries it
+    /// with a [`TagComm`] annotation. `prefer_scale_up` pins
+    /// single-dimension collectives (activations) to dim 0; otherwise
+    /// weight-grad traffic uses the hierarchical all-dim route.
     pub fn issue(
         &self,
         g: &mut TaskGraph,
-        label: &str,
+        base: TaskTag,
         comm: CommType,
         bytes: u64,
         deps: &[TaskId],
@@ -72,7 +84,8 @@ impl<'n> CommRouter<'n> {
         if dims.len() == 1 || prefer_scale_up {
             let d = &dims[0];
             let ns = collective_ns(comm, bytes, d);
-            return Some(g.add(format!("{label}:{}@dim0", comm.token()), self.dim_resources[0], ns, deps));
+            let tag = base.with_comm(TagComm::Coll { kind: comm, dim: 0 });
+            return Some(g.add(tag, self.dim_resources[0], ns, deps));
         }
         match comm {
             CommType::AllReduce => {
@@ -80,47 +93,31 @@ impl<'n> CommRouter<'n> {
                 // split into `chunks` sub-collectives whose legs pipeline
                 // across the dimension resources (chunk k's scale-out
                 // all-reduce overlaps chunk k+1's reduce-scatter).
-                let c = self.chunks.chunks.max(1) as u64;
-                let chunk_bytes = (bytes / c).max(1);
+                let c = self.chunks.chunks.clamp(1, MAX_CHUNKS);
+                let chunk_bytes = (bytes / c as u64).max(1);
                 let d0 = &dims[0];
-                let mut chunk_tails: Vec<TaskId> = Vec::with_capacity(c as usize);
-                for k in 0..c {
+                let mut chunk_tails: [TaskId; MAX_CHUNKS] = [0; MAX_CHUNKS];
+                for (k, tail) in chunk_tails.iter_mut().enumerate().take(c) {
                     let rs = collective_ns(CommType::ReduceScatter, chunk_bytes, d0);
-                    let mut last = g.add(
-                        format!("{label}:RS.c{k}@dim0"),
-                        self.dim_resources[0],
-                        rs,
-                        deps,
-                    );
+                    let rs_tag = base.with_comm(TagComm::Rs { chunk: k as u8 });
+                    let mut last = g.add(rs_tag, self.dim_resources[0], rs, deps);
                     let mut shard = chunk_bytes / d0.npus.max(1) as u64;
                     for (i, d) in dims.iter().enumerate().skip(1) {
                         let ar = collective_ns(CommType::AllReduce, shard, d);
-                        last = g.add(
-                            format!("{label}:AR.c{k}@dim{i}"),
-                            self.dim_resources[i],
-                            ar,
-                            &[last],
-                        );
+                        let ar_tag = base.with_comm(TagComm::Ar { chunk: k as u8, dim: i as u8 });
+                        last = g.add(ar_tag, self.dim_resources[i], ar, &[last]);
                         shard = (shard / d.npus.max(1) as u64).max(1);
                     }
                     let ag = collective_ns(CommType::AllGather, chunk_bytes, d0);
-                    chunk_tails.push(g.add(
-                        format!("{label}:AG.c{k}@dim0"),
-                        self.dim_resources[0],
-                        ag,
-                        &[last],
-                    ));
+                    let ag_tag = base.with_comm(TagComm::Ag { chunk: k as u8 });
+                    *tail = g.add(ag_tag, self.dim_resources[0], ag, &[last]);
                 }
-                if chunk_tails.len() == 1 {
+                if c == 1 {
                     Some(chunk_tails[0])
                 } else {
                     // Zero-duration join so dependents wait for all chunks.
-                    Some(g.add(
-                        format!("{label}:join"),
-                        self.dim_resources[0],
-                        0,
-                        &chunk_tails,
-                    ))
+                    let join = base.with_comm(TagComm::Join);
+                    Some(g.add(join, self.dim_resources[0], 0, &chunk_tails[..c]))
                 }
             }
             // Gather/scatter/all-to-all for activations stay on the
@@ -129,12 +126,8 @@ impl<'n> CommRouter<'n> {
             other => {
                 let i = dims.len() - 1;
                 let ns = collective_ns(other, bytes, &dims[i]);
-                Some(g.add(
-                    format!("{label}:{}@dim{i}", other.token()),
-                    self.dim_resources[i],
-                    ns,
-                    deps,
-                ))
+                let tag = base.with_comm(TagComm::Coll { kind: other, dim: i as u8 });
+                Some(g.add(tag, self.dim_resources[i], ns, deps))
             }
         }
     }
@@ -143,7 +136,7 @@ impl<'n> CommRouter<'n> {
     pub fn p2p(
         &self,
         g: &mut TaskGraph,
-        label: &str,
+        base: TaskTag,
         bytes: u64,
         deps: &[TaskId],
     ) -> Option<TaskId> {
@@ -152,34 +145,34 @@ impl<'n> CommRouter<'n> {
         }
         let i = self.net.dims.len() - 1;
         let ns = super::collectives::p2p_ns(bytes, &self.net.dims[i]);
-        Some(g.add(format!("{label}:P2P@dim{i}"), self.dim_resources[i], ns, deps))
+        let tag = base.with_comm(TagComm::P2p { dim: i as u8 });
+        Some(g.add(tag, self.dim_resources[i], ns, deps))
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::engine::Engine;
     use super::super::network::{Network, TopologyKind};
+    use super::*;
 
     fn setup(net: &Network) -> (Engine, Vec<ResourceId>) {
         let mut eng = Engine::new();
-        let rs: Vec<ResourceId> = net
-            .dims
-            .iter()
-            .enumerate()
-            .map(|(i, _)| eng.add_resource(format!("net{i}"), Policy::Fifo))
-            .collect();
+        let rs: Vec<ResourceId> = net.dims.iter().map(|_| eng.add_resource(Policy::Fifo)).collect();
         (eng, rs)
+    }
+
+    fn base() -> TaskTag {
+        TaskTag::adhoc(0)
     }
 
     #[test]
     fn single_dim_allreduce_is_one_task() {
         let net = Network::single(TopologyKind::Ring, 8, 100.0, 500.0);
         let (mut eng, rs) = setup(&net);
-        let router = CommRouter::new(&net, rs, ChunkCfg::default());
+        let router = CommRouter::new(&net, &rs, ChunkCfg::default());
         let mut g = TaskGraph::new();
-        let t = router.issue(&mut g, "wg0", CommType::AllReduce, 1 << 20, &[], false);
+        let t = router.issue(&mut g, base(), CommType::AllReduce, 1 << 20, &[], false);
         assert!(t.is_some());
         assert_eq!(g.len(), 1);
         let s = eng.run(&g).unwrap();
@@ -190,9 +183,9 @@ mod tests {
     fn two_tier_allreduce_is_hierarchical() {
         let net = Network::two_tier(8, 4);
         let (mut eng, rs) = setup(&net);
-        let router = CommRouter::new(&net, rs, ChunkCfg { chunks: 4 });
+        let router = CommRouter::new(&net, &rs, ChunkCfg { chunks: 4 });
         let mut g = TaskGraph::new();
-        router.issue(&mut g, "wg0", CommType::AllReduce, 64 << 20, &[], false);
+        router.issue(&mut g, base(), CommType::AllReduce, 64 << 20, &[], false);
         // 4 chunks × (RS + AR + AG) + join.
         assert_eq!(g.len(), 4 * 3 + 1);
         let s = eng.run(&g).unwrap();
@@ -209,9 +202,9 @@ mod tests {
         let net = Network::two_tier(8, 4);
         let run = |chunks: usize| {
             let (mut eng, rs) = setup(&net);
-            let router = CommRouter::new(&net, rs, ChunkCfg { chunks });
+            let router = CommRouter::new(&net, &rs, ChunkCfg { chunks });
             let mut g = TaskGraph::new();
-            router.issue(&mut g, "wg0", CommType::AllReduce, 256 << 20, &[], false);
+            router.issue(&mut g, base(), CommType::AllReduce, 256 << 20, &[], false);
             eng.run(&g).unwrap().makespan_ns
         };
         let t1 = run(1);
@@ -220,12 +213,23 @@ mod tests {
     }
 
     #[test]
+    fn chunk_count_is_clamped_to_stack_buffer() {
+        let net = Network::two_tier(8, 4);
+        let (mut eng, rs) = setup(&net);
+        let router = CommRouter::new(&net, &rs, ChunkCfg { chunks: 10_000 });
+        let mut g = TaskGraph::new();
+        router.issue(&mut g, base(), CommType::AllReduce, 64 << 20, &[], false);
+        assert_eq!(g.len(), MAX_CHUNKS * 3 + 1);
+        assert!(eng.run(&g).is_ok());
+    }
+
+    #[test]
     fn activations_pin_to_scale_up() {
         let net = Network::two_tier(8, 4);
         let (mut eng, rs) = setup(&net);
-        let router = CommRouter::new(&net, rs, ChunkCfg::default());
+        let router = CommRouter::new(&net, &rs, ChunkCfg::default());
         let mut g = TaskGraph::new();
-        router.issue(&mut g, "fwd0", CommType::AllGather, 1 << 20, &[], true);
+        router.issue(&mut g, base(), CommType::AllGather, 1 << 20, &[], true);
         assert_eq!(g.len(), 1);
         let s = eng.run(&g).unwrap();
         assert!(s.busy_ns[0] > 0);
@@ -236,11 +240,11 @@ mod tests {
     fn none_and_zero_bytes_produce_no_tasks() {
         let net = Network::two_tier(8, 4);
         let (_, rs) = setup(&net);
-        let router = CommRouter::new(&net, rs, ChunkCfg::default());
+        let router = CommRouter::new(&net, &rs, ChunkCfg::default());
         let mut g = TaskGraph::new();
-        assert!(router.issue(&mut g, "x", CommType::None, 100, &[], false).is_none());
-        assert!(router.issue(&mut g, "x", CommType::AllReduce, 0, &[], false).is_none());
-        assert!(router.p2p(&mut g, "x", 0, &[]).is_none());
+        assert!(router.issue(&mut g, base(), CommType::None, 100, &[], false).is_none());
+        assert!(router.issue(&mut g, base(), CommType::AllReduce, 0, &[], false).is_none());
+        assert!(router.p2p(&mut g, base(), 0, &[]).is_none());
         assert!(g.is_empty());
     }
 
@@ -248,9 +252,9 @@ mod tests {
     fn p2p_uses_outermost_dim() {
         let net = Network::two_tier(8, 4);
         let (mut eng, rs) = setup(&net);
-        let router = CommRouter::new(&net, rs, ChunkCfg::default());
+        let router = CommRouter::new(&net, &rs, ChunkCfg::default());
         let mut g = TaskGraph::new();
-        router.p2p(&mut g, "stage0->1", 1 << 20, &[]);
+        router.p2p(&mut g, base(), 1 << 20, &[]);
         let s = eng.run(&g).unwrap();
         assert_eq!(s.busy_ns[0], 0);
         assert!(s.busy_ns[1] > 0);

@@ -1,0 +1,207 @@
+//! Compact task identity: the allocation-free replacement for the old
+//! heap-allocated `String` task labels.
+//!
+//! Every task the workload layer emits is identified by *iteration ×
+//! phase × layer* (plus a microbatch/chunk ordinal and a communication
+//! annotation). A [`TaskTag`] packs that into a small `Copy` struct, so
+//! building a task graph performs **zero per-task string allocations**;
+//! the human-readable label (`it0.fwd.L17:ALLREDUCE@dim0`-style) is
+//! rendered on demand via `Display` — only on error paths and in
+//! reports, never in the simulation hot loop.
+
+use crate::workload::CommType;
+use std::fmt;
+
+/// Training-loop phase a task belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TagPhase {
+    /// Ad-hoc task (hand-built graphs, benches, engine tests).
+    #[default]
+    Adhoc,
+    /// Forward compute / activation collective (flat strategies).
+    Fwd,
+    /// Weight-gradient compute / gradient collective.
+    Wg,
+    /// Input-gradient compute / collective.
+    Ig,
+    /// Optimizer update.
+    Upd,
+    /// Pipeline forward (`layer` = stage, `sub` = microbatch).
+    PipeFwd,
+    /// Pipeline backward (`layer` = stage, `sub` = microbatch).
+    PipeBwd,
+    /// Pipeline per-stage gradient sync (`layer` = stage).
+    PipeWg,
+    /// Pipeline per-stage optimizer update (`layer` = stage).
+    PipeUpd,
+}
+
+/// Communication annotation attached to a task, mirroring the suffix the
+/// old string labels carried (`:ALLREDUCE@dim0`, `:RS.c3@dim0`, …).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TagComm {
+    /// Pure compute — no communication annotation.
+    #[default]
+    None,
+    /// Single-shot collective on one network dimension.
+    Coll {
+        /// Collective kind.
+        kind: CommType,
+        /// Network dimension index.
+        dim: u8,
+    },
+    /// Hierarchical all-reduce leg: reduce-scatter of chunk `chunk` on
+    /// the scale-up dimension.
+    Rs {
+        /// Chunk ordinal.
+        chunk: u8,
+    },
+    /// Hierarchical all-reduce leg: scale-out all-reduce of a chunk's
+    /// shard on dimension `dim`.
+    Ar {
+        /// Chunk ordinal.
+        chunk: u8,
+        /// Network dimension index.
+        dim: u8,
+    },
+    /// Hierarchical all-reduce leg: all-gather of chunk `chunk` back on
+    /// the scale-up dimension.
+    Ag {
+        /// Chunk ordinal.
+        chunk: u8,
+    },
+    /// Zero-duration join of the per-chunk tails.
+    Join,
+    /// Point-to-point stage-boundary transfer on dimension `dim`.
+    P2p {
+        /// Network dimension index.
+        dim: u8,
+    },
+}
+
+/// Compact task identity (16 bytes, `Copy`): iteration × phase × layer
+/// (× microbatch/chunk × comm annotation).
+///
+/// `layer` is the workload layer index for flat strategies, the stage
+/// index for pipeline phases, and a free-form ordinal for
+/// [`TagPhase::Adhoc`] tasks. `sub` is the microbatch for pipeline
+/// phases and unused elsewhere (counters saturate rather than wrap, so a
+/// tag is always safe to render).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TaskTag {
+    /// Training iteration.
+    pub iter: u16,
+    /// Phase discriminator.
+    pub phase: TagPhase,
+    /// Layer / stage / ad-hoc ordinal.
+    pub layer: u32,
+    /// Microbatch (pipeline) ordinal.
+    pub sub: u16,
+    /// Communication annotation.
+    pub comm: TagComm,
+}
+
+impl TaskTag {
+    /// Tag for a flat-strategy task: iteration × phase × layer index.
+    pub fn flat(iter: usize, phase: TagPhase, layer: usize) -> TaskTag {
+        TaskTag {
+            iter: saturate_u16(iter),
+            phase,
+            layer: saturate_u32(layer),
+            sub: 0,
+            comm: TagComm::None,
+        }
+    }
+
+    /// Tag for a pipeline task: iteration × phase × stage × microbatch.
+    pub fn pipe(iter: usize, phase: TagPhase, stage: usize, microbatch: usize) -> TaskTag {
+        TaskTag {
+            iter: saturate_u16(iter),
+            phase,
+            layer: saturate_u32(stage),
+            sub: saturate_u16(microbatch),
+            comm: TagComm::None,
+        }
+    }
+
+    /// Tag for a hand-built task (benches, tests): just an ordinal.
+    pub fn adhoc(ordinal: usize) -> TaskTag {
+        TaskTag { layer: saturate_u32(ordinal), ..TaskTag::default() }
+    }
+
+    /// The same tag with a communication annotation attached.
+    pub fn with_comm(self, comm: TagComm) -> TaskTag {
+        TaskTag { comm, ..self }
+    }
+}
+
+fn saturate_u16(v: usize) -> u16 {
+    v.min(u16::MAX as usize) as u16
+}
+
+fn saturate_u32(v: usize) -> u32 {
+    v.min(u32::MAX as usize) as u32
+}
+
+impl fmt::Display for TaskTag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.phase {
+            TagPhase::Adhoc => write!(f, "task{}", self.layer)?,
+            TagPhase::Fwd => write!(f, "it{}.fwd.L{}", self.iter, self.layer)?,
+            TagPhase::Wg => write!(f, "it{}.wg.L{}", self.iter, self.layer)?,
+            TagPhase::Ig => write!(f, "it{}.ig.L{}", self.iter, self.layer)?,
+            TagPhase::Upd => write!(f, "it{}.upd.L{}", self.iter, self.layer)?,
+            TagPhase::PipeFwd => write!(f, "it{}.f.s{}.m{}", self.iter, self.layer, self.sub)?,
+            TagPhase::PipeBwd => write!(f, "it{}.b.s{}.m{}", self.iter, self.layer, self.sub)?,
+            TagPhase::PipeWg => write!(f, "it{}.wg.s{}", self.iter, self.layer)?,
+            TagPhase::PipeUpd => write!(f, "it{}.upd.s{}", self.iter, self.layer)?,
+        }
+        match self.comm {
+            TagComm::None => Ok(()),
+            TagComm::Coll { kind, dim } => write!(f, ":{}@dim{}", kind.token(), dim),
+            TagComm::Rs { chunk } => write!(f, ":RS.c{chunk}@dim0"),
+            TagComm::Ar { chunk, dim } => write!(f, ":AR.c{chunk}@dim{dim}"),
+            TagComm::Ag { chunk } => write!(f, ":AG.c{chunk}@dim0"),
+            TagComm::Join => write!(f, ":join"),
+            TagComm::P2p { dim } => write!(f, ":P2P@dim{dim}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_small_and_copy() {
+        // The whole point: a tag must not regress to heap data.
+        assert!(std::mem::size_of::<TaskTag>() <= 16);
+        let t = TaskTag::flat(1, TagPhase::Fwd, 17);
+        let u = t; // Copy, not move.
+        assert_eq!(t, u);
+    }
+
+    #[test]
+    fn render_matches_label_shapes() {
+        assert_eq!(TaskTag::flat(0, TagPhase::Fwd, 3).to_string(), "it0.fwd.L3");
+        assert_eq!(
+            TaskTag::flat(2, TagPhase::Wg, 5)
+                .with_comm(TagComm::Coll { kind: CommType::AllReduce, dim: 0 })
+                .to_string(),
+            "it2.wg.L5:ALLREDUCE@dim0"
+        );
+        let ar = TaskTag::flat(0, TagPhase::Wg, 1).with_comm(TagComm::Ar { chunk: 3, dim: 1 });
+        assert_eq!(ar.to_string(), "it0.wg.L1:AR.c3@dim1");
+        assert_eq!(TaskTag::pipe(1, TagPhase::PipeFwd, 2, 7).to_string(), "it1.f.s2.m7");
+        let p2p = TaskTag::pipe(0, TagPhase::PipeBwd, 1, 0).with_comm(TagComm::P2p { dim: 1 });
+        assert_eq!(p2p.to_string(), "it0.b.s1.m0:P2P@dim1");
+        assert_eq!(TaskTag::adhoc(9).to_string(), "task9");
+    }
+
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        let t = TaskTag::pipe(1 << 20, TagPhase::PipeFwd, 7, 1 << 20);
+        assert_eq!(t.iter, u16::MAX);
+        assert_eq!(t.sub, u16::MAX);
+    }
+}

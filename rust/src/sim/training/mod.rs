@@ -15,10 +15,16 @@
 //!   updates gating the next iteration's forward.
 //! * [`build_pipeline_graph`] — GPipe-style microbatch pipeline across
 //!   stages with point-to-point boundary transfers.
+//!
+//! Both builders are allocation-free per task: tasks carry [`TaskTag`]s
+//! (no label strings), and [`simulate_with`] threads a reusable
+//! [`SimScratch`] arena through graph build and execution so steady-state
+//! reruns (the sweep worker loop) do not touch the allocator.
 
-use super::engine::{Engine, Policy, Schedule, TaskGraph, TaskId};
+use super::engine::{Engine, Policy, ResourceId, RunScratch, Schedule, TaskGraph, TaskId};
 use super::network::Network;
-use super::system::{CommRouter, SystemConfig};
+use super::system::{CommRouter, SystemConfig, MAX_CHUNKS};
+use super::tag::{TagPhase, TaskTag};
 use crate::error::{Error, Result};
 use crate::workload::{CommType, Parallelism, Workload};
 
@@ -124,155 +130,211 @@ impl SimReport {
     }
 }
 
-/// Simulate a workload end to end.
+/// Reusable simulation arena: engine resource slots, task graph, run-loop
+/// buffers and resource-id scratch, carried across scenarios (one per
+/// sweep worker) so steady-state simulations perform no per-task heap
+/// allocation.
+///
+/// Contract: every [`simulate_with`] call fully re-initializes the parts
+/// it uses — a scratch can be reused across *any* sequence of workloads
+/// and configs, and results are identical to a fresh scratch.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// Engine (resource slots + backlog buffers are reused).
+    pub engine: Engine,
+    /// Task graph (cleared per scenario; capacity persists).
+    pub graph: TaskGraph,
+    /// Run-loop buffers + the schedule output of the latest run.
+    pub run: RunScratch,
+    dim_res: Vec<ResourceId>,
+    stage_res: Vec<ResourceId>,
+    flat: FlatBuffers,
+    pipe: PipeBuffers,
+}
+
+impl SimScratch {
+    /// Fresh, empty scratch (buffers grow on first use).
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
+/// Reusable temporaries for [`build_iteration_graph`].
+#[derive(Debug, Default)]
+struct FlatBuffers {
+    prev_updates: Vec<TaskId>,
+    chain: Vec<TaskId>,
+    wg_comm: Vec<(usize, TaskId)>,
+}
+
+/// Reusable temporaries for [`build_pipeline_graph`] (flat
+/// `[stage × microbatch]` id grids plus the gate/dep lists).
+#[derive(Debug, Default)]
+struct PipeBuffers {
+    fwd: Vec<TaskId>,
+    arrive: Vec<TaskId>,
+    bwd: Vec<TaskId>,
+    barrive: Vec<TaskId>,
+    gate: Vec<TaskId>,
+    deps: Vec<TaskId>,
+}
+
+/// Simulate a workload end to end (one-shot: allocates a fresh scratch).
 pub fn simulate(workload: &Workload, cfg: &SimConfig) -> Result<SimReport> {
+    let mut scratch = SimScratch::default();
+    simulate_with(workload, cfg, &mut scratch)
+}
+
+/// Simulate a workload end to end, reusing `scratch` buffers. This is the
+/// sweep hot path: after the first call, steady-state reruns build and
+/// execute the task graph without allocating.
+pub fn simulate_with(
+    workload: &Workload,
+    cfg: &SimConfig,
+    scratch: &mut SimScratch,
+) -> Result<SimReport> {
     cfg.network.validate()?;
     if workload.layers.is_empty() {
         return Err(Error::sim("workload has no layers"));
     }
     match workload.parallelism {
-        Parallelism::Pipeline => simulate_pipeline(workload, cfg),
-        _ => simulate_flat(workload, cfg),
+        Parallelism::Pipeline => simulate_pipeline(workload, cfg, scratch),
+        _ => simulate_flat(workload, cfg, scratch),
     }
 }
 
 /// DATA / MODEL / HYBRID: representative-NPU timeline.
-fn simulate_flat(workload: &Workload, cfg: &SimConfig) -> Result<SimReport> {
-    let mut eng = Engine::new();
-    let cpu = eng.add_resource("npu0.compute", Policy::Fifo);
-    let net_res: Vec<usize> = cfg
-        .network
-        .dims
-        .iter()
-        .enumerate()
-        .map(|(i, _)| eng.add_resource(format!("net.dim{i}"), cfg.system.scheduling))
-        .collect();
-    let router = CommRouter::new(&cfg.network, net_res.clone(), cfg.system.chunks);
-    let mut g = TaskGraph::new();
-    build_iteration_graph(workload, cfg.iterations, cpu, &router, &mut g);
-    let s = eng.run(&g)?;
-    let mut report = SimReport::from_schedule(&s, &[cpu], &net_res, cfg.iterations);
-    report.breakdown = attribute_layers(workload, &g, &s, cpu);
+fn simulate_flat(
+    workload: &Workload,
+    cfg: &SimConfig,
+    scratch: &mut SimScratch,
+) -> Result<SimReport> {
+    let n = workload.layers.len();
+    scratch.engine.reset();
+    let cpu = scratch.engine.add_resource(Policy::Fifo);
+    scratch.dim_res.clear();
+    for _ in &cfg.network.dims {
+        scratch.dim_res.push(scratch.engine.add_resource(cfg.system.scheduling));
+    }
+    let router = CommRouter::new(&cfg.network, &scratch.dim_res, cfg.system.chunks);
+    scratch.graph.clear();
+    // Pre-size from the workload shape: per layer per iteration at most
+    // fwd+wg+ig+upd compute tasks plus three collective expansions of at
+    // most 3·chunks+1 tasks each (hierarchical RS/AR/AG legs + join).
+    let per_coll = 3 * cfg.system.chunks.chunks.clamp(1, MAX_CHUNKS) + 1;
+    scratch.graph.reserve(
+        cfg.iterations * n * (4 + 3 * per_coll),
+        cfg.iterations * n * (6 + 3 * per_coll),
+    );
+    build_iteration_graph_into(
+        workload,
+        cfg.iterations,
+        cpu,
+        &router,
+        &mut scratch.graph,
+        &mut scratch.flat,
+    );
+    scratch.engine.run_into(&scratch.graph, &mut scratch.run)?;
+    let s = &scratch.run.schedule;
+    let mut report = SimReport::from_schedule(s, &[cpu], &scratch.dim_res, cfg.iterations);
+    report.breakdown = attribute_layers(workload, &scratch.graph, s, cpu);
     Ok(report)
 }
 
-/// Attribute task durations back to workload layers by label
-/// (`it{N}.{phase}.{layer}[...]`).
+/// Attribute task durations back to workload layers via their tags —
+/// a direct index into the layer list (no label parsing, no hash map).
 fn attribute_layers(
     workload: &Workload,
     g: &TaskGraph,
     s: &Schedule,
-    cpu: usize,
+    cpu: ResourceId,
 ) -> Vec<LayerBreakdown> {
-    use std::collections::HashMap;
-    let mut by_name: HashMap<&str, (u64, u64)> = HashMap::new();
+    let n = workload.layers.len();
+    let mut acc = vec![(0u64, 0u64); n];
     for id in 0..g.len() {
         let t = g.task(id);
-        // Label shape: "itN.phase.layer" or "itN.phase.layer:COLL@dimK".
-        let Some(rest) = t.label.splitn(3, '.').nth(2) else { continue };
-        let layer = rest.split(':').next().unwrap_or(rest);
+        if matches!(t.tag.phase, TagPhase::Adhoc) {
+            continue;
+        }
+        let li = t.tag.layer as usize;
+        if li >= n {
+            continue;
+        }
         let dur = s.spans[id].finish_ns - s.spans[id].start_ns;
-        let e = by_name.entry_or_insert(layer);
         if t.resource == cpu {
-            e.0 += dur;
+            acc[li].0 += dur;
         } else {
-            e.1 += dur;
+            acc[li].1 += dur;
         }
     }
     workload
         .layers
         .iter()
-        .map(|l| {
-            let (c, m) = by_name.get(l.name.as_str()).copied().unwrap_or((0, 0));
-            LayerBreakdown { name: l.name.clone(), compute_ns: c, comm_ns: m }
-        })
+        .zip(acc)
+        .map(|(l, (c, m))| LayerBreakdown { name: l.name.clone(), compute_ns: c, comm_ns: m })
         .collect()
 }
 
-/// `entry().or_insert` shorthand over the tuple map.
-trait EntryOrInsert<'a> {
-    fn entry_or_insert(&mut self, k: &'a str) -> &mut (u64, u64);
-}
-impl<'a> EntryOrInsert<'a> for std::collections::HashMap<&'a str, (u64, u64)> {
-    fn entry_or_insert(&mut self, k: &'a str) -> &mut (u64, u64) {
-        self.entry(k).or_insert((0, 0))
-    }
-}
-
 /// Build the DATA/MODEL/HYBRID iteration task graph (public for tests and
-/// ablation benches).
+/// ablation benches; allocates its own temporaries — the scratch-reusing
+/// simulate path goes through the `_into` variant).
 pub fn build_iteration_graph(
     workload: &Workload,
     iterations: usize,
-    cpu: usize,
+    cpu: ResourceId,
     router: &CommRouter<'_>,
     g: &mut TaskGraph,
 ) {
-    let n = workload.layers.len();
+    build_iteration_graph_into(workload, iterations, cpu, router, g, &mut FlatBuffers::default());
+}
+
+/// [`build_iteration_graph`] with caller-owned temporaries: allocation-
+/// free once the buffers are warm.
+fn build_iteration_graph_into(
+    workload: &Workload,
+    iterations: usize,
+    cpu: ResourceId,
+    router: &CommRouter<'_>,
+    g: &mut TaskGraph,
+    bufs: &mut FlatBuffers,
+) {
     // Gate that the next iteration's first forward waits on: the previous
     // iteration's per-layer update tasks.
-    let mut prev_updates: Vec<TaskId> = Vec::new();
+    let prev_updates = &mut bufs.prev_updates;
+    let chain = &mut bufs.chain;
+    let wg_comm_tasks = &mut bufs.wg_comm;
+    prev_updates.clear();
     for it in 0..iterations {
         // ---- forward ----
-        let mut chain: Vec<TaskId> = Vec::new(); // deps for next compute
+        chain.clear();
         chain.extend(prev_updates.drain(..));
-        let mut fwd_done: Vec<TaskId> = Vec::with_capacity(n);
         for (i, l) in workload.layers.iter().enumerate() {
-            let fwd = g.add(format!("it{it}.fwd.{}", l.name), cpu, l.fwd.compute_ns, &chain);
+            let tag = TaskTag::flat(it, TagPhase::Fwd, i);
+            let fwd = g.add(tag, cpu, l.fwd.compute_ns, chain.as_slice());
             chain.clear();
             // Blocking activation collective (MODEL/HYBRID): the next
             // layer's forward depends on it.
-            match router.issue(
-                g,
-                &format!("it{it}.fwd.{}", l.name),
-                l.fwd.comm,
-                l.fwd.comm_bytes,
-                &[fwd],
-                true,
-            ) {
+            match router.issue(g, tag, l.fwd.comm, l.fwd.comm_bytes, &[fwd], true) {
                 Some(c) => chain.push(c),
                 None => chain.push(fwd),
             }
-            fwd_done.push(*chain.last().unwrap());
-            let _ = i;
         }
 
         // ---- backward (reverse layer order) ----
         // chain currently holds the last layer's forward completion.
-        let mut wg_comm_tasks: Vec<(usize, Option<TaskId>)> = Vec::with_capacity(n);
+        wg_comm_tasks.clear();
         for (i, l) in workload.layers.iter().enumerate().rev() {
             // Weight-grad compute, then async all-reduce (non-blocking).
-            let wg = g.add(
-                format!("it{it}.wg.{}", l.name),
-                cpu,
-                l.weight_grad.compute_ns,
-                &chain,
-            );
-            let wg_comm = router.issue(
-                g,
-                &format!("it{it}.wg.{}", l.name),
-                l.weight_grad.comm,
-                l.weight_grad.comm_bytes,
-                &[wg],
-                false,
-            );
-            wg_comm_tasks.push((i, wg_comm.or(Some(wg))));
+            let wg_tag = TaskTag::flat(it, TagPhase::Wg, i);
+            let wg = g.add(wg_tag, cpu, l.weight_grad.compute_ns, chain.as_slice());
+            let wg_comm =
+                router.issue(g, wg_tag, l.weight_grad.comm, l.weight_grad.comm_bytes, &[wg], false);
+            wg_comm_tasks.push((i, wg_comm.unwrap_or(wg)));
             // Input-grad compute; its collective blocks the next layer.
-            let ig = g.add(
-                format!("it{it}.ig.{}", l.name),
-                cpu,
-                l.input_grad.compute_ns,
-                &[wg],
-            );
+            let ig_tag = TaskTag::flat(it, TagPhase::Ig, i);
+            let ig = g.add(ig_tag, cpu, l.input_grad.compute_ns, &[wg]);
             chain.clear();
-            match router.issue(
-                g,
-                &format!("it{it}.ig.{}", l.name),
-                l.input_grad.comm,
-                l.input_grad.comm_bytes,
-                &[ig],
-                true,
-            ) {
+            match router.issue(g, ig_tag, l.input_grad.comm, l.input_grad.comm_bytes, &[ig], true) {
                 Some(c) => chain.push(c),
                 None => chain.push(ig),
             }
@@ -281,26 +343,92 @@ pub fn build_iteration_graph(
         // ---- optimizer updates ----
         // Each layer's update waits for its gradient all-reduce; updates
         // run on the compute stream and gate the next iteration.
-        for (i, dep) in wg_comm_tasks {
+        for &(i, dep) in wg_comm_tasks.iter() {
             let l = &workload.layers[i];
-            let deps: Vec<TaskId> = dep.into_iter().collect();
-            let u = g.add(format!("it{it}.upd.{}", l.name), cpu, l.update_ns, &deps);
+            let u = g.add(TaskTag::flat(it, TagPhase::Upd, i), cpu, l.update_ns, &[dep]);
             prev_updates.push(u);
         }
     }
 }
 
 /// PIPELINE: GPipe-style schedule over contiguous stage partitions.
-fn simulate_pipeline(workload: &Workload, cfg: &SimConfig) -> Result<SimReport> {
+fn simulate_pipeline(
+    workload: &Workload,
+    cfg: &SimConfig,
+    scratch: &mut SimScratch,
+) -> Result<SimReport> {
     let n = workload.layers.len();
     let stages = cfg.stages.clamp(1, n);
-    let micro = cfg.microbatches.max(1);
     if cfg.microbatches == 0 {
         return Err(Error::sim("pipeline needs >=1 microbatch"));
     }
+    let micro = cfg.microbatches;
 
     // Partition layers into contiguous stages balanced by compute time.
     let bounds = partition_by_compute(workload, stages);
+
+    scratch.engine.reset();
+    scratch.stage_res.clear();
+    for _ in 0..stages {
+        scratch.stage_res.push(scratch.engine.add_resource(Policy::Fifo));
+    }
+    scratch.dim_res.clear();
+    for _ in &cfg.network.dims {
+        scratch.dim_res.push(scratch.engine.add_resource(cfg.system.scheduling));
+    }
+    let router = CommRouter::new(&cfg.network, &scratch.dim_res, cfg.system.chunks);
+    scratch.graph.clear();
+    let per_coll = 3 * cfg.system.chunks.chunks.clamp(1, MAX_CHUNKS) + 1;
+    scratch.graph.reserve(
+        cfg.iterations * stages * (4 * micro + per_coll + 1),
+        cfg.iterations * stages * (8 * micro + per_coll + 2),
+    );
+    build_pipeline_graph_into(
+        workload,
+        cfg,
+        &bounds,
+        &scratch.stage_res,
+        &router,
+        &mut scratch.graph,
+        &mut scratch.pipe,
+    );
+    scratch.engine.run_into(&scratch.graph, &mut scratch.run)?;
+    let s = &scratch.run.schedule;
+    Ok(SimReport::from_schedule(s, &scratch.stage_res, &scratch.dim_res, cfg.iterations))
+}
+
+/// Build the pipeline task graph over pre-partitioned stages (public for
+/// tests and ablation benches; allocates its own temporaries — the
+/// scratch-reusing simulate path goes through the `_into` variant).
+/// `bounds` is a `stages+1`-element layer partition as produced by
+/// [`partition_by_compute`]; `stage_cpu` holds one compute resource per
+/// stage.
+pub fn build_pipeline_graph(
+    workload: &Workload,
+    cfg: &SimConfig,
+    bounds: &[usize],
+    stage_cpu: &[ResourceId],
+    router: &CommRouter<'_>,
+    g: &mut TaskGraph,
+) {
+    let mut bufs = PipeBuffers::default();
+    build_pipeline_graph_into(workload, cfg, bounds, stage_cpu, router, g, &mut bufs);
+}
+
+/// [`build_pipeline_graph`] with caller-owned temporaries: allocation-
+/// free once the buffers are warm.
+fn build_pipeline_graph_into(
+    workload: &Workload,
+    cfg: &SimConfig,
+    bounds: &[usize],
+    stage_cpu: &[ResourceId],
+    router: &CommRouter<'_>,
+    g: &mut TaskGraph,
+    bufs: &mut PipeBuffers,
+) {
+    const NONE: TaskId = usize::MAX;
+    let stages = stage_cpu.len();
+    let micro = cfg.microbatches.max(1);
 
     // Per-stage fwd/bwd durations (per microbatch: workload rows describe
     // the full batch, so divide by microbatch count).
@@ -308,49 +436,51 @@ fn simulate_pipeline(workload: &Workload, cfg: &SimConfig) -> Result<SimReport> 
         workload.layers[bounds[s]..bounds[s + 1]].iter().map(f).sum::<u64>() / micro as u64
     };
 
-    let mut eng = Engine::new();
-    let stage_cpu: Vec<usize> = (0..stages)
-        .map(|s| eng.add_resource(format!("stage{s}.compute"), Policy::Fifo))
-        .collect();
-    let net_res: Vec<usize> = cfg
-        .network
-        .dims
-        .iter()
-        .enumerate()
-        .map(|(i, _)| eng.add_resource(format!("net.dim{i}"), cfg.system.scheduling))
-        .collect();
-    let router = CommRouter::new(&cfg.network, net_res.clone(), cfg.system.chunks);
-    let mut g = TaskGraph::new();
-
     let mb_boundary = cfg.boundary_bytes / micro as u64;
-    let mut prev_iter_gate: Vec<TaskId> = Vec::new();
+    let idx = |s: usize, m: usize| s * micro + m;
+    // Flat [stage × microbatch] id grids (no per-stage Vec-of-Vec).
+    let cells = stages * micro;
+    let fwd = &mut bufs.fwd;
+    let arrive = &mut bufs.arrive;
+    let bwd = &mut bufs.bwd;
+    let barrive = &mut bufs.barrive;
+    fwd.clear();
+    fwd.resize(cells, NONE);
+    arrive.clear();
+    arrive.resize(cells, NONE);
+    bwd.clear();
+    bwd.resize(cells, NONE);
+    barrive.clear();
+    barrive.resize(cells, NONE);
+    let prev_iter_gate = &mut bufs.gate;
+    prev_iter_gate.clear();
+    let deps = &mut bufs.deps;
+
     for it in 0..cfg.iterations {
-        // fwd[s][m] completion (after send to s+1 is modeled separately).
-        let mut fwd: Vec<Vec<TaskId>> = vec![Vec::with_capacity(micro); stages];
-        let mut arrive: Vec<Vec<Option<TaskId>>> = vec![vec![None; micro]; stages];
+        fwd.fill(NONE);
+        arrive.fill(NONE);
+        bwd.fill(NONE);
+        barrive.fill(NONE);
         for m in 0..micro {
             for s in 0..stages {
-                let mut deps: Vec<TaskId> = Vec::new();
+                deps.clear();
                 if s == 0 && m == 0 {
                     deps.extend(prev_iter_gate.drain(..));
                 }
                 if m > 0 {
-                    deps.push(fwd[s][m - 1]); // stage serialization
+                    deps.push(fwd[idx(s, m - 1)]); // stage serialization
                 }
                 if s > 0 {
-                    deps.push(arrive[s][m].expect("boundary arrival"));
+                    debug_assert_ne!(arrive[idx(s, m)], NONE, "boundary arrival");
+                    deps.push(arrive[idx(s, m)]);
                 }
-                let t = g.add(
-                    format!("it{it}.f.s{s}.m{m}"),
-                    stage_cpu[s],
-                    stage_time(s, &|l| l.fwd.compute_ns),
-                    &deps,
-                );
-                fwd[s].push(t);
+                let tag = TaskTag::pipe(it, TagPhase::PipeFwd, s, m);
+                let dur = stage_time(s, &|l| l.fwd.compute_ns);
+                let t = g.add(tag, stage_cpu[s], dur, deps.as_slice());
+                fwd[idx(s, m)] = t;
                 if s + 1 < stages {
-                    let send =
-                        router.p2p(&mut g, &format!("it{it}.f.s{s}->s{}.m{m}", s + 1), mb_boundary, &[t]);
-                    arrive[s + 1][m] = send.or(Some(t));
+                    let send = router.p2p(g, tag, mb_boundary, &[t]);
+                    arrive[idx(s + 1, m)] = send.unwrap_or(t);
                 }
             }
         }
@@ -358,44 +488,35 @@ fn simulate_pipeline(workload: &Workload, cfg: &SimConfig) -> Result<SimReport> 
         // Backward. GPipe: begins after ALL forwards (flush). 1F1B:
         // microbatch m's backward needs only its own forward — the
         // in-flight cap is enforced on the forward side below.
-        let mut bwd: Vec<Vec<TaskId>> = vec![Vec::with_capacity(micro); stages];
-        let mut barrive: Vec<Vec<Option<TaskId>>> = vec![vec![None; micro]; stages];
         for m in 0..micro {
             for s in (0..stages).rev() {
                 let gate = match cfg.schedule {
-                    PipelineSchedule::GPipe => fwd[s][micro - 1],
-                    PipelineSchedule::OneFOneB => fwd[s][m],
+                    PipelineSchedule::GPipe => fwd[idx(s, micro - 1)],
+                    PipelineSchedule::OneFOneB => fwd[idx(s, m)],
                 };
-                let mut deps: Vec<TaskId> = vec![gate];
+                deps.clear();
+                deps.push(gate);
                 if m > 0 {
-                    deps.push(bwd[s][m - 1]);
+                    deps.push(bwd[idx(s, m - 1)]);
                 }
                 if s + 1 < stages {
-                    deps.push(barrive[s][m].expect("grad arrival"));
+                    debug_assert_ne!(barrive[idx(s, m)], NONE, "grad arrival");
+                    deps.push(barrive[idx(s, m)]);
                 }
+                let tag = TaskTag::pipe(it, TagPhase::PipeBwd, s, m);
                 let t = g.add(
-                    format!("it{it}.b.s{s}.m{m}"),
+                    tag,
                     stage_cpu[s],
                     stage_time(s, &|l| l.input_grad.compute_ns + l.weight_grad.compute_ns),
-                    &deps,
+                    deps.as_slice(),
                 );
-                bwd[s].push(t);
+                bwd[idx(s, m)] = t;
                 if s > 0 {
-                    let send = router.p2p(
-                        &mut g,
-                        &format!("it{it}.b.s{s}->s{}.m{m}", s - 1),
-                        mb_boundary,
-                        &[t],
-                    );
-                    barrive[s - 1][m] = send.or(Some(t));
+                    let send = router.p2p(g, tag, mb_boundary, &[t]);
+                    barrive[idx(s - 1, m)] = send.unwrap_or(t);
                 }
             }
         }
-        // Fix ordering: bwd[s] pushed in reverse stage order per m; rebuild
-        // index: we pushed per (m, s desc) so bwd[s][m] indexing is wrong.
-        // (Handled by construction: each inner loop pushes exactly one task
-        // per stage per microbatch — but into per-stage vecs, so order per
-        // stage vec is by m. Correct.)
 
         // Per-stage gradient all-reduce (DP across replicas) + update gate.
         for s in 0..stages {
@@ -406,23 +527,15 @@ fn simulate_pipeline(workload: &Workload, cfg: &SimConfig) -> Result<SimReport> 
                 .sum();
             let upd_ns: u64 =
                 workload.layers[bounds[s]..bounds[s + 1]].iter().map(|l| l.update_ns).sum();
-            let last_bwd = *bwd[s].last().unwrap();
-            let comm = router.issue(
-                &mut g,
-                &format!("it{it}.wg.s{s}"),
-                CommType::AllReduce,
-                wg_bytes,
-                &[last_bwd],
-                false,
-            );
+            let last_bwd = bwd[idx(s, micro - 1)];
+            let wg_tag = TaskTag::pipe(it, TagPhase::PipeWg, s, 0);
+            let comm = router.issue(g, wg_tag, CommType::AllReduce, wg_bytes, &[last_bwd], false);
             let dep = comm.unwrap_or(last_bwd);
-            let u = g.add(format!("it{it}.upd.s{s}"), stage_cpu[s], upd_ns, &[dep]);
+            let upd_tag = TaskTag::pipe(it, TagPhase::PipeUpd, s, 0);
+            let u = g.add(upd_tag, stage_cpu[s], upd_ns, &[dep]);
             prev_iter_gate.push(u);
         }
     }
-
-    let s = eng.run(&g)?;
-    Ok(SimReport::from_schedule(&s, &stage_cpu, &net_res, cfg.iterations))
 }
 
 /// Contiguous partition of layers into `stages` groups with balanced
@@ -642,5 +755,37 @@ mod tests {
         let r64 = simulate(&w, &cfg_ring(64)).unwrap();
         // Ring all-reduce latency term grows with N; bandwidth term fixed.
         assert!(r64.iteration_ns > r8.iteration_ns);
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent_to_fresh_scratch() {
+        // The SimScratch reuse contract: any sequence of workloads and
+        // configs through one scratch matches one-shot simulation exactly.
+        let mut scratch = SimScratch::new();
+        let dp = mk_workload(Parallelism::Data, 8, 20_000, 2 << 20);
+        let mp = mk_workload(Parallelism::Model, 5, 9_000, 1 << 20);
+        let mut pp = mk_workload(Parallelism::Data, 12, 30_000, 0);
+        pp.parallelism = Parallelism::Pipeline;
+        let mut pp_cfg = cfg_ring(4);
+        pp_cfg.stages = 4;
+        pp_cfg.microbatches = 4;
+        let cases: Vec<(&Workload, SimConfig)> = vec![
+            (&dp, cfg_ring(8)),
+            (&mp, cfg_ring(16)),
+            (&pp, pp_cfg),
+            (&dp, cfg_ring(64)),
+        ];
+        for round in 0..3 {
+            for &(w, ref cfg) in &cases {
+                let fresh = simulate(w, cfg).unwrap();
+                let reused = simulate_with(w, cfg, &mut scratch).unwrap();
+                assert_eq!(reused.total_ns, fresh.total_ns, "round {round}");
+                assert_eq!(reused.iteration_ns, fresh.iteration_ns);
+                assert_eq!(reused.compute_busy_ns, fresh.compute_busy_ns);
+                assert_eq!(reused.net_busy_ns, fresh.net_busy_ns);
+                assert_eq!(reused.events, fresh.events);
+                assert_eq!(reused.breakdown, fresh.breakdown);
+            }
+        }
     }
 }

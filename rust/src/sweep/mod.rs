@@ -12,8 +12,10 @@
 //!    + layer extraction, the expensive step — and every scenario derives
 //!    its workload from the shared summary (translation count == model
 //!    count, never scenario count).
-//! 3. [`pool::run_indexed`] fans the simulations out over a `std::thread`
-//!    worker pool fed by a channel-based work queue.
+//! 3. [`pool::run_indexed_with`] fans the simulations out over a
+//!    `std::thread` worker pool fed by a channel-based work queue; each
+//!    worker carries one [`crate::sim::SimScratch`] arena across its
+//!    scenarios, so steady-state iterations are allocation-free.
 //! 4. [`report::SweepReport`] ranks the results (fastest simulated step
 //!    first, key-ordered tiebreak) and emits text + JSON. Because every
 //!    scenario is simulated deterministically and ranking is a total
@@ -36,7 +38,8 @@ pub use report::{ScenarioResult, SweepReport};
 use crate::compute::SystolicCompute;
 use crate::error::{Error, Result};
 use crate::sim::{
-    simulate, ChunkCfg, Network, PipelineSchedule, Policy, SimConfig, SystemConfig, TopologyKind,
+    simulate_with, ChunkCfg, Network, PipelineSchedule, Policy, SimConfig, SimScratch,
+    SystemConfig, TopologyKind,
 };
 use crate::translator::{self, memory_per_npu, MemoryOpts, TranslateOpts, ZeroStage};
 use crate::workload::Parallelism;
@@ -210,6 +213,10 @@ pub struct SweepConfig {
     pub hbm_bytes: u64,
     /// ZeRO sharding stage on the data-parallel axis.
     pub zero: ZeroStage,
+    /// Prune scenarios whose modeled `memory_per_npu` exceeds HBM before
+    /// they reach the worker pool (the memory check is a cheap analytic
+    /// pass over the cached summary — no simulation).
+    pub skip_infeasible: bool,
 }
 
 impl Default for SweepConfig {
@@ -224,28 +231,38 @@ impl Default for SweepConfig {
             latency_ns: 500.0,
             hbm_bytes: 32 << 30,
             zero: ZeroStage::None,
+            skip_infeasible: false,
         }
     }
 }
 
-/// Simulate one scenario against the shared cache. Pure: the result
-/// depends only on `(sc, cache, cfg)`, which is what makes the ranked
-/// report independent of worker count and scheduling order.
-fn run_scenario(
-    sc: &Scenario,
-    cache: &WorkloadCache,
-    cfg: &SweepConfig,
-) -> Result<ScenarioResult> {
-    let summary = cache.summary(&sc.model).ok_or_else(|| {
-        Error::Config(format!("model '{}' missing from the workload cache", sc.model))
-    })?;
-    let opts = TranslateOpts {
+/// Translation options for a scenario (shared by simulation and the
+/// memory model so the feasibility check and the report always agree).
+fn scenario_opts(sc: &Scenario, cfg: &SweepConfig) -> TranslateOpts {
+    TranslateOpts {
         parallelism: sc.parallelism,
         npus: cfg.npus,
         mp_group: cfg.mp_group,
         batch: cfg.batch,
         zero: cfg.zero,
-    };
+    }
+}
+
+/// Simulate one scenario against the shared cache, reusing the worker's
+/// scratch arena. Pure with respect to its inputs: the result depends
+/// only on `(sc, cache, cfg)` — never on the scratch's prior contents —
+/// which is what makes the ranked report independent of worker count and
+/// scheduling order.
+fn run_scenario(
+    sc: &Scenario,
+    cache: &WorkloadCache,
+    cfg: &SweepConfig,
+    scratch: &mut SimScratch,
+) -> Result<ScenarioResult> {
+    let summary = cache.summary(&sc.model).ok_or_else(|| {
+        Error::Config(format!("model '{}' missing from the workload cache", sc.model))
+    })?;
+    let opts = scenario_opts(sc, cfg);
     let w = translator::to_workload(summary, opts, &SystolicCompute::new(cfg.batch))?;
     let sim_cfg = SimConfig {
         network: Network::single(sc.topology, cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns),
@@ -256,7 +273,7 @@ fn run_scenario(
         boundary_bytes: summary.layers.iter().map(|l| l.out_act_bytes).max().unwrap_or(1 << 20),
         schedule: PipelineSchedule::GPipe,
     };
-    let r = simulate(&w, &sim_cfg)?;
+    let r = simulate_with(&w, &sim_cfg, scratch)?;
     let mem = memory_per_npu(summary, opts, MemoryOpts { hbm_bytes: cfg.hbm_bytes, ..Default::default() });
     Ok(ScenarioResult {
         scenario: sc.clone(),
@@ -272,10 +289,11 @@ fn run_scenario(
     })
 }
 
-/// Run the full sweep: expand, translate-once-per-model, simulate across
-/// the worker pool, rank.
+/// Run the full sweep: expand, translate-once-per-model, optionally prune
+/// infeasible scenarios, simulate across the worker pool (one reusable
+/// [`SimScratch`] per worker), rank.
 pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
-    let scenarios = grid.expand();
+    let mut scenarios = grid.expand();
     if scenarios.is_empty() {
         return Err(Error::Config(
             "sweep grid is empty — every axis needs at least one entry".into(),
@@ -283,15 +301,32 @@ pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
     }
     let models = grid.unique_models();
     let cache = WorkloadCache::build(&models, cfg.batch)?;
-    let results =
-        pool::run_indexed(scenarios.len(), cfg.threads, |i| run_scenario(&scenarios[i], &cache, cfg))?;
+    let mut pruned = 0usize;
+    if cfg.skip_infeasible {
+        // Fast path: the memory model is a cheap analytic pass over the
+        // cached summary, so infeasible scenarios never reach the pool.
+        let before = scenarios.len();
+        scenarios.retain(|sc| match cache.summary(&sc.model) {
+            Some(summary) => {
+                let opts = scenario_opts(sc, cfg);
+                let m = MemoryOpts { hbm_bytes: cfg.hbm_bytes, ..Default::default() };
+                memory_per_npu(summary, opts, m).fits(cfg.hbm_bytes)
+            }
+            // Unknown models are kept so the pool surfaces the error.
+            None => true,
+        });
+        pruned = before - scenarios.len();
+    }
+    let results = pool::run_indexed_with(scenarios.len(), cfg.threads, SimScratch::new, |s, i| {
+        run_scenario(&scenarios[i], &cache, cfg, s)
+    })?;
     let mut ranked = results;
     ranked.sort_by(|a, b| {
         a.iteration_ns
             .cmp(&b.iteration_ns)
             .then_with(|| a.scenario.key().cmp(&b.scenario.key()))
     });
-    Ok(SweepReport { models: models.len(), translations: cache.translations(), ranked })
+    Ok(SweepReport { models: models.len(), translations: cache.translations(), pruned, ranked })
 }
 
 #[cfg(test)]
@@ -347,6 +382,34 @@ mod tests {
     fn unknown_model_is_reported() {
         let grid = SweepGrid { models: vec!["made-up".into()], ..Default::default() };
         assert!(run_sweep(&grid, &SweepConfig::default()).is_err());
+    }
+
+    #[test]
+    fn skip_infeasible_prunes_before_the_pool() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let base = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        // Tiny HBM: nothing fits, everything is pruned pre-pool.
+        let tiny = SweepConfig { hbm_bytes: 1, skip_infeasible: true, ..base };
+        let r = run_sweep(&grid, &tiny).unwrap();
+        assert_eq!(r.pruned, 2);
+        assert!(r.ranked.is_empty());
+        // Same config without pruning simulates everything, flags misfits.
+        let keep = SweepConfig { hbm_bytes: 1, skip_infeasible: false, ..base };
+        let r = run_sweep(&grid, &keep).unwrap();
+        assert_eq!(r.pruned, 0);
+        assert_eq!(r.ranked.len(), 2);
+        assert!(r.ranked.iter().all(|x| !x.fits_hbm));
+        // Ample HBM: pruning is a no-op.
+        let ample = SweepConfig { skip_infeasible: true, ..base };
+        let r = run_sweep(&grid, &ample).unwrap();
+        assert_eq!(r.pruned, 0);
+        assert_eq!(r.ranked.len(), 2);
+        assert!(r.ranked.iter().all(|x| x.fits_hbm));
     }
 
     #[test]

@@ -6,24 +6,34 @@
 //! on a results channel. Collected results are re-ordered by index, so
 //! the output is independent of worker count and OS scheduling — the
 //! property the sweep's determinism guarantee rests on.
+//!
+//! [`run_indexed_with`] additionally gives every worker a private scratch
+//! value built once at worker start and threaded through all of that
+//! worker's jobs — the hook the sweep uses to carry a
+//! [`crate::sim::SimScratch`] arena across scenarios so steady-state
+//! iterations are allocation-free.
 
 use crate::error::{Error, Result};
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-/// Run `f(0..jobs)` across `threads` workers (clamped to ≥ 1), returning
-/// the results in index order. If any job fails, the error with the
-/// lowest job index is returned (every job still runs to completion, so
-/// the choice of surfaced error is deterministic too).
-pub fn run_indexed<T, F>(jobs: usize, threads: usize, f: F) -> Result<Vec<T>>
+/// Run `f(scratch, 0..jobs)` across `threads` workers (clamped to ≥ 1),
+/// returning the results in index order. Each worker calls `init()` once
+/// and passes the resulting scratch to every job it executes; because
+/// job results must not depend on the scratch's prior use, the output is
+/// still deterministic and thread-count independent. If any job fails,
+/// the error with the lowest job index is returned (every job still runs
+/// to completion, so the choice of surfaced error is deterministic too).
+pub fn run_indexed_with<T, S, I, F>(jobs: usize, threads: usize, init: I, f: F) -> Result<Vec<T>>
 where
     T: Send,
-    F: Fn(usize) -> Result<T> + Sync,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> Result<T> + Sync,
 {
     if jobs == 0 {
         return Ok(Vec::new());
     }
-    let threads = threads.max(1).min(jobs);
+    let threads = threads.clamp(1, jobs);
 
     // Work queue: every index queued up front, sender dropped so workers
     // see Err(Disconnected) once the queue drains.
@@ -39,14 +49,19 @@ where
         for _ in 0..threads {
             let res_tx = res_tx.clone();
             let job_rx = &job_rx;
+            let init = &init;
             let f = &f;
-            s.spawn(move || loop {
-                // Hold the lock only while pulling the next index, never
-                // while running the job.
-                let next = { job_rx.lock().expect("job queue poisoned").recv() };
-                let Ok(i) = next else { break };
-                if res_tx.send((i, f(i))).is_err() {
-                    break;
+            s.spawn(move || {
+                // One scratch per worker, reused across all its jobs.
+                let mut scratch = init();
+                loop {
+                    // Hold the lock only while pulling the next index,
+                    // never while running the job.
+                    let next = { job_rx.lock().expect("job queue poisoned").recv() };
+                    let Ok(i) = next else { break };
+                    if res_tx.send((i, f(&mut scratch, i))).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -63,6 +78,16 @@ where
     }
     buf.sort_by_key(|(i, _)| *i);
     buf.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Scratch-free variant: run `f(0..jobs)` across `threads` workers,
+/// returning the results in index order.
+pub fn run_indexed<T, F>(jobs: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    run_indexed_with(jobs, threads, || (), |_, i| f(i))
 }
 
 #[cfg(test)]
@@ -113,5 +138,38 @@ mod tests {
         })
         .unwrap();
         assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_worker_scratch_is_built_once_and_reused() {
+        // Each worker's scratch counts the jobs it ran; the total across
+        // workers must equal the job count (every job saw *a* scratch),
+        // and results stay index-ordered regardless of which worker ran
+        // which job.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inits = AtomicUsize::new(0);
+        let out = run_indexed_with(
+            32,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                0usize // per-worker job counter
+            },
+            |scratch, i| {
+                *scratch += 1;
+                Ok((i, *scratch))
+            },
+        )
+        .unwrap();
+        assert_eq!(out.len(), 32);
+        // Index ordering holds.
+        for (slot, (i, _)) in out.iter().enumerate() {
+            assert_eq!(slot, *i);
+        }
+        // One scratch per worker, not per job — and at least one worker
+        // saw its counter advance past 1 (scratch reuse across jobs).
+        assert!(inits.load(Ordering::SeqCst) <= 4);
+        let max_count = out.iter().map(|&(_, c)| c).max().unwrap();
+        assert!(max_count > 1, "no worker reused its scratch");
     }
 }

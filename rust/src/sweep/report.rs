@@ -44,6 +44,9 @@ pub struct SweepReport {
     pub models: usize,
     /// Translations performed while building the cache (== `models`).
     pub translations: usize,
+    /// Scenarios pruned by the `--skip-infeasible` memory check before
+    /// reaching the worker pool.
+    pub pruned: usize,
     /// Results, fastest simulated iteration first.
     pub ranked: Vec<ScenarioResult>,
 }
@@ -83,6 +86,7 @@ impl SweepReport {
             ("models", Value::Num(self.models as f64)),
             ("translations", Value::Num(self.translations as f64)),
             ("scenarios", Value::Num(self.ranked.len() as f64)),
+            ("pruned", Value::Num(self.pruned as f64)),
             ("ranked", Value::Arr(ranked)),
         ])
     }
@@ -115,7 +119,14 @@ impl SweepReport {
                 if r.fits_hbm { "yes".to_string() } else { "NO".to_string() },
             ]);
         }
-        t.render()
+        let mut out = t.render();
+        if self.pruned > 0 {
+            out.push_str(&format!(
+                "pruned {} infeasible scenario(s): memory_per_npu exceeds HBM\n",
+                self.pruned
+            ));
+        }
+        out
     }
 }
 
@@ -144,7 +155,12 @@ mod tests {
             mem_per_npu_bytes: 1 << 30,
             fits_hbm: true,
         };
-        SweepReport { models: 2, translations: 2, ranked: vec![mk("mlp", 10), mk("vgg16", 20)] }
+        SweepReport {
+            models: 2,
+            translations: 2,
+            pruned: 0,
+            ranked: vec![mk("mlp", 10), mk("vgg16", 20)],
+        }
     }
 
     #[test]
@@ -174,5 +190,16 @@ mod tests {
         assert!(text.contains("DATA"));
         assert!(text.contains("pipelined"));
         assert_eq!(text.lines().count(), 2 + r.ranked.len());
+    }
+
+    #[test]
+    fn pruned_count_shows_in_both_renderings() {
+        let mut r = sample();
+        r.pruned = 3;
+        let text = r.render_text();
+        assert!(text.contains("pruned 3 infeasible"));
+        assert_eq!(text.lines().count(), 2 + r.ranked.len() + 1);
+        let v = crate::json::parse(&r.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("pruned").unwrap().as_u64(), Some(3));
     }
 }

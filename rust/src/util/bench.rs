@@ -3,7 +3,19 @@
 //! Provides warmup, fixed-count timed iterations, and summary statistics
 //! (mean / stddev / min / max / p50) so the `benches/` targets can print
 //! the same mean-and-variance series the paper's Figure 6 reports.
+//!
+//! # Machine-readable output
+//!
+//! Every bench binary funnels its series through a [`BenchReport`],
+//! which serializes each series' summary **plus the raw samples** to
+//! `BENCH_<name>.json` (via the in-crate JSON writer). CI's bench-smoke
+//! job uploads these files as artifacts, making per-PR perf deltas
+//! diffable — the repo's perf trajectory. Set `MODTRANS_BENCH_OUT` to
+//! choose the output directory (default: current directory).
 
+use crate::json::{obj, Value};
+use crate::Result;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Summary statistics over per-iteration wall-clock samples (seconds).
@@ -23,11 +35,13 @@ pub struct Stats {
     pub max: f64,
     /// Median sample (s).
     pub p50: f64,
+    /// Raw samples in measurement order (s).
+    pub samples: Vec<f64>,
 }
 
 impl Stats {
     /// Compute statistics from raw samples.
-    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Stats {
+    pub fn from_samples(name: &str, samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
@@ -36,15 +50,17 @@ impl Stats {
         } else {
             0.0
         };
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Stats {
             name: name.to_string(),
             n,
             mean,
             stddev: var.sqrt(),
-            min: samples[0],
-            max: samples[n - 1],
-            p50: samples[n / 2],
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: sorted[n / 2],
+            samples,
         }
     }
 
@@ -60,6 +76,20 @@ impl Stats {
             crate::util::human_time(self.p50),
             crate::util::human_time(self.max),
         )
+    }
+
+    /// Machine-readable form: summary statistics plus raw samples.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("n", Value::Num(self.n as f64)),
+            ("mean", Value::Num(self.mean)),
+            ("stddev", Value::Num(self.stddev)),
+            ("p50", Value::Num(self.p50)),
+            ("min", Value::Num(self.min)),
+            ("max", Value::Num(self.max)),
+            ("samples", Value::Arr(self.samples.iter().map(|&s| Value::Num(s)).collect())),
+        ])
     }
 }
 
@@ -109,6 +139,61 @@ impl Bench {
     }
 }
 
+/// Collects every series a bench binary produces and writes them to
+/// `BENCH_<name>.json` — the per-PR perf-trajectory artifact.
+#[derive(Debug)]
+pub struct BenchReport {
+    name: String,
+    series: Vec<Stats>,
+}
+
+impl BenchReport {
+    /// Start a report for the bench binary `name` (the file becomes
+    /// `BENCH_<name>.json`).
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), series: Vec::new() }
+    }
+
+    /// Run a series through `bench` and record its stats.
+    pub fn run<F: FnMut(usize)>(&mut self, bench: &Bench, label: &str, f: F) -> &Stats {
+        let s = bench.run(label, f);
+        self.series.push(s);
+        self.series.last().expect("series just pushed")
+    }
+
+    /// Record a hand-timed series (e.g. single-shot throughput numbers).
+    pub fn add(&mut self, stats: Stats) {
+        self.series.push(stats);
+    }
+
+    /// Recorded series, in run order.
+    pub fn series(&self) -> &[Stats] {
+        &self.series
+    }
+
+    /// Machine-readable form of the whole report.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("series", Value::Arr(self.series.iter().map(Stats::to_json).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `$MODTRANS_BENCH_OUT` (default:
+    /// current directory); returns the path written.
+    pub fn write(&self) -> Result<PathBuf> {
+        let dir = std::env::var("MODTRANS_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+        self.write_to(Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into an explicit directory.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_json_pretty())?;
+        Ok(path)
+    }
+}
+
 /// Prevent the optimizer from discarding a computed value
 /// (`std::hint::black_box` wrapper, kept for call-site clarity).
 pub fn black_box<T>(x: T) -> T {
@@ -137,6 +222,14 @@ mod tests {
     }
 
     #[test]
+    fn stats_keep_raw_sample_order() {
+        let s = Stats::from_samples("x", vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.samples, vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
     fn bench_runs_expected_iterations() {
         let mut count = 0;
         // Direct construction bypasses the MODTRANS_BENCH_SAMPLES cap so
@@ -145,5 +238,39 @@ mod tests {
         let s = b.run("iters", |_| count += 1);
         assert_eq!(count, 7);
         assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn report_json_has_every_series_and_raw_samples() {
+        let mut report = BenchReport::new("unit");
+        report.add(Stats::from_samples("a", vec![1.0, 2.0]));
+        report.add(Stats::from_samples("b", vec![0.5]));
+        assert_eq!(report.series().len(), 2);
+        let v = crate::json::parse(&report.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("unit"));
+        let series = v.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(series[0].get("n").unwrap().as_u64(), Some(2));
+        let samples = series[0].get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].as_f64(), Some(1.0));
+        assert_eq!(series[1].get("mean").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn report_writes_bench_json_file() {
+        // Explicit-directory path: no process-global env mutation (the
+        // test harness runs tests concurrently in one process).
+        let dir = std::env::temp_dir().join("modtrans_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut report = BenchReport::new("writer_unit");
+        report.add(Stats::from_samples("s", vec![0.25, 0.75]));
+        let path = report.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str(), Some("BENCH_writer_unit.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::json::parse(&text).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("writer_unit"));
+        let _ = std::fs::remove_file(&path);
     }
 }

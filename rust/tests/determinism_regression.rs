@@ -1,0 +1,178 @@
+//! Determinism regression suite for the `TaskTag`/`SimScratch` refactor.
+//!
+//! Golden values are derived analytically from the simulator's semantics
+//! (serial-chain and pipeline makespans are exact sums; collective times
+//! come from the same `collective_ns` model the simulator uses), so any
+//! change to graph construction, dependency wiring, dispatch order or
+//! scratch reuse that shifts results — even by one nanosecond — fails
+//! here. The sweep-level checks additionally pin the byte-identical
+//! ranked-JSON guarantee across worker-thread counts.
+
+use modtrans::sim::{
+    collective_ns, simulate, simulate_with, Network, SimConfig, SimScratch, TopologyKind,
+};
+use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid};
+use modtrans::workload::{CommType, LayerSpec, Parallelism, Phase, Workload};
+
+fn layer(
+    name: &str,
+    fwd: u64,
+    wg: u64,
+    ig: u64,
+    upd: u64,
+    comm: CommType,
+    bytes: u64,
+) -> LayerSpec {
+    LayerSpec {
+        name: name.into(),
+        reserved: -1,
+        fwd: Phase::compute_only(fwd),
+        input_grad: Phase::compute_only(ig),
+        weight_grad: Phase { compute_ns: wg, comm, comm_bytes: bytes },
+        update_ns: upd,
+    }
+}
+
+fn ring_cfg(npus: usize, iterations: usize) -> SimConfig {
+    SimConfig {
+        network: Network::single(TopologyKind::Ring, npus, 100.0, 500.0),
+        iterations,
+        ..Default::default()
+    }
+}
+
+/// Golden: a comm-free flat workload is a pure serial chain on one
+/// compute stream — the makespan is exactly the sum of all task
+/// durations, with zero idle time.
+#[test]
+fn golden_flat_serial_chain_makespan() {
+    let w = Workload {
+        parallelism: Parallelism::Data,
+        layers: vec![
+            layer("l0", 100, 50, 25, 10, CommType::None, 0),
+            layer("l1", 200, 75, 40, 10, CommType::None, 0),
+        ],
+    };
+    let r = simulate(&w, &ring_cfg(8, 3)).unwrap();
+    // Per iteration: (100+50+25+10) + (200+75+40+10) = 510; 3 iterations.
+    assert_eq!(r.total_ns, 1530);
+    assert_eq!(r.iteration_ns, 510);
+    // 8 tasks per iteration (fwd/wg/ig/upd × 2 layers), no comm tasks.
+    assert_eq!(r.events, 24);
+    assert_eq!(r.compute_busy_ns, vec![1530]);
+    assert_eq!(r.net_busy_ns, vec![0]);
+    assert_eq!(r.exposed_ns, 0);
+    // Breakdown attributes every nanosecond back to its layer.
+    assert_eq!(r.breakdown.len(), 2);
+    assert_eq!(r.breakdown[0].compute_ns, 3 * 185);
+    assert_eq!(r.breakdown[1].compute_ns, 3 * 325);
+    assert_eq!(r.breakdown[0].comm_ns + r.breakdown[1].comm_ns, 0);
+}
+
+/// Golden: one DP layer with a ring all-reduce. The gradient collective
+/// overlaps the input-grad compute; the optimizer update waits for the
+/// collective, so the makespan is max(cpu path, comm path) + update.
+#[test]
+fn golden_dp_allreduce_overlap_makespan() {
+    let bytes = 1u64 << 20;
+    let cfg = ring_cfg(8, 1);
+    let c = collective_ns(CommType::AllReduce, bytes, &cfg.network.dims[0]);
+    assert!(c > 25, "payload too small for the overlap shape this golden pins");
+    let w = Workload {
+        parallelism: Parallelism::Data,
+        layers: vec![layer("l0", 100, 50, 25, 10, CommType::AllReduce, bytes)],
+    };
+    let r = simulate(&w, &cfg).unwrap();
+    // cpu: fwd 0–100, wg 100–150, ig 150–175. net: allreduce 150–150+c.
+    // upd starts at max(175, 150+c), runs 10.
+    let upd_start = 175u64.max(150 + c);
+    assert_eq!(r.total_ns, upd_start + 10);
+    assert_eq!(r.net_busy_ns, vec![c]);
+    assert_eq!(r.compute_busy_ns, vec![185]);
+    assert_eq!(r.events, 5);
+    // The layer's attributed comm is exactly the collective service time.
+    assert_eq!(r.breakdown[0].comm_ns, c);
+}
+
+/// Golden: a 4-stage, 1-microbatch, comm-free pipeline is fully serial:
+/// 4 forwards + 4 backwards + the stage-0 update on the critical path.
+#[test]
+fn golden_pipeline_single_microbatch_makespan() {
+    let w = Workload {
+        parallelism: Parallelism::Pipeline,
+        layers: (0..4)
+            .map(|i| layer(&format!("l{i}"), 10_000, 10_000, 10_000, 10, CommType::None, 0))
+            .collect(),
+    };
+    let mut cfg = ring_cfg(4, 1);
+    cfg.stages = 4;
+    cfg.microbatches = 1;
+    cfg.boundary_bytes = 0;
+    let r = simulate(&w, &cfg).unwrap();
+    // fwd 4×10k serial, bwd 4×(10k+10k) serial, then stage-0's update:
+    // 40_000 + 80_000 + 10.
+    assert_eq!(r.total_ns, 120_010);
+    // 4 fwd + 4 bwd + 4 upd tasks (boundary bytes 0 ⇒ no p2p tasks).
+    assert_eq!(r.events, 12);
+    assert_eq!(r.net_busy_ns, vec![0]);
+}
+
+/// The same goldens must hold through a reused scratch — the refactor's
+/// core claim is that scratch reuse never changes results.
+#[test]
+fn goldens_hold_with_reused_scratch() {
+    let mut scratch = SimScratch::new();
+    let serial = Workload {
+        parallelism: Parallelism::Data,
+        layers: vec![
+            layer("l0", 100, 50, 25, 10, CommType::None, 0),
+            layer("l1", 200, 75, 40, 10, CommType::None, 0),
+        ],
+    };
+    let pipe = Workload {
+        parallelism: Parallelism::Pipeline,
+        layers: (0..4)
+            .map(|i| layer(&format!("l{i}"), 10_000, 10_000, 10_000, 10, CommType::None, 0))
+            .collect(),
+    };
+    let mut pipe_cfg = ring_cfg(4, 1);
+    pipe_cfg.stages = 4;
+    pipe_cfg.microbatches = 1;
+    pipe_cfg.boundary_bytes = 0;
+    for _ in 0..3 {
+        let r = simulate_with(&serial, &ring_cfg(8, 3), &mut scratch).unwrap();
+        assert_eq!(r.total_ns, 1530);
+        assert_eq!(r.events, 24);
+        let r = simulate_with(&pipe, &pipe_cfg, &mut scratch).unwrap();
+        assert_eq!(r.total_ns, 120_010);
+        assert_eq!(r.events, 12);
+    }
+}
+
+/// Sweep ranked JSON must be byte-identical across worker-thread counts
+/// and across repeated runs (per-worker scratch arenas must not leak
+/// state between scenarios).
+#[test]
+fn sweep_ranked_json_is_byte_identical_across_threads_and_reruns() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
+    };
+    let cfg = |threads: usize| SweepConfig { threads, batch: 4, npus: 8, ..Default::default() };
+    let baseline = run_sweep(&grid, &cfg(1)).unwrap().to_json().to_json_pretty();
+    for threads in [1usize, 2, 4, 8] {
+        for _ in 0..2 {
+            let out = run_sweep(&grid, &cfg(threads)).unwrap().to_json().to_json_pretty();
+            assert_eq!(out, baseline, "threads={threads} changed the ranked JSON");
+        }
+    }
+    // Every expanded scenario appears exactly once in the ranking.
+    let report = run_sweep(&grid, &cfg(4)).unwrap();
+    let mut keys: Vec<String> = report.ranked.iter().map(|r| r.scenario.key()).collect();
+    keys.sort();
+    let mut expect: Vec<String> = grid.expand().iter().map(|s| s.key()).collect();
+    expect.sort();
+    assert_eq!(keys, expect);
+}
