@@ -6,9 +6,9 @@ CARGO ?= cargo
 
 BENCHES := collectives table_layer_extraction sim_end_to_end fig6_translation_time sweep_throughput
 
-.PHONY: ci build test fmt clippy hot-path-alloc-guard bench-smoke sweep-determinism clean
+.PHONY: ci build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism clean
 
-ci: build test fmt clippy hot-path-alloc-guard bench-smoke sweep-determinism
+ci: build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism
 	@echo "CI matrix green"
 
 build:
@@ -24,11 +24,18 @@ fmt:
 clippy:
 	$(CARGO) clippy --workspace --all-targets -- -D warnings
 
+# Gating, like CI: rustdoc warnings fail the build.
+docs:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --workspace
+
 # The allocation-free invariant: no label-string allocation in the sim
-# hot paths (graph builders + collective router, non-test regions).
+# hot paths (graph builders + collective router) or the sweep's
+# workload-derivation hot path (IR comm pass + workload emitter),
+# non-test regions only.
 hot-path-alloc-guard:
 	@fail=0; \
-	for f in rust/src/sim/training/mod.rs rust/src/sim/system/mod.rs; do \
+	for f in rust/src/sim/training/mod.rs rust/src/sim/system/mod.rs \
+	         rust/src/ir/passes.rs rust/src/ir/emit/sim.rs; do \
 		if sed -n '1,/#\[cfg(test)\]/p' $$f | grep -nE 'format!|to_string\(|to_owned\(|String::(new|from|with_capacity)'; then \
 			echo "per-task string allocation found in $$f hot path"; fail=1; \
 		fi; \
@@ -52,9 +59,13 @@ sweep-determinism: build
 	./target/release/modtrans sweep --threads 1 --hbm-gib 1 --skip-infeasible -o sweep_p1.json
 	./target/release/modtrans sweep --threads 8 --hbm-gib 1 --skip-infeasible -o sweep_p8.json
 	diff sweep_p1.json sweep_p8.json
-	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json
+	./target/release/modtrans sweep --threads 2 --shard 1/2 -o shard1.json
+	./target/release/modtrans sweep --threads 2 --shard 2/2 -o shard2.json
+	./target/release/modtrans sweep-merge shard1.json shard2.json -o merged.json
+	python3 -c 'import json; a=json.load(open("merged.json")); b=json.load(open("sweep_t1.json")); assert a["ranked"]==b["ranked"], "shard merge diverged"'
+	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json
 
 clean:
 	$(CARGO) clean
-	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json
+	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json
 	rm -rf bench-out

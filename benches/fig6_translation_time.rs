@@ -12,6 +12,7 @@
 //! paper's Python numbers (EXPERIMENTS.md §Perf).
 
 use modtrans::compute::SystolicCompute;
+use modtrans::ir;
 use modtrans::onnx::{encode_model, parse_model};
 use modtrans::translator::{extract_from_bytes, to_workload, TranslateOpts};
 use modtrans::util::bench::{black_box, Bench, BenchReport, Stats};
@@ -24,6 +25,25 @@ fn translate(bytes: &[u8]) -> usize {
     emit(summary)
 }
 
+/// The zoo-direct frontend path: builder → IR → passes → emit, with no
+/// ONNX encode/decode round-trip and no weight payloads.
+fn translate_zoo_direct(name: &str) -> usize {
+    let mut model_ir = ir::frontend::from_zoo(name, 32).unwrap();
+    ir::passes::annotate_compute(&mut model_ir, &SystolicCompute::new(32));
+    ir::passes::annotate_comm(&mut model_ir, translate_opts());
+    ir::emit::to_sim_workload(&model_ir).unwrap().emit().len()
+}
+
+fn translate_opts() -> TranslateOpts {
+    TranslateOpts {
+        parallelism: Parallelism::Data,
+        npus: 16,
+        mp_group: 4,
+        batch: 32,
+        zero: modtrans::translator::ZeroStage::None,
+    }
+}
+
 /// Paper-comparable mode: deserialize *everything* (payload copies
 /// included), as the python+onnx reference implementation does, then
 /// extract and emit.
@@ -34,12 +54,7 @@ fn translate_full(bytes: &[u8]) -> usize {
 }
 
 fn emit(summary: modtrans::translator::ModelSummary) -> usize {
-    let w = to_workload(
-        &summary,
-        TranslateOpts { parallelism: Parallelism::Data, npus: 16, mp_group: 4, batch: 32, zero: modtrans::translator::ZeroStage::None },
-        &SystolicCompute::new(32),
-    )
-    .unwrap();
+    let w = to_workload(&summary, translate_opts(), &SystolicCompute::new(32)).unwrap();
     w.emit().len()
 }
 
@@ -50,6 +65,7 @@ fn main() {
     let full_bench = Bench::new(1, 10);
     let mut results: Vec<(String, Stats)> = Vec::new();
     let mut full_results: Vec<(String, Stats)> = Vec::new();
+    let mut direct_results: Vec<(String, Stats)> = Vec::new();
     for name in ["resnet50", "vgg16", "vgg19"] {
         let model = zoo::get(name, ZooOpts { weights: WeightFill::Zeros }).unwrap();
         let bytes = encode_model(&model);
@@ -68,6 +84,14 @@ fn main() {
             })
             .clone();
         full_results.push((name.to_string(), s));
+        // Zoo-direct IR frontend: no encode/decode round-trip at all —
+        // the builder output goes straight into extraction.
+        let s = report
+            .run(&bench, &format!("translate {name} (zoo-direct frontend)"), |_| {
+                black_box(translate_zoo_direct(name));
+            })
+            .clone();
+        direct_results.push((name.to_string(), s));
     }
 
     println!("\n## ablation: metadata-only vs full-payload decode (vgg16)\n");
@@ -92,6 +116,14 @@ fn main() {
             "  {name}: mean {} — {}x under the paper's 1 s budget",
             modtrans::util::human_time(s.mean),
             (1.0 / s.mean) as u64
+        );
+    }
+    println!("zoo-direct IR frontend (builder → IR, no ONNX round-trip):");
+    for ((name, s), (_, via_bytes)) in direct_results.iter().zip(results.iter()) {
+        println!(
+            "  {name}: mean {} — {:.1}x faster than decoding the serialized model",
+            modtrans::util::human_time(s.mean),
+            via_bytes.mean / s.mean.max(f64::MIN_POSITIVE),
         );
     }
 

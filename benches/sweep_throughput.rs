@@ -1,13 +1,15 @@
 //! E7 — sweep-engine throughput: scenarios per second over the default
 //! 18-scenario grid (2 models × 3 parallelisms × 3 topologies), 1 thread
 //! vs 8 threads. This is the metric the scenario-sweep engine optimizes:
-//! with per-worker `SimScratch` arenas, steady-state scenario execution
-//! is allocation-free, so throughput tracks raw event math.
+//! per-worker `ScenarioScratch` arenas make steady-state derivation and
+//! simulation allocation-free, and the IR-caching `WorkloadCache` means
+//! each scenario re-runs only the parallelism-dependent comm pass — the
+//! structural extraction and compute pass are shared per (model, batch).
 //!
 //! Emits `BENCH_sweep_throughput.json` for the CI-tracked perf
 //! trajectory.
 
-use modtrans::sweep::{run_sweep, SweepConfig, SweepGrid};
+use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid};
 use modtrans::util::bench::{black_box, Bench, BenchReport};
 
 fn main() {
@@ -32,6 +34,24 @@ fn main() {
     report.run(&bench, "sweep_all_pruned_1thread", |_| {
         black_box(run_sweep(&grid, &cfg).unwrap());
     });
+
+    // Batched-derivation stress: widen the collective axis 3×, so 54
+    // scenarios share 2 cached compute-annotated IRs and each re-runs
+    // only the comm pass + allocation-free emit before simulating.
+    let wide = SweepGrid {
+        collectives: vec![
+            CollectiveAlgo::Direct,
+            CollectiveAlgo::Pipelined,
+            CollectiveAlgo::PipelinedLifo,
+        ],
+        ..SweepGrid::default()
+    };
+    let wide_n = wide.expand().len();
+    let cfg = SweepConfig { threads: 1, ..Default::default() };
+    let s = report.run(&bench, &format!("sweep_{wide_n}_scenarios_1thread_shared_ir"), |_| {
+        black_box(run_sweep(&wide, &cfg).unwrap());
+    });
+    println!("  -> {:.1} scenarios/s over the widened grid (1 thread)", wide_n as f64 / s.mean);
 
     let path = report.write().unwrap();
     println!("wrote {}", path.display());

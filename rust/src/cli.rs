@@ -17,11 +17,12 @@
 use crate::calibrate::{Calibration, MeasuredCompute};
 use crate::compute::SystolicCompute;
 use crate::error::{Error, Result};
+use crate::ir;
 use crate::onnx;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::sim::{self, Network, Policy, SimConfig, TopologyKind};
-use crate::sweep::{self, CollectiveAlgo, SweepConfig, SweepGrid};
+use crate::sweep::{self, CollectiveAlgo, SweepConfig, SweepGrid, SweepReport};
 use crate::translator::{
     self, ComputeTimeModel, ConstantCompute, RooflineCompute, TranslateOpts,
 };
@@ -113,6 +114,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "translate" => cmd_translate(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "sweep-merge" => cmd_sweep_merge(&args),
         "memory" => cmd_memory(&args),
         "calibrate" => cmd_calibrate(&args),
         "validate" => cmd_validate(&args),
@@ -131,15 +133,16 @@ USAGE:
   modtrans zoo build <name> -o model.onnx [--weights zeros|random|empty]
   modtrans inspect <file.onnx|zoo:name> [--all] [--batch N]
   modtrans translate <file.onnx|zoo:name> [-o out.txt] [--parallelism data|model|hybrid-dm|hybrid-md|pipeline]
-            [--npus N] [--mp-group G] [--batch B]
+            [--npus N] [--mp-group G] [--batch B] [--format text|et-json]
             [--compute roofline|systolic|constant:<ns>|measured:<cal.json>] [--zero 0|1|2|3]
   modtrans simulate <workload.txt> [--network net.json | --topology ring|fc|switch|torus2d --npus N]
             [--iterations I] [--policy fifo|lifo] [--chunks C]
             [--stages S] [--microbatches M] [--boundary-bytes B]
   modtrans sweep [model[,model...]] [--models LIST] [--parallelisms data,model,...]
             [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
-            [--npus N] [--batch B] [--mp-group G] [--iterations I]
+            [--npus N] [--batch B] [--mp-group G] [--iterations I] [--shard K/N]
             [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible] [-o results.json]
+  modtrans sweep-merge <shard.json> [shard.json ...] [-o merged.json]
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
   modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (needs --features pjrt)
@@ -282,21 +285,51 @@ fn cmd_translate(args: &Args) -> Result<()> {
         zero: parse_zero(args)?,
     };
     let compute = parse_compute(args.opt("compute").unwrap_or("systolic"), batch)?;
+    let format = args.opt("format").unwrap_or("text");
+    if format != "text" && format != "et-json" {
+        return Err(Error::Usage(format!(
+            "unknown translate format '{format}' (expected text or et-json)"
+        )));
+    }
+    // The staged pipeline: frontend → compute pass → comm pass → emitter.
     let model = load_model(spec, false)?;
-    let summary = translator::extract(&model, batch)?;
-    let workload = translator::to_workload(&summary, opts, compute.as_ref())?;
-    let text = workload.emit();
-    match args.opt("out") {
-        Some(path) => {
-            std::fs::write(path, &text)?;
-            println!(
-                "wrote {path}: {} layers, {} comm volume, {} compute per pass",
-                workload.layers.len(),
-                human_bytes(workload.total_comm_bytes()),
-                human_time(workload.total_compute_ns() as f64 * 1e-9),
-            );
+    let mut model_ir = ir::frontend::from_model(&model, batch)?;
+    ir::passes::annotate_compute(&mut model_ir, compute.as_ref());
+    ir::passes::annotate_comm(&mut model_ir, opts);
+    match format {
+        "text" => {
+            let workload = ir::emit::to_sim_workload(&model_ir)?;
+            let text = workload.emit();
+            match args.opt("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)?;
+                    println!(
+                        "wrote {path}: {} layers, {} comm volume, {} compute per pass",
+                        workload.layers.len(),
+                        human_bytes(workload.total_comm_bytes()),
+                        human_time(workload.total_compute_ns() as f64 * 1e-9),
+                    );
+                }
+                None => print!("{text}"),
+            }
         }
-        None => print!("{text}"),
+        _ => {
+            let graph = ir::emit::et_json(&model_ir)?;
+            let nodes = graph.get("nodes").and_then(|n| n.as_arr()).map_or(0, |n| n.len());
+            let text = graph.to_json_pretty();
+            match args.opt("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)?;
+                    println!(
+                        "wrote {path}: {} graph nodes over {} layers ({})",
+                        nodes,
+                        model_ir.num_layers(),
+                        ir::emit::ET_JSON_SCHEMA,
+                    );
+                }
+                None => print!("{text}"),
+            }
+        }
     }
     Ok(())
 }
@@ -479,10 +512,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         hbm_bytes: (args.opt_parse("hbm-gib", 32u64)?) << 30,
         zero: parse_zero(args)?,
         skip_infeasible: args.flag("skip-infeasible"),
+        shard: parse_shard(args)?,
     };
     let report = sweep::run_sweep(&grid, &cfg)?;
+    let shard_note = match cfg.shard {
+        Some((k, n)) => format!(" [shard {k}/{n}]"),
+        None => String::new(),
+    };
     println!(
-        "sweep: {} scenarios over {} models on {} worker threads \
+        "sweep{shard_note}: {} scenarios over {} models on {} worker threads \
          ({} translations — one per model, shared by all scenarios)",
         report.ranked.len(),
         report.models,
@@ -492,6 +530,48 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     print!("{}", report.render_text());
     if let Some(path) = args.opt("out") {
         std::fs::write(path, report.to_json().to_json_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Parse `--shard K/N` (1-based shard index over the deterministic
+/// scenario order; grammar shared with the report's `"shard"` field via
+/// [`sweep::parse_shard_spec`]).
+fn parse_shard(args: &Args) -> Result<Option<(usize, usize)>> {
+    let Some(spec) = args.opt("shard") else {
+        return Ok(None);
+    };
+    match sweep::parse_shard_spec(spec) {
+        Some(shard) => Ok(Some(shard)),
+        None => Err(Error::Usage(format!(
+            "bad --shard '{spec}' — expected K/N with 1 <= K <= N"
+        ))),
+    }
+}
+
+/// Merge per-shard `sweep -o` JSON reports into one re-ranked report.
+fn cmd_sweep_merge(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        return Err(Error::Usage("sweep-merge needs at least one shard JSON file".into()));
+    }
+    let mut shards = Vec::with_capacity(args.positional.len());
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)?;
+        shards.push(SweepReport::from_json(&crate::json::parse(&text)?)?);
+    }
+    let merged = SweepReport::merge(&shards)?;
+    println!(
+        "merged {} shard file(s): {} scenarios over {} models ({} translations, {} pruned)",
+        shards.len(),
+        merged.ranked.len(),
+        merged.models,
+        merged.translations,
+        merged.pruned,
+    );
+    print!("{}", merged.render_text());
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, merged.to_json().to_json_pretty())?;
         println!("wrote {path}");
     }
     Ok(())
@@ -696,6 +776,74 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         run(&argv).unwrap();
+    }
+
+    #[test]
+    fn shard_spec_parses_and_validates() {
+        assert_eq!(parse_shard(&args(&[])).unwrap(), None);
+        assert_eq!(parse_shard(&args(&["--shard", "1/4"])).unwrap(), Some((1, 4)));
+        assert_eq!(parse_shard(&args(&["--shard", "4/4"])).unwrap(), Some((4, 4)));
+        for bad in ["0/4", "5/4", "1-4", "x/y", "1/", "/2", "1/0"] {
+            assert!(parse_shard(&args(&["--shard", bad])).is_err(), "'{bad}' should fail");
+        }
+    }
+
+    #[test]
+    fn sharded_sweep_runs_and_merge_reconstructs_it() {
+        let dir = std::env::temp_dir().join(format!("modtrans_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = |name: &str| dir.join(name).to_str().unwrap().to_string();
+        let run_args = |v: &[&str]| {
+            let argv: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+            run(&argv).unwrap();
+        };
+        let base = ["sweep", "mlp", "--npus", "8", "--batch", "4", "--threads", "2"];
+        let with = |extra: &[&str]| {
+            let mut v: Vec<&str> = base.to_vec();
+            v.extend_from_slice(extra);
+            v
+        };
+        let (f, s1, s2, m) = (p("full.json"), p("s1.json"), p("s2.json"), p("merged.json"));
+        run_args(&with(&["-o", &f]));
+        run_args(&with(&["--shard", "1/2", "-o", &s1]));
+        run_args(&with(&["--shard", "2/2", "-o", &s2]));
+        run_args(&["sweep-merge", &s1, &s2, "-o", &m]);
+        let full = crate::json::parse(&std::fs::read_to_string(&f).unwrap()).unwrap();
+        let merged = crate::json::parse(&std::fs::read_to_string(&m).unwrap()).unwrap();
+        assert_eq!(merged.get("ranked"), full.get("ranked"));
+        // Overlapping shards must fail the merge.
+        let overlap: Vec<String> = vec!["sweep-merge".into(), s1.clone(), s1.clone()];
+        assert!(run(&overlap).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn translate_formats() {
+        let dir = std::env::temp_dir().join(format!("modtrans_fmt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("mlp.et.json");
+        let argv: Vec<String> = [
+            "translate",
+            "zoo:mlp",
+            "--batch",
+            "4",
+            "--format",
+            "et-json",
+            "-o",
+            out.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(&argv).unwrap();
+        let v = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(crate::ir::emit::ET_JSON_SCHEMA));
+        assert!(!v.get("nodes").unwrap().as_arr().unwrap().is_empty());
+        // Unknown formats are usage errors.
+        let bad: Vec<String> =
+            vec!["translate".into(), "zoo:mlp".into(), "--format".into(), "yaml".into()];
+        assert!(run(&bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

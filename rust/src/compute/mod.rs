@@ -153,6 +153,12 @@ impl SystolicCompute {
 }
 
 impl ComputeTimeModel for SystolicCompute {
+    /// The optimizer update streams parameters at the accelerator's DRAM
+    /// bandwidth (GB/s == bytes/ns), not the historical 100 GB/s default.
+    fn update_bandwidth(&self) -> f64 {
+        self.cfg.dram_gbps
+    }
+
     fn layer_times(&self, layer: &LayerInfo) -> (u64, u64, u64) {
         let e = layer.dtype.size_bytes().max(1);
         let f = Gemm::from_layer(layer, self.batch);

@@ -1,0 +1,189 @@
+//! Chakra-ET-style JSON graph emitter.
+//!
+//! ASTRA-sim 2.0 moved from layer-wise text descriptions to graph-based
+//! workload inputs (Chakra execution traces): compute and collective
+//! nodes with explicit data dependencies. This emitter lowers an
+//! annotated IR to that shape as deterministic JSON — one training step
+//! of the standard schedule:
+//!
+//! * per layer, in order: a `COMP_NODE` for the forward pass, followed
+//!   by a `COMM_COLL_NODE` when the comm pass planned a collective;
+//! * the backward sweep in reverse layer order: input-gradient and
+//!   weight-gradient `COMP_NODE`s both depend on the upstream gradient
+//!   (they can overlap, as in the simulator's training graph), each
+//!   followed by its planned collective;
+//! * a `COMP_NODE` optimizer update per layer, gated on the
+//!   weight-gradient collective.
+//!
+//! Node ids are dense and creation-ordered, and every dependency points
+//! to a lower id, so the node list is already topologically sorted.
+//! Keys are emitted through the crate's `BTreeMap`-backed JSON value,
+//! making the output byte-deterministic — goldenable in tests.
+
+use crate::error::{Error, Result};
+use crate::ir::ModelIR;
+use crate::json::{obj, Value};
+use crate::workload::CommType;
+
+/// Schema identifier stamped into every emitted document.
+pub const ET_JSON_SCHEMA: &str = "modtrans-et-json/v1";
+
+/// Incremental node-list builder (ids are assigned in creation order).
+struct EtBuilder {
+    nodes: Vec<Value>,
+}
+
+impl EtBuilder {
+    fn push(&mut self, name: String, fields: Vec<(&str, Value)>, deps: &[u64]) -> u64 {
+        let id = self.nodes.len() as u64;
+        let mut all = vec![
+            ("id", Value::Num(id as f64)),
+            ("name", Value::Str(name)),
+            ("data_deps", Value::Arr(deps.iter().map(|&d| Value::Num(d as f64)).collect())),
+        ];
+        all.extend(fields);
+        self.nodes.push(obj(all));
+        id
+    }
+
+    fn comp(&mut self, name: String, duration_ns: u64, deps: &[u64]) -> u64 {
+        self.push(
+            name,
+            vec![
+                ("type", Value::Str("COMP_NODE".into())),
+                ("duration_ns", Value::Num(duration_ns as f64)),
+            ],
+            deps,
+        )
+    }
+
+    fn comm(&mut self, name: String, comm: (CommType, u64), deps: &[u64]) -> u64 {
+        self.push(
+            name,
+            vec![
+                ("type", Value::Str("COMM_COLL_NODE".into())),
+                ("comm_type", Value::Str(comm.0.token().into())),
+                ("comm_size", Value::Num(comm.1 as f64)),
+            ],
+            deps,
+        )
+    }
+}
+
+/// Emit one training step of a fully annotated IR as a Chakra-ET-style
+/// JSON graph.
+pub fn et_json(ir: &ModelIR) -> Result<Value> {
+    let parallelism = ir
+        .comm_annotated()
+        .ok_or_else(|| Error::translate("et-json: comm pass has not run on this IR"))?;
+    if !ir.compute_annotated() {
+        return Err(Error::translate("et-json: compute pass has not run on this IR"));
+    }
+    if ir.is_empty() {
+        return Err(Error::translate("et-json: model has no weight-bearing layers"));
+    }
+
+    let n = ir.num_layers();
+    let mut b = EtBuilder { nodes: Vec::with_capacity(7 * n) };
+
+    // Forward chain.
+    let mut prev: Option<u64> = None;
+    for i in 0..n {
+        let l = ir.layer(i);
+        let deps: Vec<u64> = prev.into_iter().collect();
+        let fid = b.comp(format!("{}.fwd", l.info.name), l.cost.fwd_ns, &deps);
+        let mut finish = fid;
+        if l.comm.fwd.0 != CommType::None {
+            finish = b.comm(format!("{}.fwd.comm", l.info.name), l.comm.fwd, &[fid]);
+        }
+        prev = Some(finish);
+    }
+
+    // Backward sweep: ig/wg both gate on the upstream gradient; the
+    // update gates on the weight-gradient collective.
+    let mut upstream = prev.unwrap_or(0);
+    for i in (0..n).rev() {
+        let l = ir.layer(i);
+        let ig = b.comp(format!("{}.ig", l.info.name), l.cost.ig_ns, &[upstream]);
+        let mut ig_finish = ig;
+        if l.comm.ig.0 != CommType::None {
+            ig_finish = b.comm(format!("{}.ig.comm", l.info.name), l.comm.ig, &[ig]);
+        }
+        let wg = b.comp(format!("{}.wg", l.info.name), l.cost.wg_ns, &[upstream]);
+        let mut wg_finish = wg;
+        if l.comm.wg.0 != CommType::None {
+            wg_finish = b.comm(format!("{}.wg.comm", l.info.name), l.comm.wg, &[wg]);
+        }
+        b.comp(format!("{}.update", l.info.name), l.cost.update_ns, &[wg_finish]);
+        upstream = ig_finish;
+    }
+
+    Ok(obj(vec![
+        ("schema", Value::Str(ET_JSON_SCHEMA.into())),
+        ("model", Value::Str(ir.model_name().into())),
+        ("batch", Value::Num(ir.batch() as f64)),
+        ("parallelism", Value::Str(parallelism.token().into())),
+        ("num_layers", Value::Num(n as f64)),
+        ("nodes", Value::Arr(b.nodes)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{frontend, passes};
+    use crate::translator::{ConstantCompute, TranslateOpts};
+    use crate::workload::Parallelism;
+
+    fn annotated(p: Parallelism) -> ModelIR {
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(50));
+        passes::annotate_comm(&mut ir, TranslateOpts { parallelism: p, ..Default::default() });
+        ir
+    }
+
+    #[test]
+    fn unannotated_ir_is_rejected() {
+        let ir = frontend::from_zoo("mlp", 8).unwrap();
+        assert!(et_json(&ir).is_err());
+    }
+
+    #[test]
+    fn data_parallel_graph_shape() {
+        let ir = annotated(Parallelism::Data);
+        let n = ir.num_layers();
+        let v = et_json(&ir).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(ET_JSON_SCHEMA));
+        assert_eq!(v.get("parallelism").unwrap().as_str(), Some("DATA"));
+        let nodes = v.get("nodes").unwrap().as_arr().unwrap();
+        // DATA: fwd + ig + wg + wg.comm + update per layer.
+        assert_eq!(nodes.len(), 5 * n);
+        // Dense, creation-ordered ids; all deps topological.
+        for (i, node) in nodes.iter().enumerate() {
+            assert_eq!(node.get("id").unwrap().as_u64(), Some(i as u64));
+            for d in node.get("data_deps").unwrap().as_arr().unwrap() {
+                assert!(d.as_u64().unwrap() < i as u64, "dep must precede node {i}");
+            }
+        }
+        // Every wg.comm carries the layer's weight bytes.
+        let comms: Vec<&Value> = nodes
+            .iter()
+            .filter(|x| x.get("type").unwrap().as_str() == Some("COMM_COLL_NODE"))
+            .collect();
+        assert_eq!(comms.len(), n);
+        for c in &comms {
+            assert_eq!(c.get("comm_type").unwrap().as_str(), Some("ALLREDUCE"));
+            assert!(c.get("comm_size").unwrap().as_u64().unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn emission_is_byte_deterministic() {
+        let ir = annotated(Parallelism::Model);
+        let a = et_json(&ir).unwrap().to_json_pretty();
+        let b = et_json(&annotated(Parallelism::Model)).unwrap().to_json_pretty();
+        assert_eq!(a, b);
+        // And parses back.
+        assert!(crate::json::parse(&a).is_ok());
+    }
+}

@@ -1,0 +1,46 @@
+//! IR emitters: lower an annotated [`crate::ir::ModelIR`] to a consumer
+//! format.
+//!
+//! * [`to_sim_workload`] / [`workload_into`] — the in-crate
+//!   [`crate::workload::Workload`], which the [`crate::sim`] engine
+//!   executes directly; `workload_into` is the allocation-free variant
+//!   the sweep hot path uses (see [`sim`]).
+//! * [`text`] — the ASTRA-sim layer-wise text description (the paper's
+//!   Fig. 3 format), via `Workload::emit`.
+//! * [`et_json`] — a Chakra-ET-style JSON task graph for graph-based
+//!   simulator inputs (ASTRA-sim 2.0's direction), via [`et`].
+//!
+//! Emitters validate their inputs: workload emission requires both the
+//! compute and comm passes to have run on the IR (or, for
+//! `workload_into`, a caller-provided comm plan).
+
+pub mod et;
+pub mod sim;
+
+pub use et::{et_json, ET_JSON_SCHEMA};
+pub use sim::{to_sim_workload, workload_from_parts, workload_into};
+
+use crate::error::Result;
+use crate::ir::ModelIR;
+
+/// Emit the ASTRA-sim text description from a fully annotated IR.
+pub fn text(ir: &ModelIR) -> Result<String> {
+    Ok(to_sim_workload(ir)?.emit())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::{frontend, passes};
+    use crate::translator::{ConstantCompute, TranslateOpts};
+
+    #[test]
+    fn text_emitter_round_trips_through_the_parser() {
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(10));
+        passes::annotate_comm(&mut ir, TranslateOpts::default());
+        let text = super::text(&ir).unwrap();
+        let parsed = crate::workload::Workload::parse(&text).unwrap();
+        assert_eq!(parsed.layers.len(), ir.num_layers());
+        assert_eq!(parsed.emit(), text);
+    }
+}

@@ -1,0 +1,193 @@
+//! Workload emitter: lower an annotated IR to the in-crate
+//! [`Workload`] (which `emit()`s the ASTRA-sim text format).
+//!
+//! Two entry points share one lowering loop:
+//!
+//! * [`to_sim_workload`] — one-shot: allocates a fresh [`Workload`] from
+//!   an IR whose compute *and* comm passes have both run.
+//! * [`workload_into`] — the sweep hot path: takes the comm plan as a
+//!   caller-owned slice (from [`crate::ir::passes::plan_comm_into`]) and
+//!   refills a reusable [`Workload`], reusing the layer `Vec` and each
+//!   layer's name `String` capacity. Steady-state re-emission for a
+//!   model performs no heap allocation — this file is covered by CI's
+//!   `hot-path-alloc-guard`.
+
+use crate::error::{Error, Result};
+use crate::ir::{ModelIR, PhaseCost};
+use crate::translator::{CommPlan, ModelSummary};
+use crate::workload::{LayerSpec, Parallelism, Phase, Workload};
+
+/// Emit a fresh workload from a fully annotated IR (compute + comm
+/// passes must both have run).
+pub fn to_sim_workload(ir: &ModelIR) -> Result<Workload> {
+    let parallelism = ir
+        .comm_annotated()
+        .ok_or_else(|| Error::translate("emit: comm pass has not run on this IR"))?;
+    if !ir.compute_annotated() {
+        return Err(Error::translate("emit: compute pass has not run on this IR"));
+    }
+    let mut out = Workload { parallelism, layers: Vec::with_capacity(ir.num_layers()) };
+    lower(ir.summary(), ir.costs(), ir.comms(), parallelism, &mut out);
+    Ok(out)
+}
+
+/// Refill `out` from a compute-annotated IR plus an external comm plan
+/// (one entry per layer). The IR's own comm slots are ignored, so a
+/// cached IR can be shared read-only across scenarios while each worker
+/// supplies its scenario's plan.
+pub fn workload_into(
+    ir: &ModelIR,
+    comms: &[CommPlan],
+    parallelism: Parallelism,
+    out: &mut Workload,
+) -> Result<()> {
+    if !ir.compute_annotated() {
+        return Err(Error::translate("emit: compute pass has not run on this IR"));
+    }
+    if comms.len() != ir.num_layers() {
+        return Err(Error::translate("emit: comm plan length does not match the IR layer count"));
+    }
+    lower(ir.summary(), ir.costs(), comms, parallelism, out);
+    Ok(())
+}
+
+/// Lower bare structural facts plus externally computed slot arrays into
+/// a fresh workload — the IR-free form [`crate::translator::to_workload`]
+/// composes with the slice-level passes (no summary clone).
+pub fn workload_from_parts(
+    summary: &ModelSummary,
+    costs: &[PhaseCost],
+    comms: &[CommPlan],
+    parallelism: Parallelism,
+) -> Result<Workload> {
+    let n = summary.layers.len();
+    if costs.len() != n || comms.len() != n {
+        return Err(Error::translate("emit: slot array length does not match the layer count"));
+    }
+    let mut out = Workload { parallelism, layers: Vec::with_capacity(n) };
+    lower(summary, costs, comms, parallelism, &mut out);
+    Ok(out)
+}
+
+/// The shared lowering loop. Reuses `out`'s existing layer slots (and
+/// their name-string capacity) before growing.
+fn lower(
+    summary: &ModelSummary,
+    costs: &[PhaseCost],
+    comms: &[CommPlan],
+    parallelism: Parallelism,
+    out: &mut Workload,
+) {
+    let n = summary.layers.len();
+    out.parallelism = parallelism;
+    out.layers.truncate(n);
+    for (i, ((info, cost), plan)) in
+        summary.layers.iter().zip(costs.iter()).zip(comms.iter()).enumerate()
+    {
+        let fwd = Phase { compute_ns: cost.fwd_ns, comm: plan.fwd.0, comm_bytes: plan.fwd.1 };
+        let input_grad = Phase { compute_ns: cost.ig_ns, comm: plan.ig.0, comm_bytes: plan.ig.1 };
+        let weight_grad = Phase { compute_ns: cost.wg_ns, comm: plan.wg.0, comm_bytes: plan.wg.1 };
+        if i < out.layers.len() {
+            let slot = &mut out.layers[i];
+            slot.name.clear();
+            slot.name.push_str(&info.name);
+            slot.reserved = -1;
+            slot.fwd = fwd;
+            slot.input_grad = input_grad;
+            slot.weight_grad = weight_grad;
+            slot.update_ns = cost.update_ns;
+        } else {
+            out.layers.push(LayerSpec {
+                name: info.name.clone(),
+                reserved: -1,
+                fwd,
+                input_grad,
+                weight_grad,
+                update_ns: cost.update_ns,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{frontend, passes};
+    use crate::translator::{ConstantCompute, TranslateOpts};
+    use crate::workload::CommType;
+
+    fn annotated(name: &str, p: Parallelism) -> ModelIR {
+        let mut ir = frontend::from_zoo(name, 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(100));
+        passes::annotate_comm(&mut ir, TranslateOpts { parallelism: p, ..Default::default() });
+        ir
+    }
+
+    #[test]
+    fn unannotated_ir_is_rejected() {
+        let ir = frontend::from_zoo("mlp", 8).unwrap();
+        assert!(to_sim_workload(&ir).is_err());
+        let mut w = Workload::default();
+        let comms = vec![CommPlan::none(); ir.num_layers()];
+        assert!(workload_into(&ir, &comms, Parallelism::Data, &mut w).is_err());
+    }
+
+    #[test]
+    fn comm_plan_length_mismatch_is_rejected() {
+        let ir = annotated("mlp", Parallelism::Data);
+        let mut w = Workload::default();
+        let comms = vec![CommPlan::none(); ir.num_layers() + 1];
+        assert!(workload_into(&ir, &comms, Parallelism::Data, &mut w).is_err());
+    }
+
+    #[test]
+    fn into_variant_matches_one_shot_emission() {
+        let ir = annotated("mlp", Parallelism::Data);
+        let fresh = to_sim_workload(&ir).unwrap();
+        let mut reused = Workload::default();
+        let mut comms = Vec::new();
+        passes::plan_comm_into(
+            &ir,
+            TranslateOpts { parallelism: Parallelism::Data, ..Default::default() },
+            &mut comms,
+        );
+        workload_into(&ir, &comms, Parallelism::Data, &mut reused).unwrap();
+        assert_eq!(fresh, reused);
+        assert_eq!(fresh.emit(), reused.emit());
+    }
+
+    #[test]
+    fn reused_workload_shrinks_and_regrows_across_models() {
+        // Emit a big model, then a small one, then the big one again
+        // through the same buffer: results must equal fresh emissions.
+        let big = annotated("resnet18", Parallelism::Data);
+        let small = annotated("mlp", Parallelism::Model);
+        let mut buf = Workload::default();
+        let mut comms = Vec::new();
+        for (ir, p) in [
+            (&big, Parallelism::Data),
+            (&small, Parallelism::Model),
+            (&big, Parallelism::Data),
+        ] {
+            passes::plan_comm_into(
+                ir,
+                TranslateOpts { parallelism: p, ..Default::default() },
+                &mut comms,
+            );
+            workload_into(ir, &comms, p, &mut buf).unwrap();
+            let mut fresh_ir = frontend::from_zoo(
+                if ir.num_layers() == big.num_layers() { "resnet18" } else { "mlp" },
+                8,
+            )
+            .unwrap();
+            passes::annotate_compute(&mut fresh_ir, &ConstantCompute(100));
+            passes::annotate_comm(
+                &mut fresh_ir,
+                TranslateOpts { parallelism: p, ..Default::default() },
+            );
+            assert_eq!(buf, to_sim_workload(&fresh_ir).unwrap());
+        }
+        assert_eq!(buf.parallelism, Parallelism::Data);
+        assert_eq!(buf.layers[0].weight_grad.comm, CommType::AllReduce);
+    }
+}

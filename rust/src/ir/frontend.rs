@@ -1,0 +1,78 @@
+//! IR frontends: build a [`ModelIR`] from a model source.
+//!
+//! Three entry points cover the paper's input modes (§3.2–§3.3):
+//!
+//! * [`from_onnx_bytes`] — raw `.onnx` protobuf bytes (metadata-only
+//!   decode; weight payloads are never copied).
+//! * [`from_model`] — an already-decoded in-memory ONNX model.
+//! * [`from_zoo`] — a zoo model **directly from its builder**: the graph
+//!   goes straight from the in-memory builder output into extraction,
+//!   skipping the ONNX encode/decode round-trip the byte path pays
+//!   (`benches/fig6_translation_time.rs` tracks the win).
+//!
+//! All frontends converge on the same structural extraction
+//! ([`crate::translator::extract()`]), so downstream passes and emitters
+//! never see which source a model came from.
+
+use super::ModelIR;
+use crate::error::Result;
+use crate::onnx::Model;
+use crate::translator::{self, ModelSummary};
+use crate::zoo::{self, WeightFill, ZooOpts};
+
+/// Lift an already-extracted summary into an unannotated IR.
+pub fn from_summary(summary: ModelSummary) -> ModelIR {
+    ModelIR::from_summary(summary)
+}
+
+/// Build IR from an in-memory ONNX model at the given batch size.
+pub fn from_model(model: &Model, batch: i64) -> Result<ModelIR> {
+    Ok(ModelIR::from_summary(translator::extract(model, batch)?))
+}
+
+/// Build IR from raw `.onnx` bytes (metadata-only decode).
+pub fn from_onnx_bytes(bytes: &[u8], batch: i64) -> Result<ModelIR> {
+    Ok(ModelIR::from_summary(translator::extract_from_bytes(bytes, batch)?))
+}
+
+/// Build IR directly from a zoo model builder — no ONNX serialization
+/// round-trip, no weight payload materialization.
+pub fn from_zoo(name: &str, batch: i64) -> Result<ModelIR> {
+    let model = zoo::get(name, ZooOpts { weights: WeightFill::Empty })?;
+    from_model(&model, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::onnx::encode_model;
+
+    #[test]
+    fn zoo_direct_matches_onnx_byte_path() {
+        // The two frontends must extract identical structural facts.
+        let direct = from_zoo("mlp", 8).unwrap();
+        let model = zoo::get("mlp", ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let via_bytes = from_onnx_bytes(&encode_model(&model), 8).unwrap();
+        assert_eq!(direct.num_layers(), via_bytes.num_layers());
+        for (a, b) in direct.layers().zip(via_bytes.layers()) {
+            assert_eq!(a.info.name, b.info.name);
+            assert_eq!(a.info.kind, b.info.kind);
+            assert_eq!(a.info.weight_bytes, b.info.weight_bytes);
+            assert_eq!(a.info.in_act_bytes, b.info.in_act_bytes);
+            assert_eq!(a.info.out_act_bytes, b.info.out_act_bytes);
+            assert_eq!(a.info.macs, b.info.macs);
+        }
+        assert_eq!(direct.summary().total_params, via_bytes.summary().total_params);
+        assert_eq!(direct.summary().total_bytes, via_bytes.summary().total_bytes);
+    }
+
+    #[test]
+    fn unknown_zoo_model_is_an_error() {
+        assert!(from_zoo("not-a-model", 8).is_err());
+    }
+
+    #[test]
+    fn bad_bytes_are_an_error() {
+        assert!(from_onnx_bytes(&[0xff, 0xff, 0xff], 8).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! The shared model intermediate representation (ModelIR) the translator
+//! is staged around: **frontends → passes → emitters**.
+//!
+//! ModTrans's pitch is "any real-world model → simulator input" (§1,
+//! §3.3). Structurally that is a classic compiler shape, and this module
+//! makes it explicit:
+//!
+//! * **Frontends** ([`frontend`]) build a [`ModelIR`] from a model
+//!   source: raw `.onnx` bytes, an in-memory [`crate::onnx::Model`], or
+//!   **directly from the zoo builder** — zoo models no longer pay an
+//!   ONNX encode/decode round-trip on their way to the simulator.
+//! * **Passes** ([`passes`]) annotate the IR independently of each
+//!   other: the compute pass fills per-phase cost slots from a
+//!   [`crate::translator::ComputeTimeModel`]; the comm pass fills
+//!   per-phase collective slots for one parallelism strategy; the memory
+//!   pass reads the structural facts and reports the per-NPU footprint.
+//! * **Emitters** ([`emit`]) lower an annotated IR to a consumer format:
+//!   the in-crate [`crate::workload::Workload`] (which doubles as the
+//!   ASTRA-sim text description via [`crate::workload::Workload::emit`])
+//!   and a Chakra-ET-style JSON task graph for graph-based simulator
+//!   inputs ([`emit::et_json`]).
+//!
+//! The split is what makes sweep-scale batching cheap: a compute-
+//! annotated IR is valid for *every* scenario at the same (model, batch),
+//! so scenarios differing only in parallelism / topology / collective
+//! re-run only the comm pass plus an allocation-free emit
+//! ([`passes::plan_comm_into`] + [`emit::workload_into`]) instead of
+//! re-deriving the whole workload.
+
+pub mod emit;
+pub mod frontend;
+pub mod passes;
+
+use crate::translator::{CommPlan, LayerInfo, ModelSummary};
+use crate::workload::Parallelism;
+
+/// Per-phase compute-time slots for one layer, filled by
+/// [`passes::annotate_compute`]. All times in integer nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PhaseCost {
+    /// Forward pass.
+    pub fwd_ns: u64,
+    /// Input-gradient (backward wrt activations).
+    pub ig_ns: u64,
+    /// Weight-gradient (backward wrt parameters).
+    pub wg_ns: u64,
+    /// Local optimizer update.
+    pub update_ns: u64,
+}
+
+/// Read-only view of one IR layer: structural facts plus the two
+/// annotation slots.
+#[derive(Debug, Clone, Copy)]
+pub struct IrLayer<'a> {
+    /// Structural facts (kind, shapes, parameter bytes, MACs) from the
+    /// frontend.
+    pub info: &'a LayerInfo,
+    /// Compute-pass annotation (zeros until the pass runs).
+    pub cost: PhaseCost,
+    /// Comm-pass annotation ([`CommPlan::none`] until the pass runs).
+    pub comm: CommPlan,
+}
+
+/// The typed model IR: one structural record per weight-bearing layer
+/// (stored as the frontend's [`ModelSummary`]) plus parallel slot arrays
+/// for the compute and comm passes.
+///
+/// Slots are structure-of-arrays on purpose: the expensive, parallelism-
+/// independent annotations (structure + compute cost) are cached and
+/// shared, while the cheap parallelism-dependent comm plan can be
+/// re-planned into a caller-owned buffer without touching the IR
+/// ([`passes::plan_comm_into`]).
+#[derive(Debug, Clone)]
+pub struct ModelIR {
+    summary: ModelSummary,
+    costs: Vec<PhaseCost>,
+    comms: Vec<CommPlan>,
+    compute_annotated: bool,
+    comm_annotated: Option<Parallelism>,
+}
+
+impl ModelIR {
+    /// Lift a frontend extraction result into an unannotated IR.
+    pub fn from_summary(summary: ModelSummary) -> ModelIR {
+        let n = summary.layers.len();
+        ModelIR {
+            summary,
+            costs: vec![PhaseCost::default(); n],
+            comms: vec![CommPlan::none(); n],
+            compute_annotated: false,
+            comm_annotated: None,
+        }
+    }
+
+    /// The structural facts (frontend output) this IR was built from.
+    pub fn summary(&self) -> &ModelSummary {
+        &self.summary
+    }
+
+    /// Graph name from the source model.
+    pub fn model_name(&self) -> &str {
+        &self.summary.model_name
+    }
+
+    /// Batch size the activations were sized at.
+    pub fn batch(&self) -> i64 {
+        self.summary.batch
+    }
+
+    /// Number of weight-bearing layers.
+    pub fn num_layers(&self) -> usize {
+        self.summary.layers.len()
+    }
+
+    /// True when the IR has no layers.
+    pub fn is_empty(&self) -> bool {
+        self.summary.layers.is_empty()
+    }
+
+    /// One layer's structure + slots.
+    ///
+    /// # Panics
+    /// Panics if `i >= num_layers()`.
+    pub fn layer(&self, i: usize) -> IrLayer<'_> {
+        IrLayer { info: &self.summary.layers[i], cost: self.costs[i], comm: self.comms[i] }
+    }
+
+    /// Iterate over all layers (structure + slots).
+    pub fn layers(&self) -> impl Iterator<Item = IrLayer<'_>> {
+        self.summary
+            .layers
+            .iter()
+            .zip(self.costs.iter())
+            .zip(self.comms.iter())
+            .map(|((info, cost), comm)| IrLayer { info, cost: *cost, comm: *comm })
+    }
+
+    /// The compute-pass slot array (parallel to `summary().layers`).
+    pub fn costs(&self) -> &[PhaseCost] {
+        &self.costs
+    }
+
+    /// The comm-pass slot array (parallel to `summary().layers`).
+    pub fn comms(&self) -> &[CommPlan] {
+        &self.comms
+    }
+
+    /// True once [`passes::annotate_compute`] has run.
+    pub fn compute_annotated(&self) -> bool {
+        self.compute_annotated
+    }
+
+    /// The strategy the comm slots were planned for, once
+    /// [`passes::annotate_comm`] has run.
+    pub fn comm_annotated(&self) -> Option<Parallelism> {
+        self.comm_annotated
+    }
+
+    /// Recover the structural summary (drops the annotations).
+    pub fn into_summary(self) -> ModelSummary {
+        self.summary
+    }
+
+    /// Split borrows for the annotation passes: structure read-only,
+    /// both slot arrays writable.
+    pub(crate) fn parts_mut(&mut self) -> (&ModelSummary, &mut [PhaseCost], &mut [CommPlan]) {
+        (&self.summary, &mut self.costs, &mut self.comms)
+    }
+
+    pub(crate) fn mark_compute_annotated(&mut self) {
+        self.compute_annotated = true;
+    }
+
+    pub(crate) fn mark_comm_annotated(&mut self, parallelism: Parallelism) {
+        self.comm_annotated = Some(parallelism);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::CommType;
+
+    #[test]
+    fn fresh_ir_has_empty_slots() {
+        let ir = frontend::from_zoo("mlp", 4).unwrap();
+        assert_eq!(ir.num_layers(), ir.summary().layers.len());
+        assert!(!ir.is_empty());
+        assert!(!ir.compute_annotated());
+        assert_eq!(ir.comm_annotated(), None);
+        for l in ir.layers() {
+            assert_eq!(l.cost, PhaseCost::default());
+            assert_eq!(l.comm.fwd.0, CommType::None);
+        }
+        assert_eq!(ir.batch(), 4);
+        assert_eq!(ir.model_name(), "mlp");
+    }
+
+    #[test]
+    fn layer_view_matches_slot_arrays() {
+        let mut ir = frontend::from_zoo("mlp", 2).unwrap();
+        {
+            let (_, costs, _) = ir.parts_mut();
+            costs[0] = PhaseCost { fwd_ns: 7, ig_ns: 8, wg_ns: 9, update_ns: 10 };
+        }
+        assert_eq!(ir.layer(0).cost.fwd_ns, 7);
+        assert_eq!(ir.costs()[0].update_ns, 10);
+        let first = ir.layers().next().unwrap();
+        assert_eq!(first.cost.wg_ns, 9);
+        let summary = ir.into_summary();
+        assert!(!summary.layers.is_empty());
+    }
+}

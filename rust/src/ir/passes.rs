@@ -1,0 +1,143 @@
+//! IR annotation passes. Each pass is independent: compute costs, comm
+//! planning and memory modeling read the same structural facts but never
+//! each other's outputs, so they can run in any order (or not at all —
+//! emitters check for the slots they need).
+//!
+//! The comm pass comes in two forms: [`annotate_comm`] writes the IR's
+//! own comm slots (the one-shot `translate` path), while
+//! [`plan_comm_into`] plans into a caller-owned buffer without touching
+//! the shared IR — the sweep hot path, where one compute-annotated IR is
+//! shared read-only across worker threads and each scenario re-plans
+//! only this cheap, parallelism-dependent pass. This module is covered
+//! by CI's `hot-path-alloc-guard`: no per-layer string allocation.
+
+use super::{ModelIR, PhaseCost};
+use crate::translator::{
+    comm_for_layer, memory_per_npu, CommPlan, ComputeTimeModel, LayerInfo, MemoryOpts,
+    MemoryReport, ModelSummary, TranslateOpts,
+};
+
+/// The compute pass's per-layer unit: one layer's cost slot.
+fn cost_of(info: &LayerInfo, compute: &dyn ComputeTimeModel) -> PhaseCost {
+    let (fwd_ns, ig_ns, wg_ns) = compute.layer_times(info);
+    PhaseCost { fwd_ns, ig_ns, wg_ns, update_ns: compute.update_time(info) }
+}
+
+/// Fill the per-phase compute-cost slots from a compute model. Valid for
+/// every parallelism strategy at the IR's (model, batch) — this is the
+/// annotation the sweep cache shares across scenarios.
+pub fn annotate_compute(ir: &mut ModelIR, compute: &dyn ComputeTimeModel) {
+    let (summary, costs, _) = ir.parts_mut();
+    for (info, slot) in summary.layers.iter().zip(costs.iter_mut()) {
+        *slot = cost_of(info, compute);
+    }
+    ir.mark_compute_annotated();
+}
+
+/// Slice-level compute pass over bare structural facts: clear and refill
+/// a caller-owned cost buffer. The IR-free form
+/// [`crate::translator::to_workload`] composes — no summary clone, no
+/// IR allocation.
+pub fn compute_costs_into(
+    summary: &ModelSummary,
+    compute: &dyn ComputeTimeModel,
+    out: &mut Vec<PhaseCost>,
+) {
+    out.clear();
+    out.extend(summary.layers.iter().map(|info| cost_of(info, compute)));
+}
+
+/// Fill the IR's comm slots for one parallelism strategy.
+pub fn annotate_comm(ir: &mut ModelIR, opts: TranslateOpts) {
+    let (summary, _, comms) = ir.parts_mut();
+    for (info, slot) in summary.layers.iter().zip(comms.iter_mut()) {
+        *slot = comm_for_layer(info, opts);
+    }
+    ir.mark_comm_annotated(opts.parallelism);
+}
+
+/// Plan communication into a reusable caller-owned buffer, leaving the
+/// (possibly shared) IR untouched. `out` is cleared and refilled; its
+/// capacity is reused, so steady-state re-planning performs no heap
+/// allocation.
+pub fn plan_comm_into(ir: &ModelIR, opts: TranslateOpts, out: &mut Vec<CommPlan>) {
+    plan_comm_for_summary_into(ir.summary(), opts, out);
+}
+
+/// Slice-level comm pass over bare structural facts (the form
+/// [`crate::translator::to_workload`] composes).
+pub fn plan_comm_for_summary_into(
+    summary: &ModelSummary,
+    opts: TranslateOpts,
+    out: &mut Vec<CommPlan>,
+) {
+    out.clear();
+    out.extend(summary.layers.iter().map(|info| comm_for_layer(info, opts)));
+}
+
+/// Memory pass: per-NPU training footprint under the given parallelism
+/// options. Reads only the structural facts (no cost/comm slots needed).
+pub fn memory(ir: &ModelIR, opts: TranslateOpts, mem: MemoryOpts) -> MemoryReport {
+    memory_per_npu(ir.summary(), opts, mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::frontend;
+    use crate::translator::ConstantCompute;
+    use crate::workload::{CommType, Parallelism};
+
+    fn opts(p: Parallelism) -> TranslateOpts {
+        TranslateOpts { parallelism: p, ..Default::default() }
+    }
+
+    #[test]
+    fn compute_pass_fills_every_cost_slot() {
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        annotate_compute(&mut ir, &ConstantCompute(42));
+        assert!(ir.compute_annotated());
+        for l in ir.layers() {
+            assert_eq!(l.cost.fwd_ns, 42);
+            assert_eq!(l.cost.ig_ns, 42);
+            assert_eq!(l.cost.wg_ns, 42);
+            // Default update model: 3x weight bytes at 100 bytes/ns.
+            assert_eq!(l.cost.update_ns, (l.info.weight_bytes * 3) / 100);
+        }
+    }
+
+    #[test]
+    fn comm_pass_matches_comm_for_layer() {
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        annotate_comm(&mut ir, opts(Parallelism::Data));
+        assert_eq!(ir.comm_annotated(), Some(Parallelism::Data));
+        for l in ir.layers() {
+            assert_eq!(l.comm.fwd.0, CommType::None);
+            assert_eq!(l.comm.wg.0, CommType::AllReduce);
+            assert_eq!(l.comm.wg.1, l.info.weight_bytes);
+        }
+    }
+
+    #[test]
+    fn plan_into_reuses_the_buffer_and_leaves_ir_clean() {
+        let ir = frontend::from_zoo("mlp", 8).unwrap();
+        let mut buf = Vec::new();
+        plan_comm_into(&ir, opts(Parallelism::Data), &mut buf);
+        assert_eq!(buf.len(), ir.num_layers());
+        let cap = buf.capacity();
+        plan_comm_into(&ir, opts(Parallelism::Model), &mut buf);
+        assert_eq!(buf.capacity(), cap, "re-planning should not reallocate");
+        assert_eq!(buf[0].fwd.0, CommType::AllGather);
+        // The shared IR's own slots stay unannotated.
+        assert_eq!(ir.comm_annotated(), None);
+        assert_eq!(ir.layer(0).comm.wg.0, CommType::None);
+    }
+
+    #[test]
+    fn memory_pass_agrees_with_translator_memory() {
+        let ir = frontend::from_zoo("vgg16", 32).unwrap();
+        let o = opts(Parallelism::Data);
+        let m = MemoryOpts::default();
+        assert_eq!(memory(&ir, o, m), memory_per_npu(ir.summary(), o, m));
+    }
+}

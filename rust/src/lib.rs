@@ -2,25 +2,65 @@
 //!
 //! A production-grade reproduction of *"ModTrans: Translating Real-world
 //! Models for Distributed Training Simulator"* (CS.DC 2026): a translator
-//! from ONNX models to the layer-wise workload description consumed by
+//! from ONNX models to the workload descriptions consumed by
 //! ASTRA-sim-class distributed-training simulators — plus every substrate
-//! the paper depends on, built from scratch:
+//! the paper depends on, built from scratch.
+//!
+//! # Architecture: frontends → passes → emitters
+//!
+//! Translation is staged around a shared typed IR ([`ir::ModelIR`]): one
+//! structural record per weight-bearing layer plus independent
+//! annotation slots for per-phase compute costs and per-phase collective
+//! requirements.
+//!
+//! ```text
+//!  .onnx bytes ─┐                                   ┌─► Workload (in-crate sim)
+//!  onnx::Model ─┼─► ir::frontend ─► ModelIR ─► ir::emit ─► ASTRA-sim text (Fig. 3)
+//!  zoo builder ─┘        │                          └─► Chakra-ET-style JSON graph
+//!                        ▼
+//!                  ir::passes: compute cost │ comm plan │ memory model
+//! ```
+//!
+//! * **Frontends** ([`ir::frontend`]) normalize every input — raw ONNX
+//!   bytes (metadata-only decode), in-memory models, and zoo builders
+//!   *directly* (no encode/decode round-trip) — into the same IR.
+//! * **Passes** ([`ir::passes`]) are independent: the compute pass fills
+//!   cost slots from any [`translator::ComputeTimeModel`]; the comm pass
+//!   plans per-phase collectives for one parallelism strategy (into the
+//!   IR, or into a caller-owned buffer for the allocation-free sweep
+//!   path); the memory pass reports the per-NPU training footprint.
+//! * **Emitters** ([`ir::emit`]) lower an annotated IR to the in-crate
+//!   [`workload::Workload`] / ASTRA-sim text description, or to a
+//!   Chakra-ET-style JSON task graph (`translate --format et-json`).
+//!
+//! This split is what makes batched scenario execution cheap: the sweep
+//! caches one compute-annotated IR per (model, batch) and each scenario
+//! re-runs only the parallelism-dependent comm pass + emit.
+//!
+//! ## Module map
 //!
 //! * [`proto`] — protobuf wire-format codec (ONNX's serialization).
 //! * [`onnx`] — an ONNX IR subset with wire-compatible serialize/parse and
 //!   shape inference.
 //! * [`zoo`] — model builders (ResNet, VGG, AlexNet, MLP, transformer)
-//!   generating real ONNX graphs with exact parameter counts.
-//! * [`translator`] — the paper's contribution: layer extraction and
-//!   ASTRA-sim workload emission.
+//!   generating real ONNX graphs with exact parameter counts; feeds the
+//!   zoo-direct IR frontend.
+//! * [`translator`] — the paper's contribution: the ONNX structural
+//!   frontend ([`translator::extract()`]), the pass ingredients
+//!   (compute-time models, [`translator::comm_for_layer`],
+//!   [`translator::memory_per_npu`]) and one-call conveniences.
+//! * [`ir`] — the shared ModelIR plus its frontends, passes and emitters
+//!   (see above).
 //! * [`workload`] — the ASTRA-sim DNN-description file format.
 //! * [`sim`] — a full discrete-event distributed-training simulator
 //!   (network, collectives, system scheduler, training loop).
 //! * [`compute`] — SCALE-sim-style systolic-array compute-time model.
 //! * [`sweep`] — the experiment-scale batch runner: expands a
-//!   (model × parallelism × topology × collective) grid, translates each
-//!   model once into a shared cache, fans simulations out across a
-//!   `std::thread` worker pool, and emits a deterministic ranked report.
+//!   (model × parallelism × topology × collective) grid, caches one
+//!   compute-annotated IR per model, fans simulations out across a
+//!   `std::thread` worker pool (optionally sharded `--shard K/N` across
+//!   machines, merged back with `sweep-merge`), and emits a
+//!   deterministic ranked report.
 //! * `runtime` / [`calibrate`] — PJRT execution of AOT-compiled
 //!   JAX/Pallas GEMM artifacts for measured per-layer compute times
 //!   (behind the `pjrt` feature; see below).
@@ -41,7 +81,7 @@
 //! ## The `pjrt` feature flag
 //!
 //! The PJRT execution path — the `runtime` module and
-//! [`calibrate::Calibration::measure`] — needs the external `xla` crate
+//! `calibrate::Calibration::measure` — needs the external `xla` crate
 //! and real AOT artifacts (`make artifacts`). It is gated behind the
 //! **off-by-default** `pjrt` cargo feature:
 //!
@@ -57,12 +97,16 @@
 //! ## CI
 //!
 //! `.github/workflows/ci.yml` runs build, test, `cargo fmt --check`,
-//! `cargo clippy -- -D warnings` (gating), the hot-path allocation
-//! guard, a bench smoke pass (`MODTRANS_BENCH_SAMPLES=2` caps every
-//! bench target to seconds) that uploads `BENCH_*.json` artifacts, a
-//! 1-thread-vs-8-thread `sweep` determinism diff (plain and
-//! `--skip-infeasible`), and a check that every PR touches `CHANGES.md`.
-//! Reproduce the full matrix locally with `make ci` before pushing.
+//! `cargo clippy -- -D warnings` (gating), `cargo doc --no-deps` with
+//! warnings denied (gating), the hot-path allocation guard (sim builders
+//! + IR derivation hot path), a bench smoke pass
+//! (`MODTRANS_BENCH_SAMPLES=2` caps every bench target to seconds) that
+//! uploads `BENCH_*.json` artifacts, an advisory perf-trajectory job
+//! that diffs those artifacts against the base branch's
+//! (`scripts/perf_diff.py`), a 1-thread-vs-8-thread `sweep` determinism
+//! diff (plain, `--skip-infeasible`, and sharded + `sweep-merge`), and a
+//! check that every PR touches `CHANGES.md`. Reproduce the full matrix
+//! locally with `make ci` before pushing.
 //!
 //! # Performance
 //!
@@ -85,10 +129,16 @@
 //!   of workloads and configs may go through one scratch via
 //!   [`sim::simulate_with`], and every result is identical to a
 //!   fresh-scratch run — scratch contents never leak into results
-//!   (regression-tested in `tests/determinism_regression.rs`). Each
-//!   sweep worker thread carries one `SimScratch` across all its
-//!   scenarios, so steady-state graph build + execution performs no
-//!   heap allocation.
+//!   (regression-tested in `tests/determinism_regression.rs`).
+//! * Workload derivation is allocation-free too: each sweep worker
+//!   carries one [`sweep::ScenarioScratch`] (a `SimScratch` plus the
+//!   comm-plan buffer and an emitted-workload buffer whose layer slots
+//!   and name strings are reused in place), so a steady-state scenario —
+//!   comm pass, emit, graph build, event loop — performs no heap
+//!   allocation. (Crossing from a small model to a larger one regrows
+//!   the emit buffer once per boundary; within a model group nothing
+//!   allocates.) The structural extraction and compute pass run once per
+//!   (model, batch) inside [`sweep::WorkloadCache`].
 //!
 //! ## Reading `BENCH_<name>.json`
 //!
@@ -105,6 +155,7 @@ pub mod calibrate;
 pub mod cli;
 pub mod compute;
 pub mod error;
+pub mod ir;
 pub mod json;
 pub mod onnx;
 pub mod proto;

@@ -8,9 +8,14 @@
 //! netron/onnxruntime and real `.onnx` files parse here.
 //!
 //! The paper's pipeline (§3.3) is: deserialize protobuf → walk graph →
-//! extract layer info. [`decode`] supports a metadata-only mode that skips
+//! extract layer info. The decoder ([`parse_model_meta`]) supports a
+//! metadata-only mode that skips
 //! tensor payload copies, which is what makes ModTrans's overhead
-//! "negligible" even for half-gigabyte VGG models (Fig. 6).
+//! "negligible" even for half-gigabyte VGG models (Fig. 6). In the
+//! staged translator this module backs the ONNX byte frontend
+//! ([`crate::ir::frontend::from_onnx_bytes`]); in-memory [`Model`]s (for
+//! example from the zoo builders) enter the IR without touching the wire
+//! format at all.
 
 mod decode;
 mod encode;

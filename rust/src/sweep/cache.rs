@@ -1,47 +1,64 @@
-//! Shared workload cache: translate each model once, reuse everywhere.
+//! Shared IR cache: translate and compute-annotate each model once,
+//! reuse everywhere.
 //!
-//! Translation — building the zoo graph and extracting the layer summary
-//! from it — is the expensive, model-shaped part of a scenario; deriving
-//! a parallelism-specific workload from the summary is a cheap linear
-//! pass. The cache therefore stores one [`ModelSummary`] per model and
-//! counts how many translations actually ran, so callers (and the sweep
-//! smoke test) can assert **translation count == model count**, not
-//! scenario count.
+//! Building the zoo graph, extracting the layer structure and running
+//! the compute pass are the expensive, model-shaped parts of a scenario;
+//! everything parallelism-dependent (the comm pass + workload emission)
+//! is a cheap linear pass. The cache therefore stores one
+//! **compute-annotated** [`ModelIR`] per (model, batch) — built through
+//! the zoo-direct frontend, so zoo models never pay an ONNX
+//! encode/decode round-trip — and counts how many translations actually
+//! ran, so callers (and the sweep smoke test) can assert **translation
+//! count == model count**, not scenario count.
+//!
+//! Scenarios that differ only in parallelism / topology / collective
+//! re-run only [`crate::ir::passes::plan_comm_into`] against the shared
+//! IR (immutable after build, hence freely shared across worker
+//! threads).
 
+use crate::compute::SystolicCompute;
 use crate::error::Result;
-use crate::translator::{self, ModelSummary};
-use crate::zoo::{self, WeightFill, ZooOpts};
+use crate::ir::{frontend, passes, ModelIR};
+use crate::translator::ModelSummary;
 use std::collections::BTreeMap;
 
-/// Per-model translated summaries, built once up front and shared
-/// (immutably, hence freely across worker threads) by every scenario.
+/// Per-model compute-annotated IRs, built once up front and shared
+/// (immutably) by every scenario.
 #[derive(Debug)]
 pub struct WorkloadCache {
-    summaries: BTreeMap<String, ModelSummary>,
+    irs: BTreeMap<String, ModelIR>,
     translations: usize,
 }
 
 impl WorkloadCache {
-    /// Translate every unique model in `models` at the given batch size.
-    /// Duplicate names are translated only once.
+    /// Translate every unique model in `models` at the given batch size
+    /// and annotate it with the sweep's compute model
+    /// ([`SystolicCompute`] at that batch). Duplicate names are
+    /// translated only once.
     pub fn build(models: &[String], batch: i64) -> Result<WorkloadCache> {
-        let mut summaries = BTreeMap::new();
+        let compute = SystolicCompute::new(batch);
+        let mut irs = BTreeMap::new();
         let mut translations = 0usize;
         for name in models {
-            if summaries.contains_key(name.as_str()) {
+            if irs.contains_key(name.as_str()) {
                 continue;
             }
-            let model = zoo::get(name, ZooOpts { weights: WeightFill::Empty })?;
-            let summary = translator::extract(&model, batch)?;
+            let mut ir = frontend::from_zoo(name, batch)?;
+            passes::annotate_compute(&mut ir, &compute);
             translations += 1;
-            summaries.insert(name.clone(), summary);
+            irs.insert(name.clone(), ir);
         }
-        Ok(WorkloadCache { summaries, translations })
+        Ok(WorkloadCache { irs, translations })
     }
 
-    /// The cached summary for a model, if present.
+    /// The cached compute-annotated IR for a model, if present.
+    pub fn ir(&self, model: &str) -> Option<&ModelIR> {
+        self.irs.get(model)
+    }
+
+    /// The cached structural summary for a model, if present.
     pub fn summary(&self, model: &str) -> Option<&ModelSummary> {
-        self.summaries.get(model)
+        self.irs.get(model).map(ModelIR::summary)
     }
 
     /// How many translations ran while building the cache.
@@ -51,12 +68,12 @@ impl WorkloadCache {
 
     /// Number of cached models.
     pub fn len(&self) -> usize {
-        self.summaries.len()
+        self.irs.len()
     }
 
     /// True when no models are cached.
     pub fn is_empty(&self) -> bool {
-        self.summaries.is_empty()
+        self.irs.is_empty()
     }
 }
 
@@ -75,6 +92,16 @@ mod tests {
         assert_eq!(s.batch, 4);
         assert!(!s.layers.is_empty());
         assert!(cache.summary("resnet18").is_none());
+        assert!(cache.ir("resnet18").is_none());
+    }
+
+    #[test]
+    fn cached_ir_is_compute_annotated_but_comm_free() {
+        let cache = WorkloadCache::build(&["mlp".to_string()], 4).unwrap();
+        let ir = cache.ir("mlp").unwrap();
+        assert!(ir.compute_annotated());
+        assert_eq!(ir.comm_annotated(), None);
+        assert!(ir.costs().iter().all(|c| c.fwd_ns > 0));
     }
 
     #[test]

@@ -8,14 +8,18 @@
 //!
 //! 1. [`SweepGrid::expand`] turns the per-axis lists into a deduplicated
 //!    scenario list (deterministic order).
-//! 2. [`cache::WorkloadCache`] translates **each model once** — zoo build
-//!    + layer extraction, the expensive step — and every scenario derives
-//!    its workload from the shared summary (translation count == model
-//!    count, never scenario count).
+//! 2. [`cache::WorkloadCache`] translates **each model once** through the
+//!    zoo-direct IR frontend — zoo build + layer extraction + the compute
+//!    pass, the expensive model-shaped steps — and every scenario derives
+//!    its workload from the shared compute-annotated
+//!    [`crate::ir::ModelIR`] by re-running only the cheap
+//!    parallelism-dependent comm pass (translation count == model count,
+//!    never scenario count).
 //! 3. [`pool::run_indexed_with`] fans the simulations out over a
 //!    `std::thread` worker pool fed by a channel-based work queue; each
-//!    worker carries one [`crate::sim::SimScratch`] arena across its
-//!    scenarios, so steady-state iterations are allocation-free.
+//!    worker carries one [`ScenarioScratch`] (simulator arenas + the
+//!    comm-plan and workload derivation buffers) across its scenarios,
+//!    so steady-state derivation *and* simulation are allocation-free.
 //! 4. [`report::SweepReport`] ranks the results (fastest simulated step
 //!    first, key-ordered tiebreak) and emits text + JSON. Because every
 //!    scenario is simulated deterministically and ranking is a total
@@ -35,14 +39,15 @@ pub mod report;
 pub use cache::WorkloadCache;
 pub use report::{ScenarioResult, SweepReport};
 
-use crate::compute::SystolicCompute;
 use crate::error::{Error, Result};
+use crate::ir::{emit, passes};
+use crate::json::{obj, Value};
 use crate::sim::{
     simulate_with, ChunkCfg, Network, PipelineSchedule, Policy, SimConfig, SimScratch,
     SystemConfig, TopologyKind,
 };
-use crate::translator::{self, memory_per_npu, MemoryOpts, TranslateOpts, ZeroStage};
-use crate::workload::Parallelism;
+use crate::translator::{CommPlan, MemoryOpts, TranslateOpts, ZeroStage};
+use crate::workload::{Parallelism, Workload};
 use std::collections::BTreeSet;
 
 /// Collective scheduling algorithm for a scenario — the system-layer
@@ -120,6 +125,22 @@ impl Scenario {
             self.parallelism.token(),
             self.topology.token(),
             self.collective.token()
+        )
+    }
+
+    /// Borrowed component-wise ranking key — the allocation-free total
+    /// order every sort tiebreak uses (`run_sweep` and
+    /// [`SweepReport::merge`] alike, so shard merges re-rank exactly like
+    /// the unsharded run). Note this is component-wise order, which can
+    /// differ from the joined [`Scenario::key`] string's order when one
+    /// model name is a prefix of another (e.g. a future `gpt2` next to
+    /// `gpt2-small`): `key()` is for identity/dedup, never for ordering.
+    pub fn rank_key(&self) -> (&str, &'static str, &'static str, &'static str) {
+        (
+            self.model.as_str(),
+            self.parallelism.token(),
+            self.topology.token(),
+            self.collective.token(),
         )
     }
 }
@@ -217,6 +238,12 @@ pub struct SweepConfig {
     /// they reach the worker pool (the memory check is a cheap analytic
     /// pass over the cached summary — no simulation).
     pub skip_infeasible: bool,
+    /// Run only shard `K` of `N` (`Some((k, n))`, 1-based): keep every
+    /// scenario whose index in the deterministic [`SweepGrid::expand`]
+    /// order satisfies `i % n == k - 1`. The N shard reports partition
+    /// the full scenario set and merge back losslessly with
+    /// [`SweepReport::merge`] / the `sweep-merge` subcommand.
+    pub shard: Option<(usize, usize)>,
 }
 
 impl Default for SweepConfig {
@@ -232,8 +259,80 @@ impl Default for SweepConfig {
             hbm_bytes: 32 << 30,
             zero: ZeroStage::None,
             skip_infeasible: false,
+            shard: None,
         }
     }
+}
+
+impl SweepConfig {
+    /// The scenario-shaping subset of this config, as deterministic
+    /// JSON. Worker-level knobs that must never affect results —
+    /// `threads` and `shard` — are excluded, so every shard of one sweep
+    /// (and every thread count) shares one fingerprint.
+    /// [`SweepReport::merge`] refuses to combine reports whose
+    /// fingerprints differ: a cross-config ranking would compare
+    /// iteration times measured on different hardware as if they were
+    /// one design space.
+    pub fn fingerprint(&self) -> Value {
+        let zero = match self.zero {
+            ZeroStage::None => 0.0,
+            ZeroStage::OptimizerState => 1.0,
+            ZeroStage::Gradients => 2.0,
+            ZeroStage::Parameters => 3.0,
+        };
+        obj(vec![
+            ("npus", Value::Num(self.npus as f64)),
+            ("mp_group", Value::Num(self.mp_group as f64)),
+            ("batch", Value::Num(self.batch as f64)),
+            ("iterations", Value::Num(self.iterations as f64)),
+            ("bandwidth_gbps", Value::Num(self.bandwidth_gbps)),
+            ("latency_ns", Value::Num(self.latency_ns)),
+            ("hbm_bytes", Value::Num(self.hbm_bytes as f64)),
+            ("zero", Value::Num(zero)),
+            ("skip_infeasible", Value::Bool(self.skip_infeasible)),
+        ])
+    }
+}
+
+/// True when `(k, n)` is a valid 1-based shard-of-N spec.
+fn shard_valid(k: usize, n: usize) -> bool {
+    k >= 1 && n >= 1 && k <= n
+}
+
+/// Parse and validate a `K/N` shard spec (`1 <= K <= N`, whitespace
+/// around the numbers tolerated). Returns `None` on any malformed input
+/// — callers attach their own error context. This is the single parser
+/// behind the CLI `--shard` flag and the report `"shard"` field.
+pub fn parse_shard_spec(spec: &str) -> Option<(usize, usize)> {
+    let (k, n) = spec.split_once('/')?;
+    let k: usize = k.trim().parse().ok()?;
+    let n: usize = n.trim().parse().ok()?;
+    shard_valid(k, n).then_some((k, n))
+}
+
+/// Order-sensitive FNV-1a digest of the expanded scenario keys — the
+/// grid identity stamped into reports so [`SweepReport::merge`] can
+/// refuse shards of *different* grids that happen to share a scenario
+/// count and config.
+fn grid_digest(scenarios: &[Scenario]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for sc in scenarios {
+        eat(sc.model.as_bytes());
+        eat(b"/");
+        eat(sc.parallelism.token().as_bytes());
+        eat(b"/");
+        eat(sc.topology.token().as_bytes());
+        eat(b"/");
+        eat(sc.collective.token().as_bytes());
+        eat(b"\n");
+    }
+    format!("{h:016x}")
 }
 
 /// Translation options for a scenario (shared by simulation and the
@@ -248,22 +347,44 @@ fn scenario_opts(sc: &Scenario, cfg: &SweepConfig) -> TranslateOpts {
     }
 }
 
+/// Per-worker scratch: the simulator arenas plus the workload-derivation
+/// buffers (comm plan + emitted workload), all reused across that
+/// worker's scenarios so steady-state derivation and simulation perform
+/// no heap allocation.
+#[derive(Debug, Default)]
+pub struct ScenarioScratch {
+    sim: SimScratch,
+    comms: Vec<CommPlan>,
+    workload: Workload,
+}
+
+impl ScenarioScratch {
+    /// Fresh, empty scratch (buffers grow on first use).
+    pub fn new() -> ScenarioScratch {
+        ScenarioScratch::default()
+    }
+}
+
 /// Simulate one scenario against the shared cache, reusing the worker's
-/// scratch arena. Pure with respect to its inputs: the result depends
-/// only on `(sc, cache, cfg)` — never on the scratch's prior contents —
-/// which is what makes the ranked report independent of worker count and
-/// scheduling order.
+/// scratch. Only the parallelism-dependent comm pass and the
+/// allocation-free workload emission run per scenario — the structural
+/// extraction and the compute pass live in the cached IR. Pure with
+/// respect to its inputs: the result depends only on `(sc, cache, cfg)`
+/// — never on the scratch's prior contents — which is what makes the
+/// ranked report independent of worker count and scheduling order.
 fn run_scenario(
     sc: &Scenario,
     cache: &WorkloadCache,
     cfg: &SweepConfig,
-    scratch: &mut SimScratch,
+    scratch: &mut ScenarioScratch,
 ) -> Result<ScenarioResult> {
-    let summary = cache.summary(&sc.model).ok_or_else(|| {
+    let ir = cache.ir(&sc.model).ok_or_else(|| {
         Error::Config(format!("model '{}' missing from the workload cache", sc.model))
     })?;
     let opts = scenario_opts(sc, cfg);
-    let w = translator::to_workload(summary, opts, &SystolicCompute::new(cfg.batch))?;
+    passes::plan_comm_into(ir, opts, &mut scratch.comms);
+    emit::workload_into(ir, &scratch.comms, opts.parallelism, &mut scratch.workload)?;
+    let summary = ir.summary();
     let sim_cfg = SimConfig {
         network: Network::single(sc.topology, cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns),
         system: sc.collective.system(),
@@ -273,8 +394,8 @@ fn run_scenario(
         boundary_bytes: summary.layers.iter().map(|l| l.out_act_bytes).max().unwrap_or(1 << 20),
         schedule: PipelineSchedule::GPipe,
     };
-    let r = simulate_with(&w, &sim_cfg, scratch)?;
-    let mem = memory_per_npu(summary, opts, MemoryOpts { hbm_bytes: cfg.hbm_bytes, ..Default::default() });
+    let r = simulate_with(&scratch.workload, &sim_cfg, &mut scratch.sim)?;
+    let mem = passes::memory(ir, opts, MemoryOpts { hbm_bytes: cfg.hbm_bytes, ..Default::default() });
     Ok(ScenarioResult {
         scenario: sc.clone(),
         iteration_ns: r.iteration_ns,
@@ -289,9 +410,10 @@ fn run_scenario(
     })
 }
 
-/// Run the full sweep: expand, translate-once-per-model, optionally prune
+/// Run the full sweep: expand, optionally keep only this worker's shard,
+/// translate-once-per-model into the shared IR cache, optionally prune
 /// infeasible scenarios, simulate across the worker pool (one reusable
-/// [`SimScratch`] per worker), rank.
+/// [`ScenarioScratch`] per worker), rank.
 pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
     let mut scenarios = grid.expand();
     if scenarios.is_empty() {
@@ -299,34 +421,64 @@ pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
             "sweep grid is empty — every axis needs at least one entry".into(),
         ));
     }
-    let models = grid.unique_models();
+    let grid_scenarios = scenarios.len();
+    let grid = grid_digest(&scenarios);
+    if let Some((k, n)) = cfg.shard {
+        if !shard_valid(k, n) {
+            return Err(Error::Config(format!("invalid shard {k}/{n} — need 1 <= K <= N")));
+        }
+        // Modulo filter over the deterministic expand order: the N
+        // shards partition the full scenario set.
+        let mut idx = 0usize;
+        scenarios.retain(|_| {
+            let keep = idx % n == k - 1;
+            idx += 1;
+            keep
+        });
+    }
+    // Only the models this (possibly sharded) scenario list actually
+    // needs are translated, in first-appearance order.
+    let models: Vec<String> = {
+        let mut seen = BTreeSet::new();
+        scenarios
+            .iter()
+            .filter(|sc| seen.insert(sc.model.as_str()))
+            .map(|sc| sc.model.clone())
+            .collect()
+    };
     let cache = WorkloadCache::build(&models, cfg.batch)?;
     let mut pruned = 0usize;
     if cfg.skip_infeasible {
-        // Fast path: the memory model is a cheap analytic pass over the
-        // cached summary, so infeasible scenarios never reach the pool.
+        // Fast path: the memory pass is a cheap analytic read of the
+        // cached IR, so infeasible scenarios never reach the pool.
         let before = scenarios.len();
-        scenarios.retain(|sc| match cache.summary(&sc.model) {
-            Some(summary) => {
+        scenarios.retain(|sc| match cache.ir(&sc.model) {
+            Some(ir) => {
                 let opts = scenario_opts(sc, cfg);
                 let m = MemoryOpts { hbm_bytes: cfg.hbm_bytes, ..Default::default() };
-                memory_per_npu(summary, opts, m).fits(cfg.hbm_bytes)
+                passes::memory(ir, opts, m).fits(cfg.hbm_bytes)
             }
             // Unknown models are kept so the pool surfaces the error.
             None => true,
         });
         pruned = before - scenarios.len();
     }
-    let results = pool::run_indexed_with(scenarios.len(), cfg.threads, SimScratch::new, |s, i| {
+    let threads = cfg.threads;
+    let results = pool::run_indexed_with(scenarios.len(), threads, ScenarioScratch::new, |s, i| {
         run_scenario(&scenarios[i], &cache, cfg, s)
     })?;
     let mut ranked = results;
-    ranked.sort_by(|a, b| {
-        a.iteration_ns
-            .cmp(&b.iteration_ns)
-            .then_with(|| a.scenario.key().cmp(&b.scenario.key()))
-    });
-    Ok(SweepReport { models: models.len(), translations: cache.translations(), pruned, ranked })
+    ranked.sort_by(ScenarioResult::rank_cmp);
+    Ok(SweepReport {
+        models: models.len(),
+        translations: cache.translations(),
+        pruned,
+        config: cfg.fingerprint(),
+        grid_scenarios,
+        grid_digest: grid,
+        shard: cfg.shard,
+        ranked,
+    })
 }
 
 #[cfg(test)]
@@ -410,6 +562,51 @@ mod tests {
         assert_eq!(r.pruned, 0);
         assert_eq!(r.ranked.len(), 2);
         assert!(r.ranked.iter().all(|x| x.fits_hbm));
+    }
+
+    #[test]
+    fn shards_partition_the_grid_and_merge_back_to_the_full_ranking() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into(), "resnet18".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let base = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };
+        let full = run_sweep(&grid, &base).unwrap();
+        let s1 = run_sweep(&grid, &SweepConfig { shard: Some((1, 3)), ..base }).unwrap();
+        let s2 = run_sweep(&grid, &SweepConfig { shard: Some((2, 3)), ..base }).unwrap();
+        let s3 = run_sweep(&grid, &SweepConfig { shard: Some((3, 3)), ..base }).unwrap();
+        assert_eq!(s1.ranked.len() + s2.ranked.len() + s3.ranked.len(), full.ranked.len());
+        let merged = SweepReport::merge(&[s1, s2, s3]).unwrap();
+        assert_eq!(merged.models, full.models);
+        // The merged ranking is byte-identical to the unsharded run's.
+        let ranked_of = |r: &SweepReport| r.to_json().get("ranked").cloned().unwrap();
+        assert_eq!(ranked_of(&merged), ranked_of(&full));
+    }
+
+    #[test]
+    fn shard_beyond_scenario_count_yields_an_empty_report() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into()],
+            parallelisms: vec![Parallelism::Data],
+            topologies: vec![TopologyKind::Ring],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let cfg = SweepConfig { batch: 4, npus: 8, shard: Some((2, 2)), ..Default::default() };
+        let r = run_sweep(&grid, &cfg).unwrap();
+        assert!(r.ranked.is_empty());
+        assert_eq!(r.translations, 0);
+        assert_eq!(r.models, 0);
+    }
+
+    #[test]
+    fn invalid_shards_are_config_errors() {
+        let grid = SweepGrid::default();
+        for shard in [(0, 2), (3, 2), (1, 0)] {
+            let cfg = SweepConfig { shard: Some(shard), ..Default::default() };
+            assert!(run_sweep(&grid, &cfg).is_err(), "shard {shard:?} should be rejected");
+        }
     }
 
     #[test]

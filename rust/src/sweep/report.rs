@@ -7,10 +7,27 @@
 //! included — so a 1-thread run and an N-thread run of the same grid
 //! produce byte-identical output.
 
-use super::Scenario;
+use super::{CollectiveAlgo, Scenario};
+use crate::error::{Error, Result};
 use crate::json::{obj, Value};
+use crate::sim::TopologyKind;
 use crate::util::table::Table;
 use crate::util::{human_bytes, human_time};
+use crate::workload::Parallelism;
+use std::collections::BTreeSet;
+
+/// Read a non-negative integer header field as `usize`.
+fn r_usize(v: &Value, key: &str) -> Result<usize> {
+    v.req_u64(key).map(|x| x as usize)
+}
+
+/// Parse a report's `"shard": "K/N"` field (shared spec grammar:
+/// [`super::parse_shard_spec`]).
+fn parse_shard_field(spec: &str) -> Result<(usize, usize)> {
+    super::parse_shard_spec(spec).ok_or_else(|| {
+        Error::Config(format!("invalid shard field '{spec}' in sweep report JSON"))
+    })
+}
 
 /// Simulation outcome for one scenario.
 #[derive(Debug, Clone)]
@@ -37,16 +54,48 @@ pub struct ScenarioResult {
     pub fits_hbm: bool,
 }
 
+impl ScenarioResult {
+    /// The sweep's total ranking order: fastest simulated iteration
+    /// first, allocation-free scenario-key tiebreak. Shared by
+    /// `run_sweep` and [`SweepReport::merge`] so a shard merge re-ranks
+    /// exactly like the unsharded run.
+    pub fn rank_cmp(a: &ScenarioResult, b: &ScenarioResult) -> std::cmp::Ordering {
+        a.iteration_ns
+            .cmp(&b.iteration_ns)
+            .then_with(|| a.scenario.rank_key().cmp(&b.scenario.rank_key()))
+    }
+}
+
 /// The ranked sweep outcome.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
-    /// Unique models in the grid.
+    /// Unique models in this run's scenario list.
     pub models: usize,
-    /// Translations performed while building the cache (== `models`).
+    /// Translations performed while building the cache — equal to
+    /// `models` for a single run. A merged report sums the per-shard
+    /// counts, so it can exceed `models` when several shard processes
+    /// each translated the same model.
     pub translations: usize,
     /// Scenarios pruned by the `--skip-infeasible` memory check before
     /// reaching the worker pool.
     pub pruned: usize,
+    /// The scenario-shaping config fingerprint
+    /// ([`super::SweepConfig::fingerprint`]) the results were produced
+    /// under — `Value::Null` for reports assembled without one. `merge`
+    /// refuses inputs with differing fingerprints.
+    pub config: Value,
+    /// Deduplicated scenario count of the *full* grid (before any shard
+    /// filter or pruning) — what `merge` uses to verify a shard set
+    /// actually covers the whole design space.
+    pub grid_scenarios: usize,
+    /// Order-sensitive digest of the full grid's scenario keys — the
+    /// grid *identity*, so `merge` rejects shards of different grids
+    /// even when their scenario counts and configs coincide. Empty for
+    /// hand-assembled reports.
+    pub grid_digest: String,
+    /// Which shard of the grid this report covers (`None` = the full
+    /// grid). `merge` requires a complete, uniform `1..=N` shard set.
+    pub shard: Option<(usize, usize)>,
     /// Results, fastest simulated iteration first.
     pub ranked: Vec<ScenarioResult>,
 }
@@ -82,13 +131,198 @@ impl SweepReport {
                 ])
             })
             .collect();
+        let shard = match self.shard {
+            Some((k, n)) => Value::Str(format!("{k}/{n}")),
+            None => Value::Null,
+        };
         obj(vec![
             ("models", Value::Num(self.models as f64)),
             ("translations", Value::Num(self.translations as f64)),
             ("scenarios", Value::Num(self.ranked.len() as f64)),
             ("pruned", Value::Num(self.pruned as f64)),
+            ("config", self.config.clone()),
+            ("grid_scenarios", Value::Num(self.grid_scenarios as f64)),
+            ("grid_digest", Value::Str(self.grid_digest.clone())),
+            ("shard", shard),
             ("ranked", Value::Arr(ranked)),
         ])
+    }
+
+    /// Rebuild a report from its [`SweepReport::to_json`] form. Inverse
+    /// of `to_json` up to the permille rounding of the utilization — a
+    /// parse → re-emit round trip is byte-identical.
+    pub fn from_json(v: &Value) -> Result<SweepReport> {
+        let ranked_json = v
+            .get("ranked")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::Config("sweep report JSON has no 'ranked' array".into()))?;
+        let mut ranked = Vec::with_capacity(ranked_json.len());
+        for r in ranked_json {
+            let scenario = Scenario {
+                model: r.req_str("model")?.to_string(),
+                parallelism: Parallelism::from_token(r.req_str("parallelism")?)?,
+                topology: TopologyKind::from_token(r.req_str("topology")?)?,
+                collective: CollectiveAlgo::from_token(r.req_str("collective")?)?,
+            };
+            let fits_hbm = r
+                .get("fits_hbm")
+                .and_then(Value::as_bool)
+                .ok_or_else(|| Error::Config("missing/invalid bool field 'fits_hbm'".into()))?;
+            ranked.push(ScenarioResult {
+                scenario,
+                iteration_ns: r.req_u64("iteration_ns")?,
+                total_ns: r.req_u64("total_ns")?,
+                compute_busy_ns: r.req_u64("compute_busy_ns")?,
+                net_busy_ns: r.req_u64("net_busy_ns")?,
+                exposed_ns: r.req_u64("exposed_ns")?,
+                compute_utilization: r.req_f64("compute_utilization_permille")? / 1000.0,
+                events: r.req_u64("events")? as usize,
+                mem_per_npu_bytes: r.req_u64("mem_per_npu_bytes")?,
+                fits_hbm,
+            });
+        }
+        // A present-but-malformed shard field is an error, never silently
+        // an unstamped report (that would disable the completeness guard).
+        let shard = match v.get("shard") {
+            None | Some(Value::Null) => None,
+            Some(Value::Str(spec)) => Some(parse_shard_field(spec)?),
+            Some(_) => {
+                return Err(Error::Config(
+                    "invalid shard field in sweep report JSON — expected \"K/N\" or null".into(),
+                ))
+            }
+        };
+        Ok(SweepReport {
+            models: r_usize(v, "models")?,
+            translations: r_usize(v, "translations")?,
+            pruned: r_usize(v, "pruned")?,
+            config: v.get("config").cloned().unwrap_or(Value::Null),
+            grid_scenarios: v.get("grid_scenarios").and_then(Value::as_usize).unwrap_or(0),
+            grid_digest: v
+                .get("grid_digest")
+                .and_then(Value::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            shard,
+            ranked,
+        })
+    }
+
+    /// Merge per-shard reports into one re-ranked report (the
+    /// `sweep-merge` reducer). Every shard must carry the same config
+    /// fingerprint — iteration times measured under different configs
+    /// are not one design space — shard-stamped inputs must form a
+    /// complete, uniform `1..=N` set over the same grid (a forgotten or
+    /// mixed-width shard would silently present a partial ranking as the
+    /// full design space), and scenario keys must be disjoint.
+    /// Translation and pruned counts sum; the model count is the number
+    /// of distinct models in the merged ranking.
+    pub fn merge(shards: &[SweepReport]) -> Result<SweepReport> {
+        if let Some(first) = shards.first() {
+            if let Some(bad) = shards.iter().position(|s| s.config != first.config) {
+                return Err(Error::Config(format!(
+                    "shard {} was produced under a different sweep configuration — \
+                     refusing to merge rankings across configs",
+                    bad + 1
+                )));
+            }
+            if let Some(bad) = shards.iter().position(|s| {
+                s.grid_scenarios != first.grid_scenarios || s.grid_digest != first.grid_digest
+            }) {
+                return Err(Error::Config(format!(
+                    "shard {} covers a different grid ({} scenarios, digest {} vs {} scenarios, \
+                     digest {}) — refusing to merge across grids",
+                    bad + 1,
+                    shards[bad].grid_scenarios,
+                    shards[bad].grid_digest,
+                    first.grid_scenarios,
+                    first.grid_digest
+                )));
+            }
+        }
+        // Shard-stamped inputs must cover the whole grid: same N
+        // everywhere, and every K of 1..=N present exactly once.
+        // (Inputs without a shard stamp — hand-assembled reports — are
+        // only overlap-checked.)
+        let stamped: Vec<(usize, usize)> = shards.iter().filter_map(|s| s.shard).collect();
+        if !stamped.is_empty() {
+            if stamped.len() != shards.len() {
+                return Err(Error::Config(
+                    "cannot mix sharded and unsharded reports in one merge".into(),
+                ));
+            }
+            // Coverage can only be verified against recorded provenance;
+            // a stamped shard without it could be from any grid.
+            if shards.iter().any(|s| s.grid_digest.is_empty() || s.grid_scenarios == 0) {
+                return Err(Error::Config(
+                    "sharded report lacks grid provenance (grid_scenarios/grid_digest) — \
+                     cannot verify the shard set covers one design space"
+                        .into(),
+                ));
+            }
+            let n = stamped[0].1;
+            if stamped.iter().any(|&(_, ni)| ni != n) {
+                return Err(Error::Config(
+                    "shard reports use different shard widths — not one partition".into(),
+                ));
+            }
+            let mut ks: Vec<usize> = stamped.iter().map(|&(k, _)| k).collect();
+            ks.sort_unstable();
+            ks.dedup();
+            if ks.len() != stamped.len() || ks.len() != n || ks[0] != 1 || ks[n - 1] != n {
+                return Err(Error::Config(format!(
+                    "incomplete shard set: need every shard 1..={n} exactly once, got {} input(s)",
+                    stamped.len()
+                )));
+            }
+            // Every grid scenario must be accounted for — ranked or
+            // pruned — across the complete shard set; a truncated shard
+            // file must not silently shrink the "full" design space.
+            let covered: usize = shards.iter().map(|s| s.ranked.len() + s.pruned).sum();
+            let expect = shards[0].grid_scenarios;
+            if covered != expect {
+                return Err(Error::Config(format!(
+                    "shard set covers {covered} of {expect} grid scenarios \
+                     (ranked + pruned) — a shard file is truncated or stale"
+                )));
+            }
+        }
+        let mut ranked: Vec<ScenarioResult> = Vec::new();
+        let mut translations = 0usize;
+        let mut pruned = 0usize;
+        for s in shards {
+            translations += s.translations;
+            pruned += s.pruned;
+            ranked.extend(s.ranked.iter().cloned());
+        }
+        let mut keys = BTreeSet::new();
+        for r in &ranked {
+            if !keys.insert(r.scenario.key()) {
+                return Err(Error::Config(format!(
+                    "duplicate scenario '{}' across shards — inputs overlap",
+                    r.scenario.key()
+                )));
+            }
+        }
+        ranked.sort_by(ScenarioResult::rank_cmp);
+        let mut model_names = BTreeSet::new();
+        for r in &ranked {
+            model_names.insert(r.scenario.model.as_str());
+        }
+        let models = model_names.len();
+        let config = shards.first().map_or(Value::Null, |s| s.config.clone());
+        let grid_scenarios = shards.first().map_or(0, |s| s.grid_scenarios);
+        let grid_digest = shards.first().map_or_else(String::new, |s| s.grid_digest.clone());
+        Ok(SweepReport {
+            models,
+            translations,
+            pruned,
+            config,
+            grid_scenarios,
+            grid_digest,
+            shard: None,
+            ranked,
+        })
     }
 
     /// Human-readable ranked table.
@@ -159,6 +393,10 @@ mod tests {
             models: 2,
             translations: 2,
             pruned: 0,
+            config: crate::sweep::SweepConfig::default().fingerprint(),
+            grid_scenarios: 2,
+            grid_digest: String::new(),
+            shard: None,
             ranked: vec![mk("mlp", 10), mk("vgg16", 20)],
         }
     }
@@ -190,6 +428,141 @@ mod tests {
         assert!(text.contains("DATA"));
         assert!(text.contains("pipelined"));
         assert_eq!(text.lines().count(), 2 + r.ranked.len());
+    }
+
+    #[test]
+    fn json_round_trips_through_from_json() {
+        let r = sample();
+        let emitted = r.to_json().to_json_pretty();
+        let parsed = SweepReport::from_json(&crate::json::parse(&emitted).unwrap()).unwrap();
+        assert_eq!(parsed.models, r.models);
+        assert_eq!(parsed.translations, r.translations);
+        assert_eq!(parsed.ranked.len(), r.ranked.len());
+        // Re-emission is byte-identical (permille rounding is stable).
+        assert_eq!(parsed.to_json().to_json_pretty(), emitted);
+        // Garbage input is rejected.
+        assert!(SweepReport::from_json(&Value::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn merge_reranks_and_rejects_overlap() {
+        let full = sample();
+        // 2 ranked + 3 pruned across the shards = a 5-scenario grid.
+        let shard_a = SweepReport {
+            models: 1,
+            translations: 1,
+            pruned: 1,
+            config: full.config.clone(),
+            grid_scenarios: 5,
+            grid_digest: "g".into(),
+            shard: Some((2, 2)),
+            ranked: vec![full.ranked[1].clone()],
+        };
+        let shard_b = SweepReport {
+            models: 1,
+            translations: 1,
+            pruned: 2,
+            config: full.config.clone(),
+            grid_scenarios: 5,
+            grid_digest: "g".into(),
+            shard: Some((1, 2)),
+            ranked: vec![full.ranked[0].clone()],
+        };
+        let merged = SweepReport::merge(&[shard_a, shard_b]).unwrap();
+        assert_eq!(merged.models, 2);
+        assert_eq!(merged.translations, 2);
+        assert_eq!(merged.pruned, 3);
+        assert_eq!(merged.config, full.config);
+        assert_eq!(merged.shard, None);
+        assert_eq!(merged.grid_scenarios, 5);
+        // Re-ranked fastest-first regardless of shard order.
+        assert_eq!(merged.ranked[0].scenario.model, "mlp");
+        assert_eq!(merged.ranked[1].scenario.model, "vgg16");
+        // Overlapping shards are rejected.
+        let dup = SweepReport::merge(&[full.clone(), full]);
+        assert!(dup.is_err());
+    }
+
+    #[test]
+    fn merge_requires_a_complete_uniform_shard_set() {
+        let full = sample();
+        let stamped = |k: usize, n: usize, ranked: Vec<ScenarioResult>| SweepReport {
+            models: ranked.len(),
+            translations: ranked.len(),
+            pruned: 0,
+            config: full.config.clone(),
+            grid_scenarios: 2,
+            grid_digest: "g".into(),
+            shard: Some((k, n)),
+            ranked,
+        };
+        // A forgotten shard is rejected, not silently merged.
+        let err = SweepReport::merge(&[stamped(1, 3, vec![full.ranked[0].clone()])]).unwrap_err();
+        assert!(err.to_string().contains("incomplete shard set"));
+        // Mixed shard widths are rejected even when keys are disjoint.
+        let err = SweepReport::merge(&[
+            stamped(1, 2, vec![full.ranked[0].clone()]),
+            stamped(2, 3, vec![full.ranked[1].clone()]),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("different shard widths"));
+        // Mixing stamped and unstamped inputs is rejected.
+        let unstamped = SweepReport {
+            shard: None,
+            grid_scenarios: 2,
+            grid_digest: "g".into(),
+            ranked: vec![full.ranked[1].clone()],
+            ..full.clone()
+        };
+        let err = SweepReport::merge(&[stamped(1, 2, vec![full.ranked[0].clone()]), unstamped])
+            .unwrap_err();
+        assert!(err.to_string().contains("mix sharded and unsharded"));
+        // Stamped shards without grid provenance cannot prove coverage.
+        let mut bare = stamped(1, 2, vec![full.ranked[0].clone()]);
+        bare.grid_digest = String::new();
+        let mut bare2 = stamped(2, 2, vec![full.ranked[1].clone()]);
+        bare2.grid_digest = String::new();
+        let err = SweepReport::merge(&[bare, bare2]).unwrap_err();
+        assert!(err.to_string().contains("grid provenance"));
+        // A truncated shard file (scenarios missing entirely) is caught
+        // by the ranked+pruned coverage count.
+        let err = SweepReport::merge(&[
+            stamped(1, 2, Vec::new()),
+            stamped(2, 2, vec![full.ranked[1].clone()]),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("covers 1 of 2 grid scenarios"));
+        // Differing grid sizes are rejected.
+        let mut other_grid = stamped(2, 2, vec![full.ranked[1].clone()]);
+        other_grid.grid_scenarios = 99;
+        let err = SweepReport::merge(&[stamped(1, 2, vec![full.ranked[0].clone()]), other_grid])
+            .unwrap_err();
+        assert!(err.to_string().contains("different grid"));
+        // Same size but a different grid identity (digest) is rejected:
+        // equal counts and configs are not grid equality.
+        let mut other_axes = stamped(2, 2, vec![full.ranked[1].clone()]);
+        other_axes.grid_digest = "feedface00000000".into();
+        let err = SweepReport::merge(&[stamped(1, 2, vec![full.ranked[0].clone()]), other_axes])
+            .unwrap_err();
+        assert!(err.to_string().contains("different grid"));
+        // The complete set merges fine.
+        let merged = SweepReport::merge(&[
+            stamped(1, 2, vec![full.ranked[0].clone()]),
+            stamped(2, 2, vec![full.ranked[1].clone()]),
+        ])
+        .unwrap();
+        assert_eq!(merged.ranked.len(), 2);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_configs() {
+        let a = sample();
+        let mut b = sample();
+        // Disjoint scenarios but a different config: still rejected.
+        b.ranked.clear();
+        b.config = crate::sweep::SweepConfig { npus: 64, ..Default::default() }.fingerprint();
+        let err = SweepReport::merge(&[a, b]).unwrap_err();
+        assert!(err.to_string().contains("different sweep configuration"));
     }
 
     #[test]

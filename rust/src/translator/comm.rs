@@ -41,6 +41,20 @@ pub struct CommPlan {
 
 const NONE: (CommType, u64) = (CommType::None, 0);
 
+impl CommPlan {
+    /// The all-local plan: no communication in any phase. This is the
+    /// empty comm-slot value [`crate::ir::ModelIR`] layers start with.
+    pub const fn none() -> CommPlan {
+        CommPlan { fwd: NONE, ig: NONE, wg: NONE }
+    }
+}
+
+impl Default for CommPlan {
+    fn default() -> CommPlan {
+        CommPlan::none()
+    }
+}
+
 /// Plan communication for one layer under the chosen strategy.
 pub fn comm_for_layer(layer: &LayerInfo, opts: TranslateOpts) -> CommPlan {
     match opts.parallelism {

@@ -8,9 +8,14 @@
 //! 2. an ASTRA-sim [`crate::workload::Workload`] description with
 //!    per-phase compute times and per-parallelism communication sizes.
 //!
-//! Pipeline (paper §3.3): deserialize protobuf → walk the graph → extract
-//! layer information → attach compute times → emit. Deserialization uses
-//! the metadata-only decoder, so weight payloads are never copied.
+//! Since the IR refactor the pipeline is staged through
+//! [`crate::ir::ModelIR`] as frontends → passes → emitters: this module
+//! hosts the ONNX structural frontend ([`extract()`]), the pass
+//! ingredients ([`ComputeTimeModel`], [`comm_for_layer`],
+//! [`memory_per_npu`]) and the one-call conveniences ([`to_workload`],
+//! [`translate_bytes`]) that compose the staged pipeline for callers
+//! that do not need to hold the IR themselves. Deserialization uses the
+//! metadata-only decoder, so weight payloads are never copied.
 
 mod comm;
 mod extract;
@@ -21,18 +26,28 @@ pub use extract::{extract, extract_from_bytes, LayerInfo, LayerKind, ModelSummar
 pub use memory::{memory_per_npu, MemoryOpts, MemoryReport, Optimizer, ZeroStage};
 
 use crate::error::Result;
-use crate::workload::{LayerSpec, Parallelism, Phase, Workload};
+use crate::workload::{Parallelism, Workload};
 
 /// Source of per-layer compute times.
 pub trait ComputeTimeModel {
     /// Return (fwd_ns, input_grad_ns, weight_grad_ns) for a layer.
     fn layer_times(&self, layer: &LayerInfo) -> (u64, u64, u64);
 
-    /// Optimizer update time for a layer (default: bandwidth-bound SGD
-    /// update at 100 GB/s over 3× the parameter bytes: read w, read g,
-    /// write w).
+    /// Memory bandwidth in bytes/ns (== GB/s) used to cost the optimizer
+    /// update. The default, 100 GB/s, is the historical hard-coded value
+    /// kept for models that declare no bandwidth of their own
+    /// ([`ConstantCompute`], measured calibrations); bandwidth-aware
+    /// models ([`RooflineCompute`], [`crate::compute::SystolicCompute`])
+    /// override it with their configured memory bandwidth.
+    fn update_bandwidth(&self) -> f64 {
+        100.0
+    }
+
+    /// Optimizer update time for a layer: bandwidth-bound SGD update over
+    /// 3× the parameter bytes (read w, read g, write w) at
+    /// [`ComputeTimeModel::update_bandwidth`].
     fn update_time(&self, layer: &LayerInfo) -> u64 {
-        (layer.weight_bytes * 3) / 100
+        ((layer.weight_bytes * 3) as f64 / self.update_bandwidth().max(f64::MIN_POSITIVE)) as u64
     }
 }
 
@@ -76,6 +91,12 @@ impl ComputeTimeModel for RooflineCompute {
         // Backward GEMMs have the same MAC count as forward.
         (t, t, t)
     }
+
+    /// The optimizer update streams parameters at the same memory
+    /// bandwidth the roofline uses for layer phases.
+    fn update_bandwidth(&self) -> f64 {
+        self.bytes_per_ns
+    }
 }
 
 /// Translation options.
@@ -108,25 +129,24 @@ impl Default for TranslateOpts {
 }
 
 /// Translate a model summary into an ASTRA-sim workload description.
+///
+/// One-call composition of the staged pipeline in its slice-level form:
+/// run the compute and comm passes over the borrowed summary, then lower
+/// through the shared emitter — no summary clone, byte-identical to the
+/// pre-refactor fused loop. Callers that reuse a model across many
+/// translations (the sweep) hold a compute-annotated
+/// [`crate::ir::ModelIR`] instead and re-run only the comm pass per
+/// scenario.
 pub fn to_workload(
     summary: &ModelSummary,
     opts: TranslateOpts,
     compute: &dyn ComputeTimeModel,
 ) -> Result<Workload> {
-    let mut layers = Vec::with_capacity(summary.layers.len());
-    for layer in &summary.layers {
-        let (fwd_ns, ig_ns, wg_ns) = compute.layer_times(layer);
-        let plan = comm_for_layer(layer, opts);
-        layers.push(LayerSpec {
-            name: layer.name.clone(),
-            reserved: -1,
-            fwd: Phase { compute_ns: fwd_ns, comm: plan.fwd.0, comm_bytes: plan.fwd.1 },
-            input_grad: Phase { compute_ns: ig_ns, comm: plan.ig.0, comm_bytes: plan.ig.1 },
-            weight_grad: Phase { compute_ns: wg_ns, comm: plan.wg.0, comm_bytes: plan.wg.1 },
-            update_ns: compute.update_time(layer),
-        });
-    }
-    Ok(Workload { parallelism: opts.parallelism, layers })
+    let mut costs = Vec::new();
+    crate::ir::passes::compute_costs_into(summary, compute, &mut costs);
+    let mut comms = Vec::new();
+    crate::ir::passes::plan_comm_for_summary_into(summary, opts, &mut comms);
+    crate::ir::emit::workload_from_parts(summary, &costs, &comms, opts.parallelism)
 }
 
 /// One-call convenience: ONNX bytes → workload text.
@@ -203,6 +223,33 @@ mod tests {
         assert_eq!(l0.fwd.comm, CommType::AllGather);
         assert_eq!(l0.weight_grad.comm, CommType::AllReduce);
         assert_eq!(l0.weight_grad.comm_bytes, (784 * 4096 * 4) / 4);
+    }
+
+    #[test]
+    fn update_time_tracks_the_model_bandwidth() {
+        let layer = LayerInfo {
+            name: "l".into(),
+            kind: LayerKind::Dense,
+            variables: 1_000_000,
+            dtype: crate::onnx::DataType::Float,
+            weight_bytes: 4_000_000,
+            in_act_bytes: 0,
+            out_act_bytes: 0,
+            macs: 0,
+            out_shape: vec![1, 1000],
+        };
+        // Default: the historical 100 GB/s, exactly the old integer math.
+        let constant = ConstantCompute(1);
+        assert_eq!(constant.update_bandwidth(), 100.0);
+        assert_eq!(constant.update_time(&layer), (4_000_000 * 3) / 100);
+        // Roofline: streams at its own memory bandwidth (1.2 TB/s).
+        let roofline = RooflineCompute::default();
+        assert_eq!(roofline.update_bandwidth(), 1200.0);
+        assert_eq!(roofline.update_time(&layer), ((4_000_000u64 * 3) as f64 / 1200.0) as u64);
+        // Systolic: DRAM bandwidth from its accelerator description.
+        let systolic = crate::compute::SystolicCompute::new(8);
+        assert_eq!(systolic.update_bandwidth(), systolic.cfg.dram_gbps);
+        assert!(systolic.update_time(&layer) < constant.update_time(&layer));
     }
 
     #[test]

@@ -165,6 +165,14 @@ pub struct Workload {
     pub layers: Vec<LayerSpec>,
 }
 
+impl Default for Workload {
+    /// An empty `DATA` workload — the identity value the IR emitters'
+    /// into-variants refill ([`crate::ir::emit::workload_into`]).
+    fn default() -> Workload {
+        Workload { parallelism: Parallelism::Data, layers: Vec::new() }
+    }
+}
+
 impl Workload {
     /// Serialize to the description-file text format.
     pub fn emit(&self) -> String {

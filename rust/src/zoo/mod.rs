@@ -8,6 +8,11 @@
 //! them: each builder reproduces the exact initializer shapes (and hence
 //! the exact layer-size tables) of the corresponding ONNX Model Zoo
 //! export — see DESIGN.md §Substitutions.
+//!
+//! Builders return in-memory [`crate::onnx::Model`]s, which feed the
+//! zoo-direct IR frontend ([`crate::ir::frontend::from_zoo`]) without an
+//! ONNX encode/decode round-trip; `encode_model` remains available when
+//! real `.onnx` bytes are wanted (`modtrans zoo build`).
 
 pub mod alexnet;
 pub mod builder;

@@ -1,0 +1,184 @@
+//! The IR refactor's correctness anchor: the staged pipeline
+//! (frontend → compute pass → comm pass → emitter) must produce text
+//! workloads **byte-identical** to the pre-refactor monolithic
+//! `translator::translate` loop, for every zoo family, parallelism and
+//! compute model — plus zoo-direct/ONNX frontend equivalence and the
+//! et-json emitter's schema guarantees.
+
+use modtrans::compute::SystolicCompute;
+use modtrans::ir::{emit, frontend, passes};
+use modtrans::translator::{
+    comm_for_layer, to_workload, ComputeTimeModel, ConstantCompute, ModelSummary,
+    RooflineCompute, TranslateOpts, ZeroStage,
+};
+use modtrans::workload::{LayerSpec, Parallelism, Phase, Workload};
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+
+/// The pre-refactor translation loop, verbatim: one linear pass fusing
+/// compute times, comm planning and emission. Kept here as the golden
+/// reference the staged pipeline is diffed against.
+fn reference_translate(
+    summary: &ModelSummary,
+    opts: TranslateOpts,
+    compute: &dyn ComputeTimeModel,
+) -> Workload {
+    let mut layers = Vec::with_capacity(summary.layers.len());
+    for layer in &summary.layers {
+        let (fwd_ns, ig_ns, wg_ns) = compute.layer_times(layer);
+        let plan = comm_for_layer(layer, opts);
+        layers.push(LayerSpec {
+            name: layer.name.clone(),
+            reserved: -1,
+            fwd: Phase { compute_ns: fwd_ns, comm: plan.fwd.0, comm_bytes: plan.fwd.1 },
+            input_grad: Phase { compute_ns: ig_ns, comm: plan.ig.0, comm_bytes: plan.ig.1 },
+            weight_grad: Phase { compute_ns: wg_ns, comm: plan.wg.0, comm_bytes: plan.wg.1 },
+            update_ns: compute.update_time(layer),
+        });
+    }
+    Workload { parallelism: opts.parallelism, layers }
+}
+
+const MODELS: [&str; 3] = ["mlp", "resnet18", "gpt2-tiny"];
+
+const STRATEGIES: [Parallelism; 5] = [
+    Parallelism::Data,
+    Parallelism::Model,
+    Parallelism::HybridDataModel,
+    Parallelism::HybridModelData,
+    Parallelism::Pipeline,
+];
+
+fn opts(p: Parallelism, batch: i64) -> TranslateOpts {
+    TranslateOpts { parallelism: p, npus: 16, mp_group: 4, batch, zero: ZeroStage::None }
+}
+
+#[test]
+fn staged_pipeline_is_byte_identical_to_the_reference_loop() {
+    let batch = 8i64;
+    let computes: [&dyn ComputeTimeModel; 3] = [
+        &ConstantCompute(1000),
+        &SystolicCompute::new(batch),
+        &RooflineCompute::default(),
+    ];
+    for model in MODELS {
+        let ir_base = frontend::from_zoo(model, batch).unwrap();
+        for p in STRATEGIES {
+            for compute in computes {
+                let o = opts(p, batch);
+                let golden = reference_translate(ir_base.summary(), o, compute).emit();
+                // Path 1: the one-call convenience (now IR-staged inside).
+                let via_convenience = to_workload(ir_base.summary(), o, compute).unwrap().emit();
+                assert_eq!(via_convenience, golden, "{model}/{p:?}: to_workload diverged");
+                // Path 2: explicit frontend → passes → emitter.
+                let mut ir = ir_base.clone();
+                passes::annotate_compute(&mut ir, compute);
+                passes::annotate_comm(&mut ir, o);
+                let via_ir = emit::text(&ir).unwrap();
+                assert_eq!(via_ir, golden, "{model}/{p:?}: staged pipeline diverged");
+                // Path 3: the sweep's allocation-free derivation.
+                let mut comms = Vec::new();
+                passes::plan_comm_into(&ir, o, &mut comms);
+                let mut reused = Workload::default();
+                emit::workload_into(&ir, &comms, p, &mut reused).unwrap();
+                assert_eq!(reused.emit(), golden, "{model}/{p:?}: into-emitter diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_stages_survive_the_staging() {
+    let batch = 8i64;
+    let summary = frontend::from_zoo("mlp", batch).unwrap().into_summary();
+    for zero in [ZeroStage::OptimizerState, ZeroStage::Gradients, ZeroStage::Parameters] {
+        let o = TranslateOpts { zero, ..opts(Parallelism::Data, batch) };
+        let golden = reference_translate(&summary, o, &ConstantCompute(10)).emit();
+        let staged = to_workload(&summary, o, &ConstantCompute(10)).unwrap().emit();
+        assert_eq!(staged, golden, "{zero:?}");
+    }
+}
+
+#[test]
+fn zoo_direct_and_onnx_byte_frontends_emit_identical_workloads() {
+    for model in MODELS {
+        let m = zoo::get(model, ZooOpts { weights: WeightFill::Empty }).unwrap();
+        let bytes = modtrans::onnx::encode_model(&m);
+        let mut direct = frontend::from_zoo(model, 8).unwrap();
+        let mut via_bytes = frontend::from_onnx_bytes(&bytes, 8).unwrap();
+        for ir in [&mut direct, &mut via_bytes] {
+            passes::annotate_compute(ir, &SystolicCompute::new(8));
+            passes::annotate_comm(ir, opts(Parallelism::Data, 8));
+        }
+        assert_eq!(
+            emit::text(&direct).unwrap(),
+            emit::text(&via_bytes).unwrap(),
+            "{model}: frontends diverged"
+        );
+    }
+}
+
+#[test]
+fn et_json_emitter_schema_and_golden_shape() {
+    let mut ir = frontend::from_zoo("mlp", 4).unwrap();
+    passes::annotate_compute(&mut ir, &ConstantCompute(500));
+    passes::annotate_comm(&mut ir, opts(Parallelism::Data, 4));
+    let n = ir.num_layers();
+    let v = emit::et_json(&ir).unwrap();
+
+    // Header.
+    assert_eq!(v.get("schema").unwrap().as_str(), Some(emit::ET_JSON_SCHEMA));
+    assert_eq!(v.get("model").unwrap().as_str(), Some("mlp"));
+    assert_eq!(v.get("batch").unwrap().as_u64(), Some(4));
+    assert_eq!(v.get("parallelism").unwrap().as_str(), Some("DATA"));
+    assert_eq!(v.get("num_layers").unwrap().as_u64(), Some(n as u64));
+
+    // Under DATA: fwd, ig, wg, wg.comm(ALLREDUCE), update per layer.
+    let nodes = v.get("nodes").unwrap().as_arr().unwrap();
+    assert_eq!(nodes.len(), 5 * n);
+    let mut comp = 0usize;
+    let mut coll = 0usize;
+    for (i, node) in nodes.iter().enumerate() {
+        assert_eq!(node.get("id").unwrap().as_u64(), Some(i as u64), "ids must be dense");
+        let deps = node.get("data_deps").unwrap().as_arr().unwrap();
+        for d in deps {
+            assert!(d.as_u64().unwrap() < i as u64, "node {i}: dep must precede it");
+        }
+        match node.get("type").unwrap().as_str().unwrap() {
+            "COMP_NODE" => {
+                comp += 1;
+                assert!(node.get("duration_ns").is_some());
+            }
+            "COMM_COLL_NODE" => {
+                coll += 1;
+                assert_eq!(node.get("comm_type").unwrap().as_str(), Some("ALLREDUCE"));
+                assert!(node.get("comm_size").unwrap().as_u64().unwrap() > 0);
+            }
+            other => panic!("unexpected node type {other}"),
+        }
+    }
+    assert_eq!(comp, 4 * n);
+    assert_eq!(coll, n);
+
+    // Golden first node: the first layer's forward compute.
+    let first = &nodes[0];
+    assert_eq!(first.get("name").unwrap().as_str(), Some("mlp-dense0.fwd"));
+    assert_eq!(first.get("duration_ns").unwrap().as_u64(), Some(500));
+    assert!(first.get("data_deps").unwrap().as_arr().unwrap().is_empty());
+
+    // The collective payloads equal the layers' weight bytes (DATA).
+    let sizes: Vec<u64> = nodes
+        .iter()
+        .filter(|x| x.get("type").unwrap().as_str() == Some("COMM_COLL_NODE"))
+        .map(|x| x.get("comm_size").unwrap().as_u64().unwrap())
+        .collect();
+    let mut weights: Vec<u64> = ir.summary().layers.iter().map(|l| l.weight_bytes).collect();
+    weights.reverse(); // backward sweep emits in reverse layer order
+    assert_eq!(sizes, weights);
+
+    // Deterministic emission.
+    assert_eq!(
+        emit::et_json(&ir).unwrap().to_json_pretty(),
+        v.to_json_pretty(),
+        "et-json emission must be deterministic"
+    );
+}

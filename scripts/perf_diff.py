@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Perf-trajectory diff: compare two directories of BENCH_<name>.json files.
+
+Usage: perf_diff.py BASE_DIR HEAD_DIR
+
+Prints a GitHub-flavored markdown table of per-series mean deltas
+(head vs base). Series present on only one side are listed as added /
+removed. Advisory only — the exit code is always 0 so the CI job never
+gates a PR on noisy bench numbers.
+"""
+
+import json
+import pathlib
+import sys
+
+
+def load(dirname):
+    """Map (bench, series) -> mean seconds for every BENCH_*.json in dir."""
+    series = {}
+    for path in sorted(pathlib.Path(dirname).glob("**/BENCH_*.json")):
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as err:
+            print(f"<!-- skipped {path}: {err} -->")
+            continue
+        bench = doc.get("name", path.stem.removeprefix("BENCH_"))
+        entries = doc.get("series", [])
+        if not isinstance(entries, list):
+            print(f"<!-- skipped {path}: 'series' is not a list -->")
+            continue
+        for s in entries:
+            # Tolerate schema drift: skip entries missing name/mean
+            # rather than crashing — this tool is advisory by contract.
+            if not isinstance(s, dict):
+                continue
+            name, mean = s.get("name"), s.get("mean")
+            if name is None or not isinstance(mean, (int, float)):
+                print(f"<!-- skipped series entry in {path}: missing name/mean -->")
+                continue
+            series[(bench, name)] = mean
+    return series
+
+
+def fmt_s(seconds):
+    if seconds >= 1.0:
+        return f"{seconds:.3f} s"
+    if seconds >= 1e-3:
+        return f"{seconds * 1e3:.3f} ms"
+    return f"{seconds * 1e6:.1f} us"
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return
+    base = load(sys.argv[1])
+    head = load(sys.argv[2])
+    print("### Perf trajectory (mean delta vs base branch, advisory)")
+    print()
+    print("| bench | series | base mean | head mean | delta |")
+    print("|---|---|---|---|---|")
+    for key in sorted(set(base) | set(head)):
+        bench, name = key
+        if key not in head:
+            print(f"| {bench} | {name} | {fmt_s(base[key])} | _removed_ | |")
+            continue
+        if key not in base:
+            print(f"| {bench} | {name} | _new_ | {fmt_s(head[key])} | |")
+            continue
+        b, h = base[key], head[key]
+        delta = (h - b) / b * 100.0 if b > 0 else float("inf")
+        arrow = "🔺" if delta > 5.0 else ("🔽" if delta < -5.0 else "·")
+        print(f"| {bench} | {name} | {fmt_s(b)} | {fmt_s(h)} | {arrow} {delta:+.1f}% |")
+    print()
+    print("_Smoke runs use 2 samples — treat small deltas as noise._")
+
+
+if __name__ == "__main__":
+    main()
