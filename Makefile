@@ -59,13 +59,18 @@ sweep-determinism: build
 	./target/release/modtrans sweep --threads 1 --hbm-gib 1 --skip-infeasible -o sweep_p1.json
 	./target/release/modtrans sweep --threads 8 --hbm-gib 1 --skip-infeasible -o sweep_p8.json
 	diff sweep_p1.json sweep_p8.json
+	rm -rf ircache
+	./target/release/modtrans sweep --threads 4 --cache-dir ircache -o cache_cold.json
+	./target/release/modtrans sweep --threads 4 --cache-dir ircache -o cache_warm.json
+	python3 -c 'import json; c=json.load(open("cache_cold.json")); w=json.load(open("cache_warm.json")); assert w["translations"]==0 and w["cache_loads"]==w["models"], "warm run not load-only"; assert w["ranked"]==c["ranked"], "cache changed the ranking"'
 	./target/release/modtrans sweep --threads 2 --shard 1/2 -o shard1.json
 	./target/release/modtrans sweep --threads 2 --shard 2/2 -o shard2.json
 	./target/release/modtrans sweep-merge shard1.json shard2.json -o merged.json
 	python3 -c 'import json; a=json.load(open("merged.json")); b=json.load(open("sweep_t1.json")); assert a["ranked"]==b["ranked"], "shard merge diverged"'
-	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json
+	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
+	rm -rf ircache
 
 clean:
 	$(CARGO) clean
-	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json
-	rm -rf bench-out
+	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
+	rm -rf bench-out ircache

@@ -9,7 +9,7 @@
 //! Emits `BENCH_sweep_throughput.json` for the CI-tracked perf
 //! trajectory.
 
-use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid};
+use modtrans::sweep::{run_sweep, run_sweep_cached, CollectiveAlgo, SweepConfig, SweepGrid};
 use modtrans::util::bench::{black_box, Bench, BenchReport};
 
 fn main() {
@@ -52,6 +52,28 @@ fn main() {
         black_box(run_sweep(&wide, &cfg).unwrap());
     });
     println!("  -> {:.1} scenarios/s over the widened grid (1 thread)", wide_n as f64 / s.mean);
+
+    // Persistent-cache trajectory: cold (extract + spill to disk) vs warm
+    // (load-only — zero translations). The delta between the two series
+    // is what `--cache-dir` buys every repeat sweep of the same grid.
+    let dir = std::env::temp_dir().join(format!("mt_bench_ircache_{}", std::process::id()));
+    let cfg = SweepConfig { threads: 1, ..Default::default() };
+    let s = report.run(&bench, &format!("sweep_{scenarios}_scenarios_cold_cache_1thread"), |_| {
+        // Every sample starts from an empty directory: extraction + spill.
+        let _ = std::fs::remove_dir_all(&dir);
+        black_box(run_sweep_cached(&grid, &cfg, Some(&dir)).unwrap());
+    });
+    println!("  -> {:.1} scenarios/s cold (extract + spill)", scenarios as f64 / s.mean);
+    // Prime once, then measure load-only repeats.
+    let _ = std::fs::remove_dir_all(&dir);
+    run_sweep_cached(&grid, &cfg, Some(&dir)).unwrap();
+    let s = report.run(&bench, &format!("sweep_{scenarios}_scenarios_warm_cache_1thread"), |_| {
+        let r = run_sweep_cached(&grid, &cfg, Some(&dir)).unwrap();
+        assert_eq!(r.translations, 0, "warm run must be load-only");
+        black_box(r);
+    });
+    println!("  -> {:.1} scenarios/s warm (0 extractions)", scenarios as f64 / s.mean);
+    let _ = std::fs::remove_dir_all(&dir);
 
     let path = report.write().unwrap();
     println!("wrote {}", path.display());

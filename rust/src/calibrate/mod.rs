@@ -154,6 +154,19 @@ impl ComputeTimeModel for MeasuredCompute {
         let wg = self.cal.estimate_ns(Gemm { m: f.k, k: f.m, n: f.n });
         (fwd, ig, wg)
     }
+
+    /// Digest of the full calibration table plus the batch: any measured
+    /// entry changing (or a different calibration file) changes the
+    /// fingerprint.
+    fn fingerprint(&self) -> String {
+        let mut h = crate::util::FNV1A_OFFSET;
+        for (g, ns) in &self.cal.entries {
+            for v in [g.m, g.k, g.n, *ns] {
+                h = crate::util::fnv1a_extend(h, &v.to_le_bytes());
+            }
+        }
+        format!("measured:b{}:{:016x}", self.batch, h)
+    }
 }
 
 #[cfg(test)]

@@ -4,13 +4,15 @@
 //! modtrans zoo list
 //! modtrans zoo build <name> -o model.onnx [--weights zeros|random|empty]
 //! modtrans inspect <file.onnx | zoo:name> [--all] [--batch N]
-//! modtrans translate <file.onnx | zoo:name> [-o out.txt] [--parallelism P]
+//! modtrans translate <file.onnx | zoo:name | trace.et.json> [-o out.txt]
+//!           [--from onnx|et-json] [--parallelism P]
 //!           [--npus N] [--mp-group G] [--batch B] [--compute MODEL]
 //! modtrans simulate <workload.txt> [--network net.json] [--topology T]
 //!           [--npus N] [--iterations I] [--policy fifo|lifo] [--chunks C]
 //!           [--stages S] [--microbatches M] [--boundary-bytes B]
 //! modtrans sweep [model[,model...]] [--parallelisms L] [--topologies L]
 //!           [--collectives L] [--npus N] [--batch B] [--threads T]
+//!           [--cache-dir DIR]
 //! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (pjrt feature)
 //! ```
 
@@ -132,16 +134,21 @@ USAGE:
   modtrans zoo list
   modtrans zoo build <name> -o model.onnx [--weights zeros|random|empty]
   modtrans inspect <file.onnx|zoo:name> [--all] [--batch N]
-  modtrans translate <file.onnx|zoo:name> [-o out.txt] [--parallelism data|model|hybrid-dm|hybrid-md|pipeline]
+  modtrans translate <file.onnx|zoo:name|trace.et.json> [-o out.txt] [--from onnx|et-json]
+            [--parallelism data|model|hybrid-dm|hybrid-md|pipeline]
             [--npus N] [--mp-group G] [--batch B] [--format text|et-json]
             [--compute roofline|systolic|constant:<ns>|measured:<cal.json>] [--zero 0|1|2|3]
+            (--from et-json replays a modtrans-et-json/v2 trace: its durations and, when
+             present, its comm plan are authoritative — comm-free documents are planned
+             with the --parallelism options)
   modtrans simulate <workload.txt> [--network net.json | --topology ring|fc|switch|torus2d --npus N]
             [--iterations I] [--policy fifo|lifo] [--chunks C]
             [--stages S] [--microbatches M] [--boundary-bytes B]
   modtrans sweep [model[,model...]] [--models LIST] [--parallelisms data,model,...]
             [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
             [--npus N] [--batch B] [--mp-group G] [--iterations I] [--shard K/N]
-            [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible] [-o results.json]
+            [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible]
+            [--cache-dir DIR] [-o results.json]
   modtrans sweep-merge <shard.json> [shard.json ...] [-o merged.json]
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
@@ -284,18 +291,40 @@ fn cmd_translate(args: &Args) -> Result<()> {
         batch,
         zero: parse_zero(args)?,
     };
-    let compute = parse_compute(args.opt("compute").unwrap_or("systolic"), batch)?;
     let format = args.opt("format").unwrap_or("text");
     if format != "text" && format != "et-json" {
         return Err(Error::Usage(format!(
             "unknown translate format '{format}' (expected text or et-json)"
         )));
     }
-    // The staged pipeline: frontend → compute pass → comm pass → emitter.
-    let model = load_model(spec, false)?;
-    let mut model_ir = ir::frontend::from_model(&model, batch)?;
-    ir::passes::annotate_compute(&mut model_ir, compute.as_ref());
-    ir::passes::annotate_comm(&mut model_ir, opts);
+    let model_ir = match args.opt("from").unwrap_or("onnx") {
+        // The staged pipeline: frontend → compute pass → comm pass → emitter.
+        "onnx" => {
+            let compute = parse_compute(args.opt("compute").unwrap_or("systolic"), batch)?;
+            let model = load_model(spec, false)?;
+            let mut ir = ir::frontend::from_model(&model, batch)?;
+            ir::passes::annotate_compute(&mut ir, compute.as_ref());
+            ir::passes::annotate_comm(&mut ir, opts);
+            ir
+        }
+        // Replay path: the trace's durations (and comm plan, when it has
+        // one) are authoritative — no compute model runs. A comm-free
+        // document (the sweep cache's disk form) gets the comm pass for
+        // the requested strategy so it can still lower to any format.
+        "et-json" | "et" => {
+            let text = std::fs::read_to_string(spec)?;
+            let mut ir = ir::frontend::from_et_json_str(&text)?;
+            if ir.comm_annotated().is_none() {
+                ir::passes::annotate_comm(&mut ir, opts);
+            }
+            ir
+        }
+        other => {
+            return Err(Error::Usage(format!(
+                "unknown translate source '{other}' (expected onnx or et-json)"
+            )))
+        }
+    };
     match format {
         "text" => {
             let workload = ir::emit::to_sim_workload(&model_ir)?;
@@ -514,18 +543,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         skip_infeasible: args.flag("skip-infeasible"),
         shard: parse_shard(args)?,
     };
-    let report = sweep::run_sweep(&grid, &cfg)?;
+    let cache_dir = args.opt("cache-dir").map(Path::new);
+    let report = sweep::run_sweep_cached(&grid, &cfg, cache_dir)?;
     let shard_note = match cfg.shard {
         Some((k, n)) => format!(" [shard {k}/{n}]"),
         None => String::new(),
     };
     println!(
         "sweep{shard_note}: {} scenarios over {} models on {} worker threads \
-         ({} translations — one per model, shared by all scenarios)",
+         ({} translations + {} cache loads — one IR per model, shared by all scenarios)",
         report.ranked.len(),
         report.models,
         cfg.threads.max(1),
         report.translations,
+        report.cache_loads,
     );
     print!("{}", report.render_text());
     if let Some(path) = args.opt("out") {
@@ -562,11 +593,13 @@ fn cmd_sweep_merge(args: &Args) -> Result<()> {
     }
     let merged = SweepReport::merge(&shards)?;
     println!(
-        "merged {} shard file(s): {} scenarios over {} models ({} translations, {} pruned)",
+        "merged {} shard file(s): {} scenarios over {} models \
+         ({} translations, {} cache loads, {} pruned)",
         shards.len(),
         merged.ranked.len(),
         merged.models,
         merged.translations,
+        merged.cache_loads,
         merged.pruned,
     );
     print!("{}", merged.render_text());
@@ -843,6 +876,66 @@ mod tests {
         let bad: Vec<String> =
             vec!["translate".into(), "zoo:mlp".into(), "--format".into(), "yaml".into()];
         assert!(run(&bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn translate_from_et_json_replays_and_echoes_byte_identically() {
+        let dir = std::env::temp_dir().join(format!("modtrans_etfrom_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = |name: &str| dir.join(name).to_str().unwrap().to_string();
+        let run_args = |v: &[&str]| {
+            let argv: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+            run(&argv)
+        };
+        let (trace, echo, text) = (p("mlp.et.json"), p("echo.et.json"), p("mlp.txt"));
+        // Emit a trace, replay it back through --from et-json.
+        run_args(&["translate", "zoo:mlp", "--batch", "4", "--format", "et-json", "-o", &trace])
+            .unwrap();
+        run_args(&["translate", &trace, "--from", "et-json", "--format", "et-json", "-o", &echo])
+            .unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&trace).unwrap(),
+            std::fs::read_to_string(&echo).unwrap(),
+            "et-json replay must re-emit byte-identically"
+        );
+        // The replayed trace also lowers to the text workload format.
+        run_args(&["translate", &trace, "--from", "et-json", "-o", &text]).unwrap();
+        let w = Workload::parse(&std::fs::read_to_string(&text).unwrap()).unwrap();
+        assert!(!w.layers.is_empty());
+        // Unknown sources are usage errors; garbage traces are rejected.
+        assert!(run_args(&["translate", &trace, "--from", "carrier-pigeon"]).is_err());
+        std::fs::write(&trace, "{}").unwrap();
+        assert!(run_args(&["translate", &trace, "--from", "et-json"]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_cache_dir_second_run_is_load_only() {
+        let dir = std::env::temp_dir().join(format!("modtrans_clicache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = |name: &str| dir.join(name).to_str().unwrap().to_string();
+        let run_args = |v: &[&str]| {
+            let argv: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+            run(&argv).unwrap();
+        };
+        let (cache, cold, warm) = (p("ircache"), p("cold.json"), p("warm.json"));
+        let base = ["sweep", "mlp", "--npus", "8", "--batch", "4", "--cache-dir", &cache];
+        let with = |out: &str| {
+            let mut v: Vec<&str> = base.to_vec();
+            v.extend_from_slice(&["-o", out]);
+            v
+        };
+        run_args(&with(&cold));
+        run_args(&with(&warm));
+        let cold = crate::json::parse(&std::fs::read_to_string(&cold).unwrap()).unwrap();
+        let warm = crate::json::parse(&std::fs::read_to_string(&warm).unwrap()).unwrap();
+        assert_eq!(cold.get("translations").unwrap().as_u64(), Some(1));
+        assert_eq!(cold.get("cache_loads").unwrap().as_u64(), Some(0));
+        assert_eq!(warm.get("translations").unwrap().as_u64(), Some(0));
+        assert_eq!(warm.get("cache_loads").unwrap().as_u64(), Some(1));
+        assert_eq!(warm.get("ranked"), cold.get("ranked"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -30,6 +30,17 @@ pub enum Dataflow {
     Is,
 }
 
+impl Dataflow {
+    /// Canonical config token (used in compute-model fingerprints).
+    pub fn token(self) -> &'static str {
+        match self {
+            Dataflow::Os => "os",
+            Dataflow::Ws => "ws",
+            Dataflow::Is => "is",
+        }
+    }
+}
+
 /// A GEMM problem `M×K × K×N`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Gemm {
@@ -173,6 +184,20 @@ impl ComputeTimeModel for SystolicCompute {
         // dW = Xᵀ × dY : (K×M)(M×N)
         let wg = self.cfg.gemm_ns(Gemm { m: f.k, k: f.m, n: f.n }, e);
         (fwd.max(1), ig.max(1), wg.max(1))
+    }
+
+    /// Every timing knob: array geometry, clock, DRAM bandwidth, dataflow
+    /// and the batch the GEMMs are folded at.
+    fn fingerprint(&self) -> String {
+        format!(
+            "systolic:{}x{}@{}ghz:dram{}:{}:b{}",
+            self.cfg.rows,
+            self.cfg.cols,
+            self.cfg.clock_ghz,
+            self.cfg.dram_gbps,
+            self.cfg.dataflow.token(),
+            self.batch,
+        )
     }
 }
 

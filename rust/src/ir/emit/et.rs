@@ -15,18 +15,78 @@
 //! * a `COMP_NODE` optimizer update per layer, gated on the
 //!   weight-gradient collective.
 //!
+//! Since schema **v2** the document is a *complete serialized IR*, not
+//! just the task graph: a `layers` section carries every structural fact
+//! ([`crate::translator::LayerInfo`]) plus the summary totals, so
+//! [`crate::ir::frontend::from_et_json`] can reconstruct a fully
+//! annotated [`ModelIR`] — the round trip `from_et_json(et_json(ir))`
+//! re-emits byte-identically, which is what lets the persistent sweep
+//! cache ([`crate::sweep::WorkloadCache`]) spill IRs to disk in this
+//! format. The comm pass is optional for v2 emission: a
+//! compute-annotated, comm-free IR (the cache-tier form) emits with
+//! `"parallelism": null` and no collective nodes.
+//!
 //! Node ids are dense and creation-ordered, and every dependency points
 //! to a lower id, so the node list is already topologically sorted.
 //! Keys are emitted through the crate's `BTreeMap`-backed JSON value,
-//! making the output byte-deterministic — goldenable in tests.
+//! making the output byte-deterministic — goldenable in tests. Integer
+//! emission is **lossless by construction**: the JSON value is
+//! f64-backed, so any integer above 2^53 (comm sizes, durations, byte
+//! counts) is a hard `translate` error instead of a silent rounding.
 
 use crate::error::{Error, Result};
 use crate::ir::ModelIR;
 use crate::json::{obj, Value};
+use crate::translator::LayerInfo;
 use crate::workload::CommType;
 
 /// Schema identifier stamped into every emitted document.
-pub const ET_JSON_SCHEMA: &str = "modtrans-et-json/v1";
+pub const ET_JSON_SCHEMA: &str = "modtrans-et-json/v2";
+
+/// Largest integer the f64-backed JSON number represents exactly (2^53).
+pub const MAX_SAFE_JSON_INT: u64 = 1 << 53;
+
+/// Lossless u64 → JSON number, or a `translate` error beyond 2^53.
+fn num_u64(what: &str, v: u64) -> Result<Value> {
+    if v > MAX_SAFE_JSON_INT {
+        return Err(Error::translate(format!(
+            "et-json: {what} = {v} exceeds 2^53 and would silently lose \
+             precision in f64-backed JSON — refusing lossy emission"
+        )));
+    }
+    Ok(Value::Num(v as f64))
+}
+
+/// Lossless i64 → JSON number (same 2^53 magnitude bound).
+fn num_i64(what: &str, v: i64) -> Result<Value> {
+    if v.unsigned_abs() > MAX_SAFE_JSON_INT {
+        return Err(Error::translate(format!(
+            "et-json: {what} = {v} exceeds 2^53 in magnitude and would \
+             silently lose precision in f64-backed JSON — refusing lossy emission"
+        )));
+    }
+    Ok(Value::Num(v as f64))
+}
+
+/// One layer's structural facts — the v2 section that makes the document
+/// a round-trippable IR rather than a graph-only trace.
+fn layer_obj(info: &LayerInfo) -> Result<Value> {
+    let mut shape = Vec::with_capacity(info.out_shape.len());
+    for &d in &info.out_shape {
+        shape.push(num_i64("out_shape dim", d)?);
+    }
+    Ok(obj(vec![
+        ("dtype", Value::Num(info.dtype as i32 as f64)),
+        ("in_act_bytes", num_u64("in_act_bytes", info.in_act_bytes)?),
+        ("kind", Value::Str(info.kind.label().into())),
+        ("macs", num_u64("macs", info.macs)?),
+        ("name", Value::Str(info.name.clone())),
+        ("out_act_bytes", num_u64("out_act_bytes", info.out_act_bytes)?),
+        ("out_shape", Value::Arr(shape)),
+        ("variables", num_u64("variables", info.variables)?),
+        ("weight_bytes", num_u64("weight_bytes", info.weight_bytes)?),
+    ]))
+}
 
 /// Incremental node-list builder (ids are assigned in creation order).
 struct EtBuilder {
@@ -46,44 +106,52 @@ impl EtBuilder {
         id
     }
 
-    fn comp(&mut self, name: String, duration_ns: u64, deps: &[u64]) -> u64 {
-        self.push(
+    fn comp(&mut self, name: String, duration_ns: u64, deps: &[u64]) -> Result<u64> {
+        let duration = num_u64("duration_ns", duration_ns)?;
+        Ok(self.push(
             name,
-            vec![
-                ("type", Value::Str("COMP_NODE".into())),
-                ("duration_ns", Value::Num(duration_ns as f64)),
-            ],
+            vec![("type", Value::Str("COMP_NODE".into())), ("duration_ns", duration)],
             deps,
-        )
+        ))
     }
 
-    fn comm(&mut self, name: String, comm: (CommType, u64), deps: &[u64]) -> u64 {
-        self.push(
+    fn comm(&mut self, name: String, comm: (CommType, u64), deps: &[u64]) -> Result<u64> {
+        let size = num_u64("comm_size", comm.1)?;
+        Ok(self.push(
             name,
             vec![
                 ("type", Value::Str("COMM_COLL_NODE".into())),
                 ("comm_type", Value::Str(comm.0.token().into())),
-                ("comm_size", Value::Num(comm.1 as f64)),
+                ("comm_size", size),
             ],
             deps,
-        )
+        ))
     }
 }
 
-/// Emit one training step of a fully annotated IR as a Chakra-ET-style
-/// JSON graph.
+/// Emit a compute-annotated IR as a Chakra-ET-style JSON document
+/// (schema v2: structural layer section + one training step's task
+/// graph). The comm pass is optional: a comm-free IR emits
+/// `"parallelism": null` and a collective-free graph — the persistent
+/// cache's on-disk form.
 pub fn et_json(ir: &ModelIR) -> Result<Value> {
-    let parallelism = ir
-        .comm_annotated()
-        .ok_or_else(|| Error::translate("et-json: comm pass has not run on this IR"))?;
     if !ir.compute_annotated() {
         return Err(Error::translate("et-json: compute pass has not run on this IR"));
     }
     if ir.is_empty() {
         return Err(Error::translate("et-json: model has no weight-bearing layers"));
     }
+    let parallelism = match ir.comm_annotated() {
+        Some(p) => Value::Str(p.token().into()),
+        None => Value::Null,
+    };
 
     let n = ir.num_layers();
+    let mut layers = Vec::with_capacity(n);
+    for i in 0..n {
+        layers.push(layer_obj(ir.layer(i).info)?);
+    }
+
     let mut b = EtBuilder { nodes: Vec::with_capacity(7 * n) };
 
     // Forward chain.
@@ -91,10 +159,10 @@ pub fn et_json(ir: &ModelIR) -> Result<Value> {
     for i in 0..n {
         let l = ir.layer(i);
         let deps: Vec<u64> = prev.into_iter().collect();
-        let fid = b.comp(format!("{}.fwd", l.info.name), l.cost.fwd_ns, &deps);
+        let fid = b.comp(format!("{}.fwd", l.info.name), l.cost.fwd_ns, &deps)?;
         let mut finish = fid;
         if l.comm.fwd.0 != CommType::None {
-            finish = b.comm(format!("{}.fwd.comm", l.info.name), l.comm.fwd, &[fid]);
+            finish = b.comm(format!("{}.fwd.comm", l.info.name), l.comm.fwd, &[fid])?;
         }
         prev = Some(finish);
     }
@@ -104,26 +172,29 @@ pub fn et_json(ir: &ModelIR) -> Result<Value> {
     let mut upstream = prev.unwrap_or(0);
     for i in (0..n).rev() {
         let l = ir.layer(i);
-        let ig = b.comp(format!("{}.ig", l.info.name), l.cost.ig_ns, &[upstream]);
+        let ig = b.comp(format!("{}.ig", l.info.name), l.cost.ig_ns, &[upstream])?;
         let mut ig_finish = ig;
         if l.comm.ig.0 != CommType::None {
-            ig_finish = b.comm(format!("{}.ig.comm", l.info.name), l.comm.ig, &[ig]);
+            ig_finish = b.comm(format!("{}.ig.comm", l.info.name), l.comm.ig, &[ig])?;
         }
-        let wg = b.comp(format!("{}.wg", l.info.name), l.cost.wg_ns, &[upstream]);
+        let wg = b.comp(format!("{}.wg", l.info.name), l.cost.wg_ns, &[upstream])?;
         let mut wg_finish = wg;
         if l.comm.wg.0 != CommType::None {
-            wg_finish = b.comm(format!("{}.wg.comm", l.info.name), l.comm.wg, &[wg]);
+            wg_finish = b.comm(format!("{}.wg.comm", l.info.name), l.comm.wg, &[wg])?;
         }
-        b.comp(format!("{}.update", l.info.name), l.cost.update_ns, &[wg_finish]);
+        b.comp(format!("{}.update", l.info.name), l.cost.update_ns, &[wg_finish])?;
         upstream = ig_finish;
     }
 
     Ok(obj(vec![
         ("schema", Value::Str(ET_JSON_SCHEMA.into())),
         ("model", Value::Str(ir.model_name().into())),
-        ("batch", Value::Num(ir.batch() as f64)),
-        ("parallelism", Value::Str(parallelism.token().into())),
-        ("num_layers", Value::Num(n as f64)),
+        ("batch", num_i64("batch", ir.batch())?),
+        ("parallelism", parallelism),
+        ("num_layers", num_u64("num_layers", n as u64)?),
+        ("total_params", num_u64("total_params", ir.summary().total_params)?),
+        ("total_bytes", num_u64("total_bytes", ir.summary().total_bytes)?),
+        ("layers", Value::Arr(layers)),
         ("nodes", Value::Arr(b.nodes)),
     ]))
 }
@@ -131,7 +202,7 @@ pub fn et_json(ir: &ModelIR) -> Result<Value> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{frontend, passes};
+    use crate::ir::{frontend, passes, PhaseCost};
     use crate::translator::{ConstantCompute, TranslateOpts};
     use crate::workload::Parallelism;
 
@@ -146,6 +217,36 @@ mod tests {
     fn unannotated_ir_is_rejected() {
         let ir = frontend::from_zoo("mlp", 8).unwrap();
         assert!(et_json(&ir).is_err());
+    }
+
+    #[test]
+    fn comm_free_ir_emits_null_parallelism_and_no_collectives() {
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(50));
+        let v = et_json(&ir).unwrap();
+        assert_eq!(v.get("parallelism"), Some(&Value::Null));
+        let nodes = v.get("nodes").unwrap().as_arr().unwrap();
+        // fwd + ig + wg + update per layer, zero COMM_COLL_NODEs.
+        assert_eq!(nodes.len(), 4 * ir.num_layers());
+        assert!(nodes.iter().all(|x| x.get("type").unwrap().as_str() == Some("COMP_NODE")));
+    }
+
+    #[test]
+    fn layers_section_carries_the_structural_facts() {
+        let ir = annotated(Parallelism::Data);
+        let v = et_json(&ir).unwrap();
+        let layers = v.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), ir.num_layers());
+        for (l, info) in layers.iter().zip(ir.summary().layers.iter()) {
+            assert_eq!(l.get("name").unwrap().as_str(), Some(info.name.as_str()));
+            assert_eq!(l.get("kind").unwrap().as_str(), Some(info.kind.label()));
+            assert_eq!(l.get("weight_bytes").unwrap().as_u64(), Some(info.weight_bytes));
+            assert_eq!(l.get("macs").unwrap().as_u64(), Some(info.macs));
+            assert_eq!(l.get("dtype").unwrap().as_u64(), Some(info.dtype as i32 as u64));
+            let shape = l.get("out_shape").unwrap().as_arr().unwrap();
+            assert_eq!(shape.len(), info.out_shape.len());
+        }
+        assert_eq!(v.get("total_bytes").unwrap().as_u64(), Some(ir.summary().total_bytes));
     }
 
     #[test]
@@ -185,5 +286,38 @@ mod tests {
         assert_eq!(a, b);
         // And parses back.
         assert!(crate::json::parse(&a).is_ok());
+    }
+
+    #[test]
+    fn integers_beyond_2p53_are_rejected_not_rounded() {
+        // 2^53 itself is the last exactly-representable integer: fine.
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(MAX_SAFE_JSON_INT));
+        let v = et_json(&ir).unwrap();
+        let nodes = v.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes[0].get("duration_ns").unwrap().as_u64(), Some(MAX_SAFE_JSON_INT));
+        // One past it would round in f64: hard error, not silent loss.
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(MAX_SAFE_JSON_INT + 1));
+        let err = et_json(&ir).unwrap_err().to_string();
+        assert!(err.contains("precision"), "unexpected error: {err}");
+        // Same guard on comm sizes.
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(1));
+        passes::annotate_comm(&mut ir, TranslateOpts::default());
+        {
+            let (_, _, comms) = ir.parts_mut();
+            comms[0].wg = (CommType::AllReduce, MAX_SAFE_JSON_INT + 1);
+        }
+        let err = et_json(&ir).unwrap_err().to_string();
+        assert!(err.contains("comm_size"), "unexpected error: {err}");
+        // And costs stay intact below the boundary.
+        let mut ir = frontend::from_zoo("mlp", 8).unwrap();
+        {
+            let (_, costs, _) = ir.parts_mut();
+            costs.fill(PhaseCost { fwd_ns: 1, ig_ns: 1, wg_ns: 1, update_ns: 1 });
+        }
+        ir.mark_compute_annotated();
+        assert!(et_json(&ir).is_ok());
     }
 }

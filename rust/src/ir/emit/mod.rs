@@ -7,12 +7,17 @@
 //!   the sweep hot path uses (see [`sim`]).
 //! * [`text`] — the ASTRA-sim layer-wise text description (the paper's
 //!   Fig. 3 format), via `Workload::emit`.
-//! * [`et_json`] — a Chakra-ET-style JSON task graph for graph-based
-//!   simulator inputs (ASTRA-sim 2.0's direction), via [`et`].
+//! * [`et_json`] — a Chakra-ET-style JSON document for graph-based
+//!   simulator inputs (ASTRA-sim 2.0's direction), via [`et`]. Since
+//!   schema v2 it is a complete serialized IR: the reader
+//!   ([`crate::ir::frontend::from_et_json`]) restores it byte-identically,
+//!   which is how the persistent sweep cache spills IRs to disk.
 //!
 //! Emitters validate their inputs: workload emission requires both the
 //! compute and comm passes to have run on the IR (or, for
-//! `workload_into`, a caller-provided comm plan).
+//! `workload_into`, a caller-provided comm plan); et-json emission
+//! requires the compute pass, and serializes a comm-free IR with
+//! `"parallelism": null`.
 
 pub mod et;
 pub mod sim;

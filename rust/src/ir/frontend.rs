@@ -1,6 +1,7 @@
 //! IR frontends: build a [`ModelIR`] from a model source.
 //!
-//! Three entry points cover the paper's input modes (§3.2–§3.3):
+//! Four entry points cover the paper's input modes (§3.2–§3.3) plus the
+//! closed emit→read loop:
 //!
 //! * [`from_onnx_bytes`] — raw `.onnx` protobuf bytes (metadata-only
 //!   decode; weight payloads are never copied).
@@ -9,15 +10,31 @@
 //!   goes straight from the in-memory builder output into extraction,
 //!   skipping the ONNX encode/decode round-trip the byte path pays
 //!   (`benches/fig6_translation_time.rs` tracks the win).
+//! * [`from_et_json`] — a `modtrans-et-json/v2` document
+//!   ([`crate::ir::emit::et_json`]'s output, or an externally produced
+//!   trace in the same schema) parsed back into a **fully annotated**
+//!   IR: the structural `layers` section rebuilds the
+//!   [`ModelSummary`], and the task graph is replayed positionally to
+//!   recover every per-layer fwd/ig/wg/update cost and comm plan.
+//!   Strict by design — schema/version mismatches, non-dense ids,
+//!   forward-pointing deps, count mismatches or out-of-grammar nodes
+//!   are all hard errors, and `et_json(from_et_json(doc))` re-emits
+//!   emitter-produced documents byte-identically (the persistent sweep
+//!   cache's disk-tier contract).
 //!
-//! All frontends converge on the same structural extraction
+//! The first three converge on the same structural extraction
 //! ([`crate::translator::extract()`]), so downstream passes and emitters
-//! never see which source a model came from.
+//! never see which source a model came from; the et-json reader restores
+//! annotations instead of recomputing them — replaying a trace, not
+//! re-deriving one.
 
-use super::ModelIR;
-use crate::error::Result;
-use crate::onnx::Model;
-use crate::translator::{self, ModelSummary};
+use super::emit::ET_JSON_SCHEMA;
+use super::{ModelIR, PhaseCost};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::onnx::{DataType, Model};
+use crate::translator::{self, CommPlan, LayerInfo, LayerKind, ModelSummary};
+use crate::workload::{CommType, Parallelism};
 use crate::zoo::{self, WeightFill, ZooOpts};
 
 /// Lift an already-extracted summary into an unannotated IR.
@@ -42,10 +59,246 @@ pub fn from_zoo(name: &str, batch: i64) -> Result<ModelIR> {
     from_model(&model, batch)
 }
 
+/// Reader-side error with a uniform prefix.
+fn fail(msg: impl std::fmt::Display) -> Error {
+    Error::translate(format!("et-json reader: {msg}"))
+}
+
+/// 2^53 as f64 — the reader refuses anything beyond it, mirroring the
+/// emitter's [`super::emit::MAX_SAFE_JSON_INT`] guard: a larger value in
+/// a document has already been rounded by some f64-backed writer, and
+/// accepting it would silently replay corrupted durations/sizes.
+const MAX_SAFE: f64 = super::emit::MAX_SAFE_JSON_INT as f64;
+
+/// Read an integer-valued JSON number as i64 (exact in f64).
+fn read_i64(v: &Value, key: &str) -> Result<i64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .filter(|f| f.fract() == 0.0 && f.abs() <= MAX_SAFE)
+        .map(|f| f as i64)
+        .ok_or_else(|| fail(format!("missing/invalid integer field '{key}'")))
+}
+
+/// Read a non-negative integer-valued JSON number as u64, bounded to the
+/// exactly-representable range (unlike `Value::req_u64`, which would
+/// accept an already-rounded or saturating huge float).
+fn read_u64(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .filter(|f| f.fract() == 0.0 && (0.0..=MAX_SAFE).contains(f))
+        .map(|f| f as u64)
+        .ok_or_else(|| {
+            fail(format!("missing/invalid integer field '{key}' (need 0 ..= 2^53)"))
+        })
+}
+
+/// One structural layer entry → [`LayerInfo`].
+fn read_layer(l: &Value, i: usize) -> Result<LayerInfo> {
+    let name = l.req_str("name")?.to_string();
+    if name.is_empty() {
+        return Err(fail(format!("layer {i} has an empty name")));
+    }
+    let kind = LayerKind::from_label(l.req_str("kind")?)?;
+    let dtype = DataType::from_i32(read_i64(l, "dtype")? as i32)?;
+    let shape_json = l
+        .get("out_shape")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| fail(format!("layer '{name}': missing 'out_shape' array")))?;
+    let mut out_shape = Vec::with_capacity(shape_json.len());
+    for d in shape_json {
+        let dim = d
+            .as_f64()
+            .filter(|f| f.fract() == 0.0 && f.abs() <= MAX_SAFE)
+            .ok_or_else(|| fail(format!("layer '{name}': non-integer out_shape dim")))?;
+        out_shape.push(dim as i64);
+    }
+    Ok(LayerInfo {
+        name,
+        kind,
+        variables: read_u64(l, "variables")?,
+        dtype,
+        weight_bytes: read_u64(l, "weight_bytes")?,
+        in_act_bytes: read_u64(l, "in_act_bytes")?,
+        out_act_bytes: read_u64(l, "out_act_bytes")?,
+        macs: read_u64(l, "macs")?,
+        out_shape,
+    })
+}
+
+/// Consume the node at `*c`, which must be a `COMP_NODE` named `expect`;
+/// return its duration.
+fn comp_node(nodes: &[Value], c: &mut usize, expect: &str) -> Result<u64> {
+    let node = nodes
+        .get(*c)
+        .ok_or_else(|| fail(format!("node list ends before expected COMP_NODE '{expect}'")))?;
+    if node.get("name").and_then(Value::as_str) != Some(expect) {
+        return Err(fail(format!(
+            "node {}: expected COMP_NODE '{expect}', found '{}'",
+            *c,
+            node.get("name").and_then(Value::as_str).unwrap_or("<unnamed>")
+        )));
+    }
+    if node.get("type").and_then(Value::as_str) != Some("COMP_NODE") {
+        return Err(fail(format!("node '{expect}' is not a COMP_NODE")));
+    }
+    let d = read_u64(node, "duration_ns")?;
+    *c += 1;
+    Ok(d)
+}
+
+/// Consume the node at `*c` iff it is the `COMM_COLL_NODE` named
+/// `expect`; a different (or absent) node means the phase planned no
+/// collective and nothing is consumed.
+fn comm_node(nodes: &[Value], c: &mut usize, expect: &str) -> Result<Option<(CommType, u64)>> {
+    let Some(node) = nodes.get(*c) else { return Ok(None) };
+    if node.get("name").and_then(Value::as_str) != Some(expect)
+        || node.get("type").and_then(Value::as_str) != Some("COMM_COLL_NODE")
+    {
+        return Ok(None);
+    }
+    let ty = CommType::from_token(node.req_str("comm_type")?)?;
+    if ty == CommType::None {
+        return Err(fail(format!("collective node '{expect}' declares comm_type NONE")));
+    }
+    let size = read_u64(node, "comm_size")?;
+    *c += 1;
+    Ok(Some((ty, size)))
+}
+
+/// Parse a `modtrans-et-json/v2` document back into a fully annotated
+/// [`ModelIR`] (see the module docs for the grammar and strictness
+/// guarantees). The result is always compute-annotated; it is
+/// comm-annotated iff the document declares a parallelism.
+pub fn from_et_json(doc: &Value) -> Result<ModelIR> {
+    let schema = doc
+        .get("schema")
+        .and_then(Value::as_str)
+        .ok_or_else(|| fail("missing 'schema' field"))?;
+    if schema != ET_JSON_SCHEMA {
+        return Err(fail(format!(
+            "unsupported schema '{schema}' (this reader takes '{ET_JSON_SCHEMA}'; \
+             v1 documents predate the structural layer section and cannot be replayed)"
+        )));
+    }
+    let model = doc.req_str("model")?.to_string();
+    let batch = read_i64(doc, "batch")?;
+    let num_layers = read_u64(doc, "num_layers")? as usize;
+    if num_layers == 0 {
+        return Err(fail("document declares zero layers"));
+    }
+    let total_params = read_u64(doc, "total_params")?;
+    let total_bytes = read_u64(doc, "total_bytes")?;
+    let parallelism = match doc.get("parallelism") {
+        Some(Value::Null) => None,
+        Some(Value::Str(s)) => Some(Parallelism::from_token(s)?),
+        _ => return Err(fail("missing/invalid 'parallelism' field (string or null)")),
+    };
+
+    let layers_json = doc
+        .get("layers")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| fail("missing 'layers' array"))?;
+    if layers_json.len() != num_layers {
+        return Err(fail(format!(
+            "num_layers = {num_layers} but the 'layers' array has {} entries",
+            layers_json.len()
+        )));
+    }
+    let mut layers = Vec::with_capacity(num_layers);
+    for (i, l) in layers_json.iter().enumerate() {
+        layers.push(read_layer(l, i)?);
+    }
+
+    // Global node invariants: dense creation-ordered ids, backward deps.
+    let nodes = doc
+        .get("nodes")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| fail("missing 'nodes' array"))?;
+    for (i, node) in nodes.iter().enumerate() {
+        if node.get("id").and_then(Value::as_u64) != Some(i as u64) {
+            return Err(fail(format!("node {i}: ids must be dense and creation-ordered")));
+        }
+        let deps = node
+            .get("data_deps")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| fail(format!("node {i}: missing 'data_deps' array")))?;
+        for d in deps {
+            match d.as_u64() {
+                Some(x) if x < i as u64 => {}
+                _ => {
+                    return Err(fail(format!(
+                        "node {i}: data_deps must reference earlier nodes only"
+                    )))
+                }
+            }
+        }
+    }
+
+    // Replay the emitter's deterministic order — forward chain, then the
+    // reverse backward sweep — recovering each layer's costs and plan.
+    let mut costs = vec![PhaseCost::default(); num_layers];
+    let mut comms = vec![CommPlan::none(); num_layers];
+    let mut c = 0usize;
+    for (i, layer) in layers.iter().enumerate() {
+        let name = &layer.name;
+        costs[i].fwd_ns = comp_node(nodes, &mut c, &format!("{name}.fwd"))?;
+        if let Some(x) = comm_node(nodes, &mut c, &format!("{name}.fwd.comm"))? {
+            comms[i].fwd = x;
+        }
+    }
+    for (i, layer) in layers.iter().enumerate().rev() {
+        let name = &layer.name;
+        costs[i].ig_ns = comp_node(nodes, &mut c, &format!("{name}.ig"))?;
+        if let Some(x) = comm_node(nodes, &mut c, &format!("{name}.ig.comm"))? {
+            comms[i].ig = x;
+        }
+        costs[i].wg_ns = comp_node(nodes, &mut c, &format!("{name}.wg"))?;
+        if let Some(x) = comm_node(nodes, &mut c, &format!("{name}.wg.comm"))? {
+            comms[i].wg = x;
+        }
+        costs[i].update_ns = comp_node(nodes, &mut c, &format!("{name}.update"))?;
+    }
+    if c != nodes.len() {
+        return Err(fail(format!(
+            "{} trailing node(s) after the training-step graph",
+            nodes.len() - c
+        )));
+    }
+    if parallelism.is_none() && comms.iter().any(|p| *p != CommPlan::none()) {
+        return Err(fail("collective nodes present but 'parallelism' is null"));
+    }
+
+    let mut ir = ModelIR::from_summary(ModelSummary {
+        model_name: model,
+        layers,
+        all_initializers: Vec::new(),
+        batch,
+        total_params,
+        total_bytes,
+    });
+    {
+        let (_, cost_slots, comm_slots) = ir.parts_mut();
+        cost_slots.copy_from_slice(&costs);
+        comm_slots.copy_from_slice(&comms);
+    }
+    ir.mark_compute_annotated();
+    if let Some(p) = parallelism {
+        ir.mark_comm_annotated(p);
+    }
+    Ok(ir)
+}
+
+/// Convenience: parse JSON text, then [`from_et_json`].
+pub fn from_et_json_str(text: &str) -> Result<ModelIR> {
+    from_et_json(&crate::json::parse(text)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::{emit, passes};
     use crate::onnx::encode_model;
+    use crate::translator::{ConstantCompute, TranslateOpts};
 
     #[test]
     fn zoo_direct_matches_onnx_byte_path() {
@@ -74,5 +327,135 @@ mod tests {
     #[test]
     fn bad_bytes_are_an_error() {
         assert!(from_onnx_bytes(&[0xff, 0xff, 0xff], 8).is_err());
+    }
+
+    fn annotated(p: Parallelism) -> ModelIR {
+        let mut ir = from_zoo("mlp", 8).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(75));
+        passes::annotate_comm(&mut ir, TranslateOpts { parallelism: p, ..Default::default() });
+        ir
+    }
+
+    #[test]
+    fn et_json_reader_recovers_the_full_annotation() {
+        let ir = annotated(Parallelism::Data);
+        let doc = emit::et_json(&ir).unwrap();
+        let back = from_et_json(&doc).unwrap();
+        assert_eq!(back.model_name(), ir.model_name());
+        assert_eq!(back.batch(), ir.batch());
+        assert_eq!(back.num_layers(), ir.num_layers());
+        assert!(back.compute_annotated());
+        assert_eq!(back.comm_annotated(), Some(Parallelism::Data));
+        assert_eq!(back.costs(), ir.costs());
+        assert_eq!(back.comms(), ir.comms());
+        for (a, b) in back.layers().zip(ir.layers()) {
+            assert_eq!(a.info.name, b.info.name);
+            assert_eq!(a.info.kind, b.info.kind);
+            assert_eq!(a.info.dtype, b.info.dtype);
+            assert_eq!(a.info.variables, b.info.variables);
+            assert_eq!(a.info.weight_bytes, b.info.weight_bytes);
+            assert_eq!(a.info.in_act_bytes, b.info.in_act_bytes);
+            assert_eq!(a.info.out_act_bytes, b.info.out_act_bytes);
+            assert_eq!(a.info.macs, b.info.macs);
+            assert_eq!(a.info.out_shape, b.info.out_shape);
+        }
+        assert_eq!(back.summary().total_params, ir.summary().total_params);
+        assert_eq!(back.summary().total_bytes, ir.summary().total_bytes);
+        // Re-emission is byte-identical — the disk-cache contract.
+        assert_eq!(emit::et_json(&back).unwrap().to_json_pretty(), doc.to_json_pretty());
+    }
+
+    #[test]
+    fn comm_free_documents_round_trip_too() {
+        let mut ir = from_zoo("mlp", 4).unwrap();
+        passes::annotate_compute(&mut ir, &ConstantCompute(9));
+        let doc = emit::et_json(&ir).unwrap();
+        let back = from_et_json(&doc).unwrap();
+        assert!(back.compute_annotated());
+        assert_eq!(back.comm_annotated(), None);
+        assert_eq!(back.costs(), ir.costs());
+        assert_eq!(emit::et_json(&back).unwrap().to_json_pretty(), doc.to_json_pretty());
+    }
+
+    #[test]
+    fn reader_rejects_malformed_documents() {
+        let good = emit::et_json(&annotated(Parallelism::Data)).unwrap();
+        let text = good.to_json_pretty();
+
+        // Wrong / missing schema version.
+        let stale = text.replacen("modtrans-et-json/v2", "modtrans-et-json/v1", 1);
+        let err = from_et_json_str(&stale).unwrap_err().to_string();
+        assert!(err.contains("unsupported schema"), "got: {err}");
+        assert!(from_et_json(&crate::json::obj(vec![])).is_err());
+
+        // Truncated node list: the grammar walk must notice.
+        let mut doc = good.clone();
+        if let Value::Obj(m) = &mut doc {
+            if let Some(Value::Arr(nodes)) = m.get_mut("nodes") {
+                nodes.pop();
+            }
+        }
+        assert!(from_et_json(&doc).is_err());
+
+        // Extra trailing node: also rejected.
+        let mut doc = good.clone();
+        if let Value::Obj(m) = &mut doc {
+            if let Some(Value::Arr(nodes)) = m.get_mut("nodes") {
+                let mut extra = nodes.last().unwrap().clone();
+                if let Value::Obj(e) = &mut extra {
+                    e.insert("id".into(), Value::Num(nodes.len() as f64));
+                }
+                nodes.push(extra);
+            }
+        }
+        assert!(from_et_json(&doc).is_err());
+
+        // Layer-count mismatch.
+        let mut doc = good.clone();
+        if let Value::Obj(m) = &mut doc {
+            m.insert("num_layers".into(), Value::Num(99.0));
+        }
+        assert!(from_et_json(&doc).is_err());
+
+        // Forward-pointing dependency.
+        let mut doc = good;
+        if let Value::Obj(m) = &mut doc {
+            if let Some(Value::Arr(nodes)) = m.get_mut("nodes") {
+                if let Some(Value::Obj(first)) = nodes.first_mut() {
+                    first.insert("data_deps".into(), Value::Arr(vec![Value::Num(5.0)]));
+                }
+            }
+        }
+        assert!(from_et_json(&doc).is_err());
+    }
+
+    #[test]
+    fn reader_rejects_integers_beyond_2p53() {
+        // Mirrors the emitter's lossless-int guard: a duration above 2^53
+        // was already rounded by whatever f64-backed writer produced it.
+        let mut doc = emit::et_json(&annotated(Parallelism::Data)).unwrap();
+        if let Value::Obj(m) = &mut doc {
+            if let Some(Value::Arr(nodes)) = m.get_mut("nodes") {
+                if let Some(Value::Obj(first)) = nodes.first_mut() {
+                    // 2^53 + 2: representable in f64, but unreachable by a
+                    // lossless integer writer.
+                    first.insert("duration_ns".into(), Value::Num(9_007_199_254_740_994.0));
+                }
+            }
+        }
+        let err = from_et_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("duration_ns"), "got: {err}");
+    }
+
+    #[test]
+    fn reader_rejects_comm_nodes_without_a_parallelism() {
+        // A null-parallelism doc must be collective-free.
+        let with_comm = emit::et_json(&annotated(Parallelism::Data)).unwrap();
+        let mut doc = with_comm;
+        if let Value::Obj(m) = &mut doc {
+            m.insert("parallelism".into(), Value::Null);
+        }
+        let err = from_et_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("parallelism"), "got: {err}");
     }
 }

@@ -6,9 +6,13 @@
 //! makes it explicit:
 //!
 //! * **Frontends** ([`frontend`]) build a [`ModelIR`] from a model
-//!   source: raw `.onnx` bytes, an in-memory [`crate::onnx::Model`], or
+//!   source: raw `.onnx` bytes, an in-memory [`crate::onnx::Model`],
 //!   **directly from the zoo builder** — zoo models no longer pay an
-//!   ONNX encode/decode round-trip on their way to the simulator.
+//!   ONNX encode/decode round-trip on their way to the simulator — or a
+//!   `modtrans-et-json/v2` document ([`frontend::from_et_json`]), which
+//!   restores a *fully annotated* IR: the emit→read loop is closed, so
+//!   externally produced traces (and the persistent sweep cache's disk
+//!   entries) replay without re-deriving anything.
 //! * **Passes** ([`passes`]) annotate the IR independently of each
 //!   other: the compute pass fills per-phase cost slots from a
 //!   [`crate::translator::ComputeTimeModel`]; the comm pass fills
@@ -18,7 +22,8 @@
 //!   the in-crate [`crate::workload::Workload`] (which doubles as the
 //!   ASTRA-sim text description via [`crate::workload::Workload::emit`])
 //!   and a Chakra-ET-style JSON task graph for graph-based simulator
-//!   inputs ([`emit::et_json`]).
+//!   inputs ([`emit::et_json`]) — since schema v2 a complete serialized
+//!   IR that [`frontend::from_et_json`] reads back byte-identically.
 //!
 //! The split is what makes sweep-scale batching cheap: a compute-
 //! annotated IR is valid for *every* scenario at the same (model, batch),

@@ -14,16 +14,24 @@
 //! requirements.
 //!
 //! ```text
-//!  .onnx bytes ─┐                                   ┌─► Workload (in-crate sim)
-//!  onnx::Model ─┼─► ir::frontend ─► ModelIR ─► ir::emit ─► ASTRA-sim text (Fig. 3)
-//!  zoo builder ─┘        │                          └─► Chakra-ET-style JSON graph
-//!                        ▼
-//!                  ir::passes: compute cost │ comm plan │ memory model
+//!  .onnx bytes ────┐                                       ┌─► Workload (in-crate sim)
+//!  onnx::Model ────┼─► ir::frontend ─► ModelIR ─► ir::emit ─► ASTRA-sim text (Fig. 3)
+//!  zoo builder ────┤        │                              └─► Chakra-ET JSON graph (v2)
+//!  et-json trace ──┘        ▼                                    │
+//!          ▲         ir::passes: compute │ comm │ memory         │
+//!          └─────────── closed loop (byte-identical) ────────────┘
 //! ```
 //!
 //! * **Frontends** ([`ir::frontend`]) normalize every input — raw ONNX
-//!   bytes (metadata-only decode), in-memory models, and zoo builders
-//!   *directly* (no encode/decode round-trip) — into the same IR.
+//!   bytes (metadata-only decode), in-memory models, zoo builders
+//!   *directly* (no encode/decode round-trip), and
+//!   `modtrans-et-json/v2` documents
+//!   ([`ir::frontend::from_et_json`], CLI `translate --from et-json`)
+//!   — into the same IR. The et-json reader closes the emit→read loop:
+//!   it restores a **fully annotated** IR (costs + comm plan replayed
+//!   from the trace, structure from the v2 layer section) and re-emits
+//!   byte-identically, so externally produced traces become simulator
+//!   inputs and cached IRs survive a disk round trip unchanged.
 //! * **Passes** ([`ir::passes`]) are independent: the compute pass fills
 //!   cost slots from any [`translator::ComputeTimeModel`]; the comm pass
 //!   plans per-phase collectives for one parallelism strategy (into the
@@ -33,9 +41,19 @@
 //!   [`workload::Workload`] / ASTRA-sim text description, or to a
 //!   Chakra-ET-style JSON task graph (`translate --format et-json`).
 //!
-//! This split is what makes batched scenario execution cheap: the sweep
-//! caches one compute-annotated IR per (model, batch) and each scenario
-//! re-runs only the parallelism-dependent comm pass + emit.
+//! This split is what makes batched scenario execution cheap — and now
+//! persistent. The sweep cache ([`sweep::WorkloadCache`]) has two tiers:
+//!
+//! 1. **In-memory**: one compute-annotated IR per typed
+//!    [`sweep::CacheKey`] (model × batch × compute-model fingerprint),
+//!    built once per run; each scenario re-runs only the
+//!    parallelism-dependent comm pass + emit.
+//! 2. **On disk** (`sweep --cache-dir DIR`): each IR is spilled as an
+//!    et-json document in a key-stamped envelope; later sweeps — or
+//!    sibling shards of the same grid — load instead of re-extracting,
+//!    so a warm run performs **zero** translations while ranking
+//!    byte-identically (CI asserts both). Corrupt or stale-fingerprint
+//!    entries are invalidated and rewritten, never trusted.
 //!
 //! ## Module map
 //!
@@ -57,7 +75,8 @@
 //! * [`compute`] — SCALE-sim-style systolic-array compute-time model.
 //! * [`sweep`] — the experiment-scale batch runner: expands a
 //!   (model × parallelism × topology × collective) grid, caches one
-//!   compute-annotated IR per model, fans simulations out across a
+//!   compute-annotated IR per model (in memory, plus the persistent
+//!   `--cache-dir` disk tier), fans simulations out across a
 //!   `std::thread` worker pool (optionally sharded `--shard K/N` across
 //!   machines, merged back with `sweep-merge`), and emits a
 //!   deterministic ranked report.
@@ -104,9 +123,11 @@
 //! uploads `BENCH_*.json` artifacts, an advisory perf-trajectory job
 //! that diffs those artifacts against the base branch's
 //! (`scripts/perf_diff.py`), a 1-thread-vs-8-thread `sweep` determinism
-//! diff (plain, `--skip-infeasible`, and sharded + `sweep-merge`), and a
-//! check that every PR touches `CHANGES.md`. Reproduce the full matrix
-//! locally with `make ci` before pushing.
+//! diff (plain, `--skip-infeasible`, sharded + `sweep-merge`, and a
+//! warm-`--cache-dir` rerun that must report 0 translations with a
+//! byte-identical ranking), and a check that every PR touches
+//! `CHANGES.md`. Reproduce the full matrix locally with `make ci`
+//! before pushing.
 //!
 //! # Performance
 //!
@@ -138,7 +159,10 @@
 //!   allocation. (Crossing from a small model to a larger one regrows
 //!   the emit buffer once per boundary; within a model group nothing
 //!   allocates.) The structural extraction and compute pass run once per
-//!   (model, batch) inside [`sweep::WorkloadCache`].
+//!   [`sweep::CacheKey`] inside [`sweep::WorkloadCache`] — and with
+//!   `--cache-dir` not even that: repeat sweeps replace O(models)
+//!   extraction with O(1) disk reads per model
+//!   (`benches/sweep_throughput.rs` tracks the cold-vs-warm series).
 //!
 //! ## Reading `BENCH_<name>.json`
 //!

@@ -1,15 +1,32 @@
 //! Shared IR cache: translate and compute-annotate each model once,
-//! reuse everywhere.
+//! reuse everywhere — in memory within a run, and (optionally) on disk
+//! across runs.
 //!
 //! Building the zoo graph, extracting the layer structure and running
 //! the compute pass are the expensive, model-shaped parts of a scenario;
 //! everything parallelism-dependent (the comm pass + workload emission)
 //! is a cheap linear pass. The cache therefore stores one
-//! **compute-annotated** [`ModelIR`] per (model, batch) — built through
-//! the zoo-direct frontend, so zoo models never pay an ONNX
-//! encode/decode round-trip — and counts how many translations actually
-//! ran, so callers (and the sweep smoke test) can assert **translation
-//! count == model count**, not scenario count.
+//! **compute-annotated** [`ModelIR`] per [`CacheKey`] — the typed
+//! identity `(model, batch, compute-model fingerprint)`, not the model
+//! name alone, so sweeps spanning batch sizes or compute models can
+//! never serve each other stale timings — and counts how many
+//! translations actually ran, so callers (and the sweep smoke test) can
+//! assert **translation count == model count**, not scenario count.
+//!
+//! ## The disk tier
+//!
+//! With a cache directory ([`WorkloadCache::build_with`], CLI
+//! `sweep --cache-dir DIR`), every freshly translated IR is spilled as
+//! a `modtrans-ir-cache/v1` envelope wrapping the et-json form
+//! ([`crate::ir::emit::et_json`]), under a file name derived from the
+//! key's FNV digest. Subsequent builds — later sweeps, or other shards
+//! of the same grid — **load instead of re-extracting**: a warm run
+//! reports zero translations. Entries are *validated, never trusted*:
+//! unreadable/corrupt JSON, a schema or key mismatch (stale
+//! fingerprint), or a failed IR reconstruction all count as a miss, and
+//! the entry is re-extracted and overwritten. Writes go through a
+//! temp-file rename so concurrent shard processes never observe a
+//! half-written entry.
 //!
 //! Scenarios that differ only in parallelism / topology / collective
 //! re-run only [`crate::ir::passes::plan_comm_into`] against the shared
@@ -17,53 +34,193 @@
 //! threads).
 
 use crate::compute::SystolicCompute;
-use crate::error::Result;
-use crate::ir::{frontend, passes, ModelIR};
-use crate::translator::ModelSummary;
+use crate::error::{Error, Result};
+use crate::ir::{emit, frontend, passes, ModelIR};
+use crate::json::{obj, Value};
+use crate::translator::{ComputeTimeModel, ModelSummary};
+use crate::util::fnv1a;
 use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Envelope schema for on-disk cache entries.
+pub const IR_CACHE_SCHEMA: &str = "modtrans-ir-cache/v1";
+
+/// The cache identity of one compute-annotated IR. Two IRs are
+/// interchangeable iff all three components match: the model, the batch
+/// the activations were sized at, and the compute model's
+/// [`ComputeTimeModel::fingerprint`] (which covers every timing knob).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CacheKey {
+    /// Zoo model name (the requested name, not the graph name).
+    pub model: String,
+    /// Batch size used for extraction and compute annotation.
+    pub batch: i64,
+    /// [`ComputeTimeModel::fingerprint`] of the annotating model.
+    pub compute_fingerprint: String,
+}
+
+impl CacheKey {
+    /// Build a key for `model` at `batch` under `compute`.
+    pub fn new(model: &str, batch: i64, compute: &dyn ComputeTimeModel) -> CacheKey {
+        CacheKey {
+            model: model.to_string(),
+            batch,
+            compute_fingerprint: compute.fingerprint(),
+        }
+    }
+
+    /// FNV-1a digest over all three components — the collision-resistant
+    /// part of the on-disk file name.
+    pub fn digest(&self) -> u64 {
+        let id = format!("{}\u{0}{}\u{0}{}", self.model, self.batch, self.compute_fingerprint);
+        fnv1a(id.as_bytes())
+    }
+
+    /// Deterministic on-disk file name: a sanitized human-readable
+    /// prefix plus the full-key digest. Distinct fingerprints (or
+    /// batches) land in distinct files, so a stale entry is simply never
+    /// looked up — and the embedded key is still re-verified on load.
+    pub fn file_name(&self) -> String {
+        let safe: String = self
+            .model
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+            .collect();
+        format!("{safe}-b{}-{:016x}.ir.json", self.batch, self.digest())
+    }
+}
 
 /// Per-model compute-annotated IRs, built once up front and shared
 /// (immutably) by every scenario.
+///
+/// Instances are **homogeneous**: [`WorkloadCache::build_with`] is the
+/// only constructor and stamps every entry with the one
+/// (batch, compute-fingerprint) pair it was called with, so the by-name
+/// lookups below need no per-entry identity re-check.
 #[derive(Debug)]
 pub struct WorkloadCache {
-    irs: BTreeMap<String, ModelIR>,
+    irs: BTreeMap<CacheKey, ModelIR>,
     translations: usize,
+    disk_loads: usize,
 }
 
 impl WorkloadCache {
     /// Translate every unique model in `models` at the given batch size
     /// and annotate it with the sweep's compute model
     /// ([`SystolicCompute`] at that batch). Duplicate names are
-    /// translated only once.
+    /// translated only once. In-memory only; see
+    /// [`WorkloadCache::build_with`] for the disk tier.
     pub fn build(models: &[String], batch: i64) -> Result<WorkloadCache> {
         let compute = SystolicCompute::new(batch);
-        let mut irs = BTreeMap::new();
-        let mut translations = 0usize;
-        for name in models {
-            if irs.contains_key(name.as_str()) {
-                continue;
-            }
-            let mut ir = frontend::from_zoo(name, batch)?;
-            passes::annotate_compute(&mut ir, &compute);
-            translations += 1;
-            irs.insert(name.clone(), ir);
-        }
-        Ok(WorkloadCache { irs, translations })
+        WorkloadCache::build_with(models, batch, &compute, None)
     }
 
-    /// The cached compute-annotated IR for a model, if present.
+    /// Build the cache under an explicit compute model, optionally
+    /// backed by a persistent directory. For each unique model the disk
+    /// tier is consulted first (a valid entry loads with **no**
+    /// translation); misses extract through the zoo-direct frontend, run
+    /// the compute pass, and spill the result back to disk.
+    ///
+    /// Unknown or failing models do not abort at the first casualty: the
+    /// whole list is attempted and every failure is reported in one
+    /// error, so shard fleets see the full casualty list instead of
+    /// bisecting by hand.
+    pub fn build_with(
+        models: &[String],
+        batch: i64,
+        compute: &dyn ComputeTimeModel,
+        cache_dir: Option<&Path>,
+    ) -> Result<WorkloadCache> {
+        if let Some(dir) = cache_dir {
+            std::fs::create_dir_all(dir)?;
+        }
+        let fingerprint = compute.fingerprint();
+        let mut irs: BTreeMap<CacheKey, ModelIR> = BTreeMap::new();
+        let mut translations = 0usize;
+        let mut disk_loads = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        for name in models {
+            let key = CacheKey {
+                model: name.clone(),
+                batch,
+                compute_fingerprint: fingerprint.clone(),
+            };
+            if irs.contains_key(&key) {
+                continue;
+            }
+            if let Some(dir) = cache_dir {
+                if let Some(ir) = load_entry(dir, &key) {
+                    disk_loads += 1;
+                    irs.insert(key, ir);
+                    continue;
+                }
+            }
+            match frontend::from_zoo(name, batch) {
+                Ok(mut ir) => {
+                    passes::annotate_compute(&mut ir, compute);
+                    translations += 1;
+                    if let Some(dir) = cache_dir {
+                        // Spilling is best-effort: the cache directory
+                        // never shapes results, so an unwritable or full
+                        // disk mid-fleet degrades to an uncached run
+                        // instead of killing the sweep. (A wholly bogus
+                        // path still fails fast at create_dir_all above.)
+                        if let Err(e) = store_entry(dir, &key, &ir) {
+                            eprintln!(
+                                "warning: could not write IR cache entry for '{name}': \
+                                 {e} (continuing uncached)"
+                            );
+                        }
+                    }
+                    irs.insert(key, ir);
+                }
+                Err(e) => failures.push(format!("{name} ({e})")),
+            }
+        }
+        if !failures.is_empty() {
+            return Err(Error::Config(format!(
+                "{} sweep model(s) failed to translate: {}",
+                failures.len(),
+                failures.join("; ")
+            )));
+        }
+        Ok(WorkloadCache { irs, translations, disk_loads })
+    }
+
+    /// The cached compute-annotated IR for a model (exact under this
+    /// cache's single build-time identity — see the struct docs), if
+    /// present. Linear scan over the handful of cached models —
+    /// allocation-free, which matters because every sweep scenario calls
+    /// it.
     pub fn ir(&self, model: &str) -> Option<&ModelIR> {
-        self.irs.get(model)
+        self.irs.iter().find_map(|(k, ir)| if k.model == model { Some(ir) } else { None })
+    }
+
+    /// The cached IR for an explicit full key, if present.
+    pub fn ir_for(&self, key: &CacheKey) -> Option<&ModelIR> {
+        self.irs.get(key)
+    }
+
+    /// The full typed key of a cached model, if present.
+    pub fn key(&self, model: &str) -> Option<&CacheKey> {
+        self.irs.keys().find(|k| k.model == model)
     }
 
     /// The cached structural summary for a model, if present.
     pub fn summary(&self, model: &str) -> Option<&ModelSummary> {
-        self.irs.get(model).map(ModelIR::summary)
+        self.ir(model).map(ModelIR::summary)
     }
 
-    /// How many translations ran while building the cache.
+    /// How many translations (full extractions + compute passes) ran
+    /// while building the cache. Disk-tier loads do **not** count.
     pub fn translations(&self) -> usize {
         self.translations
+    }
+
+    /// How many models were loaded from the disk tier instead of
+    /// translated.
+    pub fn disk_loads(&self) -> usize {
+        self.disk_loads
     }
 
     /// Number of cached models.
@@ -77,15 +234,70 @@ impl WorkloadCache {
     }
 }
 
+/// Try to load and validate one disk entry. Any failure — missing file,
+/// unparseable JSON, wrong envelope schema, key mismatch (stale
+/// fingerprint), or a document the et-json reader rejects — is a miss:
+/// the caller re-extracts and overwrites.
+fn load_entry(dir: &Path, key: &CacheKey) -> Option<ModelIR> {
+    let text = std::fs::read_to_string(dir.join(key.file_name())).ok()?;
+    let doc = crate::json::parse(&text).ok()?;
+    if doc.get("schema")?.as_str()? != IR_CACHE_SCHEMA {
+        return None;
+    }
+    let k = doc.get("key")?;
+    if k.get("model")?.as_str()? != key.model
+        || k.get("batch")?.as_f64()? != key.batch as f64
+        || k.get("compute")?.as_str()? != key.compute_fingerprint
+    {
+        return None;
+    }
+    let ir = frontend::from_et_json(doc.get("ir")?).ok()?;
+    if ir.batch() != key.batch || !ir.compute_annotated() {
+        return None;
+    }
+    Some(ir)
+}
+
+/// Spill one compute-annotated IR to the disk tier: an envelope stamping
+/// the full key around the et-json document, written via temp-file +
+/// rename so concurrent shards never read a torn entry.
+fn store_entry(dir: &Path, key: &CacheKey, ir: &ModelIR) -> Result<()> {
+    let doc = obj(vec![
+        ("schema", Value::Str(IR_CACHE_SCHEMA.into())),
+        (
+            "key",
+            obj(vec![
+                ("batch", Value::Num(key.batch as f64)),
+                ("compute", Value::Str(key.compute_fingerprint.clone())),
+                ("model", Value::Str(key.model.clone())),
+            ]),
+        ),
+        ("ir", emit::et_json(ir)?),
+    ]);
+    let path = dir.join(key.file_name());
+    let tmp = dir.join(format!("{}.tmp.{}", key.file_name(), std::process::id()));
+    std::fs::write(&tmp, doc.to_json_pretty())?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mt_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
 
     #[test]
     fn duplicates_translate_once() {
         let models = vec!["mlp".to_string(), "mlp".to_string(), "mlp".to_string()];
         let cache = WorkloadCache::build(&models, 4).unwrap();
         assert_eq!(cache.translations(), 1);
+        assert_eq!(cache.disk_loads(), 0);
         assert_eq!(cache.len(), 1);
         assert!(!cache.is_empty());
         let s = cache.summary("mlp").unwrap();
@@ -116,5 +328,98 @@ mod tests {
     fn unknown_model_fails_the_build() {
         let models = vec!["mlp".to_string(), "not-a-model".to_string()];
         assert!(WorkloadCache::build(&models, 2).is_err());
+    }
+
+    #[test]
+    fn every_failing_model_is_reported_in_one_error() {
+        let models = vec!["mlp".to_string(), "nope-a".to_string(), "nope-b".to_string()];
+        let err = WorkloadCache::build(&models, 2).unwrap_err().to_string();
+        assert!(err.contains("nope-a"), "missing first casualty: {err}");
+        assert!(err.contains("nope-b"), "missing second casualty: {err}");
+        assert!(err.contains("2 sweep model(s)"), "missing count: {err}");
+    }
+
+    #[test]
+    fn cache_key_identity_covers_batch_and_compute() {
+        let systolic = SystolicCompute::new(8);
+        let a = CacheKey::new("mlp", 8, &systolic);
+        let b = CacheKey::new("mlp", 16, &SystolicCompute::new(16));
+        let c = CacheKey::new("mlp", 8, &crate::translator::ConstantCompute(10));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a.file_name(), b.file_name());
+        assert_ne!(a.file_name(), c.file_name());
+        assert_eq!(a, CacheKey::new("mlp", 8, &SystolicCompute::new(8)));
+        // File names are path-safe.
+        let weird = CacheKey::new("../evil model", 4, &systolic);
+        assert!(!weird.file_name().contains('/'));
+        assert!(!weird.file_name().contains(' '));
+    }
+
+    #[test]
+    fn disk_tier_round_trips_without_retranslation() {
+        let dir = temp_dir("roundtrip");
+        let models = vec!["mlp".to_string(), "alexnet".to_string()];
+        let compute = SystolicCompute::new(4);
+        let cold = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
+        assert_eq!(cold.translations(), 2);
+        assert_eq!(cold.disk_loads(), 0);
+        let warm = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
+        assert_eq!(warm.translations(), 0, "warm build must be load-only");
+        assert_eq!(warm.disk_loads(), 2);
+        // Loaded IRs carry the same annotation as freshly built ones.
+        for m in &models {
+            let a = cold.ir(m).unwrap();
+            let b = warm.ir(m).unwrap();
+            assert_eq!(a.costs(), b.costs());
+            assert_eq!(a.summary().total_bytes, b.summary().total_bytes);
+            assert_eq!(a.num_layers(), b.num_layers());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_stale_entries_are_invalidated_not_trusted() {
+        let dir = temp_dir("corrupt");
+        let models = vec!["mlp".to_string()];
+        let compute = SystolicCompute::new(4);
+        let cold = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
+        assert_eq!(cold.translations(), 1);
+        let key = CacheKey::new("mlp", 4, &compute);
+        let path = dir.join(key.file_name());
+        assert!(path.exists());
+
+        // Corrupt the entry: the next build re-extracts and repairs it.
+        std::fs::write(&path, "{ not json").unwrap();
+        let repaired = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
+        assert_eq!(repaired.translations(), 1, "corrupt entry must not be trusted");
+        assert_eq!(repaired.disk_loads(), 0);
+        let warm = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
+        assert_eq!(warm.disk_loads(), 1, "repair must have overwritten the entry");
+
+        // Stale embedded fingerprint: tamper the key inside the file.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace(&compute.fingerprint(), "systolic:stale")).unwrap();
+        let stale = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
+        assert_eq!(stale.translations(), 1, "stale fingerprint must be invalidated");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn different_batches_use_disjoint_disk_entries() {
+        let dir = temp_dir("batches");
+        let models = vec!["mlp".to_string()];
+        let b4 = WorkloadCache::build_with(&models, 4, &SystolicCompute::new(4), Some(&dir));
+        let b8 = WorkloadCache::build_with(&models, 8, &SystolicCompute::new(8), Some(&dir));
+        assert_eq!(b4.unwrap().translations(), 1);
+        assert_eq!(b8.unwrap().translations(), 1, "batch 8 must not reuse the batch-4 IR");
+        // Both entries now exist and serve their own batch.
+        let w4 = WorkloadCache::build_with(&models, 4, &SystolicCompute::new(4), Some(&dir));
+        let w8 = WorkloadCache::build_with(&models, 8, &SystolicCompute::new(8), Some(&dir));
+        assert_eq!(w4.unwrap().disk_loads(), 1);
+        let w8 = w8.unwrap();
+        assert_eq!(w8.disk_loads(), 1);
+        assert_eq!(w8.summary("mlp").unwrap().batch, 8);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -14,7 +14,11 @@
 //!    its workload from the shared compute-annotated
 //!    [`crate::ir::ModelIR`] by re-running only the cheap
 //!    parallelism-dependent comm pass (translation count == model count,
-//!    never scenario count).
+//!    never scenario count). Entries are keyed by the typed
+//!    [`cache::CacheKey`] (model × batch × compute fingerprint), and with
+//!    [`run_sweep_cached`]'s `--cache-dir` a second tier spills each IR
+//!    to disk as et-json, so repeat sweeps (and sibling shards) load in
+//!    O(1) instead of re-extracting at all.
 //! 3. [`pool::run_indexed_with`] fans the simulations out over a
 //!    `std::thread` worker pool fed by a channel-based work queue; each
 //!    worker carries one [`ScenarioScratch`] (simulator arenas + the
@@ -36,7 +40,7 @@ pub mod cache;
 pub mod pool;
 pub mod report;
 
-pub use cache::WorkloadCache;
+pub use cache::{CacheKey, WorkloadCache};
 pub use report::{ScenarioResult, SweepReport};
 
 use crate::error::{Error, Result};
@@ -315,22 +319,16 @@ pub fn parse_shard_spec(spec: &str) -> Option<(usize, usize)> {
 /// refuse shards of *different* grids that happen to share a scenario
 /// count and config.
 fn grid_digest(scenarios: &[Scenario]) -> String {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= u64::from(b);
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    };
+    let mut h = crate::util::FNV1A_OFFSET;
     for sc in scenarios {
-        eat(sc.model.as_bytes());
-        eat(b"/");
-        eat(sc.parallelism.token().as_bytes());
-        eat(b"/");
-        eat(sc.topology.token().as_bytes());
-        eat(b"/");
-        eat(sc.collective.token().as_bytes());
-        eat(b"\n");
+        h = crate::util::fnv1a_extend(h, sc.model.as_bytes());
+        h = crate::util::fnv1a_extend(h, b"/");
+        h = crate::util::fnv1a_extend(h, sc.parallelism.token().as_bytes());
+        h = crate::util::fnv1a_extend(h, b"/");
+        h = crate::util::fnv1a_extend(h, sc.topology.token().as_bytes());
+        h = crate::util::fnv1a_extend(h, b"/");
+        h = crate::util::fnv1a_extend(h, sc.collective.token().as_bytes());
+        h = crate::util::fnv1a_extend(h, b"\n");
     }
     format!("{h:016x}")
 }
@@ -413,8 +411,24 @@ fn run_scenario(
 /// Run the full sweep: expand, optionally keep only this worker's shard,
 /// translate-once-per-model into the shared IR cache, optionally prune
 /// infeasible scenarios, simulate across the worker pool (one reusable
-/// [`ScenarioScratch`] per worker), rank.
+/// [`ScenarioScratch`] per worker), rank. In-memory cache only; see
+/// [`run_sweep_cached`] for the persistent disk tier.
 pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
+    run_sweep_cached(grid, cfg, None)
+}
+
+/// [`run_sweep`] with an optional persistent IR-cache directory (the CLI
+/// `sweep --cache-dir DIR`). When given, each model's compute-annotated
+/// IR is loaded from disk if a valid entry exists — a warm run performs
+/// **zero** translations — and spilled there after extraction otherwise.
+/// The directory never shapes results, only where the IRs come from:
+/// warm and cold runs rank byte-identically (asserted in tests and CI),
+/// so like `threads`/`shard` it stays outside the config fingerprint.
+pub fn run_sweep_cached(
+    grid: &SweepGrid,
+    cfg: &SweepConfig,
+    cache_dir: Option<&std::path::Path>,
+) -> Result<SweepReport> {
     let mut scenarios = grid.expand();
     if scenarios.is_empty() {
         return Err(Error::Config(
@@ -446,7 +460,8 @@ pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
             .map(|sc| sc.model.clone())
             .collect()
     };
-    let cache = WorkloadCache::build(&models, cfg.batch)?;
+    let compute = crate::compute::SystolicCompute::new(cfg.batch);
+    let cache = WorkloadCache::build_with(&models, cfg.batch, &compute, cache_dir)?;
     let mut pruned = 0usize;
     if cfg.skip_infeasible {
         // Fast path: the memory pass is a cheap analytic read of the
@@ -472,6 +487,7 @@ pub fn run_sweep(grid: &SweepGrid, cfg: &SweepConfig) -> Result<SweepReport> {
     Ok(SweepReport {
         models: models.len(),
         translations: cache.translations(),
+        cache_loads: cache.disk_loads(),
         pruned,
         config: cfg.fingerprint(),
         grid_scenarios,

@@ -72,10 +72,16 @@ pub struct SweepReport {
     /// Unique models in this run's scenario list.
     pub models: usize,
     /// Translations performed while building the cache — equal to
-    /// `models` for a single run. A merged report sums the per-shard
-    /// counts, so it can exceed `models` when several shard processes
-    /// each translated the same model.
+    /// `models` for a single cold run. A merged report sums the
+    /// per-shard counts, so it can exceed `models` when several shard
+    /// processes each translated the same model. A fully warm
+    /// `--cache-dir` run reports **0** here (the CI warm-cache check's
+    /// acceptance counter).
     pub translations: usize,
+    /// Models served from the persistent disk cache instead of
+    /// translated (`translations + cache_loads == models` for a single
+    /// run). Zero when no `--cache-dir` was given.
+    pub cache_loads: usize,
     /// Scenarios pruned by the `--skip-infeasible` memory check before
     /// reaching the worker pool.
     pub pruned: usize,
@@ -138,6 +144,7 @@ impl SweepReport {
         obj(vec![
             ("models", Value::Num(self.models as f64)),
             ("translations", Value::Num(self.translations as f64)),
+            ("cache_loads", Value::Num(self.cache_loads as f64)),
             ("scenarios", Value::Num(self.ranked.len() as f64)),
             ("pruned", Value::Num(self.pruned as f64)),
             ("config", self.config.clone()),
@@ -195,6 +202,8 @@ impl SweepReport {
         Ok(SweepReport {
             models: r_usize(v, "models")?,
             translations: r_usize(v, "translations")?,
+            // Absent in pre-disk-tier reports: default to 0, never fail.
+            cache_loads: v.get("cache_loads").and_then(Value::as_usize).unwrap_or(0),
             pruned: r_usize(v, "pruned")?,
             config: v.get("config").cloned().unwrap_or(Value::Null),
             grid_scenarios: v.get("grid_scenarios").and_then(Value::as_usize).unwrap_or(0),
@@ -289,9 +298,11 @@ impl SweepReport {
         }
         let mut ranked: Vec<ScenarioResult> = Vec::new();
         let mut translations = 0usize;
+        let mut cache_loads = 0usize;
         let mut pruned = 0usize;
         for s in shards {
             translations += s.translations;
+            cache_loads += s.cache_loads;
             pruned += s.pruned;
             ranked.extend(s.ranked.iter().cloned());
         }
@@ -316,6 +327,7 @@ impl SweepReport {
         Ok(SweepReport {
             models,
             translations,
+            cache_loads,
             pruned,
             config,
             grid_scenarios,
@@ -392,6 +404,7 @@ mod tests {
         SweepReport {
             models: 2,
             translations: 2,
+            cache_loads: 0,
             pruned: 0,
             config: crate::sweep::SweepConfig::default().fingerprint(),
             grid_scenarios: 2,
@@ -451,6 +464,7 @@ mod tests {
         let shard_a = SweepReport {
             models: 1,
             translations: 1,
+            cache_loads: 0,
             pruned: 1,
             config: full.config.clone(),
             grid_scenarios: 5,
@@ -461,6 +475,7 @@ mod tests {
         let shard_b = SweepReport {
             models: 1,
             translations: 1,
+            cache_loads: 1,
             pruned: 2,
             config: full.config.clone(),
             grid_scenarios: 5,
@@ -471,6 +486,7 @@ mod tests {
         let merged = SweepReport::merge(&[shard_a, shard_b]).unwrap();
         assert_eq!(merged.models, 2);
         assert_eq!(merged.translations, 2);
+        assert_eq!(merged.cache_loads, 1);
         assert_eq!(merged.pruned, 3);
         assert_eq!(merged.config, full.config);
         assert_eq!(merged.shard, None);
@@ -489,6 +505,7 @@ mod tests {
         let stamped = |k: usize, n: usize, ranked: Vec<ScenarioResult>| SweepReport {
             models: ranked.len(),
             translations: ranked.len(),
+            cache_loads: 0,
             pruned: 0,
             config: full.config.clone(),
             grid_scenarios: 2,

@@ -32,6 +32,17 @@ impl LayerKind {
             LayerKind::Embedding => "embedding",
         }
     }
+
+    /// Parse a [`LayerKind::label`] token (the et-json reader's inverse).
+    pub fn from_label(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "dense" => LayerKind::Dense,
+            "matmul" => LayerKind::MatMul,
+            "embedding" => LayerKind::Embedding,
+            other => return Err(Error::translate(format!("unknown layer kind '{other}'"))),
+        })
+    }
 }
 
 /// Extracted information for one weight-bearing layer.

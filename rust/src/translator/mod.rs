@@ -33,6 +33,14 @@ pub trait ComputeTimeModel {
     /// Return (fwd_ns, input_grad_ns, weight_grad_ns) for a layer.
     fn layer_times(&self, layer: &LayerInfo) -> (u64, u64, u64);
 
+    /// Stable identity token for this timing function: two instances with
+    /// the same fingerprint must return identical [`Self::layer_times`]
+    /// and [`Self::update_time`] for every layer. The persistent IR cache
+    /// ([`crate::sweep::WorkloadCache`]) keys compute-annotated IRs by it,
+    /// so *every* knob that changes the produced times must appear here —
+    /// an under-descriptive fingerprint silently serves stale timings.
+    fn fingerprint(&self) -> String;
+
     /// Memory bandwidth in bytes/ns (== GB/s) used to cost the optimizer
     /// update. The default, 100 GB/s, is the historical hard-coded value
     /// kept for models that declare no bandwidth of their own
@@ -59,6 +67,10 @@ pub struct ConstantCompute(pub u64);
 impl ComputeTimeModel for ConstantCompute {
     fn layer_times(&self, _layer: &LayerInfo) -> (u64, u64, u64) {
         (self.0, self.0, self.0)
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("constant:{}", self.0)
     }
 }
 
@@ -96,6 +108,10 @@ impl ComputeTimeModel for RooflineCompute {
     /// bandwidth the roofline uses for layer phases.
     fn update_bandwidth(&self) -> f64 {
         self.bytes_per_ns
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("roofline:macs{}:bw{}", self.macs_per_ns, self.bytes_per_ns)
     }
 }
 

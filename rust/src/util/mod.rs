@@ -6,6 +6,26 @@ pub mod bench;
 pub mod rng;
 pub mod table;
 
+/// FNV-1a offset basis (the seed value for [`fnv1a_extend`] chains).
+pub const FNV1A_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a state. Start chains from
+/// [`FNV1A_OFFSET`] (or use [`fnv1a`] for the one-shot form).
+pub fn fnv1a_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One-shot FNV-1a digest — the crate's stable non-cryptographic hash
+/// (sweep grid identities, IR-cache file names, calibration
+/// fingerprints). Not for adversarial inputs.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV1A_OFFSET, bytes)
+}
+
 /// Format a byte count with binary-prefix units (e.g. `411041792` →
 /// `"392.0 MiB"`). Used by `modtrans inspect` and the report writers.
 pub fn human_bytes(n: u64) -> String {
@@ -46,6 +66,16 @@ mod tests {
         assert_eq!(human_bytes(512), "512 B");
         assert_eq!(human_bytes(2048), "2.0 KiB");
         assert_eq!(human_bytes(411_041_792), "392.0 MiB");
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // Chaining is identical to one-shot over the concatenation.
+        let chained = fnv1a_extend(fnv1a_extend(FNV1A_OFFSET, b"foo"), b"bar");
+        assert_eq!(chained, fnv1a(b"foobar"));
     }
 
     #[test]

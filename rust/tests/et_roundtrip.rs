@@ -1,0 +1,104 @@
+//! The emit→read loop's acceptance property (tier-1): for **every** zoo
+//! model × **every** parallelism strategy, `et_json → from_et_json →
+//! et_json` is byte-identical — and a replayed IR is operationally
+//! indistinguishable from a freshly extracted one: same lowered
+//! workload, same simulated makespan, same memory feasibility. This is
+//! the contract the persistent sweep cache's disk tier rests on.
+
+use modtrans::compute::SystolicCompute;
+use modtrans::ir::{emit, frontend, passes};
+use modtrans::sim::{simulate, Network, PipelineSchedule, SimConfig, TopologyKind};
+use modtrans::sweep::CollectiveAlgo;
+use modtrans::translator::{MemoryOpts, TranslateOpts, ZeroStage};
+use modtrans::workload::Parallelism;
+use modtrans::zoo;
+
+const STRATEGIES: [Parallelism; 5] = [
+    Parallelism::Data,
+    Parallelism::Model,
+    Parallelism::HybridDataModel,
+    Parallelism::HybridModelData,
+    Parallelism::Pipeline,
+];
+
+fn opts(p: Parallelism) -> TranslateOpts {
+    TranslateOpts { parallelism: p, npus: 16, mp_group: 4, batch: 4, zero: ZeroStage::None }
+}
+
+#[test]
+fn every_zoo_model_and_strategy_round_trips_byte_identically() {
+    for model in zoo::MODELS {
+        let mut computed = frontend::from_zoo(model, 4).unwrap();
+        passes::annotate_compute(&mut computed, &SystolicCompute::new(4));
+
+        // The comm-free (cache-tier) form round-trips too.
+        let doc = emit::et_json(&computed).unwrap().to_json_pretty();
+        let back = frontend::from_et_json_str(&doc).unwrap();
+        assert_eq!(
+            emit::et_json(&back).unwrap().to_json_pretty(),
+            doc,
+            "{model}: comm-free round trip diverged"
+        );
+        assert_eq!(back.comm_annotated(), None);
+
+        for p in STRATEGIES {
+            let mut ir = computed.clone();
+            passes::annotate_comm(&mut ir, opts(p));
+            let doc = emit::et_json(&ir).unwrap().to_json_pretty();
+            let back = frontend::from_et_json_str(&doc).unwrap();
+            assert_eq!(
+                emit::et_json(&back).unwrap().to_json_pretty(),
+                doc,
+                "{model}/{p:?}: round trip diverged"
+            );
+            // The reader restored the exact annotations, not re-derived
+            // approximations.
+            assert_eq!(back.costs(), ir.costs(), "{model}/{p:?}: costs");
+            assert_eq!(back.comms(), ir.comms(), "{model}/{p:?}: comm plans");
+            assert_eq!(back.comm_annotated(), Some(p));
+        }
+    }
+}
+
+#[test]
+fn replayed_ir_is_operationally_identical_to_a_fresh_one() {
+    let sim_cfg = SimConfig {
+        network: Network::single(TopologyKind::Ring, 8, 100.0, 500.0),
+        system: CollectiveAlgo::Pipelined.system(),
+        iterations: 2,
+        stages: 4,
+        microbatches: 8,
+        boundary_bytes: 1 << 20,
+        schedule: PipelineSchedule::GPipe,
+    };
+    for (model, p) in [
+        ("mlp", Parallelism::Data),
+        ("resnet18", Parallelism::Model),
+        ("gpt2-tiny", Parallelism::HybridDataModel),
+    ] {
+        let mut fresh = frontend::from_zoo(model, 4).unwrap();
+        passes::annotate_compute(&mut fresh, &SystolicCompute::new(4));
+        passes::annotate_comm(&mut fresh, opts(p));
+        let replayed = frontend::from_et_json(&emit::et_json(&fresh).unwrap()).unwrap();
+
+        // Same lowered workload (hence same ASTRA-sim text).
+        let wf = emit::to_sim_workload(&fresh).unwrap();
+        let wr = emit::to_sim_workload(&replayed).unwrap();
+        assert_eq!(wf, wr, "{model}/{p:?}: lowered workloads diverged");
+
+        // Same simulated makespan, event for event.
+        let a = simulate(&wf, &sim_cfg).unwrap();
+        let b = simulate(&wr, &sim_cfg).unwrap();
+        assert_eq!(a.iteration_ns, b.iteration_ns, "{model}/{p:?}: makespan diverged");
+        assert_eq!(a.total_ns, b.total_ns);
+        assert_eq!(a.events, b.events);
+
+        // Same memory feasibility verdicts (the sweep's pruning input).
+        let mem = MemoryOpts::default();
+        assert_eq!(
+            passes::memory(&fresh, opts(p), mem),
+            passes::memory(&replayed, opts(p), mem),
+            "{model}/{p:?}: memory reports diverged"
+        );
+    }
+}

@@ -3,7 +3,10 @@
 //! thread-count-independent ranked output.
 
 use modtrans::sim::TopologyKind;
-use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid, WorkloadCache};
+use modtrans::sweep::{
+    run_sweep, run_sweep_cached, CollectiveAlgo, SweepConfig, SweepGrid, SweepReport,
+    WorkloadCache,
+};
 use modtrans::workload::Parallelism;
 
 fn grid_2x2() -> SweepGrid {
@@ -92,6 +95,30 @@ fn workload_cache_is_shareable_across_threads() {
             });
         }
     });
+}
+
+#[test]
+fn warm_disk_cache_runs_zero_translations_and_ranks_identically() {
+    // The persistent-cache acceptance property: a second `--cache-dir`
+    // run over the same grid performs no model extraction at all and
+    // produces a byte-identical ranked report.
+    let dir = std::env::temp_dir().join(format!("mt_smoke_ircache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let grid = grid_2x2();
+    let cfg = cfg(4);
+    let cold = run_sweep_cached(&grid, &cfg, Some(&dir)).unwrap();
+    assert_eq!(cold.translations, 2);
+    assert_eq!(cold.cache_loads, 0);
+    let warm = run_sweep_cached(&grid, &cfg, Some(&dir)).unwrap();
+    assert_eq!(warm.translations, 0, "warm run must not extract anything");
+    assert_eq!(warm.cache_loads, 2);
+    let ranked = |r: &SweepReport| r.to_json().get("ranked").unwrap().to_json_pretty();
+    assert_eq!(ranked(&warm), ranked(&cold), "cache-loaded IRs changed the ranking");
+    // And both agree with the cache-less in-memory run.
+    let plain = run_sweep(&grid, &cfg).unwrap();
+    assert_eq!(ranked(&plain), ranked(&cold));
+    assert_eq!(plain.render_text(), warm.render_text());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
