@@ -6,9 +6,11 @@ CARGO ?= cargo
 
 BENCHES := collectives table_layer_extraction sim_end_to_end fig6_translation_time sweep_throughput
 
-.PHONY: ci build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism clean
+.PHONY: ci build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism \
+	fleet-smoke perf-gate-test clean
 
-ci: build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism
+ci: build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism \
+	fleet-smoke perf-gate-test
 	@echo "CI matrix green"
 
 build:
@@ -46,7 +48,9 @@ hot-path-alloc-guard:
 	exit $$fail
 
 # Writes BENCH_<name>.json per bench into bench-out/ (perf trajectory).
-bench-smoke:
+# Depends on build: the sweep_throughput fleet series re-invokes the CLI
+# binary.
+bench-smoke: build
 	mkdir -p bench-out
 	for b in $(BENCHES); do \
 		MODTRANS_BENCH_SAMPLES=2 MODTRANS_BENCH_OUT=bench-out $(CARGO) bench --bench $$b || exit 1; \
@@ -70,7 +74,30 @@ sweep-determinism: build
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
 	rm -rf ircache
 
+# The fleet acceptance check, mirroring CI's fleet-smoke job: a cold
+# 4-process fleet (shared cache pre-warmed by one in-process translation
+# pass) and a warm re-run must both rank byte-identically to the
+# monolithic sweep, with every shard reporting 0 translations.
+fleet-smoke: build
+	rm -rf fleet-cache fleet-work fleet-work-warm
+	./target/release/modtrans sweep --threads 2 -o fleet_mono.json
+	./target/release/modtrans sweep fleet --procs 4 --threads 2 \
+		--cache-dir fleet-cache --work-dir fleet-work \
+		--status-out fleet_status.json --json-out fleet_merged.json
+	python3 scripts/check_fleet.py fleet_mono.json fleet_merged.json fleet_status.json
+	./target/release/modtrans sweep fleet --procs 4 --threads 2 \
+		--cache-dir fleet-cache --work-dir fleet-work-warm \
+		--status-out warm_status.json --json-out warm_merged.json
+	python3 scripts/check_fleet.py fleet_mono.json warm_merged.json warm_status.json --warm
+	rm -rf fleet-cache fleet-work fleet-work-warm
+	rm -f fleet_mono.json fleet_merged.json fleet_status.json warm_merged.json warm_status.json
+
+# Unit tests for the perf-trajectory gate (scripts/perf_diff.py --gate).
+perf-gate-test:
+	python3 scripts/test_perf_diff.py
+
 clean:
 	$(CARGO) clean
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
-	rm -rf bench-out ircache
+	rm -f fleet_mono.json fleet_merged.json fleet_status.json warm_merged.json warm_status.json
+	rm -rf bench-out ircache fleet-cache fleet-work fleet-work-warm

@@ -9,7 +9,10 @@
 //! Emits `BENCH_sweep_throughput.json` for the CI-tracked perf
 //! trajectory.
 
-use modtrans::sweep::{run_sweep, run_sweep_cached, CollectiveAlgo, SweepConfig, SweepGrid};
+use modtrans::sweep::fleet::locate_binary;
+use modtrans::sweep::{
+    run_fleet, run_sweep, run_sweep_cached, CollectiveAlgo, FleetOpts, SweepConfig, SweepGrid,
+};
 use modtrans::util::bench::{black_box, Bench, BenchReport};
 
 fn main() {
@@ -74,6 +77,43 @@ fn main() {
     });
     println!("  -> {:.1} scenarios/s warm (0 extractions)", scenarios as f64 / s.mean);
     let _ = std::fs::remove_dir_all(&dir);
+
+    // Fleet-vs-single-process series: the same grid through the
+    // process-level orchestrator (2 shard processes sharing one warm
+    // IR cache) — the single-process baselines above are the other half
+    // of the pair. The delta is pure orchestration overhead: process
+    // spawn, the pre-warm cache probe, report files, merge. Needs the
+    // CLI binary (`cargo build --release` first); skipped with a note
+    // otherwise, which the perf diff tolerates as a missing series.
+    match locate_binary() {
+        Some(binary) => {
+            let dir =
+                std::env::temp_dir().join(format!("mt_bench_fleetcache_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let cfg = SweepConfig { threads: 1, ..Default::default() };
+            let opts = FleetOpts {
+                procs: 2,
+                binary: Some(binary),
+                cache_dir: Some(dir.clone()),
+                ..Default::default()
+            };
+            // Prime the shared cache so every sample measures the warm
+            // steady state (matching the warm single-process series).
+            run_fleet(&grid, &cfg, &opts).unwrap();
+            let s = report.run(&bench, &format!("sweep_{scenarios}_scenarios_fleet_2procs"), |_| {
+                black_box(run_fleet(&grid, &cfg, &opts).unwrap());
+            });
+            println!(
+                "  -> {:.1} scenarios/s through the 2-process fleet (spawn + merge included)",
+                scenarios as f64 / s.mean
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        None => println!(
+            "  (fleet series skipped: modtrans binary not found — `cargo build --release` \
+             first, or set MODTRANS_BIN)"
+        ),
+    }
 
     let path = report.write().unwrap();
     println!("wrote {}", path.display());

@@ -13,6 +13,9 @@
 //! modtrans sweep [model[,model...]] [--parallelisms L] [--topologies L]
 //!           [--collectives L] [--npus N] [--batch B] [--threads T]
 //!           [--cache-dir DIR]
+//! modtrans sweep fleet [model[,model...]] [--procs N] [--retries R]
+//!           [--cache-dir DIR] [--cache-from DIR] [--status-out FILE]
+//!           (+ every sweep option; shard assignment is fleet-owned)
 //! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (pjrt feature)
 //! ```
 
@@ -32,7 +35,7 @@ use crate::util::table::Table;
 use crate::util::{human_bytes, human_time};
 use crate::workload::{Parallelism, Workload};
 use crate::zoo::{self, WeightFill, ZooOpts};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Tiny argument cursor: positionals + `--key value` options + flags.
 pub struct Args {
@@ -109,6 +112,11 @@ pub fn run(argv: &[String]) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    // `sweep fleet` is a two-token subcommand: the orchestrator that
+    // launches N `sweep --shard k/N` processes and merges them.
+    if cmd == "sweep" && argv.get(1).map(String::as_str) == Some("fleet") {
+        return cmd_sweep_fleet(&Args::parse(&argv[2..])?);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd {
         "zoo" => cmd_zoo(&args),
@@ -148,7 +156,12 @@ USAGE:
             [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
             [--npus N] [--batch B] [--mp-group G] [--iterations I] [--shard K/N]
             [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible]
-            [--cache-dir DIR] [-o results.json]
+            [--cache-dir DIR] [-o|--json-out results.json]
+  modtrans sweep fleet [model[,model...]] [--procs N] [--retries R] [--work-dir DIR]
+            [--cache-dir DIR] [--cache-from SYNC_DIR] [--status-out status.json]
+            (+ every sweep option above except --shard; launches N shard processes
+             warmed from one shared IR cache and merges their reports —
+             the merged ranking is byte-identical to the monolithic sweep)
   modtrans sweep-merge <shard.json> [shard.json ...] [-o merged.json]
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
@@ -494,10 +507,10 @@ fn parse_list<T>(spec: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>
         .collect()
 }
 
-/// Grid sweep: (model × parallelism × topology × collective) scenarios,
-/// translated once per model into a shared cache and simulated across a
-/// worker pool. See [`crate::sweep`].
-fn cmd_sweep(args: &Args) -> Result<()> {
+/// Parse the sweep grid axes (shared by `sweep` and `sweep fleet`):
+/// model list positionally or via `--models`, plus the three token
+/// lists.
+fn parse_sweep_grid(args: &Args) -> Result<SweepGrid> {
     let positional = args.positional.first().map(String::as_str);
     let flagged = args.opt("models");
     if positional.is_some() && flagged.is_some() {
@@ -515,7 +528,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         Ok(s.trim_start_matches("zoo:").to_string())
     })?;
-    let grid = SweepGrid {
+    Ok(SweepGrid {
         models,
         parallelisms: parse_list(
             args.opt("parallelisms").unwrap_or("data,model,hybrid-dm"),
@@ -529,8 +542,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             args.opt("collectives").unwrap_or("pipelined"),
             CollectiveAlgo::from_token,
         )?,
-    };
-    let cfg = SweepConfig {
+    })
+}
+
+/// Parse the fixed sweep parameters (shared by `sweep` and
+/// `sweep fleet`).
+fn parse_sweep_config(args: &Args) -> Result<SweepConfig> {
+    Ok(SweepConfig {
         npus: args.opt_parse("npus", 16usize)?,
         mp_group: args.opt_parse("mp-group", 4usize)?,
         batch: args.opt_parse("batch", 32i64)?,
@@ -542,7 +560,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         zero: parse_zero(args)?,
         skip_infeasible: args.flag("skip-infeasible"),
         shard: parse_shard(args)?,
-    };
+    })
+}
+
+/// The report destination: `--json-out` (the spelling the fleet
+/// orchestrator uses when re-invoking this binary) or the generic
+/// `-o`/`--out`.
+fn json_out(args: &Args) -> Option<&str> {
+    args.opt("json-out").or_else(|| args.opt("out"))
+}
+
+/// Grid sweep: (model × parallelism × topology × collective) scenarios,
+/// translated once per model into a shared cache and simulated across a
+/// worker pool. See [`crate::sweep`].
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let grid = parse_sweep_grid(args)?;
+    let cfg = parse_sweep_config(args)?;
+    // Test-only crash injection for the fleet's failure-path tests
+    // (no-op unless the orchestrator exported the failpoint variable).
+    sweep::fleet::shard_failpoint(cfg.shard);
     let cache_dir = args.opt("cache-dir").map(Path::new);
     let report = sweep::run_sweep_cached(&grid, &cfg, cache_dir)?;
     let shard_note = match cfg.shard {
@@ -559,9 +595,87 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         report.cache_loads,
     );
     print!("{}", report.render_text());
-    if let Some(path) = args.opt("out") {
+    if let Some(path) = json_out(args) {
         std::fs::write(path, report.to_json().to_json_pretty())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Fleet orchestration: expand the grid once, pre-warm a shared IR
+/// cache with a single cold translation pass, launch `--procs` shard
+/// processes of this binary, relaunch crashes up to `--retries` times,
+/// and merge the shard reports in-process. The merged ranking is
+/// byte-identical to a monolithic `sweep` of the same grid. See
+/// [`crate::sweep::fleet`].
+fn cmd_sweep_fleet(args: &Args) -> Result<()> {
+    let grid = parse_sweep_grid(args)?;
+    let cfg = parse_sweep_config(args)?;
+    if cfg.shard.is_some() {
+        return Err(Error::Usage(
+            "sweep fleet assigns shards itself — drop --shard (use --procs N)".into(),
+        ));
+    }
+    let opts = sweep::FleetOpts {
+        procs: args.opt_parse("procs", 2usize)?,
+        retries: args.opt_parse("retries", 1usize)?,
+        binary: None, // re-invoke this very binary
+        cache_dir: args.opt("cache-dir").map(PathBuf::from),
+        cache_from: args.opt("cache-from").map(PathBuf::from),
+        work_dir: args.opt("work-dir").map(PathBuf::from),
+        // Written by run_fleet on success AND on shard failure — the
+        // failure evidence is the point of the status document.
+        status_out: args.opt("status-out").map(PathBuf::from),
+        failpoint: None,
+    };
+    let fleet = sweep::run_fleet(&grid, &cfg, &opts)?;
+    println!(
+        "fleet: {} shard process(es) over {} scenarios — pre-warm ran {} translation(s) \
+         + {} cache load(s); the shards ran {} translation(s)",
+        fleet.shards.len(),
+        fleet.merged.ranked.len(),
+        fleet.prewarm_translations,
+        fleet.prewarm_cache_loads,
+        fleet.shard_translations(),
+    );
+    if opts.cache_from.is_some() {
+        println!(
+            "cache sync: {} entr(ies) copied in, {} published back",
+            fleet.cache_copied_in, fleet.cache_copied_out,
+        );
+    }
+    let mut t = Table::new(vec![
+        "Shard",
+        "Attempts",
+        "Exit",
+        "Scenarios",
+        "Translations",
+        "Cache loads",
+        "Pruned",
+    ]);
+    for s in &fleet.shards {
+        t.row(vec![
+            format!("{}/{}", s.shard.0, s.shard.1),
+            s.attempts.to_string(),
+            s.exit_code.map_or_else(|| "signal".to_string(), |c| c.to_string()),
+            s.scenarios.to_string(),
+            s.translations.to_string(),
+            s.cache_loads.to_string(),
+            s.pruned.to_string(),
+        ]);
+    }
+    print!("{t}");
+    print!("{}", fleet.merged.render_text());
+    if let Some(path) = json_out(args) {
+        std::fs::write(path, fleet.merged.to_json().to_json_pretty())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.opt("status-out") {
+        // run_fleet writes it best-effort (on failure too); don't claim
+        // success for a write that only produced a stderr warning.
+        if Path::new(path).exists() {
+            println!("wrote {path}");
+        }
     }
     Ok(())
 }
@@ -588,8 +702,22 @@ fn cmd_sweep_merge(args: &Args) -> Result<()> {
     }
     let mut shards = Vec::with_capacity(args.positional.len());
     for path in &args.positional {
-        let text = std::fs::read_to_string(path)?;
-        shards.push(SweepReport::from_json(&crate::json::parse(&text)?)?);
+        // Name the file in every failure: a crashed shard process leaves
+        // no (or a truncated) report, and "which shard died" must be
+        // readable straight off the merge error.
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!(
+                "cannot read shard report '{path}': {e} — a crashed shard leaves no \
+                 report file; re-run that shard, or use `sweep fleet`, which retries \
+                 crashes and records each shard's exit code and stderr"
+            ))
+        })?;
+        let doc = crate::json::parse(&text).map_err(|e| {
+            Error::Config(format!("shard report '{path}' is not valid JSON: {e}"))
+        })?;
+        shards.push(SweepReport::from_json(&doc).map_err(|e| {
+            Error::Config(format!("shard report '{path}' is not a sweep report: {e}"))
+        })?);
     }
     let merged = SweepReport::merge(&shards)?;
     println!(
@@ -603,7 +731,7 @@ fn cmd_sweep_merge(args: &Args) -> Result<()> {
         merged.pruned,
     );
     print!("{}", merged.render_text());
-    if let Some(path) = args.opt("out") {
+    if let Some(path) = json_out(args) {
         std::fs::write(path, merged.to_json().to_json_pretty())?;
         println!("wrote {path}");
     }
@@ -952,6 +1080,46 @@ mod tests {
         // Conflicting model specs and ONNX paths get clear usage errors.
         assert!(run_args(&["sweep", "mlp", "--models", "resnet18"]).is_err());
         assert!(run_args(&["sweep", "model.onnx"]).is_err());
+    }
+
+    #[test]
+    fn sweep_accepts_json_out_as_an_output_alias() {
+        let dir = std::env::temp_dir().join(format!("modtrans_jsonout_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("r.json");
+        let argv: Vec<String> =
+            ["sweep", "mlp", "--npus", "8", "--batch", "4", "--json-out", out.to_str().unwrap()]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run(&argv).unwrap();
+        let v = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert!(v.get("ranked").unwrap().as_arr().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_fleet_rejects_explicit_shards_and_zero_procs() {
+        // Config errors must surface before any process spawns.
+        let run_args = |v: &[&str]| {
+            let argv: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+            run(&argv)
+        };
+        let err = run_args(&["sweep", "fleet", "mlp", "--shard", "1/2"]).unwrap_err();
+        assert!(err.to_string().contains("assigns shards itself"), "{err}");
+        let err = run_args(&["sweep", "fleet", "mlp", "--procs", "0"]).unwrap_err();
+        assert!(err.to_string().contains("at least one shard process"), "{err}");
+        // Unknown models fail during the in-process pre-warm pass.
+        assert!(run_args(&["sweep", "fleet", "zoo:nope", "--procs", "2"]).is_err());
+    }
+
+    #[test]
+    fn sweep_merge_names_the_unreadable_shard_file() {
+        let argv: Vec<String> =
+            vec!["sweep-merge".into(), "/no/such/shard-3.json".into()];
+        let err = run(&argv).unwrap_err().to_string();
+        assert!(err.contains("/no/such/shard-3.json"), "path missing from: {err}");
+        assert!(err.contains("crashed shard"), "no diagnosis hint in: {err}");
     }
 
     #[cfg(not(feature = "pjrt"))]

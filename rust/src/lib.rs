@@ -55,6 +55,33 @@
 //!    byte-identically (CI asserts both). Corrupt or stale-fingerprint
 //!    entries are invalidated and rewritten, never trusted.
 //!
+//! ## The orchestration layer: one command, N shard processes
+//!
+//! On top of the in-process worker pool sits a process-level fleet
+//! ([`sweep::fleet`], CLI `sweep fleet --procs N`):
+//!
+//! ```text
+//!                       sweep fleet --procs N
+//!                               │
+//!        ┌─ cache copy-in (--cache-from: rsync'd / object-store dir)
+//!        ├─ pre-warm: ONE cold translation pass → shared --cache-dir
+//!        ├─ spawn: modtrans sweep --shard 1/N ┐
+//!        │         modtrans sweep --shard 2/N ├─ each loads IRs from the
+//!        │         …                          │  shared cache: shards
+//!        │         modtrans sweep --shard N/N ┘  report translations == 0
+//!        ├─ monitor: crashed shard → relaunch (≤ --retries), else hard
+//!        │           error naming the shard + exit code + stderr tail
+//!        ├─ merge: SweepReport::merge (completeness / grid-identity /
+//!        │         overlap guards) → ranking byte-identical to the
+//!        │         monolithic sweep (CI: fleet-smoke)
+//!        └─ cache copy-out (publish new entries back to --cache-from)
+//! ```
+//!
+//! The per-shard outcome ([`sweep::ShardStatus`]: attempts, exit code,
+//! stderr tail, translation/cache counters) is printed as a table and
+//! written machine-readably via `--status-out`, so a dead shard is
+//! diagnosable evidence, never just a missing report file.
+//!
 //! ## Module map
 //!
 //! * [`proto`] — protobuf wire-format codec (ONNX's serialization).
@@ -79,7 +106,10 @@
 //!   `--cache-dir` disk tier), fans simulations out across a
 //!   `std::thread` worker pool (optionally sharded `--shard K/N` across
 //!   machines, merged back with `sweep-merge`), and emits a
-//!   deterministic ranked report.
+//!   deterministic ranked report. [`sweep::fleet`] is the orchestration
+//!   layer above it: `sweep fleet --procs N` launches N shard processes
+//!   warmed from one shared cache, retries crashes, and merges
+//!   in-process (see the architecture section above).
 //! * `runtime` / [`calibrate`] — PJRT execution of AOT-compiled
 //!   JAX/Pallas GEMM artifacts for measured per-layer compute times
 //!   (behind the `pjrt` feature; see below).
@@ -120,14 +150,20 @@
 //! warnings denied (gating), the hot-path allocation guard (sim builders
 //! + IR derivation hot path), a bench smoke pass
 //! (`MODTRANS_BENCH_SAMPLES=2` caps every bench target to seconds) that
-//! uploads `BENCH_*.json` artifacts, an advisory perf-trajectory job
-//! that diffs those artifacts against the base branch's
-//! (`scripts/perf_diff.py`), a 1-thread-vs-8-thread `sweep` determinism
-//! diff (plain, `--skip-infeasible`, sharded + `sweep-merge`, and a
+//! uploads `BENCH_*.json` artifacts, a **gating** perf-trajectory job
+//! that diffs those artifacts against the base branch's and fails on a
+//! >25% mean regression measured on ≥30-sample runs
+//! (`scripts/perf_diff.py --gate --threshold 25`; 2-sample smoke
+//! artifacts can never trip it, and missing/drifted series are skipped,
+//! never crashed on — unit-tested in `scripts/test_perf_diff.py`), a
+//! 1-thread-vs-8-thread `sweep` determinism diff (plain,
+//! `--skip-infeasible`, sharded + `sweep-merge`, and a
 //! warm-`--cache-dir` rerun that must report 0 translations with a
-//! byte-identical ranking), and a check that every PR touches
-//! `CHANGES.md`. Reproduce the full matrix locally with `make ci`
-//! before pushing.
+//! byte-identical ranking), a `fleet-smoke` job (`sweep fleet --procs 4`
+//! cold and warm must rank byte-for-byte like the monolithic sweep with
+//! every shard reporting 0 translations), and a check that every PR
+//! touches `CHANGES.md`. Reproduce the full matrix locally with
+//! `make ci` before pushing.
 //!
 //! # Performance
 //!

@@ -45,6 +45,10 @@ use std::path::Path;
 /// Envelope schema for on-disk cache entries.
 pub const IR_CACHE_SCHEMA: &str = "modtrans-ir-cache/v1";
 
+/// File-name suffix shared by every disk-tier entry — what
+/// [`copy_entries`] recognizes when syncing cache directories.
+pub const IR_CACHE_SUFFIX: &str = ".ir.json";
+
 /// The cache identity of one compute-annotated IR. Two IRs are
 /// interchangeable iff all three components match: the model, the batch
 /// the activations were sized at, and the compute model's
@@ -86,7 +90,7 @@ impl CacheKey {
             .chars()
             .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
             .collect();
-        format!("{safe}-b{}-{:016x}.ir.json", self.batch, self.digest())
+        format!("{safe}-b{}-{:016x}{IR_CACHE_SUFFIX}", self.batch, self.digest())
     }
 }
 
@@ -232,6 +236,53 @@ impl WorkloadCache {
     pub fn is_empty(&self) -> bool {
         self.irs.is_empty()
     }
+}
+
+/// Copy the IR-cache entries (`*.ir.json`) from `src` that `dst` lacks
+/// or holds with different bytes — the fleet's cross-machine
+/// cache-sharing stage (`sweep fleet --cache-from DIR`): copy-in warms
+/// a fresh machine's cache from an rsync'd or object-store-synced
+/// directory, copy-out publishes what the sync directory is missing
+/// back. Entry contents are deterministic per key and names embed the
+/// full key digest, so a byte-identical same-name destination file is
+/// skipped (rewriting it would only churn mtimes and make the next
+/// rsync re-upload an unchanged cache) — while a same-name file with
+/// *different* bytes is overwritten: that is how a corrupt or truncated
+/// entry in the synced directory gets repaired once any machine
+/// re-translates it, instead of silently taxing every fresh machine
+/// forever. A missing `src` counts as empty. Copies go through a temp
+/// file + rename so concurrent shard processes never observe a torn
+/// entry. Returns the number of entries actually copied.
+pub fn copy_entries(src: &Path, dst: &Path) -> Result<usize> {
+    if !src.is_dir() {
+        return Ok(0);
+    }
+    std::fs::create_dir_all(dst)?;
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(src)? {
+        let entry = entry?;
+        let Ok(name) = entry.file_name().into_string() else { continue };
+        if !name.ends_with(IR_CACHE_SUFFIX) || !entry.path().is_file() {
+            continue;
+        }
+        // Skip only byte-identical entries; differing bytes mean the
+        // destination copy is corrupt/stale and must be repaired.
+        let identical = match std::fs::read(dst.join(&name)) {
+            Ok(have) => std::fs::read(entry.path()).map_or(false, |want| want == have),
+            Err(_) => false,
+        };
+        if !identical {
+            names.push(name);
+        }
+    }
+    // Deterministic copy order (read_dir order is platform-dependent).
+    names.sort();
+    for name in &names {
+        let tmp = dst.join(format!("{name}.tmp.{}", std::process::id()));
+        std::fs::copy(src.join(name), &tmp)?;
+        std::fs::rename(&tmp, dst.join(name))?;
+    }
+    Ok(names.len())
 }
 
 /// Try to load and validate one disk entry. Any failure — missing file,
@@ -403,6 +454,46 @@ mod tests {
         let stale = WorkloadCache::build_with(&models, 4, &compute, Some(&dir)).unwrap();
         assert_eq!(stale.translations(), 1, "stale fingerprint must be invalidated");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn copy_entries_syncs_only_cache_files_and_warms_the_destination() {
+        let src = temp_dir("sync_src");
+        let dst = temp_dir("sync_dst");
+        let models = vec!["mlp".to_string(), "alexnet".to_string()];
+        let compute = SystolicCompute::new(4);
+        let cold = WorkloadCache::build_with(&models, 4, &compute, Some(&src)).unwrap();
+        assert_eq!(cold.translations(), 2);
+        // Non-entry files in the source are never propagated.
+        std::fs::write(src.join("README.txt"), "not a cache entry").unwrap();
+        std::fs::write(src.join("stale.ir.json.tmp.123"), "torn write leftover").unwrap();
+        let copied = copy_entries(&src, &dst).unwrap();
+        assert_eq!(copied, 2);
+        let names: Vec<String> = std::fs::read_dir(&dst)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(names.len(), 2, "only the two entries may arrive: {names:?}");
+        assert!(names.iter().all(|n| n.ends_with(IR_CACHE_SUFFIX)));
+        // The destination now serves a fully warm build.
+        let warm = WorkloadCache::build_with(&models, 4, &compute, Some(&dst)).unwrap();
+        assert_eq!(warm.translations(), 0);
+        assert_eq!(warm.disk_loads(), 2);
+        // A second sync is a no-op: byte-identical entries are skipped,
+        // so a synced directory is never churned with rewrites.
+        assert_eq!(copy_entries(&src, &dst).unwrap(), 0);
+        // But a corrupt destination entry (truncated sync, torn upload)
+        // is repaired, not skipped — the self-healing half of the skip
+        // rule.
+        let victim = dst.join(names.iter().min().unwrap());
+        std::fs::write(&victim, "{ truncated garbage").unwrap();
+        assert_eq!(copy_entries(&src, &dst).unwrap(), 1, "differing bytes must be re-copied");
+        let healed = WorkloadCache::build_with(&models, 4, &compute, Some(&dst)).unwrap();
+        assert_eq!(healed.translations(), 0, "repaired entry must load again");
+        // A missing source directory counts as empty, not an error.
+        assert_eq!(copy_entries(Path::new("/no/such/cache-dir"), &dst).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&dst);
     }
 
     #[test]

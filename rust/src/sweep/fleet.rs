@@ -1,0 +1,777 @@
+//! Shard-fleet orchestration: one call launches N sweep shard
+//! *processes*, warms them from a shared IR cache, and merges their
+//! reports back into the monolithic ranking.
+//!
+//! `sweep --shard K/N` + `sweep-merge` (PR 3) turned a multi-node sweep
+//! into a scheduler problem; this module is the scheduler. ASTRA-sim
+//! 2.0-style design-space exploration is thousands of
+//! (parallelism × topology × collective) points — the fleet drives our
+//! own design space the same way: **one command, N workers, one cold
+//! translation, one merged ranking.**
+//!
+//! [`run_fleet`] stages:
+//!
+//! 1. **Expand once.** The grid is expanded and validated up front, so a
+//!    bad grid fails before any process spawns.
+//! 2. **Cache sync (copy-in).** With [`FleetOpts::cache_from`], valid IR
+//!    entries are copied from an externally synced directory (rsync, an
+//!    object-store mirror) into the fleet's shared cache — cross-machine
+//!    cache sharing: a fleet on a fresh machine warms from another
+//!    machine's cold run.
+//! 3. **Pre-warm.** One in-process cold translation pass
+//!    ([`super::build_sweep_cache`] — the exact compute model and typed
+//!    keys `run_sweep_cached` uses) spills every model's IR into the
+//!    shared `--cache-dir`, so each shard process loads instead of
+//!    extracting and reports **`translations == 0`**.
+//! 4. **Spawn + monitor.** N child processes re-invoke the `modtrans`
+//!    binary (`sweep <models> --shard k/N --cache-dir <shared>
+//!    --json-out <work>/shard-k.json`), stdout/stderr captured per
+//!    shard. A crashed shard is relaunched up to [`FleetOpts::retries`]
+//!    times; when retries are exhausted the fleet kills the survivors
+//!    and fails hard, naming the shard and quoting its exit code and
+//!    stderr tail (a dead shard is never just a missing file).
+//! 5. **Merge in-process.** The shard reports go through
+//!    [`SweepReport::merge`], which re-checks completeness, grid
+//!    identity and overlap — so the fleet inherits every guard the
+//!    `sweep-merge` subcommand enforces — and the merged ranking is
+//!    byte-identical to a monolithic `sweep` run of the same grid
+//!    (asserted in `tests/fleet_smoke.rs` and CI's `fleet-smoke` job).
+//! 6. **Cache sync (copy-out).** With `cache_from`, entries the synced
+//!    directory lacks (i.e. whatever this fleet translated fresh) are
+//!    published back, so the next machine's fleet starts warm; entries
+//!    it already holds are left untouched — no mtime churn for rsync to
+//!    re-upload.
+
+use super::cache;
+use super::report::{ShardStatus, SweepReport};
+use super::{SweepConfig, SweepGrid};
+use crate::error::{Error, Result};
+use crate::json::{obj, Value};
+use crate::translator::ZeroStage;
+use crate::workload::Parallelism;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How much of a failed shard's stderr is quoted in errors and status
+/// records.
+const STDERR_TAIL_BYTES: usize = 2048;
+
+/// Exit code of the test-only [`shard_failpoint`] crash hook.
+pub const FAILPOINT_EXIT_CODE: i32 = 42;
+
+/// Monotonic suffix for auto-created work directories, so several fleets
+/// in one process (tests, benches) never share scratch space.
+static FLEET_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Orchestration knobs (the sweep itself is shaped by [`SweepGrid`] +
+/// [`SweepConfig`]; nothing here may affect results, only how the work
+/// is scheduled).
+#[derive(Debug, Clone)]
+pub struct FleetOpts {
+    /// Shard processes to launch — the `N` of every `--shard k/N`.
+    pub procs: usize,
+    /// How many times a crashed shard is relaunched before the fleet
+    /// fails hard (0 = no retries).
+    pub retries: usize,
+    /// The binary to re-invoke for each shard. `None` uses
+    /// `std::env::current_exe()` — correct for the CLI, where the fleet
+    /// *is* the `modtrans` binary. Test/bench/example callers must pass
+    /// the real CLI binary (their own executable is a test harness); see
+    /// [`locate_binary`].
+    pub binary: Option<PathBuf>,
+    /// Shared IR-cache directory every shard mounts via `--cache-dir`.
+    /// `None` uses `<work_dir>/ircache` — warm within this fleet run
+    /// only. Pass an explicit directory to stay warm across runs.
+    pub cache_dir: Option<PathBuf>,
+    /// Cross-machine cache sharing: copy valid entries *from* this
+    /// directory into the shared cache before the pre-warm, and publish
+    /// the cache back *to* it after the fleet completes. Point it at an
+    /// rsync'd or object-store-synced directory; a missing directory is
+    /// treated as empty on copy-in and created on copy-out.
+    pub cache_from: Option<PathBuf>,
+    /// Scratch directory for shard reports and captured stdout/stderr.
+    /// `None` creates a unique temp directory, removed again on success;
+    /// an explicit directory is left in place for inspection.
+    pub work_dir: Option<PathBuf>,
+    /// Write the machine-readable fleet status document here — on
+    /// success (the [`FleetReport::status_json`] form) **and** on a
+    /// shard-exhaustion failure, where it records every completed
+    /// shard plus the dead shard's attempts/exit code/stderr tail. The
+    /// failure case is the point: a dead shard must leave diagnosable
+    /// evidence for automation, not just prose in an error message.
+    /// Best-effort (an unwritable path warns on stderr, never masks the
+    /// sweep outcome).
+    pub status_out: Option<PathBuf>,
+    /// Test-only crash injection, exported to shard processes as
+    /// `MODTRANS_FLEET_FAILPOINT` (see [`shard_failpoint`]). Never set
+    /// by the CLI.
+    pub failpoint: Option<String>,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            procs: 2,
+            retries: 1,
+            binary: None,
+            cache_dir: None,
+            cache_from: None,
+            work_dir: None,
+            status_out: None,
+            failpoint: None,
+        }
+    }
+}
+
+/// Everything a fleet run produced: the merged ranking plus the
+/// orchestration evidence (per-shard status, pre-warm counters, cache
+/// sync counts).
+#[derive(Debug)]
+pub struct FleetReport {
+    /// The merged, re-ranked report — byte-identical in ranking to a
+    /// monolithic `sweep` of the same grid and config.
+    pub merged: SweepReport,
+    /// Per-shard outcome records, ordered by shard index.
+    pub shards: Vec<ShardStatus>,
+    /// Translations performed by the in-process pre-warm pass (equal to
+    /// the model count on a cold shared cache, 0 on a warm one).
+    pub prewarm_translations: usize,
+    /// Models the pre-warm pass loaded from the shared cache instead of
+    /// translating.
+    pub prewarm_cache_loads: usize,
+    /// Entries copied in from [`FleetOpts::cache_from`].
+    pub cache_copied_in: usize,
+    /// Entries published back to [`FleetOpts::cache_from`].
+    pub cache_copied_out: usize,
+}
+
+impl FleetReport {
+    /// Translations summed over the shard processes — 0 whenever the
+    /// pre-warm covered the grid (the fleet's acceptance counter).
+    pub fn shard_translations(&self) -> usize {
+        self.shards.iter().map(|s| s.translations).sum()
+    }
+
+    /// Machine-readable orchestration status (deterministic key order) —
+    /// written via [`FleetOpts::status_out`], consumed by CI's
+    /// `fleet-smoke` job.
+    pub fn status_json(&self) -> Value {
+        status_doc(
+            self.shards.len(),
+            self.prewarm_translations,
+            self.prewarm_cache_loads,
+            self.cache_copied_in,
+            self.cache_copied_out,
+            &self.shards,
+        )
+    }
+}
+
+/// The status document both outcomes share: [`FleetReport::status_json`]
+/// on success, the partial failure record written before a
+/// shard-exhaustion error returns.
+fn status_doc(
+    procs: usize,
+    prewarm_translations: usize,
+    prewarm_cache_loads: usize,
+    copied_in: usize,
+    copied_out: usize,
+    shards: &[ShardStatus],
+) -> Value {
+    obj(vec![
+        ("procs", Value::Num(procs as f64)),
+        (
+            "prewarm",
+            obj(vec![
+                ("translations", Value::Num(prewarm_translations as f64)),
+                ("cache_loads", Value::Num(prewarm_cache_loads as f64)),
+            ]),
+        ),
+        (
+            "cache_sync",
+            obj(vec![
+                ("copied_in", Value::Num(copied_in as f64)),
+                ("copied_out", Value::Num(copied_out as f64)),
+            ]),
+        ),
+        ("shards", Value::Arr(shards.iter().map(ShardStatus::to_json).collect())),
+    ])
+}
+
+/// Best-effort status-file write: diagnosis evidence must never mask or
+/// replace the fleet outcome itself.
+fn write_status(path: &Path, doc: &Value) {
+    if let Err(e) = std::fs::write(path, doc.to_json_pretty()) {
+        eprintln!("warning: could not write fleet status '{}': {e}", path.display());
+    }
+}
+
+/// One live shard process.
+struct ShardProc {
+    /// 1-based shard index (the `k` of `--shard k/N`).
+    k: usize,
+    /// Launches so far (1 = first attempt, no retry yet).
+    attempts: usize,
+    child: Child,
+}
+
+/// Orchestrate a whole sharded sweep: pre-warm the shared cache, launch
+/// [`FleetOpts::procs`] shard processes, relaunch crashes up to
+/// [`FleetOpts::retries`] times, and merge the shard reports in-process.
+/// See the module docs for the stage-by-stage contract.
+pub fn run_fleet(grid: &SweepGrid, cfg: &SweepConfig, opts: &FleetOpts) -> Result<FleetReport> {
+    if opts.procs == 0 {
+        return Err(Error::Config("fleet needs at least one shard process (procs >= 1)".into()));
+    }
+    if cfg.shard.is_some() {
+        return Err(Error::Config(
+            "the fleet assigns shards itself — drop the shard setting from the sweep config".into(),
+        ));
+    }
+    if cfg.hbm_bytes % (1 << 30) != 0 {
+        return Err(Error::Config(
+            "fleet shards receive --hbm-gib, so hbm_bytes must be a whole number of GiB".into(),
+        ));
+    }
+    if grid.expand().is_empty() {
+        return Err(Error::Config(
+            "sweep grid is empty — every axis needs at least one entry".into(),
+        ));
+    }
+    let binary = match &opts.binary {
+        Some(b) => b.clone(),
+        None => std::env::current_exe().map_err(|e| {
+            Error::Config(format!("cannot locate the modtrans binary to re-invoke: {e}"))
+        })?,
+    };
+    let (work_dir, ephemeral_work) = match &opts.work_dir {
+        Some(d) => (d.clone(), false),
+        None => {
+            let seq = FLEET_SEQ.fetch_add(1, Ordering::SeqCst);
+            let name = format!("modtrans-fleet-{}-{seq}", std::process::id());
+            (std::env::temp_dir().join(name), true)
+        }
+    };
+    std::fs::create_dir_all(&work_dir)?;
+    let result = fleet_body(grid, cfg, opts, &binary, &work_dir);
+    if ephemeral_work && result.is_ok() {
+        let _ = std::fs::remove_dir_all(&work_dir);
+    }
+    result
+}
+
+/// The fleet stages proper, once the scratch space exists (split out so
+/// [`run_fleet`] can tie the work directory's lifetime to the outcome).
+fn fleet_body(
+    grid: &SweepGrid,
+    cfg: &SweepConfig,
+    opts: &FleetOpts,
+    binary: &Path,
+    work_dir: &Path,
+) -> Result<FleetReport> {
+    let cache_dir = opts.cache_dir.clone().unwrap_or_else(|| work_dir.join("ircache"));
+    std::fs::create_dir_all(&cache_dir)?;
+
+    // Stage: cache copy-in (cross-machine sharing).
+    let cache_copied_in = match &opts.cache_from {
+        Some(from) => cache::copy_entries(from, &cache_dir)?,
+        None => 0,
+    };
+
+    // Stage: pre-warm — the fleet's single cold translation pass. Same
+    // compute model and typed keys as the shards' own cache builds, so
+    // every shard hits these entries and reports 0 translations.
+    let warm = super::build_sweep_cache(&grid.unique_models(), cfg, Some(&cache_dir))?;
+    let prewarm_translations = warm.translations();
+    let prewarm_cache_loads = warm.disk_loads();
+    drop(warm);
+
+    // Stage: spawn one process per shard.
+    let n = opts.procs;
+    let shard_out = |k: usize| work_dir.join(format!("shard-{k}.json"));
+    let mut running: Vec<ShardProc> = Vec::with_capacity(n);
+    for k in 1..=n {
+        match launch_shard(grid, cfg, opts, binary, work_dir, &cache_dir, k) {
+            Ok(child) => running.push(ShardProc { k, attempts: 1, child }),
+            Err(e) => {
+                kill_all(&mut running);
+                return Err(e);
+            }
+        }
+    }
+
+    // Stage: monitor with bounded retries.
+    let mut statuses: Vec<ShardStatus> = Vec::with_capacity(n);
+    let mut done: Vec<(usize, SweepReport)> = Vec::with_capacity(n);
+    while !running.is_empty() {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < running.len() {
+            let exited = match running[i].child.try_wait() {
+                Ok(status) => status,
+                Err(e) => {
+                    kill_all(&mut running);
+                    return Err(e.into());
+                }
+            };
+            let Some(st) = exited else {
+                i += 1;
+                continue;
+            };
+            progressed = true;
+            let proc = running.swap_remove(i);
+            let k = proc.k;
+            // A zero exit with a readable, correctly stamped report is
+            // the only success; everything else goes through the retry
+            // policy (excluded-runner style: relaunch, never trust).
+            let failure = if st.success() {
+                match read_shard_report(&shard_out(k), k, n) {
+                    Ok(report) => {
+                        statuses.push(ShardStatus {
+                            shard: (k, n),
+                            attempts: proc.attempts,
+                            exit_code: Some(0),
+                            stderr_tail: stderr_tail(&shard_err_path(work_dir, k)),
+                            scenarios: report.ranked.len(),
+                            translations: report.translations,
+                            cache_loads: report.cache_loads,
+                            pruned: report.pruned,
+                        });
+                        done.push((k, report));
+                        None
+                    }
+                    Err(e) => Some(format!("exited 0 but its report is unusable: {e}")),
+                }
+            } else {
+                Some(match st.code() {
+                    Some(c) => format!("exit code {c}"),
+                    None => "killed by a signal".to_string(),
+                })
+            };
+            if let Some(reason) = failure {
+                if proc.attempts > opts.retries {
+                    let mut tail = stderr_tail(&shard_err_path(work_dir, k));
+                    if tail.is_empty() {
+                        tail = "(no stderr output)".to_string();
+                    }
+                    kill_all(&mut running);
+                    // Leave machine-readable evidence behind: every
+                    // completed shard plus the dead one's full record —
+                    // the error text alone is not a diagnosable artifact.
+                    if let Some(path) = &opts.status_out {
+                        statuses.push(ShardStatus {
+                            shard: (k, n),
+                            attempts: proc.attempts,
+                            exit_code: st.code(),
+                            stderr_tail: tail.clone(),
+                            scenarios: 0,
+                            translations: 0,
+                            cache_loads: 0,
+                            pruned: 0,
+                        });
+                        statuses.sort_by_key(|s| s.shard.0);
+                        let doc = status_doc(
+                            n,
+                            prewarm_translations,
+                            prewarm_cache_loads,
+                            cache_copied_in,
+                            0,
+                            &statuses,
+                        );
+                        write_status(path, &doc);
+                    }
+                    return Err(Error::Sim(format!(
+                        "fleet shard {k}/{n} failed after {} attempt(s) ({reason}) — \
+                         stderr tail:\n{tail}",
+                        proc.attempts
+                    )));
+                }
+                match launch_shard(grid, cfg, opts, binary, work_dir, &cache_dir, k) {
+                    Ok(child) => {
+                        running.push(ShardProc { k, attempts: proc.attempts + 1, child });
+                    }
+                    Err(e) => {
+                        kill_all(&mut running);
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        if !running.is_empty() && !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+    }
+
+    // Stage: merge in-process — `SweepReport::merge` re-checks shard
+    // completeness, grid identity and overlap, so a lost or foreign
+    // shard can never masquerade as the full design space.
+    statuses.sort_by_key(|s| s.shard.0);
+    done.sort_by_key(|(k, _)| *k);
+    // Evidence first: should the merge below reject the shard set, the
+    // per-shard records are already on disk (the success path refreshes
+    // this file with the final copy-out count).
+    if let Some(path) = &opts.status_out {
+        let doc = status_doc(
+            n,
+            prewarm_translations,
+            prewarm_cache_loads,
+            cache_copied_in,
+            0,
+            &statuses,
+        );
+        write_status(path, &doc);
+    }
+    let reports: Vec<SweepReport> = done.into_iter().map(|(_, r)| r).collect();
+    let merged = SweepReport::merge(&reports)?;
+
+    // Stage: cache copy-out (publish freshly translated entries back to
+    // the synced directory).
+    let cache_copied_out = match &opts.cache_from {
+        Some(from) => cache::copy_entries(&cache_dir, from)?,
+        None => 0,
+    };
+
+    let report = FleetReport {
+        merged,
+        shards: statuses,
+        prewarm_translations,
+        prewarm_cache_loads,
+        cache_copied_in,
+        cache_copied_out,
+    };
+    if let Some(path) = &opts.status_out {
+        write_status(path, &report.status_json());
+    }
+    Ok(report)
+}
+
+/// Captured-stderr path for one shard (truncated on every relaunch, so
+/// it always holds the latest attempt's output).
+fn shard_err_path(work_dir: &Path, k: usize) -> PathBuf {
+    work_dir.join(format!("shard-{k}.stderr"))
+}
+
+/// Spawn one shard process with its report/stdout/stderr paths wired up.
+/// Any stale report file is removed first so a crash can never be
+/// mistaken for a completed shard.
+fn launch_shard(
+    grid: &SweepGrid,
+    cfg: &SweepConfig,
+    opts: &FleetOpts,
+    binary: &Path,
+    work_dir: &Path,
+    cache_dir: &Path,
+    k: usize,
+) -> Result<Child> {
+    let out = work_dir.join(format!("shard-{k}.json"));
+    let _ = std::fs::remove_file(&out);
+    let args = shard_args(grid, cfg, k, opts.procs, cache_dir, &out);
+    let mut cmd = Command::new(binary);
+    cmd.args(&args)
+        .stdin(Stdio::null())
+        .stdout(std::fs::File::create(work_dir.join(format!("shard-{k}.stdout")))?)
+        .stderr(std::fs::File::create(shard_err_path(work_dir, k))?);
+    match &opts.failpoint {
+        Some(fp) => {
+            cmd.env("MODTRANS_FLEET_FAILPOINT", fp);
+        }
+        // Scrub any ambient failpoint (e.g. still exported from a
+        // debugging shell): only an explicit FleetOpts request may
+        // crash shards — "never set in production" must hold even in a
+        // polluted environment.
+        None => {
+            cmd.env_remove("MODTRANS_FLEET_FAILPOINT");
+        }
+    }
+    cmd.spawn().map_err(|e| {
+        Error::Config(format!("failed to spawn shard process '{}': {e}", binary.display()))
+    })
+}
+
+/// The child argv for shard `k` of `n`: the full grid and config
+/// re-expressed in CLI tokens, plus the shard/cache/output wiring. Kept
+/// total — every `SweepGrid`/`SweepConfig` field is either forwarded or
+/// fleet-owned (`threads` is per shard; `shard` is assigned here).
+fn shard_args(
+    grid: &SweepGrid,
+    cfg: &SweepConfig,
+    k: usize,
+    n: usize,
+    cache_dir: &Path,
+    out: &Path,
+) -> Vec<String> {
+    let parallelisms: Vec<&str> =
+        grid.parallelisms.iter().map(|&p| cli_parallelism_token(p)).collect();
+    let topologies: Vec<&str> = grid.topologies.iter().map(|&t| t.token()).collect();
+    let collectives: Vec<&str> = grid.collectives.iter().map(|&c| c.token()).collect();
+    let mut v = vec![
+        "sweep".to_string(),
+        grid.models.join(","),
+        "--parallelisms".to_string(),
+        parallelisms.join(","),
+        "--topologies".to_string(),
+        topologies.join(","),
+        "--collectives".to_string(),
+        collectives.join(","),
+        "--npus".to_string(),
+        cfg.npus.to_string(),
+        "--mp-group".to_string(),
+        cfg.mp_group.to_string(),
+        "--batch".to_string(),
+        cfg.batch.to_string(),
+        "--iterations".to_string(),
+        cfg.iterations.to_string(),
+        "--threads".to_string(),
+        cfg.threads.to_string(),
+        "--bandwidth-gbps".to_string(),
+        cfg.bandwidth_gbps.to_string(),
+        "--latency-ns".to_string(),
+        cfg.latency_ns.to_string(),
+        "--hbm-gib".to_string(),
+        (cfg.hbm_bytes >> 30).to_string(),
+        "--zero".to_string(),
+        zero_token(cfg.zero).to_string(),
+        "--shard".to_string(),
+        format!("{k}/{n}"),
+        "--cache-dir".to_string(),
+        cache_dir.display().to_string(),
+        "--json-out".to_string(),
+        out.display().to_string(),
+    ];
+    if cfg.skip_infeasible {
+        v.push("--skip-infeasible".to_string());
+    }
+    v
+}
+
+/// The CLI spelling of a parallelism strategy (`--parallelisms` tokens
+/// are lowercase; [`Parallelism::token`] is the uppercase workload-file
+/// grammar).
+fn cli_parallelism_token(p: Parallelism) -> &'static str {
+    match p {
+        Parallelism::Data => "data",
+        Parallelism::Model => "model",
+        Parallelism::HybridDataModel => "hybrid-dm",
+        Parallelism::HybridModelData => "hybrid-md",
+        Parallelism::Pipeline => "pipeline",
+    }
+}
+
+/// The CLI `--zero` token for a ZeRO stage.
+fn zero_token(z: ZeroStage) -> &'static str {
+    match z {
+        ZeroStage::None => "0",
+        ZeroStage::OptimizerState => "1",
+        ZeroStage::Gradients => "2",
+        ZeroStage::Parameters => "3",
+    }
+}
+
+/// Load and validate one shard's report file: parseable JSON, a valid
+/// report, stamped with exactly the shard this fleet assigned.
+fn read_shard_report(path: &Path, k: usize, n: usize) -> Result<SweepReport> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::Config(format!("shard report '{}' unreadable: {e}", path.display()))
+    })?;
+    let report = SweepReport::from_json(&crate::json::parse(&text)?)?;
+    if report.shard != Some((k, n)) {
+        return Err(Error::Config(format!(
+            "shard report '{}' is stamped {:?}, expected shard {k}/{n}",
+            path.display(),
+            report.shard
+        )));
+    }
+    Ok(report)
+}
+
+/// Last [`STDERR_TAIL_BYTES`] of a captured-stderr file, lossily decoded
+/// and trimmed (empty string when the file is missing or empty).
+fn stderr_tail(path: &Path) -> String {
+    match std::fs::read(path) {
+        Ok(bytes) => {
+            let start = bytes.len().saturating_sub(STDERR_TAIL_BYTES);
+            String::from_utf8_lossy(&bytes[start..]).trim().to_string()
+        }
+        Err(_) => String::new(),
+    }
+}
+
+/// Kill and reap every still-running shard (the fleet is failing; no
+/// orphan may keep writing into the shared cache or work directory).
+fn kill_all(running: &mut Vec<ShardProc>) {
+    for p in running.iter_mut() {
+        let _ = p.child.kill();
+        let _ = p.child.wait();
+    }
+    running.clear();
+}
+
+/// Best-effort search for the `modtrans` CLI binary when the current
+/// executable is *not* it (benches, examples): `$MODTRANS_BIN` first,
+/// then `modtrans` next to the current executable, then one directory up
+/// (cargo puts benches in `deps/` and examples in `examples/`, one level
+/// below the binary). Integration tests should prefer
+/// `env!("CARGO_BIN_EXE_modtrans")`, which cargo guarantees.
+pub fn locate_binary() -> Option<PathBuf> {
+    let name = format!("modtrans{}", std::env::consts::EXE_SUFFIX);
+    if let Ok(p) = std::env::var("MODTRANS_BIN") {
+        let p = PathBuf::from(p);
+        if p.is_file() {
+            return Some(p);
+        }
+    }
+    let exe = std::env::current_exe().ok()?;
+    let dir = exe.parent()?;
+    let candidates = [dir.join(&name), dir.parent()?.join(&name)];
+    candidates.into_iter().find(|c| c.is_file())
+}
+
+/// Test-only crash injection for fleet failure-path tests, driven by the
+/// `MODTRANS_FLEET_FAILPOINT` environment variable (which the fleet sets
+/// on its children only when [`FleetOpts::failpoint`] is given — it is
+/// never set in production). Grammar:
+///
+/// * `"K"` — a process running shard `K` always aborts with
+///   [`FAILPOINT_EXIT_CODE`].
+/// * `"K:once=PATH"` — abort only if `PATH` does not exist yet, creating
+///   it first; the marker makes the shard fail exactly once, so the
+///   fleet's retry must succeed.
+///
+/// Called by the CLI `sweep` command after argument parsing (i.e. the
+/// process dies *mid-run*, after it has been assigned real work).
+pub fn shard_failpoint(shard: Option<(usize, usize)>) {
+    let Some((k, _)) = shard else { return };
+    let Ok(spec) = std::env::var("MODTRANS_FLEET_FAILPOINT") else { return };
+    let (target, marker) = match spec.split_once(':') {
+        Some((t, rest)) => (t, rest.strip_prefix("once=")),
+        None => (spec.as_str(), None),
+    };
+    if !matches!(target.parse::<usize>(), Ok(t) if t == k) {
+        return;
+    }
+    if let Some(path) = marker {
+        if Path::new(path).exists() {
+            return;
+        }
+        let _ = std::fs::write(path, "crashed");
+    }
+    eprintln!("failpoint: injected crash in shard {k} (MODTRANS_FLEET_FAILPOINT)");
+    std::process::exit(FAILPOINT_EXIT_CODE);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_procs_is_a_config_error() {
+        let opts = FleetOpts { procs: 0, ..Default::default() };
+        let err = run_fleet(&SweepGrid::default(), &SweepConfig::default(), &opts).unwrap_err();
+        assert!(err.to_string().contains("at least one shard process"));
+    }
+
+    #[test]
+    fn preset_shard_is_rejected() {
+        let cfg = SweepConfig { shard: Some((1, 2)), ..Default::default() };
+        let err = run_fleet(&SweepGrid::default(), &cfg, &FleetOpts::default()).unwrap_err();
+        assert!(err.to_string().contains("assigns shards itself"));
+    }
+
+    #[test]
+    fn fractional_gib_hbm_is_rejected() {
+        let cfg = SweepConfig { hbm_bytes: (1 << 30) + 1, ..Default::default() };
+        let err = run_fleet(&SweepGrid::default(), &cfg, &FleetOpts::default()).unwrap_err();
+        assert!(err.to_string().contains("whole number of GiB"));
+    }
+
+    #[test]
+    fn empty_grid_fails_before_any_spawn() {
+        let grid = SweepGrid { models: vec![], ..Default::default() };
+        let err = run_fleet(&grid, &SweepConfig::default(), &FleetOpts::default()).unwrap_err();
+        assert!(err.to_string().contains("grid is empty"));
+    }
+
+    #[test]
+    fn shard_args_round_trip_through_the_cli_grammar() {
+        // Every forwarded token must be accepted by the CLI parsers the
+        // child process will run them through.
+        let grid = SweepGrid {
+            models: vec!["mlp".into(), "resnet18".into()],
+            parallelisms: vec![
+                Parallelism::Data,
+                Parallelism::Model,
+                Parallelism::HybridDataModel,
+                Parallelism::HybridModelData,
+                Parallelism::Pipeline,
+            ],
+            topologies: vec![
+                crate::sim::TopologyKind::Ring,
+                crate::sim::TopologyKind::FullyConnected,
+                crate::sim::TopologyKind::Switch,
+                crate::sim::TopologyKind::Torus2D,
+            ],
+            collectives: vec![
+                super::super::CollectiveAlgo::Direct,
+                super::super::CollectiveAlgo::Pipelined,
+                super::super::CollectiveAlgo::PipelinedLifo,
+            ],
+        };
+        let cfg = SweepConfig {
+            zero: ZeroStage::Gradients,
+            skip_infeasible: true,
+            ..Default::default()
+        };
+        let args =
+            shard_args(&grid, &cfg, 2, 4, Path::new("/tmp/cache"), Path::new("/tmp/out.json"));
+        assert_eq!(args[0], "sweep");
+        assert_eq!(args[1], "mlp,resnet18");
+        let opt = |key: &str| {
+            let i = args.iter().position(|a| a == key).unwrap_or_else(|| panic!("{key} missing"));
+            args[i + 1].clone()
+        };
+        for p in opt("--parallelisms").split(',') {
+            assert!(
+                matches!(p, "data" | "model" | "hybrid-dm" | "hybrid-md" | "pipeline"),
+                "unforwardable parallelism token '{p}'"
+            );
+        }
+        for t in opt("--topologies").split(',') {
+            crate::sim::TopologyKind::from_token(t).unwrap();
+        }
+        for c in opt("--collectives").split(',') {
+            super::super::CollectiveAlgo::from_token(c).unwrap();
+        }
+        assert_eq!(opt("--shard"), "2/4");
+        assert_eq!(opt("--zero"), "2");
+        assert_eq!(opt("--hbm-gib"), "32");
+        assert_eq!(opt("--cache-dir"), "/tmp/cache");
+        assert_eq!(opt("--json-out"), "/tmp/out.json");
+        assert!(args.iter().any(|a| a == "--skip-infeasible"));
+    }
+
+    #[test]
+    fn failpoint_is_inert_without_the_env_var() {
+        // Never crashes here: the env var is unset (deliberately NOT
+        // set in-process — concurrent setenv/getenv across test threads
+        // is UB on glibc). The armed branches — crash, crash-once
+        // marker, and "spec names a different shard" — are exercised
+        // for real by tests/fleet_smoke.rs in child processes, where
+        // the variable is scoped to the spawned shard.
+        shard_failpoint(None);
+        shard_failpoint(Some((1, 4)));
+        shard_failpoint(Some((4, 4)));
+    }
+
+    #[test]
+    fn stderr_tail_handles_missing_and_long_files() {
+        assert_eq!(stderr_tail(Path::new("/no/such/stderr-file")), "");
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("mt_fleet_tail_{}", std::process::id()));
+        std::fs::write(&path, format!("{}END", "x".repeat(10_000))).unwrap();
+        let tail = stderr_tail(&path);
+        assert!(tail.len() <= STDERR_TAIL_BYTES);
+        assert!(tail.ends_with("END"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -28,6 +28,12 @@
 //!    first, key-ordered tiebreak) and emits text + JSON. Because every
 //!    scenario is simulated deterministically and ranking is a total
 //!    order, the report is **byte-identical regardless of thread count**.
+//! 5. [`fleet::run_fleet`] scales past one process: it pre-warms the
+//!    shared disk cache with a single cold translation pass, launches N
+//!    shard processes of the current binary (`--shard k/N` each),
+//!    relaunches crashes under a bounded-retry policy, and merges the
+//!    shard reports in-process — one command, N workers, one cold
+//!    translation, one merged ranking (the `sweep fleet` subcommand).
 //!
 //! ```no_run
 //! use modtrans::sweep::{run_sweep, SweepConfig, SweepGrid};
@@ -37,11 +43,13 @@
 //! ```
 
 pub mod cache;
+pub mod fleet;
 pub mod pool;
 pub mod report;
 
 pub use cache::{CacheKey, WorkloadCache};
-pub use report::{ScenarioResult, SweepReport};
+pub use fleet::{run_fleet, FleetOpts, FleetReport};
+pub use report::{ScenarioResult, ShardStatus, SweepReport};
 
 use crate::error::{Error, Result};
 use crate::ir::{emit, passes};
@@ -408,6 +416,23 @@ fn run_scenario(
     })
 }
 
+/// Build the sweep's shared per-model IR cache exactly as
+/// [`run_sweep_cached`] does — the same compute model
+/// ([`crate::compute::SystolicCompute`] at the sweep batch), hence the
+/// same typed [`CacheKey`]s. The fleet's pre-warm pass goes through this
+/// one function so the entries it spills are the entries every shard
+/// process will look up: a drifted compute model here would silently
+/// turn every shard cold again. Public for external warm-up tooling
+/// (e.g. priming a cache directory before rsyncing it to a fleet).
+pub fn build_sweep_cache(
+    models: &[String],
+    cfg: &SweepConfig,
+    cache_dir: Option<&std::path::Path>,
+) -> Result<WorkloadCache> {
+    let compute = crate::compute::SystolicCompute::new(cfg.batch);
+    WorkloadCache::build_with(models, cfg.batch, &compute, cache_dir)
+}
+
 /// Run the full sweep: expand, optionally keep only this worker's shard,
 /// translate-once-per-model into the shared IR cache, optionally prune
 /// infeasible scenarios, simulate across the worker pool (one reusable
@@ -460,8 +485,7 @@ pub fn run_sweep_cached(
             .map(|sc| sc.model.clone())
             .collect()
     };
-    let compute = crate::compute::SystolicCompute::new(cfg.batch);
-    let cache = WorkloadCache::build_with(&models, cfg.batch, &compute, cache_dir)?;
+    let cache = build_sweep_cache(&models, cfg, cache_dir)?;
     let mut pruned = 0usize;
     if cfg.skip_infeasible {
         // Fast path: the memory pass is a cheap analytic read of the

@@ -29,6 +29,52 @@ fn parse_shard_field(spec: &str) -> Result<(usize, usize)> {
     })
 }
 
+/// Outcome record for one shard *process* of a fleet run — the
+/// machine-readable evidence the orchestrator keeps per shard, so a
+/// failed shard surfaces its exit code and stderr tail instead of being
+/// visible only as a missing report file. Emitted (as JSON, via
+/// [`ShardStatus::to_json`]) in the `sweep fleet --status-out` document
+/// and consumed by CI's `fleet-smoke` job.
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    /// Which shard of the fleet this record covers (`(k, n)`, 1-based).
+    pub shard: (usize, usize),
+    /// Process launches this shard needed (1 = succeeded first try;
+    /// anything higher means the bounded-retry policy relaunched it).
+    pub attempts: usize,
+    /// Final attempt's exit code (`Some(0)` on success, `None` when the
+    /// process was killed by a signal).
+    pub exit_code: Option<i32>,
+    /// Tail of the final attempt's captured stderr (empty on a quiet
+    /// success).
+    pub stderr_tail: String,
+    /// Scenarios this shard ranked.
+    pub scenarios: usize,
+    /// Translations the shard performed — 0 whenever the fleet's
+    /// pre-warm pass covered its models (the fleet acceptance counter).
+    pub translations: usize,
+    /// Models the shard loaded from the shared disk cache.
+    pub cache_loads: usize,
+    /// Scenarios the shard pruned as infeasible.
+    pub pruned: usize,
+}
+
+impl ShardStatus {
+    /// Machine-readable form (deterministic key order).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("shard", Value::Str(format!("{}/{}", self.shard.0, self.shard.1))),
+            ("attempts", Value::Num(self.attempts as f64)),
+            ("exit_code", self.exit_code.map_or(Value::Null, |c| Value::Num(f64::from(c)))),
+            ("scenarios", Value::Num(self.scenarios as f64)),
+            ("translations", Value::Num(self.translations as f64)),
+            ("cache_loads", Value::Num(self.cache_loads as f64)),
+            ("pruned", Value::Num(self.pruned as f64)),
+            ("stderr_tail", Value::Str(self.stderr_tail.clone())),
+        ])
+    }
+}
+
 /// Simulation outcome for one scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
@@ -279,10 +325,26 @@ impl SweepReport {
             ks.sort_unstable();
             ks.dedup();
             if ks.len() != stamped.len() || ks.len() != n || ks[0] != 1 || ks[n - 1] != n {
-                return Err(Error::Config(format!(
-                    "incomplete shard set: need every shard 1..={n} exactly once, got {} input(s)",
-                    stamped.len()
-                )));
+                // Name exactly which shards are absent: a dead shard
+                // process leaves no report file, so "which one" is the
+                // question the operator has to answer next.
+                let have: BTreeSet<usize> = ks.iter().copied().collect();
+                let missing: Vec<String> =
+                    (1..=n).filter(|k| !have.contains(k)).map(|k| format!("{k}/{n}")).collect();
+                return Err(Error::Config(if missing.is_empty() {
+                    format!(
+                        "incomplete shard set: need every shard 1..={n} exactly once, \
+                         got {} input(s)",
+                        stamped.len()
+                    )
+                } else {
+                    format!(
+                        "incomplete shard set: missing shard(s) {} — a crashed shard leaves \
+                         no report file; check that shard's stderr/exit code (or use \
+                         `sweep fleet`, which retries and records both)",
+                        missing.join(", ")
+                    )
+                }));
             }
             // Every grid scenario must be accounted for — ranked or
             // pruned — across the complete shard set; a truncated shard
@@ -513,9 +575,11 @@ mod tests {
             shard: Some((k, n)),
             ranked,
         };
-        // A forgotten shard is rejected, not silently merged.
+        // A forgotten shard is rejected, not silently merged — and the
+        // error names exactly which shards have no report.
         let err = SweepReport::merge(&[stamped(1, 3, vec![full.ranked[0].clone()])]).unwrap_err();
         assert!(err.to_string().contains("incomplete shard set"));
+        assert!(err.to_string().contains("missing shard(s) 2/3, 3/3"), "unnamed gap: {err}");
         // Mixed shard widths are rejected even when keys are disjoint.
         let err = SweepReport::merge(&[
             stamped(1, 2, vec![full.ranked[0].clone()]),
@@ -580,6 +644,29 @@ mod tests {
         b.config = crate::sweep::SweepConfig { npus: 64, ..Default::default() }.fingerprint();
         let err = SweepReport::merge(&[a, b]).unwrap_err();
         assert!(err.to_string().contains("different sweep configuration"));
+    }
+
+    #[test]
+    fn shard_status_json_carries_the_failure_evidence() {
+        let s = ShardStatus {
+            shard: (2, 4),
+            attempts: 3,
+            exit_code: Some(42),
+            stderr_tail: "failpoint: injected crash".into(),
+            scenarios: 5,
+            translations: 0,
+            cache_loads: 2,
+            pruned: 1,
+        };
+        let v = s.to_json();
+        assert_eq!(v.get("shard").unwrap().as_str(), Some("2/4"));
+        assert_eq!(v.get("attempts").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("exit_code").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("translations").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("stderr_tail").unwrap().as_str(), Some("failpoint: injected crash"));
+        // Signal deaths have no exit code: null, not a fake number.
+        let killed = ShardStatus { exit_code: None, ..s };
+        assert!(matches!(killed.to_json().get("exit_code"), Some(Value::Null)));
     }
 
     #[test]

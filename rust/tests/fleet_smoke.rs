@@ -1,0 +1,273 @@
+//! Fleet-orchestrator acceptance + failure paths, against the real
+//! `modtrans` binary (cargo builds it for integration tests and hands us
+//! the path via `CARGO_BIN_EXE_modtrans`):
+//!
+//! * the merged ranking is **byte-identical** to the monolithic sweep,
+//!   with every shard process reporting `translations == 0` after the
+//!   shared-cache pre-warm (cold and warm);
+//! * a shard killed mid-run is retried and the ranking is unchanged;
+//! * exhausted retries are a hard error naming the shard, its exit code
+//!   and its stderr tail;
+//! * a corrupt shared-cache entry is invalidated and re-translated
+//!   exactly once, and the fleet still completes;
+//! * `--cache-from` copies entries in (warming a "fresh machine") and
+//!   publishes them back out.
+
+use modtrans::sim::TopologyKind;
+use modtrans::sweep::{
+    run_fleet, run_sweep, CollectiveAlgo, FleetOpts, SweepConfig, SweepGrid, SweepReport,
+};
+use modtrans::workload::Parallelism;
+use std::path::PathBuf;
+
+/// The real CLI binary — never `current_exe()`, which here is the test
+/// harness itself.
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_modtrans"))
+}
+
+/// 8 scenarios over 2 models: small enough to run many fleets, wide
+/// enough that a 4-process fleet gives every shard real work.
+fn grid() -> SweepGrid {
+    SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    }
+}
+
+fn cfg() -> SweepConfig {
+    SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() }
+}
+
+/// Fresh per-test temp path (file or directory), cleared of leftovers.
+fn scratch(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mt_fleet_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Fleet options with explicit binary/cache/work paths under `tag`.
+fn opts(tag: &str, procs: usize) -> FleetOpts {
+    FleetOpts {
+        procs,
+        binary: Some(bin()),
+        cache_dir: Some(scratch(&format!("{tag}_cache"))),
+        work_dir: Some(scratch(&format!("{tag}_work"))),
+        ..Default::default()
+    }
+}
+
+fn cleanup(opts: &FleetOpts) {
+    if let Some(d) = &opts.cache_dir {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    if let Some(d) = &opts.work_dir {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+/// The ranked report as canonical JSON text — byte equality here is the
+/// acceptance criterion.
+fn ranked(r: &SweepReport) -> String {
+    r.to_json().get("ranked").unwrap().to_json_pretty()
+}
+
+#[test]
+fn fleet_ranking_is_byte_identical_to_the_monolithic_sweep() {
+    let (grid, cfg) = (grid(), cfg());
+    let mono = run_sweep(&grid, &cfg).unwrap();
+    let o = opts("match", 4);
+    let fleet = run_fleet(&grid, &cfg, &o).unwrap();
+    assert_eq!(ranked(&fleet.merged), ranked(&mono), "fleet diverged from the monolithic run");
+    assert_eq!(
+        fleet.merged.render_text(),
+        mono.render_text(),
+        "fleet text report diverged from the monolithic run"
+    );
+    // One cold translation pass, in the pre-warm — never in a shard.
+    assert_eq!(fleet.prewarm_translations, 2);
+    assert_eq!(fleet.shards.len(), 4);
+    for s in &fleet.shards {
+        assert_eq!(s.translations, 0, "shard {:?} re-translated after pre-warm", s.shard);
+        assert_eq!(s.exit_code, Some(0));
+        assert_eq!(s.attempts, 1);
+    }
+    assert_eq!(fleet.merged.translations, 0);
+    assert_eq!(fleet.shard_translations(), 0);
+    // The status document is machine-readable and carries the evidence.
+    let status = fleet.status_json().to_json_pretty();
+    let v = modtrans::json::parse(&status).unwrap();
+    assert_eq!(v.get("procs").unwrap().as_u64(), Some(4));
+    assert_eq!(v.get("shards").unwrap().as_arr().unwrap().len(), 4);
+    cleanup(&o);
+}
+
+#[test]
+fn warm_fleet_reuses_the_shared_cache_end_to_end() {
+    let (grid, cfg) = (grid(), cfg());
+    let o = opts("warm", 3);
+    let cold = run_fleet(&grid, &cfg, &o).unwrap();
+    assert_eq!(cold.prewarm_translations, 2);
+    assert_eq!(cold.prewarm_cache_loads, 0);
+    // Same shared cache, fresh work dir: the pre-warm itself goes warm.
+    let o2 = FleetOpts { work_dir: Some(scratch("warm_work2")), ..o.clone() };
+    let warm = run_fleet(&grid, &cfg, &o2).unwrap();
+    assert_eq!(warm.prewarm_translations, 0, "second fleet must warm from the shared cache");
+    assert_eq!(warm.prewarm_cache_loads, 2);
+    for s in &warm.shards {
+        assert_eq!(s.translations, 0, "shard {:?} re-translated on a warm cache", s.shard);
+    }
+    assert_eq!(ranked(&warm.merged), ranked(&cold.merged), "warm fleet changed the ranking");
+    cleanup(&o);
+    cleanup(&o2);
+}
+
+#[test]
+fn crashed_shard_is_retried_and_the_ranking_is_unchanged() {
+    let (grid, cfg) = (grid(), cfg());
+    let marker = scratch("crash_marker");
+    // Shard 2 dies mid-run exactly once (the marker file makes the
+    // second launch succeed) — the bounded-retry policy must absorb it.
+    let o = FleetOpts {
+        failpoint: Some(format!("2:once={}", marker.display())),
+        retries: 2,
+        ..opts("crash", 3)
+    };
+    let fleet = run_fleet(&grid, &cfg, &o).unwrap();
+    let mono = run_sweep(&grid, &cfg).unwrap();
+    assert_eq!(ranked(&fleet.merged), ranked(&mono), "retried fleet diverged");
+    let s2 = fleet.shards.iter().find(|s| s.shard.0 == 2).unwrap();
+    assert_eq!(s2.attempts, 2, "shard 2 must have been relaunched exactly once");
+    assert_eq!(s2.exit_code, Some(0));
+    for s in fleet.shards.iter().filter(|s| s.shard.0 != 2) {
+        assert_eq!(s.attempts, 1, "only the crashed shard may be relaunched");
+    }
+    let _ = std::fs::remove_file(&marker);
+    cleanup(&o);
+}
+
+#[test]
+fn exhausted_retries_name_the_shard_and_quote_its_stderr() {
+    let (grid, cfg) = (grid(), cfg());
+    // Shard 1 crashes on every launch; one retry is allowed, so the
+    // fleet must give up after two attempts and say exactly what died.
+    let status_path = scratch("exhaust_status");
+    let o = FleetOpts {
+        failpoint: Some("1".into()),
+        retries: 1,
+        status_out: Some(status_path.clone()),
+        ..opts("exhaust", 2)
+    };
+    let err = run_fleet(&grid, &cfg, &o).unwrap_err().to_string();
+    assert!(err.contains("shard 1/2"), "error must name the shard: {err}");
+    assert!(err.contains("2 attempt(s)"), "error must count the attempts: {err}");
+    assert!(err.contains("exit code 42"), "error must carry the exit code: {err}");
+    assert!(
+        err.contains("failpoint: injected crash"),
+        "error must quote the shard's stderr tail: {err}"
+    );
+    // The failure also leaves a machine-readable status document with
+    // the dead shard's record — not just prose in the error.
+    let status = modtrans::json::parse(&std::fs::read_to_string(&status_path).unwrap()).unwrap();
+    let shards = status.get("shards").unwrap().as_arr().unwrap();
+    let dead = shards
+        .iter()
+        .find(|s| s.get("shard").and_then(|v| v.as_str()) == Some("1/2"))
+        .expect("dead shard missing from status document");
+    assert_eq!(dead.get("attempts").unwrap().as_u64(), Some(2));
+    assert_eq!(dead.get("exit_code").unwrap().as_u64(), Some(42));
+    assert!(dead
+        .get("stderr_tail")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("failpoint: injected crash"));
+    let _ = std::fs::remove_file(&status_path);
+    cleanup(&o);
+}
+
+#[test]
+fn corrupt_cache_entry_is_invalidated_and_retranslated_once() {
+    let (grid, cfg) = (grid(), cfg());
+    let o = opts("corrupt", 2);
+    let cache_dir = o.cache_dir.clone().unwrap();
+    let first = run_fleet(&grid, &cfg, &o).unwrap();
+    assert_eq!(first.prewarm_translations, 2);
+    // Corrupt one entry in the shared cache (deterministically: the
+    // lexicographically first one).
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&cache_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.to_string_lossy().ends_with(".ir.json"))
+        .collect();
+    entries.sort();
+    assert_eq!(entries.len(), 2);
+    std::fs::write(&entries[0], "{ definitely not a cache entry").unwrap();
+    // The next fleet must invalidate it during pre-warm (exactly one
+    // re-translation), repair the entry, and still complete cleanly.
+    let o2 = FleetOpts { work_dir: Some(scratch("corrupt_work2")), ..o.clone() };
+    let second = run_fleet(&grid, &cfg, &o2).unwrap();
+    assert_eq!(second.prewarm_translations, 1, "exactly the corrupt entry re-translates");
+    assert_eq!(second.prewarm_cache_loads, 1);
+    for s in &second.shards {
+        assert_eq!(s.translations, 0, "shards must see the repaired entry");
+    }
+    assert_eq!(ranked(&second.merged), ranked(&first.merged), "repair changed the ranking");
+    cleanup(&o);
+    cleanup(&o2);
+}
+
+#[test]
+fn cache_from_copies_entries_in_and_publishes_back_out() {
+    let (grid, cfg) = (grid(), cfg());
+    let synced = scratch("synced_dir");
+    // First fleet: nothing to copy in, publishes its cold entries out —
+    // this is the "one machine rsyncs its cache" half.
+    let o = FleetOpts { cache_from: Some(synced.clone()), ..opts("sync_a", 2) };
+    let a = run_fleet(&grid, &cfg, &o).unwrap();
+    assert_eq!(a.cache_copied_in, 0);
+    assert_eq!(a.cache_copied_out, 2, "cold entries must be published to the synced dir");
+    assert_eq!(a.prewarm_translations, 2);
+    // Second fleet, fresh cache dir ("another machine"): copy-in makes
+    // the pre-warm load-only — the cross-machine sharing payoff.
+    let o2 = FleetOpts { cache_from: Some(synced.clone()), ..opts("sync_b", 2) };
+    let b = run_fleet(&grid, &cfg, &o2).unwrap();
+    assert_eq!(b.cache_copied_in, 2);
+    assert_eq!(b.prewarm_translations, 0, "copy-in must make the pre-warm load-only");
+    assert_eq!(b.prewarm_cache_loads, 2);
+    // Nothing new to publish: the synced dir already holds every entry,
+    // and copy-out must not churn it with rewrites.
+    assert_eq!(b.cache_copied_out, 0);
+    assert_eq!(ranked(&b.merged), ranked(&a.merged));
+    let _ = std::fs::remove_dir_all(&synced);
+    cleanup(&o);
+    cleanup(&o2);
+}
+
+#[test]
+fn single_process_fleet_and_more_procs_than_scenarios_both_work() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    };
+    let cfg = cfg();
+    let mono = run_sweep(&grid, &cfg).unwrap();
+    // N = 1: the degenerate fleet is just a supervised sweep.
+    let o1 = opts("one", 1);
+    let f1 = run_fleet(&grid, &cfg, &o1).unwrap();
+    assert_eq!(ranked(&f1.merged), ranked(&mono));
+    // More processes than scenarios: the surplus shards rank nothing
+    // but still count toward the complete shard set.
+    let o5 = opts("surplus", 5);
+    let f5 = run_fleet(&grid, &cfg, &o5).unwrap();
+    assert_eq!(ranked(&f5.merged), ranked(&mono));
+    assert_eq!(f5.shards.len(), 5);
+    assert_eq!(f5.shards.iter().map(|s| s.scenarios).sum::<usize>(), mono.ranked.len());
+    cleanup(&o1);
+    cleanup(&o5);
+}

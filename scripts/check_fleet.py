@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Fleet-smoke acceptance check (CI `fleet-smoke` job / `make fleet-smoke`).
+
+Usage: check_fleet.py MONO_JSON FLEET_JSON STATUS_JSON [--warm]
+
+Asserts the fleet contract:
+  * the fleet's merged ranked report is byte-for-byte the monolithic
+    sweep's (canonical JSON serialization of the "ranked" array);
+  * every shard process exited 0 first try and reported
+    translations == 0 — the shared-cache pre-warm did the only cold
+    work;
+  * cold runs: the pre-warm translated exactly the model count;
+    --warm runs: the pre-warm itself was load-only (0 translations).
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    warm = "--warm" in argv
+    args = [a for a in argv if a != "--warm"]
+    if len(args) != 3:
+        sys.exit(__doc__.strip())
+    mono_path, fleet_path, status_path = args
+    with open(mono_path) as f:
+        mono = json.load(f)
+    with open(fleet_path) as f:
+        fleet = json.load(f)
+    with open(status_path) as f:
+        status = json.load(f)
+
+    mono_ranked = json.dumps(mono["ranked"], sort_keys=True, indent=1)
+    fleet_ranked = json.dumps(fleet["ranked"], sort_keys=True, indent=1)
+    assert fleet_ranked == mono_ranked, (
+        "fleet merged ranking is not byte-identical to the monolithic sweep "
+        f"({len(fleet['ranked'])} vs {len(mono['ranked'])} scenarios)"
+    )
+
+    shards = status["shards"]
+    assert shards, "status document has no shard records"
+    for s in shards:
+        assert s["exit_code"] == 0, f"shard {s['shard']} exited {s['exit_code']}"
+        assert s["attempts"] == 1, f"shard {s['shard']} needed {s['attempts']} attempts"
+        assert s["translations"] == 0, (
+            f"shard {s['shard']} ran {s['translations']} translation(s) after the "
+            "shared-cache pre-warm"
+        )
+
+    prewarm = status["prewarm"]
+    if warm:
+        assert prewarm["translations"] == 0, (
+            f"warm fleet re-extracted {prewarm['translations']} model(s) during pre-warm"
+        )
+        assert prewarm["cache_loads"] == mono["models"], (
+            f"warm pre-warm loaded {prewarm['cache_loads']} of {mono['models']} models"
+        )
+    else:
+        assert prewarm["translations"] == mono["models"], (
+            f"cold pre-warm ran {prewarm['translations']} translation(s) "
+            f"for {mono['models']} model(s)"
+        )
+    kind = "warm" if warm else "cold"
+    print(
+        f"fleet OK ({kind}): {len(fleet['ranked'])} scenarios across {len(shards)} "
+        "shard process(es), ranking byte-identical, every shard load-only"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

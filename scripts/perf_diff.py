@@ -1,21 +1,31 @@
 #!/usr/bin/env python3
 """Perf-trajectory diff: compare two directories of BENCH_<name>.json files.
 
-Usage: perf_diff.py BASE_DIR HEAD_DIR
+Usage: perf_diff.py [--gate] [--threshold PCT] [--min-samples N] BASE_DIR HEAD_DIR
 
 Prints a GitHub-flavored markdown table of per-series mean deltas
 (head vs base). Series present on only one side are listed as added /
-removed. Advisory only — the exit code is always 0 so the CI job never
-gates a PR on noisy bench numbers.
+removed and never gate; malformed files and drifted schemas are
+skipped, never crashed on — that contract survives gating.
+
+Without --gate the exit code is always 0 (the advisory mode CI ran
+before the gate was promoted). With --gate the exit code is non-zero
+iff any series' mean regressed by more than --threshold percent
+(default 25) AND both sides measured at least --min-samples samples
+(default 30) — so 2-sample CI smoke artifacts stay advisory while
+full-sample bench runs gate the PR.
 """
 
+import argparse
 import json
 import pathlib
 import sys
 
 
 def load(dirname):
-    """Map (bench, series) -> mean seconds for every BENCH_*.json in dir."""
+    """Map (bench, series) -> (mean seconds, sample count) for every
+    BENCH_*.json under dir. Anything malformed is skipped with a comment,
+    never fatal."""
     series = {}
     for path in sorted(pathlib.Path(dirname).glob("**/BENCH_*.json")):
         try:
@@ -30,15 +40,34 @@ def load(dirname):
             continue
         for s in entries:
             # Tolerate schema drift: skip entries missing name/mean
-            # rather than crashing — this tool is advisory by contract.
+            # rather than crashing — the skip-never-crash contract.
             if not isinstance(s, dict):
                 continue
             name, mean = s.get("name"), s.get("mean")
             if name is None or not isinstance(mean, (int, float)):
                 print(f"<!-- skipped series entry in {path}: missing name/mean -->")
                 continue
-            series[(bench, name)] = mean
+            n = s.get("n")
+            if not isinstance(n, int):
+                samples = s.get("samples")
+                n = len(samples) if isinstance(samples, list) else 0
+            series[(bench, name)] = (float(mean), n)
     return series
+
+
+def regressions(base, head, threshold, min_samples):
+    """Series whose mean regressed by more than threshold percent, with
+    at least min_samples samples on BOTH sides (smoke runs never gate).
+    Missing/removed/added series never gate either."""
+    out = []
+    for key in sorted(set(base) & set(head)):
+        (b, bn), (h, hn) = base[key], head[key]
+        if b <= 0 or bn < min_samples or hn < min_samples:
+            continue
+        delta = (h - b) / b * 100.0
+        if delta > threshold:
+            out.append((key, b, h, delta))
+    return out
 
 
 def fmt_s(seconds):
@@ -49,31 +78,64 @@ def fmt_s(seconds):
     return f"{seconds * 1e6:.1f} us"
 
 
-def main():
-    if len(sys.argv) != 3:
-        print(__doc__.strip())
-        return
-    base = load(sys.argv[1])
-    head = load(sys.argv[2])
-    print("### Perf trajectory (mean delta vs base branch, advisory)")
-    print()
+def print_table(base, head):
     print("| bench | series | base mean | head mean | delta |")
     print("|---|---|---|---|---|")
     for key in sorted(set(base) | set(head)):
         bench, name = key
         if key not in head:
-            print(f"| {bench} | {name} | {fmt_s(base[key])} | _removed_ | |")
+            print(f"| {bench} | {name} | {fmt_s(base[key][0])} | _removed_ | |")
             continue
         if key not in base:
-            print(f"| {bench} | {name} | _new_ | {fmt_s(head[key])} | |")
+            print(f"| {bench} | {name} | _new_ | {fmt_s(head[key][0])} | |")
             continue
-        b, h = base[key], head[key]
+        (b, _), (h, _) = base[key], head[key]
         delta = (h - b) / b * 100.0 if b > 0 else float("inf")
         arrow = "🔺" if delta > 5.0 else ("🔽" if delta < -5.0 else "·")
         print(f"| {bench} | {name} | {fmt_s(b)} | {fmt_s(h)} | {arrow} {delta:+.1f}% |")
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    parser.add_argument("--gate", action="store_true", help="fail on large regressions")
+    parser.add_argument("--threshold", type=float, default=25.0, help="gate delta in percent")
+    parser.add_argument(
+        "--min-samples",
+        type=int,
+        default=30,
+        help="both sides need this many samples before a series can gate",
+    )
+    parser.add_argument("base_dir")
+    parser.add_argument("head_dir")
+    args = parser.parse_args(argv)
+
+    base = load(args.base_dir)
+    head = load(args.head_dir)
+    mode = "gating" if args.gate else "advisory"
+    print(f"### Perf trajectory (mean delta vs base branch, {mode})")
     print()
-    print("_Smoke runs use 2 samples — treat small deltas as noise._")
+    print_table(base, head)
+    print()
+    bad = regressions(base, head, args.threshold, args.min_samples)
+    if args.gate:
+        if bad:
+            print(
+                f"**GATE FAILED: {len(bad)} series regressed more than "
+                f"{args.threshold:.0f}% on >= {args.min_samples}-sample runs:**"
+            )
+            for (bench, name), b, h, delta in bad:
+                print(f"- {bench} / {name}: {fmt_s(b)} -> {fmt_s(h)} ({delta:+.1f}%)")
+            return 1
+        print(
+            f"_gate: no series regressed more than {args.threshold:.0f}% "
+            f"on >= {args.min_samples}-sample runs_"
+        )
+    else:
+        print("_Smoke runs use 2 samples — treat small deltas as noise._")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Unit tests for perf_diff.py's gate mode (run by CI and `make ci`).
+
+The contract under test: `--gate --threshold 25` exits non-zero exactly
+when a series' mean regresses by more than 25% with >= --min-samples
+samples on both sides; smoke-sample runs, missing/new series, and
+malformed files stay advisory (skip, never crash, never gate).
+"""
+
+import contextlib
+import io
+import json
+import pathlib
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import perf_diff  # noqa: E402
+
+
+def write_bench(dirpath, bench, series):
+    """Write a BENCH_<bench>.json with series: {name: (mean, n)}."""
+    doc = {
+        "name": bench,
+        "series": [
+            {
+                "name": name,
+                "n": n,
+                "mean": mean,
+                "stddev": 0.0,
+                "p50": mean,
+                "min": mean,
+                "max": mean,
+                "samples": [mean] * min(n, 3),
+            }
+            for name, (mean, n) in series.items()
+        ],
+    }
+    (dirpath / f"BENCH_{bench}.json").write_text(json.dumps(doc))
+
+
+class GateTest(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        root = pathlib.Path(self._tmp.name)
+        self.base = root / "base"
+        self.head = root / "head"
+        self.base.mkdir()
+        self.head.mkdir()
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def run_diff(self, *flags):
+        """Run perf_diff.main with stdout captured; return (exit, text)."""
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            code = perf_diff.main([*flags, str(self.base), str(self.head)])
+        return code, out.getvalue()
+
+    def test_no_change_passes_the_gate(self):
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (1.0, 30)})
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+        self.assertIn("gating", text)
+
+    def test_synthetic_large_regression_fails_the_gate(self):
+        # The acceptance fixture: a 50% mean regression on 30-sample
+        # runs must exit non-zero under --gate --threshold 25.
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (1.5, 30)})
+        code, text = self.run_diff("--gate", "--threshold", "25")
+        self.assertEqual(code, 1, text)
+        self.assertIn("GATE FAILED", text)
+        self.assertIn("s18", text)
+        self.assertIn("+50.0%", text)
+
+    def test_regression_below_threshold_passes(self):
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (1.2, 30)})
+        code, text = self.run_diff("--gate", "--threshold", "25")
+        self.assertEqual(code, 0, text)
+
+    def test_threshold_flag_is_respected(self):
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (1.2, 30)})
+        code, _ = self.run_diff("--gate", "--threshold", "10")
+        self.assertEqual(code, 1)
+
+    def test_smoke_sample_runs_never_gate(self):
+        # A 10x regression measured with 2 samples is noise, not a gate.
+        write_bench(self.base, "sweep", {"s18": (1.0, 2)})
+        write_bench(self.head, "sweep", {"s18": (10.0, 2)})
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+        # Both sides need the samples: a 30-sample base with a 2-sample
+        # head still cannot gate.
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+
+    def test_missing_and_new_series_never_gate(self):
+        write_bench(self.base, "sweep", {"removed": (1.0, 30)})
+        write_bench(self.head, "sweep", {"added": (99.0, 30)})
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+        self.assertIn("_removed_", text)
+        self.assertIn("_new_", text)
+
+    def test_corrupt_file_is_skipped_never_crashed_on(self):
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (1.0, 30)})
+        (self.head / "BENCH_broken.json").write_text("{ not json")
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+        self.assertIn("skipped", text)
+
+    def test_drifted_schema_is_skipped_never_crashed_on(self):
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (1.0, 30)})
+        (self.head / "BENCH_drift.json").write_text(
+            json.dumps({"name": "drift", "series": [{"label": "no-mean-here"}]})
+        )
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+
+    def test_missing_sample_count_means_no_gate(self):
+        # Schema drift on "n": entries without a usable sample count are
+        # treated as 0 samples — advisory, never gating.
+        doc = {"name": "sweep", "series": [{"name": "s18", "mean": 9.9}]}
+        (self.head / "BENCH_sweep.json").write_text(json.dumps(doc))
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        code, text = self.run_diff("--gate")
+        self.assertEqual(code, 0, text)
+
+    def test_without_gate_regressions_stay_advisory(self):
+        write_bench(self.base, "sweep", {"s18": (1.0, 30)})
+        write_bench(self.head, "sweep", {"s18": (5.0, 30)})
+        code, text = self.run_diff()
+        self.assertEqual(code, 0, text)
+        self.assertIn("advisory", text)
+
+
+if __name__ == "__main__":
+    unittest.main()
