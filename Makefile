@@ -7,10 +7,10 @@ CARGO ?= cargo
 BENCHES := collectives table_layer_extraction sim_end_to_end fig6_translation_time sweep_throughput
 
 .PHONY: ci build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism \
-	fleet-smoke perf-gate-test clean
+	fleet-smoke perf-gate-test check-ci-sync clean
 
 ci: build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism \
-	fleet-smoke perf-gate-test
+	fleet-smoke perf-gate-test check-ci-sync
 	@echo "CI matrix green"
 
 build:
@@ -71,7 +71,12 @@ sweep-determinism: build
 	./target/release/modtrans sweep --threads 2 --shard 2/2 -o shard2.json
 	./target/release/modtrans sweep-merge shard1.json shard2.json -o merged.json
 	python3 -c 'import json; a=json.load(open("merged.json")); b=json.load(open("sweep_t1.json")); assert a["ranked"]==b["ranked"], "shard merge diverged"'
+	./target/release/modtrans sweep --threads 1 --top 5 -o sweep_top_t1.json
+	./target/release/modtrans sweep --threads 8 --top 5 -o sweep_top_t8.json
+	diff sweep_top_t1.json sweep_top_t8.json
+	python3 scripts/check_prune.py sweep_t1.json sweep_top_t1.json 5
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
+	rm -f sweep_top_t1.json sweep_top_t8.json
 	rm -rf ircache
 
 # The fleet acceptance check, mirroring CI's fleet-smoke job: a cold
@@ -96,8 +101,14 @@ fleet-smoke: build
 perf-gate-test:
 	python3 scripts/test_perf_diff.py
 
+# CI/Makefile drift check: every ci.yml job must run its `make` target,
+# so `make ci` keeps reproducing the full CI matrix locally.
+check-ci-sync:
+	python3 scripts/check_ci_sync.py
+
 clean:
 	$(CARGO) clean
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
+	rm -f sweep_top_t1.json sweep_top_t8.json
 	rm -f fleet_mono.json fleet_merged.json fleet_status.json warm_merged.json warm_status.json
 	rm -rf bench-out ircache fleet-cache fleet-work fleet-work-warm

@@ -56,6 +56,22 @@ fn main() {
     });
     println!("  -> {:.1} scenarios/s over the widened grid (1 thread)", wide_n as f64 / s.mean);
 
+    // Branch-and-bound fast path: the same widened grid under `--top 4`.
+    // Pair with the exhaustive shared-IR series above — the delta is
+    // what the analytic lower bound saves by pricing scenarios out of
+    // the top-K without running their DES (the ranked top-4 itself is
+    // byte-identical, pinned by the prune-equivalence CI check).
+    let cfg = SweepConfig { threads: 1, top_k: Some(4), ..Default::default() };
+    let s = report.run(&bench, &format!("sweep_{wide_n}_scenarios_top4_pruned_1thread"), |_| {
+        black_box(run_sweep(&wide, &cfg).unwrap());
+    });
+    println!("  -> {:.1} scenarios/s with top-4 bound pruning", wide_n as f64 / s.mean);
+    let r = run_sweep(&wide, &cfg).unwrap();
+    println!(
+        "     ({} of {wide_n} simulated, {} skipped by the analytic bound)",
+        r.scenarios_simulated, r.scenarios_pruned
+    );
+
     // Persistent-cache trajectory: cold (extract + spill to disk) vs warm
     // (load-only — zero translations). The delta between the two series
     // is what `--cache-dir` buys every repeat sweep of the same grid.

@@ -3,8 +3,10 @@
 //! collective) design space in one command, with each model translated
 //! exactly once and the simulations fanned out across a worker pool.
 //!
-//! Also demonstrates the determinism guarantee: the ranked JSON from a
-//! 1-thread run is byte-identical to the multi-threaded run.
+//! Also demonstrates the determinism guarantee (the ranked JSON from a
+//! 1-thread run is byte-identical to the multi-threaded run) and the
+//! branch-and-bound `--top K` mode, whose pruned top-K is exactly the
+//! exhaustive ranking's prefix.
 //!
 //! ```sh
 //! cargo run --release --example sweep_grid
@@ -53,5 +55,25 @@ fn main() -> modtrans::Result<()> {
     let b = serial.to_json().to_json_pretty();
     assert_eq!(a, b, "ranked output must not depend on thread count");
     println!("\ndeterminism check: 1-thread and {threads}-thread runs agree byte-for-byte");
+
+    // Branch-and-bound pruning: `--top K` skips simulating any scenario
+    // whose analytic lower bound already exceeds the K-th best simulated
+    // iteration — and still reports exactly the exhaustive top-K.
+    let k = 3;
+    let pruned = run_sweep(&grid, &SweepConfig { top_k: Some(k), ..cfg })?;
+    let full_json = report.to_json();
+    let exhaustive_prefix = full_json.get("ranked").and_then(|v| v.as_arr()).expect("ranked");
+    let pruned_json = pruned.to_json();
+    let pruned_ranked = pruned_json.get("ranked").and_then(|v| v.as_arr()).expect("ranked");
+    assert_eq!(
+        pruned_ranked,
+        &exhaustive_prefix[..k],
+        "pruned top-K must match the exhaustive prefix"
+    );
+    println!(
+        "top-{k} pruning: {} of {} scenarios simulated, {} skipped by the analytic lower bound \
+         ({} bounds evaluated) — ranking byte-identical to the exhaustive prefix",
+        pruned.scenarios_simulated, scenarios, pruned.scenarios_pruned, pruned.bounds_evaluated,
+    );
     Ok(())
 }

@@ -156,7 +156,10 @@ USAGE:
             [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
             [--npus N] [--batch B] [--mp-group G] [--iterations I] [--shard K/N]
             [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible]
-            [--cache-dir DIR] [-o|--json-out results.json]
+            [--top K] [--cache-dir DIR] [-o|--json-out results.json]
+            (--top K ranks only the K fastest scenarios, skipping simulation for any
+             scenario whose analytic lower bound exceeds the K-th best simulated time —
+             exact: byte-identical to the exhaustive ranking's first K rows)
   modtrans sweep fleet [model[,model...]] [--procs N] [--retries R] [--work-dir DIR]
             [--cache-dir DIR] [--cache-from SYNC_DIR] [--status-out status.json]
             (+ every sweep option above except --shard; launches N shard processes
@@ -560,7 +563,19 @@ fn parse_sweep_config(args: &Args) -> Result<SweepConfig> {
         zero: parse_zero(args)?,
         skip_infeasible: args.flag("skip-infeasible"),
         shard: parse_shard(args)?,
+        top_k: parse_top_k(args)?,
     })
+}
+
+/// Parse `--top K` (exact top-K pruning; K must be a positive integer).
+fn parse_top_k(args: &Args) -> Result<Option<usize>> {
+    let Some(spec) = args.opt("top") else {
+        return Ok(None);
+    };
+    match spec.parse::<usize>() {
+        Ok(k) if k >= 1 => Ok(Some(k)),
+        _ => Err(Error::Usage(format!("bad --top '{spec}' — need a positive integer K"))),
+    }
 }
 
 /// The report destination: `--json-out` (the spelling the fleet
@@ -594,6 +609,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         report.translations,
         report.cache_loads,
     );
+    if cfg.top_k.is_some() {
+        println!(
+            "top-{} pruning: {} scenario(s) simulated + {} skipped by analytic lower bound \
+             ({} bounds evaluated, no DES)",
+            cfg.top_k.unwrap_or(0),
+            report.scenarios_simulated,
+            report.scenarios_pruned,
+            report.bounds_evaluated,
+        );
+    }
     print!("{}", report.render_text());
     if let Some(path) = json_out(args) {
         std::fs::write(path, report.to_json().to_json_pretty())?;
@@ -652,6 +677,8 @@ fn cmd_sweep_fleet(args: &Args) -> Result<()> {
         "Translations",
         "Cache loads",
         "Pruned",
+        "Simulated",
+        "Bound-pruned",
     ]);
     for s in &fleet.shards {
         t.row(vec![
@@ -662,6 +689,8 @@ fn cmd_sweep_fleet(args: &Args) -> Result<()> {
             s.translations.to_string(),
             s.cache_loads.to_string(),
             s.pruned.to_string(),
+            s.scenarios_simulated.to_string(),
+            s.scenarios_pruned.to_string(),
         ]);
     }
     print!("{t}");

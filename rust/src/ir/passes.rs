@@ -81,6 +81,18 @@ pub fn memory(ir: &ModelIR, opts: TranslateOpts, mem: MemoryOpts) -> MemoryRepor
     memory_per_npu(ir.summary(), opts, mem)
 }
 
+/// Serial critical-path compute time of one training iteration: every
+/// layer's forward, input-grad, weight-grad and optimizer-update cost,
+/// summed. Exactly the per-iteration busy time of a single compute
+/// resource executing the annotated costs back to back — which is what
+/// the sweep's analytic lower bound ([`crate::sweep::bound`]) charges
+/// for compute, since the flat simulation path schedules all four
+/// phases on one representative-NPU stream. Requires the compute pass
+/// to have run (unannotated cost slots are zero).
+pub fn serial_compute_ns(ir: &ModelIR) -> u64 {
+    ir.costs().iter().map(|c| c.fwd_ns + c.ig_ns + c.wg_ns + c.update_ns).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

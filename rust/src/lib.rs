@@ -42,7 +42,16 @@
 //!   Chakra-ET-style JSON task graph (`translate --format et-json`).
 //!
 //! This split is what makes batched scenario execution cheap — and now
-//! persistent. The sweep cache ([`sweep::WorkloadCache`]) has two tiers:
+//! persistent and *triaged*. Per sweep scenario the pipeline is:
+//!
+//! ```text
+//!  WorkloadCache IR ─► comm pass ─► sweep::bound (analytic lower bound)
+//!        │                  --top K: bound > K-th best simulated?
+//!        │                     ├─ yes ─► pruned (no DES, still exact)
+//!        └────► emit ─────────┴─ no ──► DES simulate ─► ranked report
+//! ```
+//!
+//! The sweep cache ([`sweep::WorkloadCache`]) has two tiers:
 //!
 //! 1. **In-memory**: one compute-annotated IR per typed
 //!    [`sweep::CacheKey`] (model × batch × compute-model fingerprint),
@@ -54,6 +63,16 @@
 //!    so a warm run performs **zero** translations while ranking
 //!    byte-identically (CI asserts both). Corrupt or stale-fingerprint
 //!    entries are invalidated and rewritten, never trusted.
+//!
+//! On top of the cache sits the branch-and-bound triage stage
+//! ([`sweep::bound`], CLI `sweep --top K`): an admissible per-scenario
+//! makespan lower bound — serial critical-path compute plus
+//! ideal-bandwidth communication, read straight off the cached IR and
+//! the scenario's comm plan with memoized collective latencies, no DES —
+//! lets the sweep skip simulating any scenario that provably cannot
+//! enter the top-K. Pruning is **exact**, not heuristic: the reported
+//! top-K is byte-identical to the exhaustive ranking's first K rows
+//! (CI's prune-equivalence diff pins it).
 //!
 //! ## The orchestration layer: one command, N shard processes
 //!
@@ -106,10 +125,14 @@
 //!   `--cache-dir` disk tier), fans simulations out across a
 //!   `std::thread` worker pool (optionally sharded `--shard K/N` across
 //!   machines, merged back with `sweep-merge`), and emits a
-//!   deterministic ranked report. [`sweep::fleet`] is the orchestration
-//!   layer above it: `sweep fleet --procs N` launches N shard processes
-//!   warmed from one shared cache, retries crashes, and merges
-//!   in-process (see the architecture section above).
+//!   deterministic ranked report. [`sweep::bound`] is its
+//!   branch-and-bound triage pass (`--top K`): admissible analytic
+//!   makespan lower bounds prune scenarios that provably cannot enter
+//!   the top-K, without changing the reported ranking. [`sweep::fleet`]
+//!   is the orchestration layer above it: `sweep fleet --procs N`
+//!   launches N shard processes warmed from one shared cache, retries
+//!   crashes, and merges in-process (see the architecture section
+//!   above).
 //! * `runtime` / [`calibrate`] — PJRT execution of AOT-compiled
 //!   JAX/Pallas GEMM artifacts for measured per-layer compute times
 //!   (behind the `pjrt` feature; see below).
@@ -149,7 +172,7 @@
 //! `cargo clippy -- -D warnings` (gating), `cargo doc --no-deps` with
 //! warnings denied (gating), the hot-path allocation guard (sim builders
 //! + IR derivation hot path), a bench smoke pass
-//! (`MODTRANS_BENCH_SAMPLES=2` caps every bench target to seconds) that
+//! (`MODTRANS_BENCH_SAMPLES=2` drops every bench target to seconds) that
 //! uploads `BENCH_*.json` artifacts, a **gating** perf-trajectory job
 //! that diffs those artifacts against the base branch's and fails on a
 //! >25% mean regression measured on ≥30-sample runs
@@ -157,13 +180,19 @@
 //! artifacts can never trip it, and missing/drifted series are skipped,
 //! never crashed on — unit-tested in `scripts/test_perf_diff.py`), a
 //! 1-thread-vs-8-thread `sweep` determinism diff (plain,
-//! `--skip-infeasible`, sharded + `sweep-merge`, and a
-//! warm-`--cache-dir` rerun that must report 0 translations with a
-//! byte-identical ranking), a `fleet-smoke` job (`sweep fleet --procs 4`
-//! cold and warm must rank byte-for-byte like the monolithic sweep with
-//! every shard reporting 0 translations), and a check that every PR
-//! touches `CHANGES.md`. Reproduce the full matrix locally with
-//! `make ci` before pushing.
+//! `--skip-infeasible`, sharded + `sweep-merge`, a warm-`--cache-dir`
+//! rerun that must report 0 translations with a byte-identical ranking,
+//! and a prune-equivalence diff: `sweep --top 5` must reproduce the
+//! exhaustive top-5 byte-identically while pruning scenarios,
+//! `scripts/check_prune.py`), a `fleet-smoke` job (`sweep fleet
+//! --procs 4` cold and warm must rank byte-for-byte like the monolithic
+//! sweep with every shard reporting 0 translations), a `check-ci-sync`
+//! job (`scripts/check_ci_sync.py`: every CI job must map to a `make ci`
+//! step and vice versa), and a check that every PR touches `CHANGES.md`.
+//! Reproduce the full matrix locally with `make ci` before pushing. The
+//! scheduled `.github/workflows/nightly-bench.yml` additionally uploads
+//! ≥30-sample `BENCH_*.json` baselines — the artifacts that actually arm
+//! the perf gate (see `bench-baselines/README.md`).
 //!
 //! # Performance
 //!

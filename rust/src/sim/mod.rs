@@ -30,7 +30,8 @@ pub use network::{NetDim, Network, TopologyKind};
 pub use system::{CommRouter, SystemConfig};
 pub use tag::{TagComm, TagPhase, TaskTag};
 pub use training::{
-    simulate, simulate_with, LayerBreakdown, PipelineSchedule, SimConfig, SimReport, SimScratch,
+    partition_compute_costs, simulate, simulate_with, LayerBreakdown, PipelineSchedule, SimConfig,
+    SimReport, SimScratch,
 };
 
 #[cfg(test)]

@@ -541,13 +541,27 @@ fn build_pipeline_graph_into(
 /// Contiguous partition of layers into `stages` groups with balanced
 /// forward compute (greedy prefix split).
 pub fn partition_by_compute(workload: &Workload, stages: usize) -> Vec<usize> {
-    let n = workload.layers.len();
-    let total: u64 = workload.layers.iter().map(|l| l.fwd.compute_ns.max(1)).sum();
+    partition_compute_costs(workload.layers.len(), stages, |i| workload.layers[i].fwd.compute_ns)
+}
+
+/// Index-accessor core of [`partition_by_compute`]: partition `n` layers
+/// into `stages` contiguous groups balancing `cost_ns(i)` (forward
+/// compute). Shared with the sweep's analytic bound pass
+/// ([`crate::sweep::bound`]), which partitions over the cached IR's cost
+/// slots — both sides MUST split identically or the bound's per-stage
+/// busy times would describe a different pipeline than the one
+/// simulated.
+pub fn partition_compute_costs(
+    n: usize,
+    stages: usize,
+    cost_ns: impl Fn(usize) -> u64,
+) -> Vec<usize> {
+    let total: u64 = (0..n).map(|i| cost_ns(i).max(1)).sum();
     let target = total / stages as u64;
     let mut bounds = vec![0usize];
     let mut acc = 0u64;
-    for (i, l) in workload.layers.iter().enumerate() {
-        acc += l.fwd.compute_ns.max(1);
+    for i in 0..n {
+        acc += cost_ns(i).max(1);
         if acc >= target && bounds.len() < stages && n - (i + 1) >= stages - bounds.len() {
             bounds.push(i + 1);
             acc = 0;

@@ -1,0 +1,267 @@
+//! Analytic per-scenario makespan lower bounds — the branch-and-bound
+//! pruning pass behind `sweep --top K`.
+//!
+//! The discrete-event makespan of any scenario is at least the total
+//! busy time of its busiest resource: the simulator schedules every
+//! compute phase of the flat strategies on one representative-NPU
+//! stream, every collective of a single-dimension fabric on one network
+//! resource, and the pipeline path's per-stage work on one resource per
+//! stage. [`scenario_bound_ns`] therefore charges
+//!
+//! * **compute** — the serial critical path
+//!   ([`passes::serial_compute_ns`]: fwd + input-grad + weight-grad +
+//!   update per layer) for the flat strategies, or the busiest stage of
+//!   the *identical* greedy partition the pipeline simulation uses
+//!   ([`crate::sim::partition_compute_costs`]); and
+//! * **communication** — the ideal-bandwidth α-β completion time
+//!   ([`collective_ns`]) of every collective in the scenario's comm plan
+//!   (plus the stage-boundary point-to-point transfers for pipeline),
+//!
+//! and the bound is the max of the two. Both terms are *exact* resource
+//! busy times, never optimistic models of them, so the bound is
+//! admissible: `bound(scenario) <= simulated iteration_ns`, always
+//! (asserted across the zoo in `tests/prune_equivalence.rs`). That
+//! admissibility is what makes `--top K` an **exact** mode rather than a
+//! heuristic — a scenario is skipped only when its bound already
+//! exceeds the K-th best *simulated* iteration time, which no skipped
+//! scenario can beat.
+//!
+//! No DES runs here: the bound reads the cached compute-annotated IR
+//! and the scenario's (cheap, parallelism-dependent) comm plan, so
+//! bounding a scenario costs microseconds where simulating it costs
+//! milliseconds. [`BoundMemo`] additionally memoizes every
+//! (topology × collective × size) completion time across sibling
+//! scenarios — grids vary parallelism and collective algorithm far more
+//! often than payload sizes, so most scenarios hit the memo instead of
+//! the α-β model.
+
+use super::{Scenario, SweepConfig, WorkloadCache};
+use crate::error::{Error, Result};
+use crate::ir::{passes, ModelIR};
+use crate::sim::collectives::p2p_ns;
+use crate::sim::{collective_ns, partition_compute_costs, NetDim, TopologyKind};
+use crate::translator::CommPlan;
+use crate::workload::{CommType, Parallelism};
+use std::collections::BTreeMap;
+
+/// Stable map key for one (topology, collective) pair — the enums don't
+/// carry `Ord`, and the memo must not depend on discriminant layout.
+fn code(topology: TopologyKind, comm: CommType) -> (u8, u8) {
+    let t = match topology {
+        TopologyKind::Ring => 0,
+        TopologyKind::FullyConnected => 1,
+        TopologyKind::Switch => 2,
+        TopologyKind::Torus2D => 3,
+    };
+    let c = match comm {
+        CommType::None => 0,
+        CommType::AllReduce => 1,
+        CommType::AllGather => 2,
+        CommType::ReduceScatter => 3,
+        CommType::AllToAll => 4,
+    };
+    (t, c)
+}
+
+/// Memoized collective-latency table shared across one sweep's bound
+/// pass, keyed by (topology × collective × payload bytes). Valid within
+/// a single [`SweepConfig`] — NPU count, bandwidth and latency are
+/// config-fixed, so only the scenario axes vary — and carrying the
+/// comm-plan buffer too, so the serial bound pass re-plans without heap
+/// allocation.
+#[derive(Debug, Default)]
+pub struct BoundMemo {
+    coll: BTreeMap<(u8, u8, u64), u64>,
+    comms: Vec<CommPlan>,
+    lookups: usize,
+    misses: usize,
+}
+
+impl BoundMemo {
+    /// Fresh, empty memo.
+    pub fn new() -> BoundMemo {
+        BoundMemo::default()
+    }
+
+    /// Collective latency lookups that were served from the memo.
+    pub fn hits(&self) -> usize {
+        self.lookups - self.misses
+    }
+
+    /// Total collective latency lookups.
+    pub fn lookups(&self) -> usize {
+        self.lookups
+    }
+
+    /// Memoized [`collective_ns`].
+    fn collective(&mut self, comm: CommType, bytes: u64, dim: &NetDim) -> u64 {
+        if comm == CommType::None || bytes == 0 {
+            return 0;
+        }
+        self.lookups += 1;
+        let (t, c) = code(dim.kind, comm);
+        *self.coll.entry((t, c, bytes)).or_insert_with(|| {
+            self.misses += 1;
+            collective_ns(comm, bytes, dim)
+        })
+    }
+}
+
+/// Admissible lower bound on one scenario's simulated `iteration_ns`,
+/// computed from the cached IR without running the DES. Errors only on
+/// a model missing from the cache (the same error the simulation path
+/// raises).
+pub fn scenario_bound_ns(
+    sc: &Scenario,
+    cache: &WorkloadCache,
+    cfg: &SweepConfig,
+    memo: &mut BoundMemo,
+) -> Result<u64> {
+    let ir = cache.ir(&sc.model).ok_or_else(|| {
+        Error::Config(format!("model '{}' missing from the workload cache", sc.model))
+    })?;
+    let opts = super::scenario_opts(sc, cfg);
+    let dim = NetDim {
+        kind: sc.topology,
+        npus: cfg.npus,
+        bandwidth_gbps: cfg.bandwidth_gbps,
+        latency_ns: cfg.latency_ns,
+    };
+    // The same comm plan the simulation path derives — the bound prices
+    // exactly the collectives the DES would schedule, no re-modeling.
+    let mut comms = std::mem::take(&mut memo.comms);
+    passes::plan_comm_into(ir, opts, &mut comms);
+    let ns = match sc.parallelism {
+        Parallelism::Pipeline => pipeline_bound_ns(ir, &comms, cfg, &dim, memo),
+        _ => flat_bound_ns(ir, &comms, &dim, memo),
+    };
+    memo.comms = comms;
+    Ok(ns)
+}
+
+/// DATA / MODEL / HYBRID: one compute stream runs every phase serially,
+/// one network resource runs every collective serially — the iteration
+/// is at least the busier of the two.
+fn flat_bound_ns(ir: &ModelIR, comms: &[CommPlan], dim: &NetDim, memo: &mut BoundMemo) -> u64 {
+    let compute = passes::serial_compute_ns(ir);
+    let comm: u64 = comms
+        .iter()
+        .map(|p| {
+            memo.collective(p.fwd.0, p.fwd.1, dim)
+                + memo.collective(p.ig.0, p.ig.1, dim)
+                + memo.collective(p.wg.0, p.wg.1, dim)
+        })
+        .sum();
+    compute.max(comm)
+}
+
+/// PIPELINE: per-stage compute busy time under the *identical* greedy
+/// layer partition, microbatch rounding and all; network busy time is
+/// the per-stage gradient all-reduces plus the 2·(stages−1)·microbatch
+/// stage-boundary transfers the schedule issues per iteration.
+fn pipeline_bound_ns(
+    ir: &ModelIR,
+    comms: &[CommPlan],
+    cfg: &SweepConfig,
+    dim: &NetDim,
+    memo: &mut BoundMemo,
+) -> u64 {
+    let n = ir.num_layers();
+    let (stages, micro, boundary_bytes) = super::scenario_pipeline_shape(ir.summary(), cfg);
+    let stages = stages.clamp(1, n);
+    let costs = ir.costs();
+    let bounds = partition_compute_costs(n, stages, |i| costs[i].fwd_ns);
+    let micro_u = micro as u64;
+    let mut compute = 0u64;
+    let mut comm = 0u64;
+    for s in 0..stages {
+        let stage_costs = &costs[bounds[s]..bounds[s + 1]];
+        // The simulator's stage_time divides the full-batch sums by the
+        // microbatch count and schedules `micro` tasks of that duration,
+        // so the per-iteration busy time keeps the integer rounding.
+        let fwd: u64 = stage_costs.iter().map(|c| c.fwd_ns).sum();
+        let bwd: u64 = stage_costs.iter().map(|c| c.ig_ns + c.wg_ns).sum();
+        let upd: u64 = stage_costs.iter().map(|c| c.update_ns).sum();
+        compute = compute.max(micro_u * (fwd / micro_u) + micro_u * (bwd / micro_u) + upd);
+        // One all-reduce per stage over the layers the comm pass marked
+        // for gradient reduction (the pipeline path drops every other
+        // planned collective — so does the bound).
+        let wg_bytes: u64 = comms[bounds[s]..bounds[s + 1]]
+            .iter()
+            .filter(|p| p.wg.0 == CommType::AllReduce)
+            .map(|p| p.wg.1)
+            .sum();
+        comm += memo.collective(CommType::AllReduce, wg_bytes, dim);
+    }
+    comm += 2 * (stages as u64 - 1) * micro_u * p2p_ns(boundary_bytes / micro_u, dim);
+    compute.max(comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{build_sweep_cache, CollectiveAlgo};
+
+    fn cache_for(model: &str, cfg: &SweepConfig) -> WorkloadCache {
+        build_sweep_cache(&[model.to_string()], cfg, None).unwrap()
+    }
+
+    #[test]
+    fn memo_dedups_collective_latency_lookups() {
+        let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        let cache = cache_for("mlp", &cfg);
+        let mut memo = BoundMemo::new();
+        let sc = |c| Scenario {
+            model: "mlp".into(),
+            parallelism: Parallelism::Data,
+            topology: TopologyKind::Ring,
+            collective: c,
+        };
+        let a = scenario_bound_ns(&sc(CollectiveAlgo::Direct), &cache, &cfg, &mut memo).unwrap();
+        assert_eq!(memo.hits(), memo.lookups() - memo.misses);
+        let cold_misses = memo.misses;
+        // A sibling scenario differing only in collective algorithm
+        // prices the same payloads: every lookup hits the memo.
+        let b = scenario_bound_ns(&sc(CollectiveAlgo::Pipelined), &cache, &cfg, &mut memo).unwrap();
+        assert_eq!(a, b, "collective-algo axis cannot change a single-dim bound");
+        assert_eq!(memo.misses, cold_misses, "sibling scenario should be all memo hits");
+        assert!(memo.hits() > 0);
+    }
+
+    #[test]
+    fn bound_is_positive_and_strategy_dependent() {
+        let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        let cache = cache_for("mlp", &cfg);
+        let mut memo = BoundMemo::new();
+        let mut bound = |p| {
+            let sc = Scenario {
+                model: "mlp".into(),
+                parallelism: p,
+                topology: TopologyKind::Ring,
+                collective: CollectiveAlgo::Pipelined,
+            };
+            scenario_bound_ns(&sc, &cache, &cfg, &mut memo).unwrap()
+        };
+        let data = bound(Parallelism::Data);
+        let model = bound(Parallelism::Model);
+        let pipe = bound(Parallelism::Pipeline);
+        assert!(data > 0 && model > 0 && pipe > 0);
+        // The serial-compute floor holds for every flat strategy.
+        let ir = cache.ir("mlp").unwrap();
+        let floor = passes::serial_compute_ns(ir);
+        assert!(data >= floor && model >= floor);
+    }
+
+    #[test]
+    fn unknown_model_is_a_config_error() {
+        let cfg = SweepConfig::default();
+        let cache = cache_for("mlp", &cfg);
+        let sc = Scenario {
+            model: "made-up".into(),
+            parallelism: Parallelism::Data,
+            topology: TopologyKind::Ring,
+            collective: CollectiveAlgo::Pipelined,
+        };
+        assert!(scenario_bound_ns(&sc, &cache, &cfg, &mut BoundMemo::new()).is_err());
+    }
+}

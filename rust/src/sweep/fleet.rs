@@ -337,6 +337,9 @@ fn fleet_body(
                             translations: report.translations,
                             cache_loads: report.cache_loads,
                             pruned: report.pruned,
+                            scenarios_simulated: report.scenarios_simulated,
+                            scenarios_pruned: report.scenarios_pruned,
+                            bounds_evaluated: report.bounds_evaluated,
                         });
                         done.push((k, report));
                         None
@@ -369,6 +372,9 @@ fn fleet_body(
                             translations: 0,
                             cache_loads: 0,
                             pruned: 0,
+                            scenarios_simulated: 0,
+                            scenarios_pruned: 0,
+                            bounds_evaluated: 0,
                         });
                         statuses.sort_by_key(|s| s.shard.0);
                         let doc = status_doc(
@@ -541,6 +547,10 @@ fn shard_args(
     ];
     if cfg.skip_infeasible {
         v.push("--skip-infeasible".to_string());
+    }
+    if let Some(k) = cfg.top_k {
+        v.push("--top".to_string());
+        v.push(k.to_string());
     }
     v
 }
@@ -720,6 +730,7 @@ mod tests {
         let cfg = SweepConfig {
             zero: ZeroStage::Gradients,
             skip_infeasible: true,
+            top_k: Some(5),
             ..Default::default()
         };
         let args =
@@ -748,6 +759,9 @@ mod tests {
         assert_eq!(opt("--cache-dir"), "/tmp/cache");
         assert_eq!(opt("--json-out"), "/tmp/out.json");
         assert!(args.iter().any(|a| a == "--skip-infeasible"));
+        // Top-K pruning forwards so each shard prunes against its local
+        // top-K (merge truncates the union back to K).
+        assert_eq!(opt("--top"), "5");
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //!    worker carries one [`ScenarioScratch`] (simulator arenas + the
 //!    comm-plan and workload derivation buffers) across its scenarios,
 //!    so steady-state derivation *and* simulation are allocation-free.
+//!    With `SweepConfig::top_k` set (`--top K`), a branch-and-bound
+//!    layer runs first: [`bound::scenario_bound_ns`] computes an
+//!    admissible analytic makespan lower bound per scenario (no DES,
+//!    memoized collective latencies across siblings), scenarios are
+//!    visited most-promising-first in deterministic waves, and any
+//!    scenario whose bound exceeds the current K-th best simulated
+//!    iteration time is skipped — provably without changing the
+//!    reported top-K (CI diffs it against the exhaustive ranking).
 //! 4. [`report::SweepReport`] ranks the results (fastest simulated step
 //!    first, key-ordered tiebreak) and emits text + JSON. Because every
 //!    scenario is simulated deterministically and ranking is a total
@@ -42,11 +50,13 @@
 //! print!("{}", report.render_text());
 //! ```
 
+pub mod bound;
 pub mod cache;
 pub mod fleet;
 pub mod pool;
 pub mod report;
 
+pub use bound::{scenario_bound_ns, BoundMemo};
 pub use cache::{CacheKey, WorkloadCache};
 pub use fleet::{run_fleet, FleetOpts, FleetReport};
 pub use report::{ScenarioResult, ShardStatus, SweepReport};
@@ -256,6 +266,18 @@ pub struct SweepConfig {
     /// the full scenario set and merge back losslessly with
     /// [`SweepReport::merge`] / the `sweep-merge` subcommand.
     pub shard: Option<(usize, usize)>,
+    /// Exact top-K mode (`--top K`): rank only the K fastest scenarios,
+    /// skipping full simulation for any scenario whose analytic lower
+    /// bound ([`bound::scenario_bound_ns`]) exceeds the current K-th
+    /// best simulated iteration time. The reported top-K is
+    /// byte-identical to the exhaustive ranking's first K rows — the
+    /// bound is admissible, so pruning never changes the answer, only
+    /// how much of the grid is simulated. Sharded runs prune against
+    /// their local top-K (a weaker threshold, still exact) and
+    /// [`SweepReport::merge`] re-ranks and truncates the union. Part of
+    /// the config fingerprint: pruned and exhaustive reports must never
+    /// merge, since a pruned shard does not cover its scenario range.
+    pub top_k: Option<usize>,
 }
 
 impl Default for SweepConfig {
@@ -272,6 +294,7 @@ impl Default for SweepConfig {
             zero: ZeroStage::None,
             skip_infeasible: false,
             shard: None,
+            top_k: None,
         }
     }
 }
@@ -302,6 +325,9 @@ impl SweepConfig {
             ("hbm_bytes", Value::Num(self.hbm_bytes as f64)),
             ("zero", Value::Num(zero)),
             ("skip_infeasible", Value::Bool(self.skip_infeasible)),
+            // Prune mode is result-shaping: a pruned report ranks only K
+            // scenarios, so it must never merge with exhaustive shards.
+            ("top_k", self.top_k.map_or(Value::Null, |k| Value::Num(k as f64))),
         ])
     }
 }
@@ -353,6 +379,20 @@ fn scenario_opts(sc: &Scenario, cfg: &SweepConfig) -> TranslateOpts {
     }
 }
 
+/// The pipeline-shaping simulator parameters every sweep scenario uses:
+/// `(stages, microbatches, boundary_bytes)`. One function feeds both
+/// [`run_scenario`]'s `SimConfig` and the analytic bound pass
+/// ([`bound`]) — if the two drifted apart the bound would describe a
+/// different pipeline than the one simulated, silently breaking
+/// admissibility.
+fn scenario_pipeline_shape(
+    summary: &crate::translator::ModelSummary,
+    cfg: &SweepConfig,
+) -> (usize, usize, u64) {
+    let boundary = summary.layers.iter().map(|l| l.out_act_bytes).max().unwrap_or(1 << 20);
+    (cfg.mp_group.max(1), 8, boundary)
+}
+
 /// Per-worker scratch: the simulator arenas plus the workload-derivation
 /// buffers (comm plan + emitted workload), all reused across that
 /// worker's scenarios so steady-state derivation and simulation perform
@@ -390,14 +430,14 @@ fn run_scenario(
     let opts = scenario_opts(sc, cfg);
     passes::plan_comm_into(ir, opts, &mut scratch.comms);
     emit::workload_into(ir, &scratch.comms, opts.parallelism, &mut scratch.workload)?;
-    let summary = ir.summary();
+    let (stages, microbatches, boundary_bytes) = scenario_pipeline_shape(ir.summary(), cfg);
     let sim_cfg = SimConfig {
         network: Network::single(sc.topology, cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns),
         system: sc.collective.system(),
         iterations: cfg.iterations,
-        stages: cfg.mp_group.max(1),
-        microbatches: 8,
-        boundary_bytes: summary.layers.iter().map(|l| l.out_act_bytes).max().unwrap_or(1 << 20),
+        stages,
+        microbatches,
+        boundary_bytes,
         schedule: PipelineSchedule::GPipe,
     };
     let r = simulate_with(&scratch.workload, &sim_cfg, &mut scratch.sim)?;
@@ -413,6 +453,7 @@ fn run_scenario(
         events: r.events,
         mem_per_npu_bytes: mem.total(),
         fits_hbm: mem.fits(cfg.hbm_bytes),
+        bound_ns: 0,
     })
 }
 
@@ -503,22 +544,108 @@ pub fn run_sweep_cached(
         pruned = before - scenarios.len();
     }
     let threads = cfg.threads;
-    let results = pool::run_indexed_with(scenarios.len(), threads, ScenarioScratch::new, |s, i| {
-        run_scenario(&scenarios[i], &cache, cfg, s)
-    })?;
-    let mut ranked = results;
-    ranked.sort_by(ScenarioResult::rank_cmp);
+    let (ranked, scenarios_pruned, bounds_evaluated) = match cfg.top_k {
+        None => {
+            let mut ranked = pool::run_indexed_with(
+                scenarios.len(),
+                threads,
+                ScenarioScratch::new,
+                |s, i| run_scenario(&scenarios[i], &cache, cfg, s),
+            )?;
+            ranked.sort_by(ScenarioResult::rank_cmp);
+            (ranked, 0, 0)
+        }
+        Some(k) => run_top_k(&scenarios, &cache, cfg, k)?,
+    };
     Ok(SweepReport {
         models: models.len(),
         translations: cache.translations(),
         cache_loads: cache.disk_loads(),
         pruned,
+        scenarios_simulated: scenarios.len() - scenarios_pruned,
+        scenarios_pruned,
+        bounds_evaluated,
         config: cfg.fingerprint(),
         grid_scenarios,
         grid_digest: grid,
         shard: cfg.shard,
         ranked,
     })
+}
+
+/// The exact top-K branch-and-bound driver. Bounds every scenario
+/// analytically (serial, memoized — microseconds per scenario), then
+/// simulates in deterministic *waves* ordered most-promising-first:
+/// the first wave fills the top-K candidate set, and each later wave is
+/// the maximal prefix of remaining scenarios whose bound does not
+/// exceed the current K-th best simulated iteration time. When that
+/// prefix is empty, every remaining scenario's bound proves it cannot
+/// enter the top-K, and all of them are skipped at once.
+///
+/// Wave boundaries are a pure function of the (deterministic) bounds
+/// and the (deterministic) simulation results, and each wave fans out
+/// through the same index-ordered pool as the exhaustive path — so the
+/// returned ranking and counters are thread-count independent, and the
+/// ranking is byte-identical to the exhaustive ranking's first K rows.
+///
+/// Returns `(ranked top-K, scenarios pruned, bounds evaluated)`.
+fn run_top_k(
+    scenarios: &[Scenario],
+    cache: &WorkloadCache,
+    cfg: &SweepConfig,
+    k: usize,
+) -> Result<(Vec<ScenarioResult>, usize, usize)> {
+    if k == 0 {
+        return Err(Error::Config("top-K pruning needs K >= 1 (got --top 0)".into()));
+    }
+    let mut memo = bound::BoundMemo::new();
+    let mut bounds = Vec::with_capacity(scenarios.len());
+    for sc in scenarios {
+        bounds.push(bound::scenario_bound_ns(sc, cache, cfg, &mut memo)?);
+    }
+    // Most-promising-first visit order, rank-key tiebreak — fully
+    // deterministic, like everything else the wave boundaries read.
+    let mut order: Vec<usize> = (0..scenarios.len()).collect();
+    order.sort_by(|&a, &b| {
+        bounds[a].cmp(&bounds[b]).then_with(|| scenarios[a].rank_key().cmp(&scenarios[b].rank_key()))
+    });
+    let mut results: Vec<ScenarioResult> = Vec::with_capacity(k.min(scenarios.len()));
+    let mut pos = 0usize;
+    while pos < order.len() {
+        let wave_end = if results.len() < k {
+            // Seed wave: fill the candidate set unconditionally.
+            (pos + (k - results.len())).min(order.len())
+        } else {
+            // results is rank-sorted after every wave; the K-th best
+            // simulated iteration time is the prune threshold. Keep a
+            // scenario iff bound <= threshold: an equal bound could
+            // still win the rank-key tiebreak, so only a strictly
+            // larger bound is safe to skip.
+            let threshold = results[k - 1].iteration_ns;
+            let mut end = pos;
+            while end < order.len() && bounds[order[end]] <= threshold {
+                end += 1;
+            }
+            end
+        };
+        if wave_end == pos {
+            break; // every remaining bound exceeds the threshold
+        }
+        let wave = &order[pos..wave_end];
+        let wave_results =
+            pool::run_indexed_with(wave.len(), cfg.threads, ScenarioScratch::new, |s, i| {
+                run_scenario(&scenarios[wave[i]], cache, cfg, s)
+            })?;
+        for (j, mut r) in wave_results.into_iter().enumerate() {
+            r.bound_ns = bounds[wave[j]];
+            results.push(r);
+        }
+        results.sort_by(ScenarioResult::rank_cmp);
+        pos = wave_end;
+    }
+    let skipped = order.len() - pos;
+    results.truncate(k);
+    Ok((results, skipped, scenarios.len()))
 }
 
 #[cfg(test)]

@@ -57,6 +57,15 @@ pub struct ShardStatus {
     pub cache_loads: usize,
     /// Scenarios the shard pruned as infeasible.
     pub pruned: usize,
+    /// Scenarios the shard fully simulated (equals `scenarios` for an
+    /// exhaustive shard; under `--top K` the ranked list is truncated,
+    /// so this is the honest work count).
+    pub scenarios_simulated: usize,
+    /// Scenarios the shard's top-K bound prune skipped without
+    /// simulation.
+    pub scenarios_pruned: usize,
+    /// Analytic lower bounds the shard evaluated (0 when not pruning).
+    pub bounds_evaluated: usize,
 }
 
 impl ShardStatus {
@@ -70,6 +79,9 @@ impl ShardStatus {
             ("translations", Value::Num(self.translations as f64)),
             ("cache_loads", Value::Num(self.cache_loads as f64)),
             ("pruned", Value::Num(self.pruned as f64)),
+            ("scenarios_simulated", Value::Num(self.scenarios_simulated as f64)),
+            ("scenarios_pruned", Value::Num(self.scenarios_pruned as f64)),
+            ("bounds_evaluated", Value::Num(self.bounds_evaluated as f64)),
             ("stderr_tail", Value::Str(self.stderr_tail.clone())),
         ])
     }
@@ -98,6 +110,12 @@ pub struct ScenarioResult {
     pub mem_per_npu_bytes: u64,
     /// Whether the footprint fits the configured HBM capacity.
     pub fits_hbm: bool,
+    /// The analytic makespan lower bound this scenario was admitted
+    /// under ([`crate::sweep::bound::scenario_bound_ns`]); 0 on
+    /// exhaustive runs. In-memory only — deliberately NOT serialized,
+    /// so a pruned report's ranked rows stay byte-identical to the
+    /// exhaustive ranking's (the prune-equivalence CI contract).
+    pub bound_ns: u64,
 }
 
 impl ScenarioResult {
@@ -131,6 +149,17 @@ pub struct SweepReport {
     /// Scenarios pruned by the `--skip-infeasible` memory check before
     /// reaching the worker pool.
     pub pruned: usize,
+    /// Scenarios fully simulated. Equals `ranked.len()` for exhaustive
+    /// runs; under `--top K` the ranked list is truncated to K, so this
+    /// (not the ranked length) is what `merge` sums to verify every
+    /// grid scenario was accounted for.
+    pub scenarios_simulated: usize,
+    /// Scenarios the top-K bound prune skipped without simulation
+    /// (0 when `top_k` is unset).
+    pub scenarios_pruned: usize,
+    /// Analytic lower bounds evaluated (the whole post-filter scenario
+    /// list under `--top K`, 0 otherwise).
+    pub bounds_evaluated: usize,
     /// The scenario-shaping config fingerprint
     /// ([`super::SweepConfig::fingerprint`]) the results were produced
     /// under — `Value::Null` for reports assembled without one. `merge`
@@ -193,6 +222,9 @@ impl SweepReport {
             ("cache_loads", Value::Num(self.cache_loads as f64)),
             ("scenarios", Value::Num(self.ranked.len() as f64)),
             ("pruned", Value::Num(self.pruned as f64)),
+            ("scenarios_simulated", Value::Num(self.scenarios_simulated as f64)),
+            ("scenarios_pruned", Value::Num(self.scenarios_pruned as f64)),
+            ("bounds_evaluated", Value::Num(self.bounds_evaluated as f64)),
             ("config", self.config.clone()),
             ("grid_scenarios", Value::Num(self.grid_scenarios as f64)),
             ("grid_digest", Value::Str(self.grid_digest.clone())),
@@ -232,6 +264,7 @@ impl SweepReport {
                 events: r.req_u64("events")? as usize,
                 mem_per_npu_bytes: r.req_u64("mem_per_npu_bytes")?,
                 fits_hbm,
+                bound_ns: 0,
             });
         }
         // A present-but-malformed shard field is an error, never silently
@@ -251,6 +284,14 @@ impl SweepReport {
             // Absent in pre-disk-tier reports: default to 0, never fail.
             cache_loads: v.get("cache_loads").and_then(Value::as_usize).unwrap_or(0),
             pruned: r_usize(v, "pruned")?,
+            // Pre-prune reports were always exhaustive: every ranked row
+            // was simulated, nothing was bound-pruned.
+            scenarios_simulated: v
+                .get("scenarios_simulated")
+                .and_then(Value::as_usize)
+                .unwrap_or(ranked.len()),
+            scenarios_pruned: v.get("scenarios_pruned").and_then(Value::as_usize).unwrap_or(0),
+            bounds_evaluated: v.get("bounds_evaluated").and_then(Value::as_usize).unwrap_or(0),
             config: v.get("config").cloned().unwrap_or(Value::Null),
             grid_scenarios: v.get("grid_scenarios").and_then(Value::as_usize).unwrap_or(0),
             grid_digest: v
@@ -346,15 +387,21 @@ impl SweepReport {
                     )
                 }));
             }
-            // Every grid scenario must be accounted for — ranked or
-            // pruned — across the complete shard set; a truncated shard
-            // file must not silently shrink the "full" design space.
-            let covered: usize = shards.iter().map(|s| s.ranked.len() + s.pruned).sum();
+            // Every grid scenario must be accounted for — simulated,
+            // bound-pruned, or infeasible-pruned — across the complete
+            // shard set; a truncated shard file must not silently
+            // shrink the "full" design space. (Counted from the work
+            // counters, not `ranked.len()`: a top-K shard truncates its
+            // ranking but still accounts for every scenario.)
+            let covered: usize = shards
+                .iter()
+                .map(|s| s.scenarios_simulated + s.scenarios_pruned + s.pruned)
+                .sum();
             let expect = shards[0].grid_scenarios;
             if covered != expect {
                 return Err(Error::Config(format!(
                     "shard set covers {covered} of {expect} grid scenarios \
-                     (ranked + pruned) — a shard file is truncated or stale"
+                     (simulated + pruned) — a shard file is truncated or stale"
                 )));
             }
         }
@@ -362,10 +409,16 @@ impl SweepReport {
         let mut translations = 0usize;
         let mut cache_loads = 0usize;
         let mut pruned = 0usize;
+        let mut scenarios_simulated = 0usize;
+        let mut scenarios_pruned = 0usize;
+        let mut bounds_evaluated = 0usize;
         for s in shards {
             translations += s.translations;
             cache_loads += s.cache_loads;
             pruned += s.pruned;
+            scenarios_simulated += s.scenarios_simulated;
+            scenarios_pruned += s.scenarios_pruned;
+            bounds_evaluated += s.bounds_evaluated;
             ranked.extend(s.ranked.iter().cloned());
         }
         let mut keys = BTreeSet::new();
@@ -378,12 +431,20 @@ impl SweepReport {
             }
         }
         ranked.sort_by(ScenarioResult::rank_cmp);
+        let config = shards.first().map_or(Value::Null, |s| s.config.clone());
+        // Top-K shards each carry their local K best; the exact global
+        // top-K is the re-ranked union truncated back to K (every
+        // global winner is a local winner on its own shard, so nothing
+        // is lost). The config-equality guard above already ensured a
+        // uniform top_k across inputs.
+        if let Some(k) = config.get("top_k").and_then(Value::as_usize) {
+            ranked.truncate(k);
+        }
         let mut model_names = BTreeSet::new();
         for r in &ranked {
             model_names.insert(r.scenario.model.as_str());
         }
         let models = model_names.len();
-        let config = shards.first().map_or(Value::Null, |s| s.config.clone());
         let grid_scenarios = shards.first().map_or(0, |s| s.grid_scenarios);
         let grid_digest = shards.first().map_or_else(String::new, |s| s.grid_digest.clone());
         Ok(SweepReport {
@@ -391,6 +452,9 @@ impl SweepReport {
             translations,
             cache_loads,
             pruned,
+            scenarios_simulated,
+            scenarios_pruned,
+            bounds_evaluated,
             config,
             grid_scenarios,
             grid_digest,
@@ -434,6 +498,13 @@ impl SweepReport {
                 self.pruned
             ));
         }
+        if self.scenarios_pruned > 0 {
+            out.push_str(&format!(
+                "top-K bound prune: {} scenario(s) simulated, {} skipped by \
+                 analytic lower bound ({} bounds evaluated)\n",
+                self.scenarios_simulated, self.scenarios_pruned, self.bounds_evaluated
+            ));
+        }
         out
     }
 }
@@ -462,12 +533,16 @@ mod tests {
             events: 100,
             mem_per_npu_bytes: 1 << 30,
             fits_hbm: true,
+            bound_ns: 0,
         };
         SweepReport {
             models: 2,
             translations: 2,
             cache_loads: 0,
             pruned: 0,
+            scenarios_simulated: 2,
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
             config: crate::sweep::SweepConfig::default().fingerprint(),
             grid_scenarios: 2,
             grid_digest: String::new(),
@@ -528,6 +603,9 @@ mod tests {
             translations: 1,
             cache_loads: 0,
             pruned: 1,
+            scenarios_simulated: 1,
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
             config: full.config.clone(),
             grid_scenarios: 5,
             grid_digest: "g".into(),
@@ -539,6 +617,9 @@ mod tests {
             translations: 1,
             cache_loads: 1,
             pruned: 2,
+            scenarios_simulated: 1,
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
             config: full.config.clone(),
             grid_scenarios: 5,
             grid_digest: "g".into(),
@@ -569,6 +650,9 @@ mod tests {
             translations: ranked.len(),
             cache_loads: 0,
             pruned: 0,
+            scenarios_simulated: ranked.len(),
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
             config: full.config.clone(),
             grid_scenarios: 2,
             grid_digest: "g".into(),
@@ -647,6 +731,83 @@ mod tests {
     }
 
     #[test]
+    fn merge_rejects_mixing_pruned_and_exhaustive_shards() {
+        // A pruned shard truncates its ranking to K — merging it with an
+        // exhaustive shard would present partial coverage as the full
+        // design space. The top_k fingerprint stamp makes that a config
+        // mismatch, caught by the existing guard.
+        let a = sample();
+        let mut b = sample();
+        b.ranked.clear();
+        b.scenarios_simulated = 2;
+        b.config =
+            crate::sweep::SweepConfig { top_k: Some(1), ..Default::default() }.fingerprint();
+        let err = SweepReport::merge(&[a, b]).unwrap_err();
+        assert!(err.to_string().contains("different sweep configuration"), "got: {err}");
+    }
+
+    #[test]
+    fn merge_truncates_a_top_k_shard_union_and_checks_work_counters() {
+        let full = sample();
+        let top1 = crate::sweep::SweepConfig { top_k: Some(1), ..Default::default() }.fingerprint();
+        // Two pruned shards of a 4-scenario grid: each simulated some,
+        // bound-pruned the rest, and ranks only its local best.
+        let shard = |k: usize, sim: usize, bp: usize, ranked: Vec<ScenarioResult>| SweepReport {
+            models: 1,
+            translations: 1,
+            cache_loads: 0,
+            pruned: 0,
+            scenarios_simulated: sim,
+            scenarios_pruned: bp,
+            bounds_evaluated: sim + bp,
+            config: top1.clone(),
+            grid_scenarios: 4,
+            grid_digest: "g".into(),
+            shard: Some((k, 2)),
+            ranked,
+        };
+        let merged = SweepReport::merge(&[
+            shard(1, 1, 1, vec![full.ranked[0].clone()]),
+            shard(2, 2, 0, vec![full.ranked[1].clone()]),
+        ])
+        .unwrap();
+        // Union of local winners re-ranked, truncated back to K = 1.
+        assert_eq!(merged.ranked.len(), 1);
+        assert_eq!(merged.ranked[0].scenario.model, "mlp");
+        assert_eq!(merged.scenarios_simulated, 3);
+        assert_eq!(merged.scenarios_pruned, 1);
+        assert_eq!(merged.bounds_evaluated, 4);
+        // The coverage check reads the work counters, not ranked.len():
+        // a shard whose counters don't cover its range is rejected.
+        let err = SweepReport::merge(&[
+            shard(1, 1, 1, vec![full.ranked[0].clone()]),
+            shard(2, 1, 0, vec![full.ranked[1].clone()]),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("covers 3 of 4 grid scenarios"), "got: {err}");
+    }
+
+    #[test]
+    fn bound_prune_counters_show_in_both_renderings() {
+        let mut r = sample();
+        r.scenarios_simulated = 2;
+        r.scenarios_pruned = 7;
+        r.bounds_evaluated = 9;
+        let text = r.render_text();
+        assert!(text.contains("top-K bound prune: 2 scenario(s) simulated, 7 skipped"));
+        let v = crate::json::parse(&r.to_json().to_json_pretty()).unwrap();
+        assert_eq!(v.get("scenarios_simulated").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("scenarios_pruned").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("bounds_evaluated").unwrap().as_u64(), Some(9));
+        // bound_ns never leaks into the serialized ranked rows — pruned
+        // and exhaustive reports must stay byte-identical there.
+        r.ranked[0].bound_ns = 123;
+        let with = r.to_json().to_json_pretty();
+        r.ranked[0].bound_ns = 0;
+        assert_eq!(r.to_json().to_json_pretty(), with);
+    }
+
+    #[test]
     fn shard_status_json_carries_the_failure_evidence() {
         let s = ShardStatus {
             shard: (2, 4),
@@ -657,12 +818,18 @@ mod tests {
             translations: 0,
             cache_loads: 2,
             pruned: 1,
+            scenarios_simulated: 5,
+            scenarios_pruned: 3,
+            bounds_evaluated: 8,
         };
         let v = s.to_json();
         assert_eq!(v.get("shard").unwrap().as_str(), Some("2/4"));
         assert_eq!(v.get("attempts").unwrap().as_u64(), Some(3));
         assert_eq!(v.get("exit_code").unwrap().as_u64(), Some(42));
         assert_eq!(v.get("translations").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("scenarios_simulated").unwrap().as_u64(), Some(5));
+        assert_eq!(v.get("scenarios_pruned").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("bounds_evaluated").unwrap().as_u64(), Some(8));
         assert_eq!(v.get("stderr_tail").unwrap().as_str(), Some("failpoint: injected crash"));
         // Signal deaths have no exit code: null, not a fake number.
         let killed = ShardStatus { exit_code: None, ..s };

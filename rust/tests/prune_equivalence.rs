@@ -1,0 +1,147 @@
+//! Branch-and-bound acceptance: the analytic lower bound is admissible
+//! (never exceeds the simulated iteration time), and `--top K` pruning
+//! is *exact* — its ranked report is byte-identical to the exhaustive
+//! ranking's first K rows, under any thread count, and through the
+//! process-level `sweep fleet` orchestrator.
+
+use modtrans::sim::TopologyKind;
+use modtrans::sweep::{
+    build_sweep_cache, run_fleet, run_sweep, scenario_bound_ns, BoundMemo, CollectiveAlgo,
+    FleetOpts, SweepConfig, SweepGrid, SweepReport,
+};
+use modtrans::workload::Parallelism;
+use std::path::PathBuf;
+
+const ALL_PARALLELISMS: [Parallelism; 5] = [
+    Parallelism::Data,
+    Parallelism::Model,
+    Parallelism::HybridDataModel,
+    Parallelism::HybridModelData,
+    Parallelism::Pipeline,
+];
+
+/// Ranked rows of a report as JSON values — byte-level currency for the
+/// prune-equivalence comparisons ("rank" fields included, so a pruned
+/// report must also number its rows exactly like the exhaustive prefix).
+fn ranked_rows(r: &SweepReport) -> Vec<modtrans::json::Value> {
+    r.to_json().get("ranked").and_then(|v| v.as_arr()).expect("ranked array").to_vec()
+}
+
+#[test]
+fn bound_is_admissible_across_zoo_models_strategies_and_batches() {
+    // Model families spanning the zoo (MLP, conv net, transformer) ×
+    // every parallelism strategy × contrasting topologies, at two
+    // batches (two different fitted compute-cost tables).
+    let grid = SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into(), "gpt2-tiny".into()],
+        parallelisms: ALL_PARALLELISMS.to_vec(),
+        topologies: vec![TopologyKind::Ring, TopologyKind::FullyConnected],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    };
+    for batch in [4i64, 32] {
+        let cfg = SweepConfig { batch, npus: 8, threads: 2, ..Default::default() };
+        let report = run_sweep(&grid, &cfg).unwrap();
+        assert_eq!(report.ranked.len(), grid.expand().len());
+        let cache = build_sweep_cache(&grid.unique_models(), &cfg, None).unwrap();
+        let mut memo = BoundMemo::new();
+        for r in &report.ranked {
+            let bound = scenario_bound_ns(&r.scenario, &cache, &cfg, &mut memo).unwrap();
+            assert!(bound > 0, "degenerate bound for {}", r.scenario.key());
+            assert!(
+                bound <= r.iteration_ns,
+                "inadmissible bound for {} at batch {batch}: bound {} ns > simulated {} ns",
+                r.scenario.key(),
+                bound,
+                r.iteration_ns
+            );
+        }
+    }
+}
+
+#[test]
+fn top_k_is_byte_identical_to_the_exhaustive_prefix_under_1_and_8_threads() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model, Parallelism::Pipeline],
+        topologies: vec![
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+            TopologyKind::Switch,
+        ],
+        collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
+    };
+    let n = grid.expand().len();
+    let base = SweepConfig { batch: 4, npus: 8, threads: 1, ..Default::default() };
+    let full = run_sweep(&grid, &base).unwrap();
+    let full_rows = ranked_rows(&full);
+    for threads in [1usize, 8] {
+        for k in [1usize, 4, n + 5] {
+            let cfg = SweepConfig { threads, top_k: Some(k), ..base };
+            let top = run_sweep(&grid, &cfg).unwrap();
+            assert_eq!(
+                ranked_rows(&top),
+                full_rows[..k.min(n)],
+                "top-{k} on {threads} thread(s) diverged from the exhaustive prefix"
+            );
+            // Every grid scenario is accounted for: simulated or skipped
+            // on the strength of its bound — and every bound was priced.
+            assert_eq!(top.scenarios_simulated + top.scenarios_pruned, n);
+            assert_eq!(top.bounds_evaluated, n);
+            if k >= n {
+                assert_eq!(top.scenarios_pruned, 0, "K beyond the grid cannot prune");
+            }
+        }
+        // The smallest K must actually skip work on this grid — the
+        // fast path is exercised, not just tolerated (the same floor
+        // CI's check_prune.py holds the determinism grid to).
+        let cfg = SweepConfig { threads, top_k: Some(1), ..base };
+        let top = run_sweep(&grid, &cfg).unwrap();
+        assert!(top.scenarios_pruned > 0, "top-1 pruned nothing across {n} scenarios");
+    }
+}
+
+#[test]
+fn fleet_top_k_matches_the_monolithic_exhaustive_prefix() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    };
+    let n = grid.expand().len();
+    let k = 3usize;
+    let exhaustive =
+        run_sweep(&grid, &SweepConfig { batch: 4, npus: 8, ..Default::default() }).unwrap();
+    let cfg = SweepConfig { batch: 4, npus: 8, threads: 2, top_k: Some(k), ..Default::default() };
+    let scratch = |tag: &str| {
+        let p = std::env::temp_dir().join(format!("mt_prune_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    };
+    let opts = FleetOpts {
+        procs: 4,
+        binary: Some(PathBuf::from(env!("CARGO_BIN_EXE_modtrans"))),
+        cache_dir: Some(scratch("cache")),
+        work_dir: Some(scratch("work")),
+        ..Default::default()
+    };
+    let fleet = run_fleet(&grid, &cfg, &opts).unwrap();
+    // Each shard pruned against its *local* top-K (a weaker threshold,
+    // still exact); the merge re-ranks the union of local winners and
+    // truncates back to K — which must be the global exhaustive prefix.
+    assert_eq!(
+        ranked_rows(&fleet.merged),
+        ranked_rows(&exhaustive)[..k],
+        "fleet top-{k} diverged from the monolithic exhaustive prefix"
+    );
+    assert_eq!(fleet.merged.scenarios_simulated + fleet.merged.scenarios_pruned, n);
+    assert_eq!(fleet.merged.bounds_evaluated, n);
+    // The per-shard work counters surface in the status records too.
+    let simulated: usize = fleet.shards.iter().map(|s| s.scenarios_simulated).sum();
+    let pruned: usize = fleet.shards.iter().map(|s| s.scenarios_pruned).sum();
+    assert_eq!(simulated, fleet.merged.scenarios_simulated);
+    assert_eq!(pruned, fleet.merged.scenarios_pruned);
+    for d in [opts.cache_dir.as_ref(), opts.work_dir.as_ref()].into_iter().flatten() {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

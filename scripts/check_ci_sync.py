@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""CI/Makefile drift check (CI `check-ci-sync` job / `make check-ci-sync`).
+
+Usage: check_ci_sync.py [WORKFLOW_YML] [MAKEFILE]
+
+`make ci` is documented as reproducing the full CI matrix locally, and
+it did — until a job was added to .github/workflows/ci.yml without a
+matching make target. This check pins the two in sync, in both
+directions:
+
+  * every job in ci.yml must map to a prerequisite of the `ci` target
+    (same name, or via ALIASES for jobs whose local target is named
+    differently);
+  * every prerequisite of `ci` must map back to a ci.yml job, so dead
+    local targets can't linger after a job is removed.
+
+Jobs that only make sense against PR metadata (EXEMPT) have no local
+equivalent and are skipped. The workflow YAML is parsed structurally
+(top-level keys of the `jobs:` mapping) so no YAML library is needed.
+"""
+
+import re
+import sys
+
+# CI job name -> make target, where the names differ.
+ALIASES = {
+    # The job downloads base-branch artifacts and diffs them; the local
+    # target runs the gate logic's unit tests (the runnable part).
+    "perf-trajectory": "perf-gate-test",
+}
+
+# CI jobs with no local equivalent: they inspect PR metadata (the diff
+# against the base branch), which doesn't exist outside a pull request.
+EXEMPT = {"changelog"}
+
+
+def workflow_jobs(path):
+    jobs = []
+    in_jobs = False
+    with open(path) as f:
+        for line in f:
+            if not in_jobs:
+                in_jobs = line.rstrip("\n") == "jobs:"
+                continue
+            if line.strip() and not line.startswith(" "):
+                break  # next top-level key ends the jobs mapping
+            m = re.match(r"^  ([A-Za-z0-9_-]+):\s*(#.*)?$", line)
+            if m:
+                jobs.append(m.group(1))
+    return jobs
+
+
+def make_ci_prereqs(path):
+    with open(path) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        if not line.startswith("ci:"):
+            continue
+        dep_text = line[len("ci:"):]
+        while dep_text.rstrip("\n").endswith("\\"):
+            i += 1
+            dep_text = dep_text.rstrip("\n")[:-1] + " " + lines[i]
+        return dep_text.split()
+    sys.exit(f"{path}: no `ci:` target found")
+
+
+def main(argv):
+    workflow = argv[0] if len(argv) > 0 else ".github/workflows/ci.yml"
+    makefile = argv[1] if len(argv) > 1 else "Makefile"
+    jobs = workflow_jobs(workflow)
+    if not jobs:
+        sys.exit(f"{workflow}: no jobs found — parser or workflow broken")
+    prereqs = make_ci_prereqs(makefile)
+
+    problems = []
+    for job in jobs:
+        if job in EXEMPT:
+            continue
+        target = ALIASES.get(job, job)
+        if target not in prereqs:
+            problems.append(
+                f"CI job '{job}' has no `make ci` step (expected target '{target}')"
+            )
+    wanted = {ALIASES.get(j, j) for j in jobs if j not in EXEMPT}
+    for target in prereqs:
+        if target not in wanted:
+            problems.append(
+                f"`make ci` runs '{target}' but no CI job corresponds to it"
+            )
+
+    if problems:
+        for p in problems:
+            print(f"ERROR: {p}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"ci sync OK: {len(jobs)} CI job(s) <-> {len(prereqs)} `make ci` "
+        f"step(s) ({len(EXEMPT & set(jobs))} exempt)"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Prune-equivalence check (CI `sweep-determinism` job / `make sweep-determinism`).
+
+Usage: check_prune.py EXHAUSTIVE_JSON PRUNED_JSON K
+
+Asserts the `--top K` branch-and-bound contract:
+  * the pruned report's ranked array is byte-for-byte the first K rows
+    of the exhaustive ranking (canonical JSON serialization) — pruning
+    is an exact mode, never a heuristic;
+  * scenarios_simulated + scenarios_pruned in the pruned report covers
+    the full grid (every scenario was either simulated or provably
+    dominated by its analytic lower bound);
+  * scenarios_pruned > 0 — the bound actually skipped work on this
+    grid, so the fast path is exercised, not just tolerated;
+  * the exhaustive report simulated everything and pruned nothing.
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    if len(argv) != 3:
+        sys.exit(__doc__.strip())
+    full_path, top_path, k_arg = argv
+    k = int(k_arg)
+    with open(full_path) as f:
+        full = json.load(f)
+    with open(top_path) as f:
+        top = json.load(f)
+
+    full_prefix = json.dumps(full["ranked"][:k], sort_keys=True, indent=1)
+    top_ranked = json.dumps(top["ranked"], sort_keys=True, indent=1)
+    assert top_ranked == full_prefix, (
+        f"--top {k} ranking is not byte-identical to the exhaustive top-{k} "
+        f"({len(top['ranked'])} vs {min(k, len(full['ranked']))} scenarios)"
+    )
+
+    grid = top["grid_scenarios"]
+    simulated = top["scenarios_simulated"]
+    pruned = top["scenarios_pruned"]
+    assert simulated + pruned == grid, (
+        f"work accounting broken: {simulated} simulated + {pruned} pruned "
+        f"!= {grid} grid scenarios"
+    )
+    assert pruned > 0, (
+        f"--top {k} pruned 0 of {grid} scenarios — the bound never skipped work"
+    )
+    assert top["bounds_evaluated"] == grid, (
+        f"bound pass evaluated {top['bounds_evaluated']} of {grid} scenarios"
+    )
+    assert full["scenarios_pruned"] == 0 and full["scenarios_simulated"] == grid, (
+        "exhaustive report unexpectedly pruned "
+        f"({full['scenarios_simulated']} simulated, {full['scenarios_pruned']} pruned)"
+    )
+    print(
+        f"prune equivalence OK: top-{k} byte-identical, "
+        f"{simulated}/{grid} simulated, {pruned} skipped by the analytic bound"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
