@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-BENCHES := collectives table_layer_extraction sim_end_to_end fig6_translation_time sweep_throughput
+BENCHES := collectives table_layer_extraction sim_end_to_end fig6_translation_time sweep_throughput event_queue
 
 .PHONY: ci build test fmt clippy docs hot-path-alloc-guard bench-smoke sweep-determinism \
 	fleet-smoke perf-gate-test check-ci-sync clean
@@ -31,12 +31,13 @@ docs:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --workspace
 
 # The allocation-free invariant: no label-string allocation in the sim
-# hot paths (graph builders + collective router) or the sweep's
-# workload-derivation hot path (IR comm pass + workload emitter),
-# non-test regions only.
+# hot paths (graph builders + the calendar-queue event core + collective
+# router) or the sweep's workload-derivation hot path (IR comm pass +
+# workload emitter), non-test regions only.
 hot-path-alloc-guard:
 	@fail=0; \
 	for f in rust/src/sim/training/mod.rs rust/src/sim/system/mod.rs \
+	         rust/src/sim/queue.rs \
 	         rust/src/ir/passes.rs rust/src/ir/emit/sim.rs; do \
 		if sed -n '1,/#\[cfg(test)\]/p' $$f | grep -nE 'format!|to_string\(|to_owned\(|String::(new|from|with_capacity)'; then \
 			echo "per-task string allocation found in $$f hot path"; fail=1; \

@@ -1,0 +1,120 @@
+//! E8 — event-queue micro-bench: push/pop throughput of the engine's
+//! completion queue, binary heap vs calendar queue, on the exact access
+//! pattern the DES run loop produces.
+//!
+//! Both structures are driven by the same pre-generated monotone
+//! schedule (fixed `util::rng` seed): hold the queue at a steady-state
+//! size matching the live-resource count — the engine enqueues at most
+//! one completion per busy resource — and for each popped event push a
+//! replacement at `popped_time + duration`. Two duration regimes:
+//!
+//! * `spread` — durations drawn from a wide range, so completion times
+//!   interleave (the general DAG shape);
+//! * `waves` — durations drawn from a tiny set of common values, so
+//!   many completions share a timestamp (the synchronous-training
+//!   shape), where the calendar queue's batch pop amortizes a whole
+//!   wave into one bucket operation.
+//!
+//! Emits `BENCH_event_queue.json` for the CI-tracked perf trajectory.
+
+use modtrans::sim::CalendarQueue;
+use modtrans::util::bench::{black_box, Bench, BenchReport};
+use modtrans::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+const QUEUE_DEPTH: usize = 64; // live resources in the 64-lane engine bench
+const EVENTS: usize = 200_000;
+
+/// Pre-generated durations: the i-th pop schedules its replacement
+/// `durs[i]` ns after the popped time. Generation is outside the timed
+/// region so both structures replay identical schedules.
+fn durations(seed: u64, wavy: bool) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..EVENTS)
+        .map(|_| {
+            if wavy {
+                // Four common durations → heavy same-timestamp waves.
+                [100u64, 100, 250, 1000][rng.below(4) as usize]
+            } else {
+                1 + rng.below(10_000)
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    println!("## event-queue throughput (depth {QUEUE_DEPTH}, {EVENTS} events per sample)\n");
+    let mut report = BenchReport::new("event_queue");
+    let bench = Bench::new(3, 20);
+
+    for (regime, wavy) in [("spread", false), ("waves", true)] {
+        let durs = durations(7 + wavy as u64, wavy);
+
+        // Binary heap reference: the pre-switch engine core.
+        let s = report.run(&bench, &format!("heap_{regime}_pushpop"), |_| {
+            let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> =
+                BinaryHeap::with_capacity(QUEUE_DEPTH);
+            let mut seq = 0u64;
+            for i in 0..QUEUE_DEPTH {
+                heap.push(Reverse((durs[i], seq, i)));
+                seq += 1;
+            }
+            let mut checksum = 0u64;
+            for d in &durs[QUEUE_DEPTH..] {
+                let Reverse((t, _, id)) = heap.pop().unwrap();
+                checksum ^= t;
+                heap.push(Reverse((t + d, seq, id)));
+                seq += 1;
+            }
+            black_box(checksum);
+        });
+        println!("  heap/{regime}:     {:>6.2}M events/s", EVENTS as f64 / s.mean / 1e6);
+
+        // Calendar queue, single-event pops (pure data-structure delta).
+        let s = report.run(&bench, &format!("calendar_{regime}_pushpop"), |_| {
+            let mut q = CalendarQueue::new();
+            let mut seq = 0u64;
+            for i in 0..QUEUE_DEPTH {
+                q.push(durs[i], seq, i);
+                seq += 1;
+            }
+            let mut checksum = 0u64;
+            for d in &durs[QUEUE_DEPTH..] {
+                let (t, _, id) = q.pop().unwrap();
+                checksum ^= t;
+                q.push(t + d, seq, id);
+                seq += 1;
+            }
+            black_box(checksum);
+        });
+        println!("  calendar/{regime}: {:>6.2}M events/s", EVENTS as f64 / s.mean / 1e6);
+
+        // Calendar queue, batch pops: how the engine actually drains it.
+        let s = report.run(&bench, &format!("calendar_{regime}_batch_pop"), |_| {
+            let mut q = CalendarQueue::new();
+            let mut batch = Vec::new();
+            let mut seq = 0u64;
+            for i in 0..QUEUE_DEPTH {
+                q.push(durs[i], seq, i);
+                seq += 1;
+            }
+            let mut checksum = 0u64;
+            let mut di = QUEUE_DEPTH;
+            while di < EVENTS {
+                let t = q.pop_batch_into(&mut batch).unwrap();
+                checksum ^= t;
+                for &id in batch.iter().take(EVENTS - di) {
+                    q.push(t + durs[di.min(EVENTS - 1)], seq, id);
+                    seq += 1;
+                    di += 1;
+                }
+            }
+            black_box(checksum);
+        });
+        println!("  calendar/{regime} (batch): {:>6.2}M events/s", EVENTS as f64 / s.mean / 1e6);
+    }
+
+    let path = report.write().unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -7,8 +7,8 @@
 
 use modtrans::compute::SystolicCompute;
 use modtrans::sim::{
-    simulate, simulate_with, Engine, Network, Policy, SimConfig, SimScratch, TaskGraph, TaskTag,
-    TopologyKind,
+    simulate, simulate_with, Engine, Network, Policy, RunScratch, SimConfig, SimScratch, TaskGraph,
+    TaskTag, TopologyKind,
 };
 use modtrans::translator::{extract, to_workload, TranslateOpts};
 use modtrans::util::bench::{black_box, Bench, BenchReport, Stats};
@@ -100,6 +100,17 @@ fn main() {
     report.add(Stats::from_samples("engine_64lane_200k_build", vec![build.as_secs_f64()]));
     report.add(Stats::from_samples("engine_64lane_200k_run", vec![run.as_secs_f64()]));
 
+    // Calendar-queue pair: the identical graph, properly multi-sampled
+    // through a warm RunScratch (the sweep steady state). The legacy
+    // single-sample series above keeps its pre-switch history; this one
+    // starts the calendar-queue trajectory with gate-armable sample
+    // counts.
+    let mut scratch = RunScratch::default();
+    report.run(&bench, "engine_64lane_200k_run_calendar_queue", |_| {
+        eng.run_into(&g, &mut scratch).unwrap();
+        black_box(scratch.schedule.makespan_ns);
+    });
+
     // Contended case: one resource, all tasks ready at t=0 (the shape a
     // single network dimension sees when every layer's gradient sync
     // queues at once). FIFO pops here are where a naive Vec::remove(0)
@@ -121,6 +132,15 @@ fn main() {
         s.events as f64 / run.as_secs_f64() / 1e6
     );
     report.add(Stats::from_samples("engine_contended_100k_run", vec![run.as_secs_f64()]));
+
+    // Calendar-queue pair for the contended shape: every completion wave
+    // is a single event here, so this series isolates the queue's
+    // push/pop cost (no batching win, pure data-structure delta).
+    let mut scratch = RunScratch::default();
+    report.run(&bench, "engine_contended_100k_run_calendar_queue", |_| {
+        eng.run_into(&g, &mut scratch).unwrap();
+        black_box(scratch.schedule.makespan_ns);
+    });
 
     // Torus-topology scaling of a full simulation (bonus series) — slow
     // 10 GB/s links so gradient traffic escapes the overlap window and

@@ -72,6 +72,17 @@ fn main() {
         r.scenarios_simulated, r.scenarios_pruned
     );
 
+    // Calendar-queue pair: the same exhaustive widened grid. The legacy
+    // shared-IR series above keeps its pre-switch (binary-heap engine)
+    // history; this series starts the calendar-queue trajectory fresh,
+    // so gate-armed baselines never mix the two event cores.
+    let cfg = SweepConfig { threads: 1, ..Default::default() };
+    let s =
+        report.run(&bench, &format!("sweep_{wide_n}_scenarios_1thread_calendar_queue"), |_| {
+            black_box(run_sweep(&wide, &cfg).unwrap());
+        });
+    println!("  -> {:.1} scenarios/s on the calendar-queue engine", wide_n as f64 / s.mean);
+
     // Persistent-cache trajectory: cold (extract + spill to disk) vs warm
     // (load-only — zero translations). The delta between the two series
     // is what `--cache-dir` buys every repeat sweep of the same grid.

@@ -196,26 +196,52 @@
 //!
 //! # Performance
 //!
-//! The simulate hot path — graph construction and the event loop — is
-//! **allocation-free in steady state** (only the report assembly at the
-//! end of a scenario allocates its O(layers)/O(resources) output
-//! structures):
+//! The scenario hot path is data-oriented from event pop to top-K
+//! triage, and **allocation-free in steady state** (only the report
+//! assembly at the end of a scenario allocates its
+//! O(layers)/O(resources) output structures):
 //!
+//! * **Calendar-queue event core.** Completion events live in a
+//!   monotone integer-time [`sim::CalendarQueue`] (64-slot windowed
+//!   wheel, occupancy bitmask, adaptive bucket width, lazy per-bucket
+//!   sort) instead of a comparison-based binary heap. The invariant it
+//!   rests on: simulation time never goes backwards, so every push is
+//!   `>=` the last popped time and the queue keeps a one-way cursor
+//!   rather than a general priority structure. Pop order remains
+//!   byte-identical to a `(finish_time, seq, task)` min-heap —
+//!   randomized differential tests in `sim/queue.rs` and the goldens in
+//!   `tests/determinism_regression.rs` pin it.
+//! * **Batched dispatch.** The run loop drains *all* events sharing the
+//!   minimum timestamp in one queue operation and processes the wave
+//!   event by event, dispatching each event's dirty resources exactly
+//!   once (deduplicated; within-wave order stays incremental, which
+//!   LIFO backlogs and the `seq` tiebreak require — see `sim::engine`'s
+//!   module docs for why coarser batching would change schedules).
+//! * **SoA slabs.** The per-task fields the event loop reads —
+//!   durations and resource ids — are mirrored into dense
+//!   structure-of-arrays slabs ([`sim::TaskGraph::durations`] /
+//!   [`sim::TaskGraph::resources`]), so dispatch indexes flat `u64`
+//!   arrays instead of striding through full task records.
 //! * Tasks carry a compact `Copy` [`sim::TaskTag`]
 //!   (iteration × phase × layer × comm annotation) instead of a label
 //!   `String`; human-readable labels are rendered only on demand (error
 //!   paths, reports). CI's `hot-path-alloc-guard` job greps the graph
-//!   builders and the collective router to keep it that way.
+//!   builders, the calendar queue and the collective router to keep it
+//!   that way.
 //! * Dependency lists live in one shared pool inside [`sim::TaskGraph`]
 //!   (CSR layout), not in per-task `Vec`s; the run loop's pending
-//!   counts, dependents CSR, event heap and spans live in a reusable
-//!   [`sim::RunScratch`].
+//!   counts, dependents CSR, calendar queue, wave batch and spans live
+//!   in a reusable [`sim::RunScratch`].
 //! * [`sim::SimScratch`] bundles graph + engine + run buffers + the
 //!   graph builders' temporaries. The **reuse contract**: any sequence
 //!   of workloads and configs may go through one scratch via
 //!   [`sim::simulate_with`], and every result is identical to a
 //!   fresh-scratch run — scratch contents never leak into results
 //!   (regression-tested in `tests/determinism_regression.rs`).
+//! * On the sweep layer, `--top K`'s analytic bound pass fans out over
+//!   the worker pool with one memo per worker — deterministic because
+//!   the bound is a pure function (see [`sweep::bound`]) — so triage
+//!   scales with cores just like simulation does.
 //! * Workload derivation is allocation-free too: each sweep worker
 //!   carries one [`sweep::ScenarioScratch`] (a `SimScratch` plus the
 //!   comm-plan buffer and an emitted-workload buffer whose layer slots

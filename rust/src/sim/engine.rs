@@ -9,6 +9,30 @@
 //! at a time and order their backlog FIFO or LIFO — the two communication
 //! scheduling policies the paper's §2.2 describes.
 //!
+//! # Event core
+//!
+//! Completions are ordered by a monotone integer-time
+//! [`CalendarQueue`](super::queue::CalendarQueue) rather than a
+//! comparison-based binary heap, and the run loop is *batched*: every
+//! iteration drains **all** events sharing the minimum timestamp in one
+//! queue operation, then processes that completion wave event by event.
+//! Within a wave the engine still dispatches incrementally — the
+//! completing task's resource first, then each newly-woken dependent's
+//! resource in first-wake order, deduplicated per event — because
+//! deferring dispatch to the end of a wave would be *unsound*: a LIFO
+//! backlog must see each wake as it happens (incremental dispatch starts
+//! the first-woken task; a deferred pass would start the last-woken),
+//! and the dispatch counter `seq` is the pop-order tiebreaker among
+//! equal finish times, so even all-FIFO configurations would reorder.
+//! The dedup is exact: repeated dispatch calls on an already-busy
+//! resource were always no-ops.
+//!
+//! Per-task state read on the hot path — durations and resource ids —
+//! lives in structure-of-arrays slabs inside the [`TaskGraph`]
+//! ([`TaskGraph::durations`] / [`TaskGraph::resources`]), so `dispatch`
+//! and the wake loop index two dense `u64`/`usize` arrays instead of
+//! striding through 40-byte [`Task`] records.
+//!
 //! # Allocation discipline
 //!
 //! The hot path is allocation-free in steady state:
@@ -17,16 +41,15 @@
 //!   their dependency lists live in one shared pool inside the
 //!   [`TaskGraph`] (CSR layout) instead of a per-task `Vec`.
 //! * All O(tasks) run-loop buffers (pending counts, the dependents CSR,
-//!   the completion-event heap, per-task spans) live in a reusable
-//!   [`RunScratch`]; [`Engine::run_into`] only grows them, never
-//!   reallocates once warm.
+//!   the calendar queue, the wave batch, the dirty-resource set,
+//!   per-task spans) live in a reusable [`RunScratch`];
+//!   [`Engine::run_into`] only grows them, never reallocates once warm.
 //! * [`Engine`] resource slots (and their backlog vectors) are reused
 //!   across [`Engine::reset`] / [`Engine::add_resource`] cycles.
 
+use super::queue::CalendarQueue;
 use super::tag::TaskTag;
 use crate::error::{Error, Result};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 /// Index of a task in its [`TaskGraph`].
 pub type TaskId = usize;
@@ -64,6 +87,12 @@ pub struct Task {
 pub struct TaskGraph {
     tasks: Vec<Task>,
     dep_pool: Vec<TaskId>,
+    /// SoA mirror of `tasks[i].duration_ns` — the only per-task field
+    /// `dispatch` reads, kept dense so the run loop never strides
+    /// through full `Task` records.
+    durs: Vec<u64>,
+    /// SoA mirror of `tasks[i].resource` for the wake/release path.
+    ress: Vec<ResourceId>,
 }
 
 impl TaskGraph {
@@ -90,6 +119,8 @@ impl TaskGraph {
             deps_start,
             deps_len: deps.len() as u32,
         });
+        self.durs.push(duration_ns);
+        self.ress.push(resource);
         id
     }
 
@@ -114,16 +145,32 @@ impl TaskGraph {
         &self.dep_pool[t.deps_start as usize..(t.deps_start + t.deps_len) as usize]
     }
 
+    /// Dense per-task durations, indexed by [`TaskId`] (SoA slab for the
+    /// dispatch hot path).
+    pub fn durations(&self) -> &[u64] {
+        &self.durs
+    }
+
+    /// Dense per-task resource ids, indexed by [`TaskId`] (SoA slab for
+    /// the wake/release hot path).
+    pub fn resources(&self) -> &[ResourceId] {
+        &self.ress
+    }
+
     /// Drop all tasks but keep the allocated capacity (scratch reuse).
     pub fn clear(&mut self) {
         self.tasks.clear();
         self.dep_pool.clear();
+        self.durs.clear();
+        self.ress.clear();
     }
 
     /// Pre-size both buffers (e.g. from the workload's layer count).
     pub fn reserve(&mut self, tasks: usize, deps: usize) {
         self.tasks.reserve(tasks);
         self.dep_pool.reserve(deps);
+        self.durs.reserve(tasks);
+        self.ress.reserve(tasks);
     }
 }
 
@@ -217,7 +264,20 @@ pub struct RunScratch {
     dep_off: Vec<usize>,
     dep_cursor: Vec<usize>,
     dependents: Vec<TaskId>,
-    heap: BinaryHeap<Reverse<(u64, u64, TaskId)>>,
+    /// Completion events, ordered `(finish_time, seq, task)` — the
+    /// calendar queue pops byte-identically to the old binary heap.
+    queue: CalendarQueue,
+    /// The current completion wave: every task finishing at the popped
+    /// timestamp, in `seq` order.
+    batch: Vec<TaskId>,
+    /// Per-event dirty-resource set (the completing resource plus each
+    /// newly-woken dependent's resource, first-wake order, deduplicated
+    /// via `dirty_mark`).
+    dirty: Vec<ResourceId>,
+    /// `dirty_mark[rid] == epoch` ⇔ `rid` is already in `dirty` for the
+    /// current event (O(1) dedup without clearing a bitmap per event).
+    dirty_mark: Vec<u64>,
+    epoch: u64,
 }
 
 /// The engine: resources + run loop. Resource slots (and their backlog
@@ -330,9 +390,12 @@ impl Engine {
         let spans = &mut sc.schedule.spans;
         spans.clear();
         spans.resize(n, Span::default());
-        // Completion event heap: (finish time, seq, task). seq keeps
+        // Completion events: (finish time, seq, task). seq keeps
         // deterministic FIFO order among equal-time completions.
-        sc.heap.clear();
+        sc.queue.clear();
+        sc.dirty_mark.clear();
+        sc.dirty_mark.resize(live, 0);
+        sc.epoch = 0;
         let mut seq: u64 = 0;
 
         for r in &mut self.resources[..live] {
@@ -343,45 +406,62 @@ impl Engine {
             r.queue_ns = 0;
         }
 
+        // SoA slabs: the only per-task state the event loop touches.
+        let dur_slab = graph.durations();
+        let res_slab = graph.resources();
+
         let mut now: u64 = 0;
         let mut completed = 0usize;
 
         // Seed: tasks with no deps are ready at t=0.
         for id in 0..n {
             if sc.pending[id] == 0 {
-                self.resources[graph.tasks[id].resource].push(id);
+                self.resources[res_slab[id]].push(id);
             }
         }
-        for rid in 0..live {
-            Self::dispatch(&mut self.resources[rid], graph, spans, 0, &mut sc.heap, &mut seq);
+        for res in &mut self.resources[..live] {
+            Self::dispatch(res, dur_slab, spans, 0, &mut sc.queue, &mut seq);
         }
 
-        while let Some(Reverse((t, _, id))) = sc.heap.pop() {
+        // Batched event loop: drain the whole completion wave at the
+        // minimum timestamp in one queue operation, then process it
+        // event by event. Dispatch stays *incremental* within the wave
+        // (completing resource first, then newly-woken dependents'
+        // resources in first-wake order) — LIFO backlogs and the
+        // seq-based pop tiebreak both depend on that order, so a
+        // deferred per-wave dispatch pass would change schedules. The
+        // per-event dedup is exact: dispatching an already-busy
+        // resource was always a no-op.
+        while let Some(t) = sc.queue.pop_batch_into(&mut sc.batch) {
             now = t;
-            completed += 1;
-            spans[id].finish_ns = now;
-            let rid = graph.tasks[id].resource;
-            self.resources[rid].running = None;
+            for &id in &sc.batch {
+                completed += 1;
+                spans[id].finish_ns = now;
+                let rid = res_slab[id];
+                self.resources[rid].running = None;
 
-            // Wake dependents.
-            let (lo, hi) = (sc.dep_off[id], sc.dep_off[id + 1]);
-            for &dep in &sc.dependents[lo..hi] {
-                sc.pending[dep] -= 1;
-                if sc.pending[dep] == 0 {
-                    spans[dep].ready_ns = now;
-                    self.resources[graph.tasks[dep].resource].push(dep);
+                sc.epoch += 1;
+                sc.dirty.clear();
+                sc.dirty.push(rid);
+                sc.dirty_mark[rid] = sc.epoch;
+
+                // Wake dependents, collecting their resources once each.
+                let (lo, hi) = (sc.dep_off[id], sc.dep_off[id + 1]);
+                for &dep in &sc.dependents[lo..hi] {
+                    sc.pending[dep] -= 1;
+                    if sc.pending[dep] == 0 {
+                        spans[dep].ready_ns = now;
+                        let drid = res_slab[dep];
+                        self.resources[drid].push(dep);
+                        if sc.dirty_mark[drid] != sc.epoch {
+                            sc.dirty_mark[drid] = sc.epoch;
+                            sc.dirty.push(drid);
+                        }
+                    }
                 }
-            }
-            // Re-dispatch the completing task's resource, then each
-            // dependent's resource — skipping the completing resource,
-            // which was already dispatched above (it is common for a
-            // dependent to share the completing task's resource).
-            Self::dispatch(&mut self.resources[rid], graph, spans, now, &mut sc.heap, &mut seq);
-            for &dep in &sc.dependents[lo..hi] {
-                let drid = graph.tasks[dep].resource;
-                if drid != rid {
-                    let res = &mut self.resources[drid];
-                    Self::dispatch(res, graph, spans, now, &mut sc.heap, &mut seq);
+                for &wake in &sc.dirty {
+                    let res = &mut self.resources[wake];
+                    Self::dispatch(res, dur_slab, spans, now, &mut sc.queue, &mut seq);
                 }
             }
         }
@@ -404,22 +484,22 @@ impl Engine {
     /// If `res` is idle and has backlog, start its next task per policy.
     fn dispatch(
         res: &mut Resource,
-        graph: &TaskGraph,
+        durs: &[u64],
         spans: &mut [Span],
         now: u64,
-        heap: &mut BinaryHeap<Reverse<(u64, u64, TaskId)>>,
+        queue: &mut CalendarQueue,
         seq: &mut u64,
     ) {
         if res.running.is_some() || res.backlog_is_empty() {
             return;
         }
         let id = res.pop();
-        let dur = graph.tasks[id].duration_ns;
+        let dur = durs[id];
         spans[id].start_ns = now;
         res.queue_ns += now - spans[id].ready_ns;
         res.running = Some(id);
         res.busy_ns += dur;
-        heap.push(Reverse((now + dur, *seq, id)));
+        queue.push(now + dur, *seq, id);
         *seq += 1;
     }
 }
@@ -546,6 +626,47 @@ mod tests {
         let s = eng.run(&g).unwrap();
         assert_eq!(s.makespan_ns, 0);
         assert_eq!(s.spans[b].finish_ns, 0);
+    }
+
+    #[test]
+    fn same_time_wave_keeps_incremental_lifo_dispatch() {
+        // Eight producers on distinct resources all finish at t=100 (one
+        // completion wave) and each wakes a dependent on one shared LIFO
+        // resource. Incremental dispatch within the wave means the
+        // *first* wake (d0, from the first-popped completion) starts
+        // immediately — it is alone in the backlog when its producer's
+        // event is processed — and the remaining deps then run in LIFO
+        // order d7, d6, ..., d1. A deferred per-wave dispatch pass would
+        // see all eight queued and start d7 first instead.
+        let mut g = TaskGraph::new();
+        let mut eng = Engine::new();
+        let shared = eng.add_resource(Policy::Lifo);
+        let mut deps = Vec::new();
+        for i in 0..8usize {
+            let r = eng.add_resource(Policy::Fifo);
+            let p = g.add(tag(i), r, 100, &[]);
+            deps.push(g.add(tag(100 + i), shared, 10, &[p]));
+        }
+        let s = eng.run(&g).unwrap();
+        assert_eq!(s.spans[deps[0]].start_ns, 100);
+        for (k, i) in (1..8).rev().enumerate() {
+            assert_eq!(s.spans[deps[i]].start_ns, 110 + 10 * k as u64, "dep {i}");
+        }
+        assert_eq!(s.makespan_ns, 180);
+    }
+
+    #[test]
+    fn soa_slabs_mirror_tasks_across_clear() {
+        let mut g = TaskGraph::new();
+        g.add(tag(0), 3, 17, &[]);
+        g.add(tag(1), 1, 5, &[0]);
+        assert_eq!(g.durations(), &[17, 5]);
+        assert_eq!(g.resources(), &[3, 1]);
+        g.clear();
+        assert!(g.durations().is_empty() && g.resources().is_empty());
+        g.add(tag(2), 0, 9, &[]);
+        assert_eq!(g.durations(), &[9]);
+        assert_eq!(g.resources(), &[0]);
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //! Layered exactly like the system the paper targets (§2.2, Fig. 2):
 //!
 //! * [`engine`] — discrete-event core (task graph over exclusive
-//!   resources with FIFO/LIFO queueing).
+//!   resources with FIFO/LIFO queueing), batch-dispatching whole
+//!   same-timestamp completion waves per event-loop iteration.
+//! * [`queue`] — the allocation-free, monotone integer-time calendar
+//!   queue ordering the engine's completion events (byte-identical pop
+//!   order to a `(finish, seq, task)` min-heap).
 //! * [`network`] — analytical network layer: multi-dimensional topologies
 //!   with per-link latency + bandwidth (the Garnet/ns-3 stand-in).
 //! * [`collectives`] — topology-aware collective completion-time models
@@ -20,6 +24,7 @@
 pub mod collectives;
 pub mod engine;
 pub mod network;
+pub mod queue;
 pub mod system;
 pub mod tag;
 pub mod training;
@@ -27,6 +32,7 @@ pub mod training;
 pub use collectives::{collective_ns, ChunkCfg};
 pub use engine::{Engine, Policy, RunScratch, Schedule, TaskGraph};
 pub use network::{NetDim, Network, TopologyKind};
+pub use queue::CalendarQueue;
 pub use system::{CommRouter, SystemConfig};
 pub use tag::{TagComm, TagPhase, TaskTag};
 pub use training::{

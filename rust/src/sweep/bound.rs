@@ -33,7 +33,12 @@
 //! (topology × collective × size) completion time across sibling
 //! scenarios — grids vary parallelism and collective algorithm far more
 //! often than payload sizes, so most scenarios hit the memo instead of
-//! the α-β model.
+//! the α-β model. The bound pass runs **in parallel** (one memo per
+//! pool worker): because the bound is a pure function of
+//! (scenario, cache, config), splitting the memo across workers changes
+//! only which worker pays each cache miss — every bound value, and
+//! therefore every pruning decision, is byte-identical to a serial
+//! pass.
 
 use super::{Scenario, SweepConfig, WorkloadCache};
 use crate::error::{Error, Result};
@@ -67,8 +72,9 @@ fn code(topology: TopologyKind, comm: CommType) -> (u8, u8) {
 /// pass, keyed by (topology × collective × payload bytes). Valid within
 /// a single [`SweepConfig`] — NPU count, bandwidth and latency are
 /// config-fixed, so only the scenario axes vary — and carrying the
-/// comm-plan buffer too, so the serial bound pass re-plans without heap
-/// allocation.
+/// comm-plan buffer too, so a worker's bound pass re-plans without heap
+/// allocation. The parallel bound pass builds one memo per pool worker
+/// (the memo is an accelerator, never an input: bounds are pure).
 #[derive(Debug, Default)]
 pub struct BoundMemo {
     coll: BTreeMap<(u8, u8, u64), u64>,

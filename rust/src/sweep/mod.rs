@@ -27,11 +27,17 @@
 //!    With `SweepConfig::top_k` set (`--top K`), a branch-and-bound
 //!    layer runs first: [`bound::scenario_bound_ns`] computes an
 //!    admissible analytic makespan lower bound per scenario (no DES,
-//!    memoized collective latencies across siblings), scenarios are
-//!    visited most-promising-first in deterministic waves, and any
-//!    scenario whose bound exceeds the current K-th best simulated
-//!    iteration time is skipped — provably without changing the
-//!    reported top-K (CI diffs it against the exhaustive ranking).
+//!    memoized collective latencies across siblings). The bound pass is
+//!    **parallel but deterministic**: it fans out through the same
+//!    index-ordered pool as simulation, with one [`bound::BoundMemo`]
+//!    per worker — the bound is a pure function of the scenario, so
+//!    memo placement affects only cache hit rates, never values, and
+//!    the bound vector matches a serial pass byte for byte at any
+//!    thread count. Scenarios are then visited most-promising-first in
+//!    deterministic waves, and any scenario whose bound exceeds the
+//!    current K-th best simulated iteration time is skipped — provably
+//!    without changing the reported top-K (CI diffs it against the
+//!    exhaustive ranking).
 //! 4. [`report::SweepReport`] ranks the results (fastest simulated step
 //!    first, key-ordered tiebreak) and emits text + JSON. Because every
 //!    scenario is simulated deterministically and ranking is a total
@@ -574,8 +580,13 @@ pub fn run_sweep_cached(
 }
 
 /// The exact top-K branch-and-bound driver. Bounds every scenario
-/// analytically (serial, memoized — microseconds per scenario), then
-/// simulates in deterministic *waves* ordered most-promising-first:
+/// analytically — fanned out through the same index-ordered worker pool
+/// as simulation, each worker memoizing into its own
+/// [`bound::BoundMemo`]; the bound is a pure function of the scenario,
+/// so per-worker memos only change *which* worker pays each cache miss,
+/// never a bound's value, and the bound vector stays byte-identical to
+/// a serial pass at any thread count — then simulates in deterministic
+/// *waves* ordered most-promising-first:
 /// the first wave fills the top-K candidate set, and each later wave is
 /// the maximal prefix of remaining scenarios whose bound does not
 /// exceed the current K-th best simulated iteration time. When that
@@ -598,11 +609,14 @@ fn run_top_k(
     if k == 0 {
         return Err(Error::Config("top-K pruning needs K >= 1 (got --top 0)".into()));
     }
-    let mut memo = bound::BoundMemo::new();
-    let mut bounds = Vec::with_capacity(scenarios.len());
-    for sc in scenarios {
-        bounds.push(bound::scenario_bound_ns(sc, cache, cfg, &mut memo)?);
-    }
+    // Parallel bound pass: pure per scenario, so per-worker memos keep
+    // the result exactly deterministic (see the doc comment above).
+    let bounds = pool::run_indexed_with(
+        scenarios.len(),
+        cfg.threads,
+        bound::BoundMemo::new,
+        |memo, i| bound::scenario_bound_ns(&scenarios[i], cache, cfg, memo),
+    )?;
     // Most-promising-first visit order, rank-key tiebreak — fully
     // deterministic, like everything else the wave boundaries read.
     let mut order: Vec<usize> = (0..scenarios.len()).collect();

@@ -68,7 +68,8 @@ where
         drop(res_tx); // workers hold the only remaining senders
     });
 
-    let mut buf: Vec<(usize, Result<T>)> = res_rx.iter().collect();
+    let mut buf: Vec<(usize, Result<T>)> = Vec::with_capacity(jobs);
+    buf.extend(res_rx.iter());
     if buf.len() != jobs {
         return Err(Error::Sim(format!(
             "worker pool lost results: got {}/{} jobs back",
@@ -76,7 +77,12 @@ where
             jobs
         )));
     }
-    buf.sort_by_key(|(i, _)| *i);
+    // A single worker drains the FIFO job queue in index order and sends
+    // results in that same order, so the sort is only needed when
+    // several workers interleave.
+    if threads > 1 {
+        buf.sort_by_key(|(i, _)| *i);
+    }
     buf.into_iter().map(|(_, r)| r).collect()
 }
 

@@ -9,7 +9,8 @@
 //! ranked-JSON guarantee across worker-thread counts.
 
 use modtrans::sim::{
-    collective_ns, simulate, simulate_with, Network, SimConfig, SimScratch, TopologyKind,
+    collective_ns, simulate, simulate_with, Engine, Network, Policy, SimConfig, SimScratch,
+    TaskGraph, TaskTag, TopologyKind,
 };
 use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid};
 use modtrans::workload::{CommType, LayerSpec, Parallelism, Phase, Workload};
@@ -146,6 +147,120 @@ fn goldens_hold_with_reused_scratch() {
         let r = simulate_with(&pipe, &pipe_cfg, &mut scratch).unwrap();
         assert_eq!(r.total_ns, 120_010);
         assert_eq!(r.events, 12);
+    }
+}
+
+/// Golden: many tasks on *different* resources completing at the same
+/// nanosecond — one completion wave through the calendar queue — must
+/// process in dispatch-seq order, exactly the old heap's `(t, seq, id)`
+/// order. With a FIFO shared resource downstream, the dependents run in
+/// producer seed order (p0 seeded/dispatched first ⇒ d0 first).
+#[test]
+fn golden_same_nanosecond_wave_fifo_order() {
+    let mut g = TaskGraph::new();
+    let mut eng = Engine::new();
+    let shared = eng.add_resource(Policy::Fifo);
+    let mut deps = Vec::new();
+    for i in 0..8usize {
+        let r = eng.add_resource(Policy::Fifo);
+        let p = g.add(TaskTag::adhoc(i), r, 100, &[]);
+        deps.push(g.add(TaskTag::adhoc(100 + i), shared, 10, &[p]));
+    }
+    let s = eng.run(&g).unwrap();
+    for (k, &d) in deps.iter().enumerate() {
+        assert_eq!(s.spans[d].ready_ns, 100, "dep {k}");
+        assert_eq!(s.spans[d].start_ns, 100 + 10 * k as u64, "dep {k}");
+        assert_eq!(s.spans[d].finish_ns, 110 + 10 * k as u64, "dep {k}");
+    }
+    assert_eq!(s.makespan_ns, 180);
+    // Queueing on the shared resource: 0 + 10 + ... + 70.
+    assert_eq!(s.queueing_ns(shared), (0..8).map(|k| 10 * k).sum::<u64>());
+}
+
+/// Golden: the same same-nanosecond wave against a LIFO shared resource.
+/// Dispatch within a wave is *incremental*: the first-woken dependent
+/// (d0) starts at the wave timestamp because it is alone in the backlog
+/// when its producer's event is processed; the rest then drain in LIFO
+/// order d7, d6, ..., d1. A batched-dispatch engine that deferred
+/// dispatch to the end of the wave would start d7 first — this golden
+/// pins the heap-era semantics exactly.
+#[test]
+fn golden_same_nanosecond_wave_lifo_order() {
+    let mut g = TaskGraph::new();
+    let mut eng = Engine::new();
+    let shared = eng.add_resource(Policy::Lifo);
+    let mut deps = Vec::new();
+    for i in 0..8usize {
+        let r = eng.add_resource(Policy::Fifo);
+        let p = g.add(TaskTag::adhoc(i), r, 100, &[]);
+        deps.push(g.add(TaskTag::adhoc(100 + i), shared, 10, &[p]));
+    }
+    let s = eng.run(&g).unwrap();
+    assert_eq!(s.spans[deps[0]].start_ns, 100);
+    for i in 1..8usize {
+        assert_eq!(s.spans[deps[i]].start_ns, 110 + 10 * (7 - i) as u64, "dep {i}");
+    }
+    assert_eq!(s.makespan_ns, 180);
+}
+
+/// Golden: completion times sitting exactly on power-of-two bucket
+/// boundaries (63/64/65, 127/128, multiples of 64) — the timestamps
+/// where a calendar queue's bucket mapping is most likely to misplace
+/// or reorder events. Two chains interleave across the boundaries and
+/// join; every span is pinned analytically.
+#[test]
+fn golden_bucket_boundary_timestamps() {
+    let mut g = TaskGraph::new();
+    let mut eng = Engine::new();
+    let r0 = eng.add_resource(Policy::Fifo);
+    let r1 = eng.add_resource(Policy::Fifo);
+    // r0: finishes at 64, 128, 192. r1: finishes at 63, 64, 129.
+    let a0 = g.add(TaskTag::adhoc(0), r0, 64, &[]);
+    let a1 = g.add(TaskTag::adhoc(1), r0, 64, &[a0]);
+    let a2 = g.add(TaskTag::adhoc(2), r0, 64, &[a1]);
+    let b0 = g.add(TaskTag::adhoc(3), r1, 63, &[]);
+    let b1 = g.add(TaskTag::adhoc(4), r1, 1, &[b0]);
+    let b2 = g.add(TaskTag::adhoc(5), r1, 65, &[b1]);
+    // Join: ready at max(192, 129) = 192, runs 1 on r1.
+    let join = g.add(TaskTag::adhoc(6), r1, 1, &[a2, b2]);
+    let s = eng.run(&g).unwrap();
+    assert_eq!(s.spans[a0].finish_ns, 64);
+    assert_eq!(s.spans[a1].finish_ns, 128);
+    assert_eq!(s.spans[a2].finish_ns, 192);
+    assert_eq!(s.spans[b0].finish_ns, 63);
+    // b1 finishes at 64 — the same nanosecond as a0, on another
+    // resource: one wave spanning two resources at a bucket boundary.
+    assert_eq!(s.spans[b1].finish_ns, 64);
+    assert_eq!(s.spans[b2].finish_ns, 129);
+    assert_eq!(s.spans[join].ready_ns, 192);
+    assert_eq!(s.makespan_ns, 193);
+    assert_eq!(s.busy_ns, vec![192, 130]);
+}
+
+/// The parallel bound pass must not perturb `--top K` output: ranked
+/// JSON (including the bound/prune counters it stamps) is byte-identical
+/// across worker-thread counts and reruns.
+#[test]
+fn top_k_sweep_json_is_byte_identical_across_threads() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
+    };
+    let cfg = |threads: usize| SweepConfig {
+        threads,
+        batch: 4,
+        npus: 8,
+        top_k: Some(3),
+        ..Default::default()
+    };
+    let baseline = run_sweep(&grid, &cfg(1)).unwrap().to_json().to_json_pretty();
+    for threads in [2usize, 4, 8] {
+        for _ in 0..2 {
+            let out = run_sweep(&grid, &cfg(threads)).unwrap().to_json().to_json_pretty();
+            assert_eq!(out, baseline, "threads={threads} changed the top-K JSON");
+        }
     }
 }
 

@@ -12,7 +12,14 @@ Asserts the `--top K` branch-and-bound contract:
     dominated by its analytic lower bound);
   * scenarios_pruned > 0 — the bound actually skipped work on this
     grid, so the fast path is exercised, not just tolerated;
-  * the exhaustive report simulated everything and pruned nothing.
+  * bounds_evaluated == grid size — the bound pass fans out over a
+    worker pool, and a sharded pass that silently dropped scenarios
+    would under-count here even if the ranking happened to survive;
+  * at least min(K, grid) scenarios were actually simulated — a top-K
+    answer needs K simulated candidates, bounds alone prove nothing;
+  * the exhaustive report simulated everything, pruned nothing, and
+    evaluated no bounds at all (the bound pass must not leak into the
+    exhaustive path).
 """
 
 import json
@@ -47,11 +54,20 @@ def main(argv):
         f"--top {k} pruned 0 of {grid} scenarios — the bound never skipped work"
     )
     assert top["bounds_evaluated"] == grid, (
-        f"bound pass evaluated {top['bounds_evaluated']} of {grid} scenarios"
+        f"bound pass evaluated {top['bounds_evaluated']} of {grid} scenarios "
+        "(a sharded/parallel bound pass silently skipped some)"
+    )
+    assert simulated >= min(k, grid), (
+        f"--top {k} simulated only {simulated} scenarios "
+        f"(needs at least {min(k, grid)} candidates to certify a top-{k})"
     )
     assert full["scenarios_pruned"] == 0 and full["scenarios_simulated"] == grid, (
         "exhaustive report unexpectedly pruned "
         f"({full['scenarios_simulated']} simulated, {full['scenarios_pruned']} pruned)"
+    )
+    assert full["bounds_evaluated"] == 0, (
+        f"exhaustive report evaluated {full['bounds_evaluated']} bounds "
+        "(the bound pass must only run under --top)"
     )
     print(
         f"prune equivalence OK: top-{k} byte-identical, "
