@@ -83,9 +83,12 @@ sweep-determinism: build
 # The fleet acceptance check, mirroring CI's fleet-smoke job: a cold
 # 4-process fleet (shared cache pre-warmed by one in-process translation
 # pass) and a warm re-run must both rank byte-identically to the
-# monolithic sweep, with every shard reporting 0 translations.
+# monolithic sweep with every worker reporting 0 translations; an
+# interrupted journaled fleet must resume with zero re-simulations; and
+# the work-stealing scheduler must keep every worker busy on a skewed
+# grid.
 fleet-smoke: build
-	rm -rf fleet-cache fleet-work fleet-work-warm
+	rm -rf fleet-cache fleet-work fleet-work-warm fleet-journal fleet-work-crash fleet-work-resume fleet-work-skew
 	./target/release/modtrans sweep --threads 2 -o fleet_mono.json
 	./target/release/modtrans sweep fleet --procs 4 --threads 2 \
 		--cache-dir fleet-cache --work-dir fleet-work \
@@ -95,8 +98,23 @@ fleet-smoke: build
 		--cache-dir fleet-cache --work-dir fleet-work-warm \
 		--status-out warm_status.json --json-out warm_merged.json
 	python3 scripts/check_fleet.py fleet_mono.json warm_merged.json warm_status.json --warm
-	rm -rf fleet-cache fleet-work fleet-work-warm
+	if ./target/release/modtrans sweep fleet --procs 1 --threads 2 --lease 2 --retries 0 \
+		--cache-dir fleet-cache --work-dir fleet-work-crash \
+		--journal fleet-journal --failpoint 1@2; then \
+		echo "failpoint fleet run unexpectedly succeeded"; exit 1; fi
+	./target/release/modtrans sweep fleet --procs 4 --threads 2 \
+		--cache-dir fleet-cache --work-dir fleet-work-resume \
+		--journal fleet-journal --resume \
+		--status-out resume_status.json --json-out resume_merged.json
+	python3 scripts/check_fleet.py fleet_mono.json resume_merged.json resume_status.json --warm --resume
+	./target/release/modtrans sweep vgg16,mlp --threads 2 --cache-dir fleet-cache -o skew_mono.json
+	./target/release/modtrans sweep fleet vgg16,mlp --procs 2 --threads 2 \
+		--cache-dir fleet-cache --work-dir fleet-work-skew \
+		--status-out skew_status.json --json-out skew_merged.json
+	python3 scripts/check_fleet.py skew_mono.json skew_merged.json skew_status.json --warm --skew
+	rm -rf fleet-cache fleet-work fleet-work-warm fleet-journal fleet-work-crash fleet-work-resume fleet-work-skew
 	rm -f fleet_mono.json fleet_merged.json fleet_status.json warm_merged.json warm_status.json
+	rm -f resume_merged.json resume_status.json skew_mono.json skew_merged.json skew_status.json
 
 # Unit tests for the perf-trajectory gate (scripts/perf_diff.py --gate).
 perf-gate-test:
@@ -112,4 +130,5 @@ clean:
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
 	rm -f sweep_top_t1.json sweep_top_t8.json
 	rm -f fleet_mono.json fleet_merged.json fleet_status.json warm_merged.json warm_status.json
-	rm -rf bench-out ircache fleet-cache fleet-work fleet-work-warm
+	rm -f resume_merged.json resume_status.json skew_mono.json skew_merged.json skew_status.json
+	rm -rf bench-out ircache fleet-cache fleet-work fleet-work-warm fleet-journal fleet-work-crash fleet-work-resume fleet-work-skew

@@ -135,6 +135,51 @@ fn main() {
                 scenarios as f64 / s.mean
             );
             let _ = std::fs::remove_dir_all(&dir);
+
+            // Scheduler A/B on a deliberately skewed grid: vgg16 (heavy)
+            // next to mlp (cheap), so the static contiguous partition
+            // hands one worker all the expensive scenarios and leaves
+            // the other idle — the straggler shape work stealing exists
+            // to fix. Same grid, same config, byte-identical ranking;
+            // only the schedule (and so the wall-clock) differs.
+            let skewed = SweepGrid {
+                models: vec!["vgg16".into(), "mlp".into()],
+                parallelisms: vec![
+                    modtrans::workload::Parallelism::Data,
+                    modtrans::workload::Parallelism::Model,
+                ],
+                topologies: vec![
+                    modtrans::sim::TopologyKind::Ring,
+                    modtrans::sim::TopologyKind::Switch,
+                ],
+                collectives: vec![CollectiveAlgo::Pipelined],
+            };
+            let skew_n = skewed.expand().len();
+            let skew_dir =
+                std::env::temp_dir().join(format!("mt_bench_skewcache_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&skew_dir);
+            let static_opts = FleetOpts {
+                static_shards: true,
+                cache_dir: Some(skew_dir.clone()),
+                ..opts.clone()
+            };
+            let stealing_opts = FleetOpts { cache_dir: Some(skew_dir.clone()), ..opts.clone() };
+            // Prime the shared cache once so both sides measure warm.
+            run_fleet(&skewed, &cfg, &static_opts).unwrap();
+            let st = report.run(&bench, &format!("fleet_skewed_static_{skew_n}_scenarios"), |_| {
+                black_box(run_fleet(&skewed, &cfg, &static_opts).unwrap());
+            });
+            let wk = report.run(&bench, &format!("fleet_skewed_stealing_{skew_n}_scenarios"), |_| {
+                black_box(run_fleet(&skewed, &cfg, &stealing_opts).unwrap());
+            });
+            println!(
+                "  -> skewed grid ({skew_n} scenarios): static {:.1} vs stealing {:.1} \
+                 scenarios/s ({:.2}x)",
+                skew_n as f64 / st.mean,
+                skew_n as f64 / wk.mean,
+                st.mean / wk.mean
+            );
+            let _ = std::fs::remove_dir_all(&skew_dir);
         }
         None => println!(
             "  (fleet series skipped: modtrans binary not found — `cargo build --release` \

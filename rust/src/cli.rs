@@ -15,7 +15,9 @@
 //!           [--cache-dir DIR]
 //! modtrans sweep fleet [model[,model...]] [--procs N] [--retries R]
 //!           [--cache-dir DIR] [--cache-from DIR] [--status-out FILE]
-//!           (+ every sweep option; shard assignment is fleet-owned)
+//!           [--journal DIR] [--resume] [--shard-timeout SECS]
+//!           [--lease N] [--static-shards]
+//!           (+ every sweep option; lease assignment is fleet-owned)
 //! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (pjrt feature)
 //! ```
 
@@ -55,10 +57,16 @@ impl Args {
             let a = &raw[i];
             if let Some(key) = a.strip_prefix("--") {
                 // Flags that take no value.
-                if matches!(
-                    key,
-                    "all" | "full-decode" | "quiet" | "breakdown" | "skip-infeasible"
-                ) {
+                const FLAG_KEYS: [&str; 7] = [
+                    "all",
+                    "full-decode",
+                    "quiet",
+                    "breakdown",
+                    "skip-infeasible",
+                    "resume",
+                    "static-shards",
+                ];
+                if FLAG_KEYS.contains(&key) {
                     flags.push(key.to_string());
                 } else {
                     i += 1;
@@ -113,7 +121,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         return Ok(());
     };
     // `sweep fleet` is a two-token subcommand: the orchestrator that
-    // launches N `sweep --shard k/N` processes and merges them.
+    // launches N worker processes, hands out `--scenarios` leases from a
+    // work-stealing queue, and stream-merges their reports.
     if cmd == "sweep" && argv.get(1).map(String::as_str) == Some("fleet") {
         return cmd_sweep_fleet(&Args::parse(&argv[2..])?);
     }
@@ -155,16 +164,21 @@ USAGE:
   modtrans sweep [model[,model...]] [--models LIST] [--parallelisms data,model,...]
             [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
             [--npus N] [--batch B] [--mp-group G] [--iterations I] [--shard K/N]
-            [--threads T] [--hbm-gib G] [--zero 0|1|2|3] [--skip-infeasible]
-            [--top K] [--cache-dir DIR] [-o|--json-out results.json]
+            [--scenarios I,J,K] [--threads T] [--hbm-gib G] [--zero 0|1|2|3]
+            [--skip-infeasible] [--top K] [--top-cutoff NS] [--cache-dir DIR]
+            [-o|--json-out results.json]
             (--top K ranks only the K fastest scenarios, skipping simulation for any
              scenario whose analytic lower bound exceeds the K-th best simulated time —
-             exact: byte-identical to the exhaustive ranking's first K rows)
+             exact: byte-identical to the exhaustive ranking's first K rows;
+             --scenarios runs one explicit lease of grid indices and --top-cutoff seeds
+             the prune cutoff — the spellings the fleet orchestrator dispatches with)
   modtrans sweep fleet [model[,model...]] [--procs N] [--retries R] [--work-dir DIR]
             [--cache-dir DIR] [--cache-from SYNC_DIR] [--status-out status.json]
-            (+ every sweep option above except --shard; launches N shard processes
-             warmed from one shared IR cache and merges their reports —
-             the merged ranking is byte-identical to the monolithic sweep)
+            [--journal DIR] [--resume] [--shard-timeout SECS] [--lease N] [--static-shards]
+            (+ every sweep option above except --shard; launches N worker processes
+             warmed from one shared IR cache, hands out scenario leases from a
+             work-stealing queue, journals completed leases, and stream-merges the
+             reports — the merged ranking is byte-identical to the monolithic sweep)
   modtrans sweep-merge <shard.json> [shard.json ...] [-o merged.json]
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
@@ -567,6 +581,35 @@ fn parse_sweep_config(args: &Args) -> Result<SweepConfig> {
     })
 }
 
+/// Parse `--scenarios I,J,K` — the explicit grid-expansion scenario
+/// indices of one fleet lease (the spelling the fleet orchestrator uses
+/// when re-invoking this binary; range/duplicate checks live in
+/// [`sweep::run_sweep_scenarios`]).
+fn parse_scenarios(args: &Args) -> Result<Option<Vec<usize>>> {
+    let Some(spec) = args.opt("scenarios") else {
+        return Ok(None);
+    };
+    let lease = parse_list(spec, |s| {
+        s.parse::<usize>()
+            .map_err(|_| Error::Usage(format!("bad scenario index '{s}' in --scenarios")))
+    })?;
+    if lease.is_empty() {
+        return Err(Error::Usage("--scenarios needs at least one grid index".into()));
+    }
+    Ok(Some(lease))
+}
+
+/// Parse `--top-cutoff NS` — the fleet-wide top-K prune cutoff pushed to
+/// later leases (nanoseconds; only meaningful together with `--top K`).
+fn parse_top_cutoff(args: &Args) -> Result<Option<u64>> {
+    match args.opt("top-cutoff") {
+        None => Ok(None),
+        Some(spec) => spec.parse::<u64>().map(Some).map_err(|_| {
+            Error::Usage(format!("bad --top-cutoff '{spec}' — need integer nanoseconds"))
+        }),
+    }
+}
+
 /// Parse `--top K` (exact top-K pruning; K must be a positive integer).
 fn parse_top_k(args: &Args) -> Result<Option<usize>> {
     let Some(spec) = args.opt("top") else {
@@ -595,10 +638,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // (no-op unless the orchestrator exported the failpoint variable).
     sweep::fleet::shard_failpoint(cfg.shard);
     let cache_dir = args.opt("cache-dir").map(Path::new);
-    let report = sweep::run_sweep_cached(&grid, &cfg, cache_dir)?;
-    let shard_note = match cfg.shard {
-        Some((k, n)) => format!(" [shard {k}/{n}]"),
-        None => String::new(),
+    let lease = parse_scenarios(args)?;
+    let cutoff = parse_top_cutoff(args)?;
+    let report = sweep::run_sweep_scenarios(&grid, &cfg, cache_dir, lease.as_deref(), cutoff)?;
+    let shard_note = match (cfg.shard, &lease) {
+        (Some((k, n)), _) => format!(" [shard {k}/{n}]"),
+        (None, Some(l)) => format!(" [lease of {} scenario(s)]", l.len()),
+        (None, None) => String::new(),
     };
     println!(
         "sweep{shard_note}: {} scenarios over {} models on {} worker threads \
@@ -628,11 +674,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 /// Fleet orchestration: expand the grid once, pre-warm a shared IR
-/// cache with a single cold translation pass, launch `--procs` shard
-/// processes of this binary, relaunch crashes up to `--retries` times,
-/// and merge the shard reports in-process. The merged ranking is
-/// byte-identical to a monolithic `sweep` of the same grid. See
-/// [`crate::sweep::fleet`].
+/// cache with a single cold translation pass, launch `--procs` worker
+/// processes of this binary, hand out `--scenarios` leases from a
+/// work-stealing queue (re-dispatching crashes up to `--retries` times,
+/// journaling completions with `--journal`), and stream-merge the lease
+/// reports in-process. The merged ranking is byte-identical to a
+/// monolithic `sweep` of the same grid. See [`crate::sweep::fleet`].
 fn cmd_sweep_fleet(args: &Args) -> Result<()> {
     let grid = parse_sweep_grid(args)?;
     let cfg = parse_sweep_config(args)?;
@@ -648,21 +695,50 @@ fn cmd_sweep_fleet(args: &Args) -> Result<()> {
         cache_dir: args.opt("cache-dir").map(PathBuf::from),
         cache_from: args.opt("cache-from").map(PathBuf::from),
         work_dir: args.opt("work-dir").map(PathBuf::from),
-        // Written by run_fleet on success AND on shard failure — the
+        // Written by run_fleet on success AND on worker failure — the
         // failure evidence is the point of the status document.
         status_out: args.opt("status-out").map(PathBuf::from),
-        failpoint: None,
+        journal: args.opt("journal").map(PathBuf::from),
+        resume: args.flag("resume"),
+        shard_timeout: args
+            .opt("shard-timeout")
+            .map(|s| {
+                s.parse::<f64>().map_err(|_| {
+                    Error::Usage(format!("bad --shard-timeout '{s}' — need seconds"))
+                })
+            })
+            .transpose()?,
+        lease_size: args
+            .opt("lease")
+            .map(|s| {
+                s.parse::<usize>().map_err(|_| {
+                    Error::Usage(format!("bad --lease '{s}' — need a scenario count"))
+                })
+            })
+            .transpose()?,
+        static_shards: args.flag("static-shards"),
+        // Test/CI-only crash or hang injection in worker processes
+        // (see sweep::fleet::shard_failpoint for the grammar).
+        failpoint: args.opt("failpoint").map(str::to_string),
     };
     let fleet = sweep::run_fleet(&grid, &cfg, &opts)?;
     println!(
-        "fleet: {} shard process(es) over {} scenarios — pre-warm ran {} translation(s) \
-         + {} cache load(s); the shards ran {} translation(s)",
+        "fleet: {} worker process(es), {} lease(s) [{}] over {} scenarios — pre-warm ran \
+         {} translation(s) + {} cache load(s); the workers ran {} translation(s)",
         fleet.shards.len(),
+        fleet.leases_completed,
+        if fleet.static_shards { "static" } else { "stealing" },
         fleet.merged.ranked.len(),
         fleet.prewarm_translations,
         fleet.prewarm_cache_loads,
         fleet.shard_translations(),
     );
+    if fleet.replayed_leases > 0 {
+        println!(
+            "journal: replayed {} lease(s) covering {} scenario(s) — not re-simulated",
+            fleet.replayed_leases, fleet.scenarios_from_journal,
+        );
+    }
     if opts.cache_from.is_some() {
         println!(
             "cache sync: {} entr(ies) copied in, {} published back",
@@ -670,8 +746,9 @@ fn cmd_sweep_fleet(args: &Args) -> Result<()> {
         );
     }
     let mut t = Table::new(vec![
-        "Shard",
+        "Worker",
         "Attempts",
+        "Leases",
         "Exit",
         "Scenarios",
         "Translations",
@@ -679,18 +756,21 @@ fn cmd_sweep_fleet(args: &Args) -> Result<()> {
         "Pruned",
         "Simulated",
         "Bound-pruned",
+        "Idle ms",
     ]);
     for s in &fleet.shards {
         t.row(vec![
             format!("{}/{}", s.shard.0, s.shard.1),
             s.attempts.to_string(),
-            s.exit_code.map_or_else(|| "signal".to_string(), |c| c.to_string()),
+            s.leases.to_string(),
+            s.exit_code.map_or_else(|| "-".to_string(), |c| c.to_string()),
             s.scenarios.to_string(),
             s.translations.to_string(),
             s.cache_loads.to_string(),
             s.pruned.to_string(),
             s.scenarios_simulated.to_string(),
             s.scenarios_pruned.to_string(),
+            s.idle_ms.to_string(),
         ]);
     }
     print!("{t}");
@@ -1137,9 +1217,54 @@ mod tests {
         let err = run_args(&["sweep", "fleet", "mlp", "--shard", "1/2"]).unwrap_err();
         assert!(err.to_string().contains("assigns shards itself"), "{err}");
         let err = run_args(&["sweep", "fleet", "mlp", "--procs", "0"]).unwrap_err();
-        assert!(err.to_string().contains("at least one shard process"), "{err}");
+        assert!(err.to_string().contains("at least one worker process"), "{err}");
+        let err = run_args(&["sweep", "fleet", "mlp", "--resume"]).unwrap_err();
+        assert!(err.to_string().contains("--journal"), "{err}");
+        let err = run_args(&["sweep", "fleet", "mlp", "--shard-timeout", "soonish"]).unwrap_err();
+        assert!(err.to_string().contains("bad --shard-timeout"), "{err}");
+        let err = run_args(&["sweep", "fleet", "mlp", "--lease", "many"]).unwrap_err();
+        assert!(err.to_string().contains("bad --lease"), "{err}");
         // Unknown models fail during the in-process pre-warm pass.
         assert!(run_args(&["sweep", "fleet", "zoo:nope", "--procs", "2"]).is_err());
+    }
+
+    #[test]
+    fn sweep_scenarios_lease_runs_and_echoes_indices() {
+        let dir = std::env::temp_dir().join(format!("modtrans_clilease_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("lease.json");
+        let argv: Vec<String> = [
+            "sweep", "mlp", "--npus", "8", "--batch", "4", "--scenarios", "2,0", "-o",
+            out.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(&argv).unwrap();
+        let v = crate::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        // The report echoes the lease as a sorted index list — the stamp
+        // the orchestrator cross-checks before absorbing a worker report.
+        let lease: Vec<u64> = v
+            .get("lease")
+            .and_then(|l| l.as_arr())
+            .unwrap()
+            .iter()
+            .map(|i| i.as_u64().unwrap())
+            .collect();
+        assert_eq!(lease, vec![0, 2]);
+        assert_eq!(v.get("ranked").unwrap().as_arr().unwrap().len(), 2);
+        let run_args = |v: &[&str]| {
+            let argv: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+            run(&argv)
+        };
+        let err = run_args(&["sweep", "mlp", "--scenarios", "zero"]).unwrap_err();
+        assert!(err.to_string().contains("bad scenario index"), "{err}");
+        // A lease and a modulo shard are competing partitions of the grid.
+        assert!(run_args(&["sweep", "mlp", "--scenarios", "0", "--shard", "1/2"]).is_err());
+        let err = run_args(&["sweep", "mlp", "--top-cutoff", "soon"]).unwrap_err();
+        assert!(err.to_string().contains("bad --top-cutoff"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -74,31 +74,45 @@
 //! top-K is byte-identical to the exhaustive ranking's first K rows
 //! (CI's prune-equivalence diff pins it).
 //!
-//! ## The orchestration layer: one command, N shard processes
+//! ## The orchestration layer: one command, N worker processes
 //!
-//! On top of the in-process worker pool sits a process-level fleet
-//! ([`sweep::fleet`], CLI `sweep fleet --procs N`):
+//! On top of the in-process worker pool sits a process-level
+//! work-stealing fleet ([`sweep::fleet`], CLI `sweep fleet --procs N`):
 //!
 //! ```text
 //!                       sweep fleet --procs N
 //!                               │
 //!        ┌─ cache copy-in (--cache-from: rsync'd / object-store dir)
 //!        ├─ pre-warm: ONE cold translation pass → shared --cache-dir
-//!        ├─ spawn: modtrans sweep --shard 1/N ┐
-//!        │         modtrans sweep --shard 2/N ├─ each loads IRs from the
-//!        │         …                          │  shared cache: shards
-//!        │         modtrans sweep --shard N/N ┘  report translations == 0
-//!        ├─ monitor: crashed shard → relaunch (≤ --retries), else hard
-//!        │           error naming the shard + exit code + stderr tail
-//!        ├─ merge: SweepReport::merge (completeness / grid-identity /
+//!        ├─ expand the grid once; order the queue longest-bound-first
+//!        ├─ journal (--journal DIR): --resume replays committed leases
+//!        │         through the merge guards → only uncovered scenarios
+//!        │         stay queued (zero re-simulations of finished work)
+//!        ├─ lease loop: idle worker steals the next scenario lease
+//!        │    ┌──────────────────────────────────────────────────┐
+//!        │    │ spawn: modtrans sweep --scenarios i,j,k           │
+//!        │    │        (size adapts to observed per-scenario cost;│
+//!        │    │        --top-cutoff carries the live K-th best)   │
+//!        │    │ reap:  stream-merge the lease report, append it   │
+//!        │    │        crash-atomically to the journal            │
+//!        │    │ fail:  crash or --shard-timeout watchdog kill →   │
+//!        │    │        re-dispatch (≤ --retries), else hard error │
+//!        │    │        naming the worker + exit code + stderr tail│
+//!        │    └──────────────────────────────────────────────────┘
+//!        ├─ finalize: streaming merge (completeness / grid-identity /
 //!        │         overlap guards) → ranking byte-identical to the
 //!        │         monolithic sweep (CI: fleet-smoke)
 //!        └─ cache copy-out (publish new entries back to --cache-from)
 //! ```
 //!
-//! The per-shard outcome ([`sweep::ShardStatus`]: attempts, exit code,
+//! Every worker loads IRs from the shared cache (and reports
+//! `translations == 0`); `--static-shards` swaps the stealing queue for
+//! the old contiguous once-only partition (A/B-benched as
+//! `fleet_skewed_static` vs `fleet_skewed_stealing` in
+//! `benches/sweep_throughput.rs`). The per-worker outcome
+//! ([`sweep::ShardStatus`]: attempts, leases, exit code, idle time,
 //! stderr tail, translation/cache counters) is printed as a table and
-//! written machine-readably via `--status-out`, so a dead shard is
+//! written machine-readably via `--status-out`, so a dead worker is
 //! diagnosable evidence, never just a missing report file.
 //!
 //! ## Module map
@@ -130,9 +144,11 @@
 //!   makespan lower bounds prune scenarios that provably cannot enter
 //!   the top-K, without changing the reported ranking. [`sweep::fleet`]
 //!   is the orchestration layer above it: `sweep fleet --procs N`
-//!   launches N shard processes warmed from one shared cache, retries
-//!   crashes, and merges in-process (see the architecture section
-//!   above).
+//!   launches N worker processes warmed from one shared cache, hands
+//!   out scenario leases from a work-stealing queue
+//!   ([`sweep::fleet::FleetOpts`]), journals completed leases for
+//!   `--resume`, retries crashes and watchdog kills, and stream-merges
+//!   in-process (see the architecture section above).
 //! * `runtime` / [`calibrate`] — PJRT execution of AOT-compiled
 //!   JAX/Pallas GEMM artifacts for measured per-layer compute times
 //!   (behind the `pjrt` feature; see below).
@@ -186,7 +202,10 @@
 //! exhaustive top-5 byte-identically while pruning scenarios,
 //! `scripts/check_prune.py`), a `fleet-smoke` job (`sweep fleet
 //! --procs 4` cold and warm must rank byte-for-byte like the monolithic
-//! sweep with every shard reporting 0 translations), a `check-ci-sync`
+//! sweep with every worker reporting 0 translations; a journaled fleet
+//! interrupted by a failpoint must `--resume` with zero re-simulations;
+//! and the work-stealing scheduler must keep every worker busy on a
+//! model-skewed grid — `scripts/check_fleet.py`), a `check-ci-sync`
 //! job (`scripts/check_ci_sync.py`: every CI job must map to a `make ci`
 //! step and vice versa), and a check that every PR touches `CHANGES.md`.
 //! Reproduce the full matrix locally with `make ci` before pushing. The

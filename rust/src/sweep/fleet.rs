@@ -1,50 +1,64 @@
-//! Shard-fleet orchestration: one call launches N sweep shard
-//! *processes*, warms them from a shared IR cache, and merges their
-//! reports back into the monolithic ranking.
+//! Work-stealing fleet orchestration: one call launches N sweep worker
+//! *processes*, warms them from a shared IR cache, hands out scenario
+//! leases from a single dynamic work queue, and folds the lease reports
+//! into the monolithic ranking as they land.
 //!
 //! `sweep --shard K/N` + `sweep-merge` (PR 3) turned a multi-node sweep
-//! into a scheduler problem; this module is the scheduler. ASTRA-sim
-//! 2.0-style design-space exploration is thousands of
-//! (parallelism × topology × collective) points — the fleet drives our
-//! own design space the same way: **one command, N workers, one cold
-//! translation, one merged ranking.**
-//!
-//! [`run_fleet`] stages:
+//! into a scheduler problem; this module is the scheduler. The static
+//! modulo partition it started with had a straggler problem — one shard
+//! holding the expensive model finishes long after the rest — so the
+//! fleet now runs a work-stealing queue: whichever worker goes idle
+//! steals the next lease. [`run_fleet`] stages:
 //!
 //! 1. **Expand once.** The grid is expanded and validated up front, so a
-//!    bad grid fails before any process spawns.
+//!    bad grid fails before any process spawns, and the expansion index
+//!    becomes each scenario's identity for leases and the journal.
 //! 2. **Cache sync (copy-in).** With [`FleetOpts::cache_from`], valid IR
-//!    entries are copied from an externally synced directory (rsync, an
-//!    object-store mirror) into the fleet's shared cache — cross-machine
-//!    cache sharing: a fleet on a fresh machine warms from another
-//!    machine's cold run.
-//! 3. **Pre-warm.** One in-process cold translation pass
-//!    ([`super::build_sweep_cache`] — the exact compute model and typed
-//!    keys `run_sweep_cached` uses) spills every model's IR into the
-//!    shared `--cache-dir`, so each shard process loads instead of
-//!    extracting and reports **`translations == 0`**.
-//! 4. **Spawn + monitor.** N child processes re-invoke the `modtrans`
-//!    binary (`sweep <models> --shard k/N --cache-dir <shared>
-//!    --json-out <work>/shard-k.json`), stdout/stderr captured per
-//!    shard. A crashed shard is relaunched up to [`FleetOpts::retries`]
-//!    times; when retries are exhausted the fleet kills the survivors
-//!    and fails hard, naming the shard and quoting its exit code and
-//!    stderr tail (a dead shard is never just a missing file).
-//! 5. **Merge in-process.** The shard reports go through
-//!    [`SweepReport::merge`], which re-checks completeness, grid
-//!    identity and overlap — so the fleet inherits every guard the
-//!    `sweep-merge` subcommand enforces — and the merged ranking is
-//!    byte-identical to a monolithic `sweep` run of the same grid
-//!    (asserted in `tests/fleet_smoke.rs` and CI's `fleet-smoke` job).
-//! 6. **Cache sync (copy-out).** With `cache_from`, entries the synced
-//!    directory lacks (i.e. whatever this fleet translated fresh) are
-//!    published back, so the next machine's fleet starts warm; entries
-//!    it already holds are left untouched — no mtime churn for rsync to
-//!    re-upload.
+//!    entries are copied from an externally synced directory into the
+//!    fleet's shared cache — cross-machine cache sharing.
+//! 3. **Pre-warm + dispatch order.** One in-process cold translation
+//!    pass ([`super::build_sweep_cache`]) spills every model's IR into
+//!    the shared `--cache-dir` (each worker loads instead of extracting
+//!    and reports **`translations == 0`**), and the warm cache feeds an
+//!    analytic bound pass ([`super::bound::scenario_bound_ns`]) that
+//!    orders the queue longest-bound-first — the expensive scenarios are
+//!    leased out first, so no worker is left finishing a straggler alone
+//!    ([`FleetOpts::static_shards`] restores the old contiguous
+//!    once-only partition for A/B comparison).
+//! 4. **Journal.** With [`FleetOpts::journal`], every completed lease is
+//!    appended crash-atomically to a persistent [`Journal`];
+//!    [`FleetOpts::resume`] replays the committed records through the
+//!    streaming merge's guard set and dispatches only the scenarios no
+//!    record covers — an interrupted fleet re-simulates **zero**
+//!    completed scenarios and still ranks byte-identically.
+//! 5. **Lease loop.** Idle workers receive scenario-index leases
+//!    (`sweep --scenarios i,j,k`), sized adaptively from the observed
+//!    per-scenario cost. A crashed worker's lease is re-dispatched up to
+//!    [`FleetOpts::retries`] times; a worker that stops making progress
+//!    for [`FleetOpts::shard_timeout`] seconds is killed by the watchdog
+//!    and treated exactly like a crash. When retries are exhausted the
+//!    fleet kills the survivors and fails hard, naming the worker and
+//!    quoting its exit code and stderr tail.
+//! 6. **Streaming merge.** Each lease report is folded into a
+//!    [`StreamingMerge`] the moment it lands — the same guard set as
+//!    `sweep-merge`, applied incrementally — so the fleet holds a live
+//!    `--top K` leaderboard mid-run. The current K-th best iteration
+//!    time is pushed to later leases as `--top-cutoff`, letting them
+//!    prune provable losers before simulating; the cutoff only tightens
+//!    and only skips scenarios whose admissible bound already exceeds
+//!    it, so the merged ranking stays byte-identical to a monolithic
+//!    `sweep` of the same grid (asserted in `tests/fleet_smoke.rs`,
+//!    `tests/fleet_resume.rs` and CI's `fleet-smoke` job).
+//! 7. **Cache sync (copy-out).** With `cache_from`, entries the synced
+//!    directory lacks are published back; entries it already holds are
+//!    left untouched — no mtime churn for rsync to re-upload.
 
+use super::bound;
 use super::cache;
-use super::report::{ShardStatus, SweepReport};
-use super::{SweepConfig, SweepGrid};
+use super::journal::Journal;
+use super::pool;
+use super::report::{ShardStatus, StreamingMerge, SweepReport};
+use super::{Scenario, SweepConfig, SweepGrid};
 use crate::error::{Error, Result};
 use crate::json::{obj, Value};
 use crate::translator::ZeroStage;
@@ -52,13 +66,20 @@ use crate::workload::Parallelism;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
-/// How much of a failed shard's stderr is quoted in errors and status
+/// How much of a failed worker's stderr is quoted in errors and status
 /// records.
 const STDERR_TAIL_BYTES: usize = 2048;
 
 /// Exit code of the test-only [`shard_failpoint`] crash hook.
 pub const FAILPOINT_EXIT_CODE: i32 = 42;
+
+/// Adaptive lease sizing aims each lease at roughly this much work, from
+/// the EWMA of observed per-scenario wall time: long enough to amortize
+/// process spawn + cache load, short enough that the final straggler
+/// tail stays bounded by one lease.
+const TARGET_LEASE_MS: f64 = 250.0;
 
 /// Monotonic suffix for auto-created work directories, so several fleets
 /// in one process (tests, benches) never share scratch space.
@@ -66,21 +87,21 @@ static FLEET_SEQ: AtomicUsize = AtomicUsize::new(0);
 
 /// Orchestration knobs (the sweep itself is shaped by [`SweepGrid`] +
 /// [`SweepConfig`]; nothing here may affect results, only how the work
-/// is scheduled).
+/// is scheduled and recorded).
 #[derive(Debug, Clone)]
 pub struct FleetOpts {
-    /// Shard processes to launch — the `N` of every `--shard k/N`.
+    /// Worker processes to launch — the fleet's parallelism width.
     pub procs: usize,
-    /// How many times a crashed shard is relaunched before the fleet
-    /// fails hard (0 = no retries).
+    /// How many times one lease is re-dispatched after a crash (or
+    /// watchdog kill) before the fleet fails hard (0 = no retries).
     pub retries: usize,
-    /// The binary to re-invoke for each shard. `None` uses
+    /// The binary to re-invoke for each worker. `None` uses
     /// `std::env::current_exe()` — correct for the CLI, where the fleet
     /// *is* the `modtrans` binary. Test/bench/example callers must pass
     /// the real CLI binary (their own executable is a test harness); see
     /// [`locate_binary`].
     pub binary: Option<PathBuf>,
-    /// Shared IR-cache directory every shard mounts via `--cache-dir`.
+    /// Shared IR-cache directory every worker mounts via `--cache-dir`.
     /// `None` uses `<work_dir>/ircache` — warm within this fleet run
     /// only. Pass an explicit directory to stay warm across runs.
     pub cache_dir: Option<PathBuf>,
@@ -90,22 +111,47 @@ pub struct FleetOpts {
     /// rsync'd or object-store-synced directory; a missing directory is
     /// treated as empty on copy-in and created on copy-out.
     pub cache_from: Option<PathBuf>,
-    /// Scratch directory for shard reports and captured stdout/stderr.
+    /// Scratch directory for lease reports and captured stdout/stderr.
     /// `None` creates a unique temp directory, removed again on success;
     /// an explicit directory is left in place for inspection.
     pub work_dir: Option<PathBuf>,
     /// Write the machine-readable fleet status document here — on
     /// success (the [`FleetReport::status_json`] form) **and** on a
-    /// shard-exhaustion failure, where it records every completed
-    /// shard plus the dead shard's attempts/exit code/stderr tail. The
-    /// failure case is the point: a dead shard must leave diagnosable
-    /// evidence for automation, not just prose in an error message.
-    /// Best-effort (an unwritable path warns on stderr, never masks the
-    /// sweep outcome).
+    /// retry-exhaustion failure, where it records every worker slot plus
+    /// the dead worker's attempts/exit code/stderr tail. The failure
+    /// case is the point: a dead worker must leave diagnosable evidence
+    /// for automation, not just prose in an error message. Best-effort
+    /// (an unwritable path warns on stderr, never masks the sweep
+    /// outcome).
     pub status_out: Option<PathBuf>,
-    /// Test-only crash injection, exported to shard processes as
+    /// Persistent completion-journal directory. Every completed lease is
+    /// appended crash-atomically; pass the same directory again with
+    /// [`FleetOpts::resume`] to continue an interrupted fleet without
+    /// re-simulating completed work. `None` keeps no journal.
+    pub journal: Option<PathBuf>,
+    /// Replay the journal in [`FleetOpts::journal`] before dispatching:
+    /// committed leases are folded into the merge from disk and only
+    /// uncovered scenarios are leased out. Requires `journal`; a journal
+    /// recorded for a different config or grid is rejected.
+    pub resume: bool,
+    /// Hang watchdog: a worker process that has neither exited nor been
+    /// reaped within this many seconds of its launch is killed and its
+    /// lease re-dispatched through the normal retry policy. `None`
+    /// disables the watchdog.
+    pub shard_timeout: Option<f64>,
+    /// Fixed lease size (scenarios per lease), overriding the adaptive
+    /// cost-based sizing. Mostly for tests and experiments; `None` sizes
+    /// leases from the observed per-scenario cost.
+    pub lease_size: Option<usize>,
+    /// Disable work stealing: partition the queue once into contiguous
+    /// chunks, one per worker, in plain expansion order — the old static
+    /// `--shard`-style schedule, kept for A/B comparison (the paired
+    /// `fleet_skewed_*` benches) and as a fallback. Results are
+    /// byte-identical either way; only the wall-clock differs.
+    pub static_shards: bool,
+    /// Test-only crash/hang injection, exported to worker processes as
     /// `MODTRANS_FLEET_FAILPOINT` (see [`shard_failpoint`]). Never set
-    /// by the CLI.
+    /// by the CLI in production use.
     pub failpoint: Option<String>,
 }
 
@@ -119,20 +165,25 @@ impl Default for FleetOpts {
             cache_from: None,
             work_dir: None,
             status_out: None,
+            journal: None,
+            resume: false,
+            shard_timeout: None,
+            lease_size: None,
+            static_shards: false,
             failpoint: None,
         }
     }
 }
 
 /// Everything a fleet run produced: the merged ranking plus the
-/// orchestration evidence (per-shard status, pre-warm counters, cache
-/// sync counts).
+/// orchestration evidence (per-worker status, pre-warm counters, cache
+/// sync counts, journal replay accounting).
 #[derive(Debug)]
 pub struct FleetReport {
     /// The merged, re-ranked report — byte-identical in ranking to a
     /// monolithic `sweep` of the same grid and config.
     pub merged: SweepReport,
-    /// Per-shard outcome records, ordered by shard index.
+    /// Per-worker-slot outcome records, ordered by worker index.
     pub shards: Vec<ShardStatus>,
     /// Translations performed by the in-process pre-warm pass (equal to
     /// the model count on a cold shared cache, 0 on a warm one).
@@ -144,10 +195,21 @@ pub struct FleetReport {
     pub cache_copied_in: usize,
     /// Entries published back to [`FleetOpts::cache_from`].
     pub cache_copied_out: usize,
+    /// Leases completed by worker processes *this run* (journal-replayed
+    /// leases are not re-run, so they are counted separately below).
+    pub leases_completed: usize,
+    /// Committed journal records replayed by `--resume`.
+    pub replayed_leases: usize,
+    /// Scenarios covered by replayed journal records — work this run did
+    /// **not** re-simulate.
+    pub scenarios_from_journal: usize,
+    /// Whether the static once-only partition was used instead of work
+    /// stealing.
+    pub static_shards: bool,
 }
 
 impl FleetReport {
-    /// Translations summed over the shard processes — 0 whenever the
+    /// Translations summed over the worker processes — 0 whenever the
     /// pre-warm covered the grid (the fleet's acceptance counter).
     pub fn shard_translations(&self) -> usize {
         self.shards.iter().map(|s| s.translations).sum()
@@ -157,45 +219,71 @@ impl FleetReport {
     /// written via [`FleetOpts::status_out`], consumed by CI's
     /// `fleet-smoke` job.
     pub fn status_json(&self) -> Value {
-        status_doc(
-            self.shards.len(),
-            self.prewarm_translations,
-            self.prewarm_cache_loads,
-            self.cache_copied_in,
-            self.cache_copied_out,
-            &self.shards,
-        )
+        status_doc(&StatusInfo {
+            procs: self.shards.len(),
+            mode: if self.static_shards { "static" } else { "stealing" },
+            prewarm_translations: self.prewarm_translations,
+            prewarm_cache_loads: self.prewarm_cache_loads,
+            copied_in: self.cache_copied_in,
+            copied_out: self.cache_copied_out,
+            leases_completed: self.leases_completed,
+            replayed_leases: self.replayed_leases,
+            scenarios_from_journal: self.scenarios_from_journal,
+            shards: &self.shards,
+        })
     }
 }
 
-/// The status document both outcomes share: [`FleetReport::status_json`]
-/// on success, the partial failure record written before a
-/// shard-exhaustion error returns.
-fn status_doc(
+/// Everything the status document records — bundled so the success and
+/// failure paths build the identical shape from one place.
+struct StatusInfo<'a> {
     procs: usize,
+    mode: &'a str,
     prewarm_translations: usize,
     prewarm_cache_loads: usize,
     copied_in: usize,
     copied_out: usize,
-    shards: &[ShardStatus],
-) -> Value {
+    leases_completed: usize,
+    replayed_leases: usize,
+    scenarios_from_journal: usize,
+    shards: &'a [ShardStatus],
+}
+
+/// The status document both outcomes share: [`FleetReport::status_json`]
+/// on success, the partial failure record written before a
+/// retry-exhaustion error returns.
+fn status_doc(info: &StatusInfo<'_>) -> Value {
     obj(vec![
-        ("procs", Value::Num(procs as f64)),
+        ("procs", Value::Num(info.procs as f64)),
+        (
+            "scheduler",
+            obj(vec![
+                ("mode", Value::Str(info.mode.into())),
+                ("leases", Value::Num(info.leases_completed as f64)),
+            ]),
+        ),
+        (
+            "journal",
+            obj(vec![
+                ("replayed_leases", Value::Num(info.replayed_leases as f64)),
+                ("scenarios_from_journal", Value::Num(info.scenarios_from_journal as f64)),
+            ]),
+        ),
         (
             "prewarm",
             obj(vec![
-                ("translations", Value::Num(prewarm_translations as f64)),
-                ("cache_loads", Value::Num(prewarm_cache_loads as f64)),
+                ("translations", Value::Num(info.prewarm_translations as f64)),
+                ("cache_loads", Value::Num(info.prewarm_cache_loads as f64)),
             ]),
         ),
         (
             "cache_sync",
             obj(vec![
-                ("copied_in", Value::Num(copied_in as f64)),
-                ("copied_out", Value::Num(copied_out as f64)),
+                ("copied_in", Value::Num(info.copied_in as f64)),
+                ("copied_out", Value::Num(info.copied_out as f64)),
             ]),
         ),
-        ("shards", Value::Arr(shards.iter().map(ShardStatus::to_json).collect())),
+        ("shards", Value::Arr(info.shards.iter().map(ShardStatus::to_json).collect())),
     ])
 }
 
@@ -207,32 +295,161 @@ fn write_status(path: &Path, doc: &Value) {
     }
 }
 
-/// One live shard process.
-struct ShardProc {
-    /// 1-based shard index (the `k` of `--shard k/N`).
-    k: usize,
-    /// Launches so far (1 = first attempt, no retry yet).
-    attempts: usize,
+/// One lease currently running in a worker process.
+struct LeaseRun {
+    /// Scenario indices (ascending) this lease covers.
+    indices: Vec<usize>,
     child: Child,
+    /// Launch time of the *current* attempt — the watchdog clock.
+    started: Instant,
+    /// Failed attempts of this lease so far (bounded by
+    /// [`FleetOpts::retries`]).
+    failures: usize,
+    /// The report file this attempt writes.
+    out: PathBuf,
 }
 
-/// Orchestrate a whole sharded sweep: pre-warm the shared cache, launch
-/// [`FleetOpts::procs`] shard processes, relaunch crashes up to
-/// [`FleetOpts::retries`] times, and merge the shard reports in-process.
-/// See the module docs for the stage-by-stage contract.
+/// One worker slot: a stable 1-based identity `k` that successive lease
+/// processes run under, accumulating that slot's lifetime counters.
+struct WorkerSlot {
+    k: usize,
+    /// Process launches (every lease attempt, including retries).
+    attempts: usize,
+    /// Leases completed successfully.
+    leases: usize,
+    /// Exit code of the most recent attempt (`None` = never launched or
+    /// killed by a signal/watchdog).
+    exit_code: Option<i32>,
+    /// When this slot last went idle (no lease running) while the fleet
+    /// still had work in flight — cleared on the next dispatch.
+    idle_since: Option<Instant>,
+    /// Longest observed idle gap (ms); see [`ShardStatus::idle_ms`].
+    idle_ms: u64,
+    // Lifetime sums over this slot's completed leases.
+    scenarios: usize,
+    translations: usize,
+    cache_loads: usize,
+    pruned: usize,
+    scenarios_simulated: usize,
+    scenarios_pruned: usize,
+    bounds_evaluated: usize,
+    current: Option<LeaseRun>,
+}
+
+impl WorkerSlot {
+    fn new(k: usize) -> WorkerSlot {
+        WorkerSlot {
+            k,
+            attempts: 0,
+            leases: 0,
+            exit_code: None,
+            idle_since: None,
+            idle_ms: 0,
+            scenarios: 0,
+            translations: 0,
+            cache_loads: 0,
+            pruned: 0,
+            scenarios_simulated: 0,
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
+            current: None,
+        }
+    }
+
+    /// Fold one completed lease report into the slot's lifetime sums.
+    fn absorb_report(&mut self, report: &SweepReport) {
+        self.leases += 1;
+        self.exit_code = Some(0);
+        self.scenarios += report.ranked.len();
+        self.translations += report.translations;
+        self.cache_loads += report.cache_loads;
+        self.pruned += report.pruned;
+        self.scenarios_simulated += report.scenarios_simulated;
+        self.scenarios_pruned += report.scenarios_pruned;
+        self.bounds_evaluated += report.bounds_evaluated;
+    }
+
+    /// Record the idle gap that ends now (next lease arriving or the
+    /// fleet finishing), keeping the longest seen.
+    fn end_idle(&mut self) {
+        if let Some(t) = self.idle_since.take() {
+            self.idle_ms = self.idle_ms.max(t.elapsed().as_millis() as u64);
+        }
+    }
+
+    /// The slot's status record (`n` = fleet width).
+    fn status(&self, n: usize, work_dir: &Path) -> ShardStatus {
+        ShardStatus {
+            shard: (self.k, n),
+            attempts: self.attempts,
+            exit_code: self.exit_code,
+            stderr_tail: stderr_tail(&shard_err_path(work_dir, self.k)),
+            scenarios: self.scenarios,
+            translations: self.translations,
+            cache_loads: self.cache_loads,
+            pruned: self.pruned,
+            scenarios_simulated: self.scenarios_simulated,
+            scenarios_pruned: self.scenarios_pruned,
+            bounds_evaluated: self.bounds_evaluated,
+            leases: self.leases,
+            idle_ms: self.idle_ms,
+        }
+    }
+}
+
+/// The launch-invariant context threaded through the lease loop, bundled
+/// so dispatch helpers stay within a sane arity.
+struct LaunchCtx<'a> {
+    grid: &'a SweepGrid,
+    cfg: &'a SweepConfig,
+    opts: &'a FleetOpts,
+    binary: &'a Path,
+    work_dir: &'a Path,
+    cache_dir: &'a Path,
+}
+
+/// Orchestrate a whole sweep: pre-warm the shared cache, launch
+/// [`FleetOpts::procs`] worker processes, hand out scenario leases from
+/// a work-stealing queue (re-dispatching crashes up to
+/// [`FleetOpts::retries`] times), and stream-merge the lease reports
+/// in-process. See the module docs for the stage-by-stage contract.
 pub fn run_fleet(grid: &SweepGrid, cfg: &SweepConfig, opts: &FleetOpts) -> Result<FleetReport> {
     if opts.procs == 0 {
-        return Err(Error::Config("fleet needs at least one shard process (procs >= 1)".into()));
+        return Err(Error::Config("fleet needs at least one worker process (procs >= 1)".into()));
     }
     if cfg.shard.is_some() {
         return Err(Error::Config(
-            "the fleet assigns shards itself — drop the shard setting from the sweep config".into(),
+            "the fleet assigns work itself — drop the shard setting from the sweep config".into(),
         ));
     }
     if cfg.hbm_bytes % (1 << 30) != 0 {
         return Err(Error::Config(
-            "fleet shards receive --hbm-gib, so hbm_bytes must be a whole number of GiB".into(),
+            "fleet workers receive --hbm-gib, so hbm_bytes must be a whole number of GiB".into(),
         ));
+    }
+    if opts.resume && opts.journal.is_none() {
+        return Err(Error::Config(
+            "--resume replays a completion journal — give --journal DIR as well".into(),
+        ));
+    }
+    if opts.lease_size == Some(0) {
+        return Err(Error::Config(
+            "a lease must cover at least one scenario (lease size >= 1)".into(),
+        ));
+    }
+    if opts.lease_size.is_some() && opts.static_shards {
+        return Err(Error::Config(
+            "--lease sizes work-stealing leases — drop it when --static-shards pins the \
+             partition"
+                .into(),
+        ));
+    }
+    if let Some(t) = opts.shard_timeout {
+        if t.is_nan() || t <= 0.0 {
+            return Err(Error::Config(
+                "the worker watchdog timeout must be a positive number of seconds".into(),
+            ));
+        }
     }
     if grid.expand().is_empty() {
         return Err(Error::Config(
@@ -280,156 +497,280 @@ fn fleet_body(
     };
 
     // Stage: pre-warm — the fleet's single cold translation pass. Same
-    // compute model and typed keys as the shards' own cache builds, so
-    // every shard hits these entries and reports 0 translations.
+    // compute model and typed keys as the workers' own cache builds, so
+    // every worker hits these entries and reports 0 translations. The
+    // warm in-memory cache is kept briefly alive to feed the dispatch
+    // ordering's bound pass below.
     let warm = super::build_sweep_cache(&grid.unique_models(), cfg, Some(&cache_dir))?;
     let prewarm_translations = warm.translations();
     let prewarm_cache_loads = warm.disk_loads();
+
+    // Stage: the design space and its identity.
+    let scenarios = grid.expand();
+    let grid_n = scenarios.len();
+    let digest = super::grid_digest(&scenarios);
+    let fingerprint = cfg.fingerprint();
+
+    // Stage: dispatch order. Work stealing leases longest-bound-first
+    // (LPT over the analytic bound, like the in-process pool) so the
+    // expensive scenarios are in flight earliest; the static partition
+    // keeps plain expansion order, matching the old modulo schedule's
+    // spirit of "no cost model".
+    let order = if opts.static_shards {
+        (0..grid_n).collect::<Vec<usize>>()
+    } else {
+        bound_dispatch_order(&scenarios, &warm, cfg)
+    };
     drop(warm);
 
-    // Stage: spawn one process per shard.
-    let n = opts.procs;
-    let shard_out = |k: usize| work_dir.join(format!("shard-{k}.json"));
-    let mut running: Vec<ShardProc> = Vec::with_capacity(n);
-    for k in 1..=n {
-        match launch_shard(grid, cfg, opts, binary, work_dir, &cache_dir, k) {
-            Ok(child) => running.push(ShardProc { k, attempts: 1, child }),
-            Err(e) => {
-                kill_all(&mut running);
-                return Err(e);
-            }
+    // Stage: journal open / replay.
+    let (mut journal, replayed) = match (&opts.journal, opts.resume) {
+        (Some(dir), true) => {
+            let (j, r) = Journal::resume(dir, &fingerprint, grid_n, &digest)?;
+            (Some(j), r)
         }
-    }
+        (Some(dir), false) => {
+            (Some(Journal::create(dir, &fingerprint, grid_n, &digest)?), Vec::new())
+        }
+        (None, _) => (None, Vec::new()),
+    };
 
-    // Stage: monitor with bounded retries.
-    let mut statuses: Vec<ShardStatus> = Vec::with_capacity(n);
-    let mut done: Vec<(usize, SweepReport)> = Vec::with_capacity(n);
-    while !running.is_empty() {
+    // Stage: streaming merge, seeded from the replayed journal records.
+    // `absorb` applies the full merge guard set to each record, so a
+    // tampered or inconsistent journal fails here, not at finalize.
+    let mut merge = StreamingMerge::new(fingerprint, grid_n, digest);
+    let mut covered = vec![false; grid_n];
+    let mut scenarios_from_journal = 0usize;
+    for lease in &replayed {
+        merge.absorb(&lease.report, &lease.indices).map_err(|e| {
+            Error::Config(format!("journal replay failed at record seq {}: {e}", lease.seq))
+        })?;
+        for &i in &lease.indices {
+            covered[i] = true;
+        }
+        scenarios_from_journal += lease.indices.len();
+    }
+    let replayed_leases = replayed.len();
+    drop(replayed);
+
+    // The work queue: dispatch-ordered scenario indices not already
+    // covered by the journal.
+    let pending: Vec<usize> = order.into_iter().filter(|&i| !covered[i]).collect();
+    drop(covered);
+
+    let n = opts.procs;
+    let ctx = LaunchCtx { grid, cfg, opts, binary, work_dir, cache_dir: &cache_dir };
+    let mut slots: Vec<WorkerSlot> = (1..=n).map(WorkerSlot::new).collect();
+    let mut cursor = 0usize;
+    let mut leases_completed = 0usize;
+    let mut ewma_scenario_ms: Option<f64> = None;
+
+    // Stage: the lease loop — dispatch to idle workers, poll, fold.
+    loop {
+        // Dispatch: every idle slot steals the next lease while the
+        // queue is non-empty. Under the static partition each slot gets
+        // exactly one contiguous chunk (the whole queue is consumed on
+        // the first pass, so a finished slot finds nothing to steal).
+        let mut idle_now = slots.iter().filter(|s| s.current.is_none()).count();
+        for slot in slots.iter_mut() {
+            if cursor >= pending.len() {
+                break;
+            }
+            if slot.current.is_some() {
+                continue;
+            }
+            let remaining = pending.len() - cursor;
+            let size = if opts.static_shards {
+                // Contiguous once-only partition across the still-empty
+                // slots (manual div-ceil; `usize::div_ceil` needs a
+                // newer MSRV).
+                (remaining + idle_now - 1) / idle_now
+            } else {
+                lease_size(remaining, n, opts.lease_size, ewma_scenario_ms)
+            };
+            let mut indices = pending[cursor..cursor + size].to_vec();
+            cursor += size;
+            indices.sort_unstable();
+            slot.end_idle();
+            let cutoff = if cfg.top_k.is_some() { merge.kth_best_ns() } else { None };
+            match launch_lease(&ctx, slot.k, slot.attempts + 1, &indices, cutoff) {
+                Ok(run) => {
+                    slot.attempts += 1;
+                    slot.current = Some(run);
+                }
+                Err(e) => {
+                    kill_all(&mut slots);
+                    return Err(e);
+                }
+            }
+            idle_now -= 1;
+        }
+
+        if cursor >= pending.len() && slots.iter().all(|s| s.current.is_none()) {
+            break;
+        }
+
+        // Poll: reap finished workers, fold their lease reports, apply
+        // the watchdog, re-dispatch failed leases.
         let mut progressed = false;
-        let mut i = 0;
-        while i < running.len() {
-            let exited = match running[i].child.try_wait() {
+        for si in 0..slots.len() {
+            let Some(run) = slots[si].current.as_mut() else { continue };
+            let exited = match run.child.try_wait() {
                 Ok(status) => status,
                 Err(e) => {
-                    kill_all(&mut running);
+                    kill_all(&mut slots);
                     return Err(e.into());
                 }
             };
-            let Some(st) = exited else {
-                i += 1;
-                continue;
-            };
-            progressed = true;
-            let proc = running.swap_remove(i);
-            let k = proc.k;
-            // A zero exit with a readable, correctly stamped report is
-            // the only success; everything else goes through the retry
-            // policy (excluded-runner style: relaunch, never trust).
-            let failure = if st.success() {
-                match read_shard_report(&shard_out(k), k, n) {
-                    Ok(report) => {
-                        statuses.push(ShardStatus {
-                            shard: (k, n),
-                            attempts: proc.attempts,
-                            exit_code: Some(0),
-                            stderr_tail: stderr_tail(&shard_err_path(work_dir, k)),
-                            scenarios: report.ranked.len(),
-                            translations: report.translations,
-                            cache_loads: report.cache_loads,
-                            pruned: report.pruned,
-                            scenarios_simulated: report.scenarios_simulated,
-                            scenarios_pruned: report.scenarios_pruned,
-                            bounds_evaluated: report.bounds_evaluated,
-                        });
-                        done.push((k, report));
-                        None
+            let failure = match exited {
+                Some(st) if st.success() => {
+                    // A zero exit with a readable, correctly stamped
+                    // report is the only success; everything else goes
+                    // through the retry policy.
+                    match read_lease_report(&run.out, &run.indices) {
+                        Ok(report) => {
+                            let elapsed_ms = run.started.elapsed().as_secs_f64() * 1e3;
+                            let indices = std::mem::take(&mut run.indices);
+                            // Guard-checked fold first, durable record
+                            // second: the journal only ever holds
+                            // records the merge accepted.
+                            if let Err(e) = merge.absorb(&report, &indices) {
+                                kill_all(&mut slots);
+                                return Err(e);
+                            }
+                            if let Some(j) = journal.as_mut() {
+                                if let Err(e) = j.record(&indices, &report) {
+                                    kill_all(&mut slots);
+                                    return Err(e);
+                                }
+                            }
+                            let slot = &mut slots[si];
+                            slot.absorb_report(&report);
+                            slot.current = None;
+                            slot.idle_since = Some(Instant::now());
+                            leases_completed += 1;
+                            let per = elapsed_ms / indices.len().max(1) as f64;
+                            ewma_scenario_ms = Some(match ewma_scenario_ms {
+                                None => per,
+                                Some(e) => 0.5 * e + 0.5 * per,
+                            });
+                            progressed = true;
+                            continue;
+                        }
+                        Err(e) => Some(format!("exited 0 but its report is unusable: {e}")),
                     }
-                    Err(e) => Some(format!("exited 0 but its report is unusable: {e}")),
                 }
-            } else {
-                Some(match st.code() {
+                Some(st) => Some(match st.code() {
                     Some(c) => format!("exit code {c}"),
                     None => "killed by a signal".to_string(),
-                })
+                }),
+                None => match opts.shard_timeout {
+                    // Hang watchdog: no exit within the budget is a
+                    // failure like any other — kill, then retry-police.
+                    Some(t) if run.started.elapsed().as_secs_f64() >= t => {
+                        let _ = run.child.kill();
+                        let _ = run.child.wait();
+                        Some(format!("watchdog: still running after {t}s — killed"))
+                    }
+                    _ => None,
+                },
             };
-            if let Some(reason) = failure {
-                if proc.attempts > opts.retries {
-                    let mut tail = stderr_tail(&shard_err_path(work_dir, k));
-                    if tail.is_empty() {
-                        tail = "(no stderr output)".to_string();
-                    }
-                    kill_all(&mut running);
-                    // Leave machine-readable evidence behind: every
-                    // completed shard plus the dead one's full record —
-                    // the error text alone is not a diagnosable artifact.
-                    if let Some(path) = &opts.status_out {
-                        statuses.push(ShardStatus {
-                            shard: (k, n),
-                            attempts: proc.attempts,
-                            exit_code: st.code(),
-                            stderr_tail: tail.clone(),
-                            scenarios: 0,
-                            translations: 0,
-                            cache_loads: 0,
-                            pruned: 0,
-                            scenarios_simulated: 0,
-                            scenarios_pruned: 0,
-                            bounds_evaluated: 0,
-                        });
-                        statuses.sort_by_key(|s| s.shard.0);
-                        let doc = status_doc(
-                            n,
-                            prewarm_translations,
-                            prewarm_cache_loads,
-                            cache_copied_in,
-                            0,
-                            &statuses,
-                        );
-                        write_status(path, &doc);
-                    }
-                    return Err(Error::Sim(format!(
-                        "fleet shard {k}/{n} failed after {} attempt(s) ({reason}) — \
-                         stderr tail:\n{tail}",
-                        proc.attempts
-                    )));
+            let Some(reason) = failure else { continue };
+            progressed = true;
+            let exit_code = exited.and_then(|st| st.code());
+            let slot = &mut slots[si];
+            slot.exit_code = exit_code;
+            let mut run = slot.current.take().expect("failing slot had a running lease");
+            run.failures += 1;
+            if run.failures > opts.retries {
+                let k = slot.k;
+                let attempts = run.failures;
+                let mut tail = stderr_tail(&shard_err_path(work_dir, k));
+                if tail.is_empty() {
+                    tail = "(no stderr output)".to_string();
                 }
-                match launch_shard(grid, cfg, opts, binary, work_dir, &cache_dir, k) {
-                    Ok(child) => {
-                        running.push(ShardProc { k, attempts: proc.attempts + 1, child });
-                    }
-                    Err(e) => {
-                        kill_all(&mut running);
-                        return Err(e);
-                    }
+                kill_all(&mut slots);
+                // Leave machine-readable evidence behind: every worker
+                // slot's record, including the dead one's exit code and
+                // stderr tail — the error text alone is not a
+                // diagnosable artifact.
+                if let Some(path) = &opts.status_out {
+                    let shards: Vec<ShardStatus> =
+                        slots.iter().map(|s| s.status(n, work_dir)).collect();
+                    let doc = status_doc(&StatusInfo {
+                        procs: n,
+                        mode: if opts.static_shards { "static" } else { "stealing" },
+                        prewarm_translations,
+                        prewarm_cache_loads,
+                        copied_in: cache_copied_in,
+                        copied_out: 0,
+                        leases_completed,
+                        replayed_leases,
+                        scenarios_from_journal,
+                        shards: &shards,
+                    });
+                    write_status(path, &doc);
+                }
+                return Err(Error::Sim(format!(
+                    "fleet worker {k}/{n} failed after {attempts} attempt(s) ({reason}) — \
+                     stderr tail:\n{tail}"
+                )));
+            }
+            // Re-dispatch the same lease on the same slot (a fresh
+            // process; the lease's failure budget carries over).
+            let indices = std::mem::take(&mut run.indices);
+            let failures = run.failures;
+            let cutoff = if cfg.top_k.is_some() { merge.kth_best_ns() } else { None };
+            match launch_lease(&ctx, slot.k, slot.attempts + 1, &indices, cutoff) {
+                Ok(mut relaunched) => {
+                    relaunched.failures = failures;
+                    slot.attempts += 1;
+                    slot.current = Some(relaunched);
+                }
+                Err(e) => {
+                    kill_all(&mut slots);
+                    return Err(e);
                 }
             }
         }
-        if !running.is_empty() && !progressed {
-            std::thread::sleep(std::time::Duration::from_millis(15));
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(10));
         }
     }
 
-    // Stage: merge in-process — `SweepReport::merge` re-checks shard
-    // completeness, grid identity and overlap, so a lost or foreign
-    // shard can never masquerade as the full design space.
-    statuses.sort_by_key(|s| s.shard.0);
-    done.sort_by_key(|(k, _)| *k);
-    // Evidence first: should the merge below reject the shard set, the
-    // per-shard records are already on disk (the success path refreshes
-    // this file with the final copy-out count).
-    if let Some(path) = &opts.status_out {
-        let doc = status_doc(
-            n,
-            prewarm_translations,
-            prewarm_cache_loads,
-            cache_copied_in,
-            0,
-            &statuses,
-        );
-        write_status(path, &doc);
+    // Close the idle books: slots that finished before the fleet did
+    // accrue their terminal gap — the straggler tail a static partition
+    // shows and work stealing is built to shrink.
+    for slot in slots.iter_mut() {
+        slot.end_idle();
     }
-    let reports: Vec<SweepReport> = done.into_iter().map(|(_, r)| r).collect();
-    let merged = SweepReport::merge(&reports)?;
+
+    // Stage: finalize the streaming merge — every grid scenario must be
+    // covered exactly once across journal replay and fresh leases.
+    let statuses: Vec<ShardStatus> = slots.iter().map(|s| s.status(n, work_dir)).collect();
+    let merged = match merge.finalize() {
+        Ok(m) => m,
+        Err(e) => {
+            // Evidence first: the per-slot records are on disk even
+            // when the lease accounting is rejected.
+            if let Some(path) = &opts.status_out {
+                let doc = status_doc(&StatusInfo {
+                    procs: n,
+                    mode: if opts.static_shards { "static" } else { "stealing" },
+                    prewarm_translations,
+                    prewarm_cache_loads,
+                    copied_in: cache_copied_in,
+                    copied_out: 0,
+                    leases_completed,
+                    replayed_leases,
+                    scenarios_from_journal,
+                    shards: &statuses,
+                });
+                write_status(path, &doc);
+            }
+            return Err(e);
+        }
+    };
 
     // Stage: cache copy-out (publish freshly translated entries back to
     // the synced directory).
@@ -445,6 +786,10 @@ fn fleet_body(
         prewarm_cache_loads,
         cache_copied_in,
         cache_copied_out,
+        leases_completed,
+        replayed_leases,
+        scenarios_from_journal,
+        static_shards: opts.static_shards,
     };
     if let Some(path) = &opts.status_out {
         write_status(path, &report.status_json());
@@ -452,65 +797,113 @@ fn fleet_body(
     Ok(report)
 }
 
-/// Captured-stderr path for one shard (truncated on every relaunch, so
-/// it always holds the latest attempt's output).
+/// Longest-bound-first dispatch order over the full grid (descending
+/// analytic bound, ascending-index tiebreak), or plain expansion order
+/// when the bound pass fails — the fleet never *needs* bounds, so a
+/// bound error must not fail it. Pure scheduling: results are keyed by
+/// scenario index, so the merged bytes cannot depend on this order.
+fn bound_dispatch_order(
+    scenarios: &[Scenario],
+    warm: &cache::WorkloadCache,
+    cfg: &SweepConfig,
+) -> Vec<usize> {
+    let identity: Vec<usize> = (0..scenarios.len()).collect();
+    if scenarios.len() <= 2 {
+        return identity;
+    }
+    let bounds = pool::run_indexed_with(
+        scenarios.len(),
+        cfg.threads.max(1),
+        bound::BoundMemo::new,
+        |memo, i| bound::scenario_bound_ns(&scenarios[i], warm, cfg, memo),
+    );
+    let Ok(bounds) = bounds else { return identity };
+    let mut order = identity;
+    order.sort_by(|&a, &b| bounds[b].cmp(&bounds[a]).then(a.cmp(&b)));
+    order
+}
+
+/// Adaptive lease size: before any lease has finished, hand out small
+/// probes (a quarter of a fair share) to learn the per-scenario cost;
+/// afterwards aim each lease at [`TARGET_LEASE_MS`] of work. Always at
+/// least 1 and never more than a fair share of what remains, so late in
+/// the run every worker still gets something to steal.
+fn lease_size(remaining: usize, procs: usize, fixed: Option<usize>, ewma_ms: Option<f64>) -> usize {
+    let fair = (remaining + procs - 1) / procs; // manual div-ceil (MSRV)
+    let cap = fair.max(1);
+    if let Some(size) = fixed {
+        return size.clamp(1, cap);
+    }
+    let want = match ewma_ms {
+        None => remaining / (procs * 4),
+        Some(ms) => (TARGET_LEASE_MS / ms.max(0.01)) as usize,
+    };
+    want.clamp(1, cap)
+}
+
+/// Captured-stderr path for one worker slot (truncated on every launch,
+/// so it always holds the latest attempt's output).
 fn shard_err_path(work_dir: &Path, k: usize) -> PathBuf {
     work_dir.join(format!("shard-{k}.stderr"))
 }
 
-/// Spawn one shard process with its report/stdout/stderr paths wired up.
-/// Any stale report file is removed first so a crash can never be
-/// mistaken for a completed shard.
-fn launch_shard(
-    grid: &SweepGrid,
-    cfg: &SweepConfig,
-    opts: &FleetOpts,
-    binary: &Path,
-    work_dir: &Path,
-    cache_dir: &Path,
+/// Spawn one lease process on worker slot `k` with its report and
+/// stdout/stderr paths wired up. Any stale report file is removed first
+/// so a crash can never be mistaken for a completed lease. `launch` is
+/// the slot's 1-based launch ordinal, exported so the failpoint's `K@A`
+/// form can target one specific attempt.
+fn launch_lease(
+    ctx: &LaunchCtx<'_>,
     k: usize,
-) -> Result<Child> {
-    let out = work_dir.join(format!("shard-{k}.json"));
+    launch: usize,
+    indices: &[usize],
+    cutoff_ns: Option<u64>,
+) -> Result<LeaseRun> {
+    let out = ctx.work_dir.join(format!("shard-{k}.json"));
     let _ = std::fs::remove_file(&out);
-    let args = shard_args(grid, cfg, k, opts.procs, cache_dir, &out);
-    let mut cmd = Command::new(binary);
+    let args = lease_args(ctx.grid, ctx.cfg, indices, ctx.cache_dir, &out, cutoff_ns);
+    let mut cmd = Command::new(ctx.binary);
     cmd.args(&args)
         .stdin(Stdio::null())
-        .stdout(std::fs::File::create(work_dir.join(format!("shard-{k}.stdout")))?)
-        .stderr(std::fs::File::create(shard_err_path(work_dir, k))?);
-    match &opts.failpoint {
+        .stdout(std::fs::File::create(ctx.work_dir.join(format!("shard-{k}.stdout")))?)
+        .stderr(std::fs::File::create(shard_err_path(ctx.work_dir, k))?)
+        .env("MODTRANS_FLEET_WORKER", k.to_string())
+        .env("MODTRANS_FLEET_LAUNCH", launch.to_string());
+    match &ctx.opts.failpoint {
         Some(fp) => {
             cmd.env("MODTRANS_FLEET_FAILPOINT", fp);
         }
         // Scrub any ambient failpoint (e.g. still exported from a
         // debugging shell): only an explicit FleetOpts request may
-        // crash shards — "never set in production" must hold even in a
+        // crash workers — "never set in production" must hold even in a
         // polluted environment.
         None => {
             cmd.env_remove("MODTRANS_FLEET_FAILPOINT");
         }
     }
-    cmd.spawn().map_err(|e| {
-        Error::Config(format!("failed to spawn shard process '{}': {e}", binary.display()))
-    })
+    let child = cmd.spawn().map_err(|e| {
+        Error::Config(format!("failed to spawn worker process '{}': {e}", ctx.binary.display()))
+    })?;
+    Ok(LeaseRun { indices: indices.to_vec(), child, started: Instant::now(), failures: 0, out })
 }
 
-/// The child argv for shard `k` of `n`: the full grid and config
-/// re-expressed in CLI tokens, plus the shard/cache/output wiring. Kept
-/// total — every `SweepGrid`/`SweepConfig` field is either forwarded or
-/// fleet-owned (`threads` is per shard; `shard` is assigned here).
-fn shard_args(
+/// The child argv for one lease: the full grid and config re-expressed
+/// in CLI tokens, plus the lease/cache/output wiring. Kept total — every
+/// `SweepGrid`/`SweepConfig` field is either forwarded or fleet-owned
+/// (`threads` is per worker; the scenario subset is assigned here).
+fn lease_args(
     grid: &SweepGrid,
     cfg: &SweepConfig,
-    k: usize,
-    n: usize,
+    indices: &[usize],
     cache_dir: &Path,
     out: &Path,
+    cutoff_ns: Option<u64>,
 ) -> Vec<String> {
     let parallelisms: Vec<&str> =
         grid.parallelisms.iter().map(|&p| cli_parallelism_token(p)).collect();
     let topologies: Vec<&str> = grid.topologies.iter().map(|&t| t.token()).collect();
     let collectives: Vec<&str> = grid.collectives.iter().map(|&c| c.token()).collect();
+    let scenario_list: Vec<String> = indices.iter().map(|i| i.to_string()).collect();
     let mut v = vec![
         "sweep".to_string(),
         grid.models.join(","),
@@ -538,8 +931,8 @@ fn shard_args(
         (cfg.hbm_bytes >> 30).to_string(),
         "--zero".to_string(),
         zero_token(cfg.zero).to_string(),
-        "--shard".to_string(),
-        format!("{k}/{n}"),
+        "--scenarios".to_string(),
+        scenario_list.join(","),
         "--cache-dir".to_string(),
         cache_dir.display().to_string(),
         "--json-out".to_string(),
@@ -551,6 +944,10 @@ fn shard_args(
     if let Some(k) = cfg.top_k {
         v.push("--top".to_string());
         v.push(k.to_string());
+    }
+    if let Some(ns) = cutoff_ns {
+        v.push("--top-cutoff".to_string());
+        v.push(ns.to_string());
     }
     v
 }
@@ -578,18 +975,27 @@ fn zero_token(z: ZeroStage) -> &'static str {
     }
 }
 
-/// Load and validate one shard's report file: parseable JSON, a valid
-/// report, stamped with exactly the shard this fleet assigned.
-fn read_shard_report(path: &Path, k: usize, n: usize) -> Result<SweepReport> {
+/// Load and validate one lease's report file: parseable JSON, a valid
+/// report, echoing exactly the scenario indices this fleet dispatched.
+fn read_lease_report(path: &Path, indices: &[usize]) -> Result<SweepReport> {
     let text = std::fs::read_to_string(path).map_err(|e| {
-        Error::Config(format!("shard report '{}' unreadable: {e}", path.display()))
+        Error::Config(format!("lease report '{}' unreadable: {e}", path.display()))
     })?;
     let report = SweepReport::from_json(&crate::json::parse(&text)?)?;
-    if report.shard != Some((k, n)) {
+    if report.shard.is_some() {
         return Err(Error::Config(format!(
-            "shard report '{}' is stamped {:?}, expected shard {k}/{n}",
+            "lease report '{}' is stamped with modulo shard {:?} — the fleet dispatches \
+             scenario leases, not shards",
             path.display(),
             report.shard
+        )));
+    }
+    if report.lease.as_deref() != Some(indices) {
+        return Err(Error::Config(format!(
+            "lease report '{}' echoes {:?}, expected the dispatched lease {:?}",
+            path.display(),
+            report.lease,
+            indices
         )));
     }
     Ok(report)
@@ -607,14 +1013,17 @@ fn stderr_tail(path: &Path) -> String {
     }
 }
 
-/// Kill and reap every still-running shard (the fleet is failing; no
-/// orphan may keep writing into the shared cache or work directory).
-fn kill_all(running: &mut Vec<ShardProc>) {
-    for p in running.iter_mut() {
-        let _ = p.child.kill();
-        let _ = p.child.wait();
+/// Kill and reap every still-running lease process (the fleet is
+/// failing; no orphan may keep writing into the shared cache or work
+/// directory).
+fn kill_all(slots: &mut [WorkerSlot]) {
+    for slot in slots.iter_mut() {
+        if let Some(run) = slot.current.as_mut() {
+            let _ = run.child.kill();
+            let _ = run.child.wait();
+        }
+        slot.current = None;
     }
-    running.clear();
 }
 
 /// Best-effort search for the `modtrans` CLI binary when the current
@@ -637,34 +1046,67 @@ pub fn locate_binary() -> Option<PathBuf> {
     candidates.into_iter().find(|c| c.is_file())
 }
 
-/// Test-only crash injection for fleet failure-path tests, driven by the
-/// `MODTRANS_FLEET_FAILPOINT` environment variable (which the fleet sets
-/// on its children only when [`FleetOpts::failpoint`] is given — it is
-/// never set in production). Grammar:
+/// Test-only crash/hang injection for fleet failure-path tests, driven
+/// by the `MODTRANS_FLEET_FAILPOINT` environment variable (which the
+/// fleet sets on its children only when [`FleetOpts::failpoint`] is
+/// given — it is never set in production). The worker identity comes
+/// from `MODTRANS_FLEET_WORKER`/`MODTRANS_FLEET_LAUNCH` (exported by the
+/// fleet on every launch), falling back to the legacy `--shard` index
+/// for hand-run processes. Grammar — `TARGET[:ACTION]`:
 ///
-/// * `"K"` — a process running shard `K` always aborts with
-///   [`FAILPOINT_EXIT_CODE`].
-/// * `"K:once=PATH"` — abort only if `PATH` does not exist yet, creating
-///   it first; the marker makes the shard fail exactly once, so the
-///   fleet's retry must succeed.
+/// * TARGET `"K"` — a process running on worker slot `K` trips the
+///   action on every launch.
+/// * TARGET `"K@A"` — only worker `K`'s `A`-th launch (1-based) trips,
+///   making the injection one-shot by construction: the retry of the
+///   same lease is launch `A+1` and runs clean.
+/// * ACTION absent — abort with [`FAILPOINT_EXIT_CODE`].
+/// * ACTION `"once=PATH"` — abort only if `PATH` does not exist yet,
+///   creating it first; the marker makes the worker fail exactly once
+///   across the whole fleet, so the fleet's retry must succeed.
+/// * ACTION `"hang=SECS"` — sleep `SECS` seconds (simulating a hung
+///   worker for the `--shard-timeout` watchdog), then abort anyway; the
+///   bounded sleep means a broken watchdog fails the test instead of
+///   deadlocking it.
 ///
 /// Called by the CLI `sweep` command after argument parsing (i.e. the
 /// process dies *mid-run*, after it has been assigned real work).
 pub fn shard_failpoint(shard: Option<(usize, usize)>) {
-    let Some((k, _)) = shard else { return };
     let Ok(spec) = std::env::var("MODTRANS_FLEET_FAILPOINT") else { return };
-    let (target, marker) = match spec.split_once(':') {
-        Some((t, rest)) => (t, rest.strip_prefix("once=")),
+    let worker = std::env::var("MODTRANS_FLEET_WORKER")
+        .ok()
+        .and_then(|w| w.parse::<usize>().ok())
+        .or_else(|| shard.map(|(k, _)| k));
+    let Some(k) = worker else { return };
+    let launch = std::env::var("MODTRANS_FLEET_LAUNCH")
+        .ok()
+        .and_then(|a| a.parse::<usize>().ok());
+    let (target, action) = match spec.split_once(':') {
+        Some((t, rest)) => (t, Some(rest)),
         None => (spec.as_str(), None),
     };
-    if !matches!(target.parse::<usize>(), Ok(t) if t == k) {
+    let (target_k, target_launch) = match target.split_once('@') {
+        Some((t, a)) => (t, a.parse::<usize>().ok()),
+        None => (target, None),
+    };
+    if !matches!(target_k.parse::<usize>(), Ok(t) if t == k) {
         return;
     }
-    if let Some(path) = marker {
-        if Path::new(path).exists() {
+    if let Some(a) = target_launch {
+        if launch != Some(a) {
             return;
         }
-        let _ = std::fs::write(path, "crashed");
+    }
+    if let Some(rest) = action {
+        if let Some(path) = rest.strip_prefix("once=") {
+            if Path::new(path).exists() {
+                return;
+            }
+            let _ = std::fs::write(path, "crashed");
+        } else if let Some(secs) = rest.strip_prefix("hang=") {
+            let secs: f64 = secs.parse().unwrap_or(30.0);
+            eprintln!("failpoint: injected hang in worker {k} (MODTRANS_FLEET_FAILPOINT)");
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
     }
     eprintln!("failpoint: injected crash in shard {k} (MODTRANS_FLEET_FAILPOINT)");
     std::process::exit(FAILPOINT_EXIT_CODE);
@@ -678,14 +1120,14 @@ mod tests {
     fn zero_procs_is_a_config_error() {
         let opts = FleetOpts { procs: 0, ..Default::default() };
         let err = run_fleet(&SweepGrid::default(), &SweepConfig::default(), &opts).unwrap_err();
-        assert!(err.to_string().contains("at least one shard process"));
+        assert!(err.to_string().contains("at least one worker process"));
     }
 
     #[test]
     fn preset_shard_is_rejected() {
         let cfg = SweepConfig { shard: Some((1, 2)), ..Default::default() };
         let err = run_fleet(&SweepGrid::default(), &cfg, &FleetOpts::default()).unwrap_err();
-        assert!(err.to_string().contains("assigns shards itself"));
+        assert!(err.to_string().contains("assigns work itself"));
     }
 
     #[test]
@@ -703,7 +1145,50 @@ mod tests {
     }
 
     #[test]
-    fn shard_args_round_trip_through_the_cli_grammar() {
+    fn resume_without_a_journal_is_rejected() {
+        let opts = FleetOpts { resume: true, ..Default::default() };
+        let err = run_fleet(&SweepGrid::default(), &SweepConfig::default(), &opts).unwrap_err();
+        assert!(err.to_string().contains("--journal"), "got: {err}");
+    }
+
+    #[test]
+    fn degenerate_scheduler_knobs_are_rejected() {
+        let zero_lease = FleetOpts { lease_size: Some(0), ..Default::default() };
+        let err =
+            run_fleet(&SweepGrid::default(), &SweepConfig::default(), &zero_lease).unwrap_err();
+        assert!(err.to_string().contains("at least one scenario"), "got: {err}");
+
+        let lease_and_static =
+            FleetOpts { lease_size: Some(3), static_shards: true, ..Default::default() };
+        let err = run_fleet(&SweepGrid::default(), &SweepConfig::default(), &lease_and_static)
+            .unwrap_err();
+        assert!(err.to_string().contains("--static-shards"), "got: {err}");
+
+        let bad_watchdog = FleetOpts { shard_timeout: Some(0.0), ..Default::default() };
+        let err =
+            run_fleet(&SweepGrid::default(), &SweepConfig::default(), &bad_watchdog).unwrap_err();
+        assert!(err.to_string().contains("positive number of seconds"), "got: {err}");
+    }
+
+    #[test]
+    fn lease_sizes_probe_then_track_cost_and_never_overreach() {
+        // Fixed size wins but is clamped to a fair share.
+        assert_eq!(lease_size(100, 4, Some(7), None), 7);
+        assert_eq!(lease_size(8, 4, Some(7), None), 2);
+        // No cost estimate yet: small probes, never zero.
+        assert_eq!(lease_size(100, 4, None, None), 6);
+        assert_eq!(lease_size(3, 4, None, None), 1);
+        // Cheap scenarios grow the lease toward the time target...
+        let grown = lease_size(1000, 4, None, Some(1.0));
+        assert_eq!(grown, TARGET_LEASE_MS as usize);
+        // ...expensive ones shrink it, and the fair-share cap always
+        // leaves work for the other workers to steal.
+        assert_eq!(lease_size(1000, 4, None, Some(10_000.0)), 1);
+        assert_eq!(lease_size(10, 4, None, Some(0.001)), 3);
+    }
+
+    #[test]
+    fn lease_args_round_trip_through_the_cli_grammar() {
         // Every forwarded token must be accepted by the CLI parsers the
         // child process will run them through.
         let grid = SweepGrid {
@@ -733,8 +1218,14 @@ mod tests {
             top_k: Some(5),
             ..Default::default()
         };
-        let args =
-            shard_args(&grid, &cfg, 2, 4, Path::new("/tmp/cache"), Path::new("/tmp/out.json"));
+        let args = lease_args(
+            &grid,
+            &cfg,
+            &[3, 5, 9],
+            Path::new("/tmp/cache"),
+            Path::new("/tmp/out.json"),
+            Some(123_456),
+        );
         assert_eq!(args[0], "sweep");
         assert_eq!(args[1], "mlp,resnet18");
         let opt = |key: &str| {
@@ -753,15 +1244,30 @@ mod tests {
         for c in opt("--collectives").split(',') {
             super::super::CollectiveAlgo::from_token(c).unwrap();
         }
-        assert_eq!(opt("--shard"), "2/4");
+        assert_eq!(opt("--scenarios"), "3,5,9");
+        assert!(!args.iter().any(|a| a == "--shard"), "leases and shards are exclusive");
         assert_eq!(opt("--zero"), "2");
         assert_eq!(opt("--hbm-gib"), "32");
         assert_eq!(opt("--cache-dir"), "/tmp/cache");
         assert_eq!(opt("--json-out"), "/tmp/out.json");
         assert!(args.iter().any(|a| a == "--skip-infeasible"));
-        // Top-K pruning forwards so each shard prunes against its local
-        // top-K (merge truncates the union back to K).
+        // Top-K pruning forwards so each lease prunes against its local
+        // top-K (the streaming merge truncates the union back to K)...
         assert_eq!(opt("--top"), "5");
+        // ...and the fleet-wide cutoff rides along once the live
+        // leaderboard has K entries.
+        assert_eq!(opt("--top-cutoff"), "123456");
+
+        // Without a cutoff the flag is omitted entirely.
+        let cold = lease_args(
+            &grid,
+            &cfg,
+            &[0],
+            Path::new("/tmp/cache"),
+            Path::new("/tmp/out.json"),
+            None,
+        );
+        assert!(!cold.iter().any(|a| a == "--top-cutoff"));
     }
 
     #[test]
@@ -769,9 +1275,10 @@ mod tests {
         // Never crashes here: the env var is unset (deliberately NOT
         // set in-process — concurrent setenv/getenv across test threads
         // is UB on glibc). The armed branches — crash, crash-once
-        // marker, and "spec names a different shard" — are exercised
-        // for real by tests/fleet_smoke.rs in child processes, where
-        // the variable is scoped to the spawned shard.
+        // marker, launch-targeted crash, and hang — are exercised for
+        // real by tests/fleet_smoke.rs and tests/fleet_resume.rs in
+        // child processes, where the variable is scoped to the spawned
+        // worker.
         shard_failpoint(None);
         shard_failpoint(Some((1, 4)));
         shard_failpoint(Some((4, 4)));

@@ -1,0 +1,304 @@
+//! Persistent fleet completion journal — crash-durable lease records.
+//!
+//! The work-stealing fleet scheduler ([`super::fleet::run_fleet`])
+//! appends one record per completed lease: the scenario indices the
+//! lease covered plus the worker's full per-lease [`SweepReport`] JSON.
+//! A `meta.json` header pins the journal to one design space (config
+//! fingerprint + grid identity). Every file is written with the same
+//! temp-file + rename idiom as the IR disk cache, so a fleet killed at
+//! any instant leaves either a complete committed record or an ignored
+//! `*.tmp.<pid>` leftover — never a torn record.
+//!
+//! On `--resume`, the orchestrator re-opens the directory, verifies the
+//! header against the *current* invocation's fingerprint (a journal
+//! recorded for a different sweep is rejected, never silently merged),
+//! replays the committed records through the streaming merge's guard
+//! set, and dispatches only the scenarios no record covers — zero
+//! re-simulations of completed work.
+
+use super::report::SweepReport;
+use crate::error::{Error, Result};
+use crate::json::{obj, Value};
+use std::path::{Path, PathBuf};
+
+/// Journal format identifier, bumped on incompatible layout changes so
+/// an old orchestrator never misreads a newer journal (or vice versa).
+pub const JOURNAL_SCHEMA: &str = "modtrans-fleet-journal/v1";
+
+/// One committed lease record read back during `--resume` replay.
+#[derive(Debug)]
+pub struct ReplayedLease {
+    /// The record's dispatch sequence number (also its file name).
+    pub seq: usize,
+    /// Grid-expansion scenario indices the lease covered.
+    pub indices: Vec<usize>,
+    /// The worker's per-lease report, parsed and re-validated.
+    pub report: SweepReport,
+}
+
+/// An open journal directory the orchestrator appends lease records to.
+#[derive(Debug)]
+pub struct Journal {
+    dir: PathBuf,
+    next_seq: usize,
+}
+
+fn meta_path(dir: &Path) -> PathBuf {
+    dir.join("meta.json")
+}
+
+fn record_name(seq: usize) -> String {
+    format!("lease-{seq:06}.json")
+}
+
+/// Write `doc` to `dir/name` via temp file + rename (crash-atomic).
+fn write_atomic(dir: &Path, name: &str, doc: &Value) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, doc.to_json_pretty())?;
+    std::fs::rename(&tmp, dir.join(name))?;
+    Ok(())
+}
+
+impl Journal {
+    /// Start a fresh journal for one design space. Refuses to clobber a
+    /// directory that already holds a journal — continuing one is an
+    /// explicit `--resume` decision, not a default.
+    pub fn create(
+        dir: &Path,
+        config: &Value,
+        grid_scenarios: usize,
+        grid_digest: &str,
+    ) -> Result<Journal> {
+        std::fs::create_dir_all(dir)?;
+        if meta_path(dir).exists() {
+            return Err(Error::Config(format!(
+                "journal directory '{}' already holds a journal — pass --resume to \
+                 continue it, or point --journal at a fresh directory",
+                dir.display()
+            )));
+        }
+        let meta = obj(vec![
+            ("schema", Value::Str(JOURNAL_SCHEMA.into())),
+            ("config", config.clone()),
+            ("grid_scenarios", Value::Num(grid_scenarios as f64)),
+            ("grid_digest", Value::Str(grid_digest.into())),
+        ]);
+        write_atomic(dir, "meta.json", &meta)?;
+        Ok(Journal { dir: dir.to_path_buf(), next_seq: 0 })
+    }
+
+    /// Re-open an existing journal and replay its committed records.
+    /// The header must match the current invocation's config fingerprint
+    /// and grid identity exactly — a stale journal is an error, never a
+    /// silent partial merge. A directory with no journal yet (first
+    /// launch under an always-`--resume` wrapper) is started fresh.
+    pub fn resume(
+        dir: &Path,
+        config: &Value,
+        grid_scenarios: usize,
+        grid_digest: &str,
+    ) -> Result<(Journal, Vec<ReplayedLease>)> {
+        if !meta_path(dir).exists() {
+            return Ok((Journal::create(dir, config, grid_scenarios, grid_digest)?, Vec::new()));
+        }
+        let meta_text = std::fs::read_to_string(meta_path(dir))?;
+        let meta = crate::json::parse(&meta_text).map_err(|e| {
+            Error::Config(format!(
+                "journal header '{}/meta.json' is unreadable ({e}) — the journal \
+                 cannot be trusted; remove the directory to start over",
+                dir.display()
+            ))
+        })?;
+        let schema = meta.get("schema").and_then(Value::as_str).unwrap_or_default();
+        if schema != JOURNAL_SCHEMA {
+            return Err(Error::Config(format!(
+                "journal at '{}' uses schema '{schema}' (this build reads \
+                 '{JOURNAL_SCHEMA}') — refusing to resume",
+                dir.display()
+            )));
+        }
+        let same_config = meta.get("config") == Some(config);
+        let meta_scenarios = meta.get("grid_scenarios").and_then(Value::as_usize);
+        let meta_digest = meta.get("grid_digest").and_then(Value::as_str);
+        let same_grid = meta_scenarios == Some(grid_scenarios) && meta_digest == Some(grid_digest);
+        if !same_config || !same_grid {
+            return Err(Error::Config(format!(
+                "journal at '{}' was recorded for a different sweep (config/grid \
+                 fingerprint mismatch) — refusing to resume; point --journal at a \
+                 fresh directory for this configuration",
+                dir.display()
+            )));
+        }
+        // Collect committed records in sequence order. `*.tmp.*`
+        // leftovers from a crash mid-write are ignored by construction
+        // (the name filter only admits fully renamed records).
+        let mut names: Vec<String> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if name.starts_with("lease-") && name.ends_with(".json") {
+                names.push(name);
+            }
+        }
+        names.sort();
+        let mut replayed = Vec::with_capacity(names.len());
+        let mut next_seq = 0usize;
+        for name in names {
+            let path = dir.join(&name);
+            let text = std::fs::read_to_string(&path)?;
+            let rec = crate::json::parse(&text).map_err(|e| {
+                Error::Config(format!(
+                    "journal record '{}' is corrupt ({e}) — a committed record \
+                     should never be torn; remove the journal to start over",
+                    path.display()
+                ))
+            })?;
+            let seq = rec.get("seq").and_then(Value::as_usize).ok_or_else(|| {
+                Error::Config(format!("journal record '{}' has no 'seq'", path.display()))
+            })?;
+            let indices_json = rec.get("indices").and_then(Value::as_arr).ok_or_else(|| {
+                Error::Config(format!("journal record '{}' has no 'indices' array", path.display()))
+            })?;
+            let mut indices = Vec::with_capacity(indices_json.len());
+            for i in indices_json {
+                indices.push(i.as_usize().ok_or_else(|| {
+                    Error::Config(format!(
+                        "journal record '{}' has a non-integer scenario index",
+                        path.display()
+                    ))
+                })?);
+            }
+            let report_json = rec.get("report").ok_or_else(|| {
+                Error::Config(format!("journal record '{}' has no 'report'", path.display()))
+            })?;
+            let report = SweepReport::from_json(report_json).map_err(|e| {
+                Error::Config(format!(
+                    "journal record '{}' holds an unreadable lease report: {e}",
+                    path.display()
+                ))
+            })?;
+            next_seq = next_seq.max(seq + 1);
+            replayed.push(ReplayedLease { seq, indices, report });
+        }
+        Ok((Journal { dir: dir.to_path_buf(), next_seq }, replayed))
+    }
+
+    /// The sequence number the next [`Journal::record`] call will use.
+    pub fn next_seq(&self) -> usize {
+        self.next_seq
+    }
+
+    /// Append one completed lease (crash-atomically) and return its
+    /// sequence number.
+    pub fn record(&mut self, indices: &[usize], report: &SweepReport) -> Result<usize> {
+        let seq = self.next_seq;
+        let doc = obj(vec![
+            ("seq", Value::Num(seq as f64)),
+            ("indices", Value::Arr(indices.iter().map(|&i| Value::Num(i as f64)).collect())),
+            ("report", report.to_json()),
+        ]);
+        write_atomic(&self.dir, &record_name(seq), &doc)?;
+        self.next_seq += 1;
+        Ok(seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::SweepConfig;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("modtrans-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn tiny_report(cfg: &SweepConfig, indices: &[usize]) -> SweepReport {
+        SweepReport {
+            models: 0,
+            translations: 0,
+            cache_loads: 0,
+            pruned: 0,
+            scenarios_simulated: indices.len(),
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
+            config: cfg.fingerprint(),
+            grid_scenarios: 8,
+            grid_digest: "cafe".into(),
+            shard: None,
+            lease: Some(indices.to_vec()),
+            ranked: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn create_record_resume_round_trips() {
+        let dir = scratch("roundtrip");
+        let cfg = SweepConfig::default();
+        let fp = cfg.fingerprint();
+        let mut j = Journal::create(&dir, &fp, 8, "cafe").unwrap();
+        assert_eq!(j.next_seq(), 0);
+        j.record(&[5, 2], &tiny_report(&cfg, &[5, 2])).unwrap();
+        j.record(&[0], &tiny_report(&cfg, &[0])).unwrap();
+        // A torn-write leftover must be ignored on replay.
+        std::fs::write(dir.join("lease-000002.json.tmp.999"), "torn").unwrap();
+        let (j2, replayed) = Journal::resume(&dir, &fp, 8, "cafe").unwrap();
+        assert_eq!(j2.next_seq(), 2);
+        assert_eq!(replayed.len(), 2);
+        assert_eq!(replayed[0].seq, 0);
+        assert_eq!(replayed[0].indices, vec![5, 2]);
+        assert_eq!(replayed[0].report.lease.as_deref(), Some(&[5, 2][..]));
+        assert_eq!(replayed[1].indices, vec![0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber_an_existing_journal() {
+        let dir = scratch("clobber");
+        let fp = SweepConfig::default().fingerprint();
+        Journal::create(&dir, &fp, 8, "cafe").unwrap();
+        let err = Journal::create(&dir, &fp, 8, "cafe").unwrap_err();
+        assert!(err.to_string().contains("--resume"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_a_stale_fingerprint_and_starts_fresh_dirs() {
+        let dir = scratch("stale");
+        let cfg = SweepConfig::default();
+        Journal::create(&dir, &cfg.fingerprint(), 8, "cafe").unwrap();
+        // Different config fingerprint.
+        let other = SweepConfig { npus: 64, ..Default::default() }.fingerprint();
+        let err = Journal::resume(&dir, &other, 8, "cafe").unwrap_err();
+        assert!(err.to_string().contains("different sweep"), "got: {err}");
+        // Different grid identity under the same config.
+        let err = Journal::resume(&dir, &cfg.fingerprint(), 8, "beef").unwrap_err();
+        assert!(err.to_string().contains("different sweep"), "got: {err}");
+        let err = Journal::resume(&dir, &cfg.fingerprint(), 9, "cafe").unwrap_err();
+        assert!(err.to_string().contains("different sweep"), "got: {err}");
+        // Resume on a journal-less directory starts one fresh.
+        let fresh = scratch("fresh");
+        let (j, replayed) = Journal::resume(&fresh, &cfg.fingerprint(), 8, "cafe").unwrap();
+        assert_eq!(j.next_seq(), 0);
+        assert!(replayed.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&fresh);
+    }
+
+    #[test]
+    fn resume_rejects_an_unknown_schema() {
+        let dir = scratch("schema");
+        let fp = SweepConfig::default().fingerprint();
+        Journal::create(&dir, &fp, 8, "cafe").unwrap();
+        let meta = std::fs::read_to_string(dir.join("meta.json")).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            meta.replace("modtrans-fleet-journal/v1", "modtrans-fleet-journal/v9"),
+        )
+        .unwrap();
+        let err = Journal::resume(&dir, &fp, 8, "cafe").unwrap_err();
+        assert!(err.to_string().contains("schema"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -24,6 +24,13 @@
 //!    worker carries one [`ScenarioScratch`] (simulator arenas + the
 //!    comm-plan and workload derivation buffers) across its scenarios,
 //!    so steady-state derivation *and* simulation are allocation-free.
+//!    At `threads > 1` the queue is fed longest-bound-first
+//!    ([`pool::run_ordered_with`] over the descending
+//!    [`bound::scenario_bound_ns`] order): the expensive scenarios start
+//!    first, so no worker ends up running a straggler alone after the
+//!    cheap tail drains. Dispatch order is a pure scheduling hint —
+//!    results are keyed and re-sorted by scenario index, so the report
+//!    bytes are identical to index-order dispatch.
 //!    With `SweepConfig::top_k` set (`--top K`), a branch-and-bound
 //!    layer runs first: [`bound::scenario_bound_ns`] computes an
 //!    admissible analytic makespan lower bound per scenario (no DES,
@@ -42,12 +49,23 @@
 //!    first, key-ordered tiebreak) and emits text + JSON. Because every
 //!    scenario is simulated deterministically and ranking is a total
 //!    order, the report is **byte-identical regardless of thread count**.
-//! 5. [`fleet::run_fleet`] scales past one process: it pre-warms the
-//!    shared disk cache with a single cold translation pass, launches N
-//!    shard processes of the current binary (`--shard k/N` each),
-//!    relaunches crashes under a bounded-retry policy, and merges the
-//!    shard reports in-process — one command, N workers, one cold
-//!    translation, one merged ranking (the `sweep fleet` subcommand).
+//! 5. [`fleet::run_fleet`] scales past one process with a work-stealing
+//!    scheduler: it expands the grid once, pre-warms the shared disk
+//!    cache with a single cold translation pass, orders the scenario
+//!    queue longest-bounded-first, and hands out scenario-index *leases*
+//!    (adaptively sized batches, run by child processes of the current
+//!    binary via `--scenarios i,j,k`) to whichever worker slot is idle —
+//!    so a skewed grid keeps every process busy instead of gating
+//!    wall-clock on the slowest static shard. Completed leases are
+//!    appended to a crash-durable [`journal`] (`--journal DIR`; a
+//!    relaunch with `--resume` replays it and re-simulates nothing) and
+//!    folded into a live [`report::StreamingMerge`] ranking as they
+//!    arrive, whose K-th best under `--top K` becomes a fleet-wide prune
+//!    cutoff pushed to later leases. Crashed workers relaunch under a
+//!    bounded-retry policy, hung workers are killed by the
+//!    `--shard-timeout` watchdog and their leases re-queued — one
+//!    command, N workers, one cold translation, one merged ranking (the
+//!    `sweep fleet` subcommand).
 //!
 //! ```no_run
 //! use modtrans::sweep::{run_sweep, SweepConfig, SweepGrid};
@@ -59,13 +77,15 @@
 pub mod bound;
 pub mod cache;
 pub mod fleet;
+pub mod journal;
 pub mod pool;
 pub mod report;
 
 pub use bound::{scenario_bound_ns, BoundMemo};
 pub use cache::{CacheKey, WorkloadCache};
 pub use fleet::{run_fleet, FleetOpts, FleetReport};
-pub use report::{ScenarioResult, ShardStatus, SweepReport};
+pub use journal::Journal;
+pub use report::{ScenarioResult, ShardStatus, StreamingMerge, SweepReport};
 
 use crate::error::{Error, Result};
 use crate::ir::{emit, passes};
@@ -358,7 +378,7 @@ pub fn parse_shard_spec(spec: &str) -> Option<(usize, usize)> {
 /// grid identity stamped into reports so [`SweepReport::merge`] can
 /// refuse shards of *different* grids that happen to share a scenario
 /// count and config.
-fn grid_digest(scenarios: &[Scenario]) -> String {
+pub(crate) fn grid_digest(scenarios: &[Scenario]) -> String {
     let mut h = crate::util::FNV1A_OFFSET;
     for sc in scenarios {
         h = crate::util::fnv1a_extend(h, sc.model.as_bytes());
@@ -501,6 +521,37 @@ pub fn run_sweep_cached(
     cfg: &SweepConfig,
     cache_dir: Option<&std::path::Path>,
 ) -> Result<SweepReport> {
+    run_sweep_scenarios(grid, cfg, cache_dir, None, None)
+}
+
+/// [`run_sweep_cached`] generalized to the fleet's lease protocol: an
+/// optional explicit scenario-index subset (`lease`, indices into the
+/// full grid's deduplicated [`SweepGrid::expand`] order — the CLI
+/// `sweep --scenarios i,j,k`) and an optional fleet-wide top-K prune
+/// cutoff (`cutoff_ns`, the CLI `sweep --top-cutoff NS`).
+///
+/// A leased run keeps exactly the named scenarios (in expand order,
+/// whatever order the indices arrive in) and stamps the sorted index
+/// list into the report's `lease` field so the orchestrator can verify
+/// the report against the lease it dispatched. Leases and modulo shards
+/// are mutually exclusive — they are two different partition protocols.
+///
+/// The cutoff is the fleet-wide K-th best simulated iteration time at
+/// dispatch: any scenario whose admissible analytic bound *strictly*
+/// exceeds it provably cannot enter the fleet's final top-K (its
+/// simulated time is at least its bound), so it is skipped even before
+/// the local candidate set fills. The cutoff only ever skips provable
+/// losers — the merged fleet top-K stays byte-identical — but it is
+/// timing-dependent, so it deliberately lives outside the config
+/// fingerprint and per-lease simulated/pruned counts may vary run to
+/// run (their sum never does). Ignored when `top_k` is unset.
+pub fn run_sweep_scenarios(
+    grid: &SweepGrid,
+    cfg: &SweepConfig,
+    cache_dir: Option<&std::path::Path>,
+    lease: Option<&[usize]>,
+    cutoff_ns: Option<u64>,
+) -> Result<SweepReport> {
     let mut scenarios = grid.expand();
     if scenarios.is_empty() {
         return Err(Error::Config(
@@ -509,6 +560,40 @@ pub fn run_sweep_cached(
     }
     let grid_scenarios = scenarios.len();
     let grid = grid_digest(&scenarios);
+    let mut lease_sorted: Option<Vec<usize>> = None;
+    if let Some(indices) = lease {
+        if cfg.shard.is_some() {
+            return Err(Error::Config(
+                "a scenario lease and a modulo shard are two different partition \
+                 protocols — drop one of --scenarios / --shard"
+                    .into(),
+            ));
+        }
+        let mut sorted = indices.to_vec();
+        sorted.sort_unstable();
+        if sorted.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Config(
+                "scenario lease repeats an index — each grid scenario can be \
+                 leased at most once"
+                    .into(),
+            ));
+        }
+        if let Some(&bad) = sorted.iter().find(|&&i| i >= grid_scenarios) {
+            return Err(Error::Config(format!(
+                "scenario lease index {bad} is out of range for the \
+                 {grid_scenarios}-scenario grid"
+            )));
+        }
+        // Keep exactly the leased scenarios, in expand order.
+        let keep: BTreeSet<usize> = sorted.iter().copied().collect();
+        let mut idx = 0usize;
+        scenarios.retain(|_| {
+            let k = keep.contains(&idx);
+            idx += 1;
+            k
+        });
+        lease_sorted = Some(sorted);
+    }
     if let Some((k, n)) = cfg.shard {
         if !shard_valid(k, n) {
             return Err(Error::Config(format!("invalid shard {k}/{n} — need 1 <= K <= N")));
@@ -552,16 +637,25 @@ pub fn run_sweep_cached(
     let threads = cfg.threads;
     let (ranked, scenarios_pruned, bounds_evaluated) = match cfg.top_k {
         None => {
-            let mut ranked = pool::run_indexed_with(
-                scenarios.len(),
-                threads,
-                ScenarioScratch::new,
-                |s, i| run_scenario(&scenarios[i], &cache, cfg, s),
-            )?;
+            // Longest-processing-time dispatch: feed the queue in
+            // descending analytic-bound order so no worker is left
+            // finishing a straggler alone. Pure scheduling — results
+            // come back index-keyed and are re-ranked below, so the
+            // report bytes cannot depend on the order (and a bound
+            // failure just falls back to index order rather than
+            // failing a sweep that never needed bounds).
+            let run =
+                |s: &mut ScenarioScratch, i: usize| run_scenario(&scenarios[i], &cache, cfg, s);
+            let mut ranked = match lpt_order(&scenarios, &cache, cfg) {
+                Some(order) => pool::run_ordered_with(&order, threads, ScenarioScratch::new, run)?,
+                None => {
+                    pool::run_indexed_with(scenarios.len(), threads, ScenarioScratch::new, run)?
+                }
+            };
             ranked.sort_by(ScenarioResult::rank_cmp);
             (ranked, 0, 0)
         }
-        Some(k) => run_top_k(&scenarios, &cache, cfg, k)?,
+        Some(k) => run_top_k(&scenarios, &cache, cfg, k, cutoff_ns)?,
     };
     Ok(SweepReport {
         models: models.len(),
@@ -575,8 +669,38 @@ pub fn run_sweep_cached(
         grid_scenarios,
         grid_digest: grid,
         shard: cfg.shard,
+        lease: lease_sorted,
         ranked,
     })
+}
+
+/// The exhaustive path's longest-processing-time dispatch order:
+/// descending [`bound::scenario_bound_ns`] (ascending-index tiebreak),
+/// or `None` to use plain index order — when one thread makes ordering
+/// moot, when the grid is too small to have a tail, or when the bound
+/// pass fails (the exhaustive sweep never *needs* bounds, so a bound
+/// error must not fail it). These ordering bounds are a scheduling hint
+/// only: they are deliberately not counted in `bounds_evaluated`, which
+/// reports the top-K triage pass — exhaustive reports keep the counter
+/// at 0, byte-identical to pre-LPT output.
+fn lpt_order(
+    scenarios: &[Scenario],
+    cache: &WorkloadCache,
+    cfg: &SweepConfig,
+) -> Option<Vec<usize>> {
+    if cfg.threads <= 1 || scenarios.len() <= 2 {
+        return None;
+    }
+    let bounds = pool::run_indexed_with(
+        scenarios.len(),
+        cfg.threads,
+        bound::BoundMemo::new,
+        |memo, i| bound::scenario_bound_ns(&scenarios[i], cache, cfg, memo),
+    )
+    .ok()?;
+    let mut order: Vec<usize> = (0..scenarios.len()).collect();
+    order.sort_by(|&a, &b| bounds[b].cmp(&bounds[a]).then(a.cmp(&b)));
+    Some(order)
 }
 
 /// The exact top-K branch-and-bound driver. Bounds every scenario
@@ -599,16 +723,24 @@ pub fn run_sweep_cached(
 /// returned ranking and counters are thread-count independent, and the
 /// ranking is byte-identical to the exhaustive ranking's first K rows.
 ///
+/// `cutoff_ns` (the fleet-wide K-th best at dispatch, see
+/// [`run_sweep_scenarios`]) caps the prune threshold from the start:
+/// scenarios whose bound strictly exceeds it are skipped even while the
+/// local candidate set is still filling, because the fleet already
+/// holds K results at least that good.
+///
 /// Returns `(ranked top-K, scenarios pruned, bounds evaluated)`.
 fn run_top_k(
     scenarios: &[Scenario],
     cache: &WorkloadCache,
     cfg: &SweepConfig,
     k: usize,
+    cutoff_ns: Option<u64>,
 ) -> Result<(Vec<ScenarioResult>, usize, usize)> {
     if k == 0 {
         return Err(Error::Config("top-K pruning needs K >= 1 (got --top 0)".into()));
     }
+    let cutoff = cutoff_ns.unwrap_or(u64::MAX);
     // Parallel bound pass: pure per scenario, so per-worker memos keep
     // the result exactly deterministic (see the doc comment above).
     let bounds = pool::run_indexed_with(
@@ -627,15 +759,23 @@ fn run_top_k(
     let mut pos = 0usize;
     while pos < order.len() {
         let wave_end = if results.len() < k {
-            // Seed wave: fill the candidate set unconditionally.
-            (pos + (k - results.len())).min(order.len())
+            // Seed wave: fill the candidate set — but the fleet-wide
+            // cutoff already proves scenarios bounded strictly above it
+            // are global losers, so they never enter even the seed.
+            let want = k - results.len();
+            let mut end = pos;
+            while end < order.len() && end - pos < want && bounds[order[end]] <= cutoff {
+                end += 1;
+            }
+            end
         } else {
             // results is rank-sorted after every wave; the K-th best
-            // simulated iteration time is the prune threshold. Keep a
-            // scenario iff bound <= threshold: an equal bound could
-            // still win the rank-key tiebreak, so only a strictly
-            // larger bound is safe to skip.
-            let threshold = results[k - 1].iteration_ns;
+            // simulated iteration time (capped by the fleet-wide
+            // cutoff) is the prune threshold. Keep a scenario iff
+            // bound <= threshold: an equal bound could still win the
+            // rank-key tiebreak, so only a strictly larger bound is
+            // safe to skip.
+            let threshold = results[k - 1].iteration_ns.min(cutoff);
             let mut end = pos;
             while end < order.len() && bounds[order[end]] <= threshold {
                 end += 1;
@@ -807,5 +947,89 @@ mod tests {
         // Same grid, different thread counts: identical report.
         let b = run_sweep(&grid, &SweepConfig { threads: 1, ..cfg }).unwrap();
         assert_eq!(a.to_json().to_json_pretty(), b.to_json().to_json_pretty());
+    }
+
+    #[test]
+    fn scenario_leases_partition_the_grid_and_stream_merge_back() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into(), "resnet18".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let cfg = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };
+        let full = run_sweep(&grid, &cfg).unwrap();
+        assert_eq!(full.grid_scenarios, 8);
+        // Three unequal leases covering the grid, dispatched out of
+        // index order (the arrival order a stealing fleet produces).
+        let leases: [&[usize]; 3] = [&[6, 1, 3], &[0, 7], &[2, 4, 5]];
+        let mut m = StreamingMerge::new(cfg.fingerprint(), 8, full.grid_digest.clone());
+        for lease in leases {
+            let r = run_sweep_scenarios(&grid, &cfg, None, Some(lease), None).unwrap();
+            assert_eq!(r.shard, None);
+            // The echoed lease is index-sorted regardless of input order.
+            let mut sorted = lease.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(r.lease.as_deref(), Some(&sorted[..]));
+            assert_eq!(r.scenarios_simulated, lease.len());
+            m.absorb(&r, &sorted).unwrap();
+        }
+        let merged = m.finalize().unwrap();
+        // The streamed lease merge is byte-identical to the monolithic
+        // ranking.
+        let ranked_of = |r: &SweepReport| r.to_json().get("ranked").cloned().unwrap();
+        assert_eq!(ranked_of(&merged), ranked_of(&full));
+    }
+
+    #[test]
+    fn scenario_leases_reject_bad_indices_and_shard_mixes() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        let err = run_sweep_scenarios(&grid, &cfg, None, Some(&[0, 9]), None).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "got: {err}");
+        let err = run_sweep_scenarios(&grid, &cfg, None, Some(&[1, 1]), None).unwrap_err();
+        assert!(err.to_string().contains("repeats an index"), "got: {err}");
+        let sharded = SweepConfig { shard: Some((1, 2)), ..cfg };
+        let err = run_sweep_scenarios(&grid, &sharded, None, Some(&[0]), None).unwrap_err();
+        assert!(err.to_string().contains("two different partition protocols"), "got: {err}");
+    }
+
+    #[test]
+    fn top_k_cutoff_prunes_more_but_never_changes_the_answer() {
+        let grid = SweepGrid {
+            models: vec!["mlp".into(), "resnet18".into()],
+            parallelisms: vec![Parallelism::Data, Parallelism::Model],
+            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            collectives: vec![CollectiveAlgo::Pipelined],
+        };
+        let base = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };
+        let exhaustive = run_sweep(&grid, &base).unwrap();
+        let top = SweepConfig { top_k: Some(2), ..base };
+        let plain = run_sweep(&grid, &top).unwrap();
+        // A sound cutoff: the true global K-th best (what a fleet merge
+        // would know once K results are in).
+        let cutoff = exhaustive.ranked[1].iteration_ns;
+        let cut = run_sweep_scenarios(&grid, &top, None, None, Some(cutoff)).unwrap();
+        let ranked_of = |r: &SweepReport| r.to_json().get("ranked").cloned().unwrap();
+        assert_eq!(ranked_of(&cut), ranked_of(&plain));
+        // The cut top-K is the exhaustive ranking's first K rows.
+        assert_eq!(cut.ranked.len(), 2);
+        for (c, e) in cut.ranked.iter().zip(exhaustive.ranked.iter()) {
+            assert_eq!(c.scenario.key(), e.scenario.key());
+            assert_eq!(c.iteration_ns, e.iteration_ns);
+        }
+        // The cutoff can only increase pruning, never reduce coverage.
+        assert!(cut.scenarios_pruned >= plain.scenarios_pruned);
+        assert_eq!(cut.scenarios_simulated + cut.scenarios_pruned, 8);
+        assert_eq!(cut.bounds_evaluated, 8);
+        // An absurdly tight cutoff still covers the grid (everything
+        // bound-pruned, nothing ranked — the merge-side counters hold).
+        let tight = run_sweep_scenarios(&grid, &top, None, None, Some(0)).unwrap();
+        assert_eq!(tight.scenarios_simulated + tight.scenarios_pruned, 8);
     }
 }

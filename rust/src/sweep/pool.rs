@@ -12,33 +12,59 @@
 //! worker's jobs — the hook the sweep uses to carry a
 //! [`crate::sim::SimScratch`] arena across scenarios so steady-state
 //! iterations are allocation-free.
+//!
+//! [`run_ordered_with`] decouples *dispatch* order from *result* order:
+//! the queue is fed a caller-chosen permutation (the sweep feeds
+//! descending analytic cost — longest processing time first — to shave
+//! the straggler tail at high thread counts) while results are still
+//! keyed and returned by index, so the output bytes cannot depend on
+//! the schedule.
 
 use crate::error::{Error, Result};
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-/// Run `f(scratch, 0..jobs)` across `threads` workers (clamped to ≥ 1),
-/// returning the results in index order. Each worker calls `init()` once
-/// and passes the resulting scratch to every job it executes; because
-/// job results must not depend on the scratch's prior use, the output is
-/// still deterministic and thread-count independent. If any job fails,
-/// the error with the lowest job index is returned (every job still runs
-/// to completion, so the choice of surfaced error is deterministic too).
-pub fn run_indexed_with<T, S, I, F>(jobs: usize, threads: usize, init: I, f: F) -> Result<Vec<T>>
+/// Like [`run_indexed_with`], but jobs are *dispatched* in the order
+/// given by `order` — a permutation of `0..order.len()` — while results
+/// still come back in index order. This is the longest-processing-time
+/// hook: feeding the queue in descending estimated-cost order lets the
+/// expensive jobs start first, so no worker is left running a straggler
+/// alone after the cheap tail drains. The output is byte-identical to
+/// identity-order dispatch (results are keyed and re-sorted by index),
+/// only the wall-clock changes.
+pub fn run_ordered_with<T, S, I, F>(
+    order: &[usize],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Result<Vec<T>>
 where
     T: Send,
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize) -> Result<T> + Sync,
 {
+    let jobs = order.len();
     if jobs == 0 {
         return Ok(Vec::new());
     }
+    // A non-permutation would silently drop or double-run jobs; the
+    // check is O(jobs) against simulation-scale work, so always on.
+    let mut seen = vec![false; jobs];
+    for &i in order {
+        if i >= jobs || seen[i] {
+            return Err(Error::Sim(format!(
+                "dispatch order is not a permutation of 0..{jobs} (index {i} repeated or out \
+                 of range)"
+            )));
+        }
+        seen[i] = true;
+    }
     let threads = threads.clamp(1, jobs);
 
-    // Work queue: every index queued up front, sender dropped so workers
-    // see Err(Disconnected) once the queue drains.
+    // Work queue: every index queued up front in dispatch order, sender
+    // dropped so workers see Err(Disconnected) once the queue drains.
     let (job_tx, job_rx) = mpsc::channel::<usize>();
-    for i in 0..jobs {
+    for &i in order {
         let _ = job_tx.send(i);
     }
     drop(job_tx);
@@ -77,13 +103,27 @@ where
             jobs
         )));
     }
-    // A single worker drains the FIFO job queue in index order and sends
-    // results in that same order, so the sort is only needed when
-    // several workers interleave.
-    if threads > 1 {
-        buf.sort_by_key(|(i, _)| *i);
-    }
+    // Always re-sort: even a single worker drains the queue in
+    // *dispatch* order, which need not be index order here.
+    buf.sort_by_key(|(i, _)| *i);
     buf.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Run `f(scratch, 0..jobs)` across `threads` workers (clamped to ≥ 1),
+/// returning the results in index order. Each worker calls `init()` once
+/// and passes the resulting scratch to every job it executes; because
+/// job results must not depend on the scratch's prior use, the output is
+/// still deterministic and thread-count independent. If any job fails,
+/// the error with the lowest job index is returned (every job still runs
+/// to completion, so the choice of surfaced error is deterministic too).
+pub fn run_indexed_with<T, S, I, F>(jobs: usize, threads: usize, init: I, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> Result<T> + Sync,
+{
+    let order: Vec<usize> = (0..jobs).collect();
+    run_ordered_with(&order, threads, init, f)
 }
 
 /// Scratch-free variant: run `f(0..jobs)` across `threads` workers,
@@ -144,6 +184,34 @@ mod tests {
         })
         .unwrap();
         assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ordered_dispatch_still_returns_index_order() {
+        // Reverse dispatch order (the LPT shape) at every thread count —
+        // including 1, where the queue drains strictly in dispatch
+        // order, so an unsorted result buffer would come back reversed.
+        let order: Vec<usize> = (0..20).rev().collect();
+        for threads in [1usize, 2, 4, 9] {
+            let out = run_ordered_with(&order, threads, || (), |_, i| Ok(i * 3)).unwrap();
+            assert_eq!(out.len(), 20);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * 3, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn ordered_dispatch_rejects_non_permutations() {
+        // Repeated index.
+        let err = run_ordered_with(&[0, 1, 1], 2, || (), |_, i| Ok(i)).unwrap_err();
+        assert!(err.to_string().contains("not a permutation"), "got: {err}");
+        // Out-of-range index.
+        let err = run_ordered_with(&[0, 3], 2, || (), |_, i| Ok(i)).unwrap_err();
+        assert!(err.to_string().contains("not a permutation"), "got: {err}");
+        // Empty order is the empty result, not an error.
+        let out: Vec<usize> = run_ordered_with(&[], 2, || (), |_, i| Ok(i)).unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]

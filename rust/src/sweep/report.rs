@@ -66,6 +66,15 @@ pub struct ShardStatus {
     pub scenarios_pruned: usize,
     /// Analytic lower bounds the shard evaluated (0 when not pruning).
     pub bounds_evaluated: usize,
+    /// Scenario-range leases this worker slot completed under the
+    /// work-stealing scheduler (0 for a legacy static `--shard` run).
+    pub leases: usize,
+    /// Longest observed gap (ms) between this worker finishing a lease
+    /// and its next dispatch (or the fleet completing) — the
+    /// work-stealing acceptance counter: a healthy stealing fleet keeps
+    /// this near zero, a static partition shows each early finisher
+    /// idling for the full straggler tail.
+    pub idle_ms: u64,
 }
 
 impl ShardStatus {
@@ -82,6 +91,8 @@ impl ShardStatus {
             ("scenarios_simulated", Value::Num(self.scenarios_simulated as f64)),
             ("scenarios_pruned", Value::Num(self.scenarios_pruned as f64)),
             ("bounds_evaluated", Value::Num(self.bounds_evaluated as f64)),
+            ("leases", Value::Num(self.leases as f64)),
+            ("idle_ms", Value::Num(self.idle_ms as f64)),
             ("stderr_tail", Value::Str(self.stderr_tail.clone())),
         ])
     }
@@ -177,6 +188,12 @@ pub struct SweepReport {
     /// Which shard of the grid this report covers (`None` = the full
     /// grid). `merge` requires a complete, uniform `1..=N` shard set.
     pub shard: Option<(usize, usize)>,
+    /// The explicit scenario-index lease (indices into the full grid's
+    /// deduplicated expansion order) this report covers, echoed back by
+    /// a `--scenarios` child so the fleet orchestrator can verify a
+    /// lease report against the lease it handed out. `None` for full or
+    /// modulo-sharded runs. Mutually exclusive with `shard`.
+    pub lease: Option<Vec<usize>>,
     /// Results, fastest simulated iteration first.
     pub ranked: Vec<ScenarioResult>,
 }
@@ -216,6 +233,10 @@ impl SweepReport {
             Some((k, n)) => Value::Str(format!("{k}/{n}")),
             None => Value::Null,
         };
+        let lease = match &self.lease {
+            Some(ix) => Value::Arr(ix.iter().map(|&i| Value::Num(i as f64)).collect()),
+            None => Value::Null,
+        };
         obj(vec![
             ("models", Value::Num(self.models as f64)),
             ("translations", Value::Num(self.translations as f64)),
@@ -229,6 +250,7 @@ impl SweepReport {
             ("grid_scenarios", Value::Num(self.grid_scenarios as f64)),
             ("grid_digest", Value::Str(self.grid_digest.clone())),
             ("shard", shard),
+            ("lease", lease),
             ("ranked", Value::Arr(ranked)),
         ])
     }
@@ -278,6 +300,31 @@ impl SweepReport {
                 ))
             }
         };
+        // Same policy as `shard`: absent (pre-lease reports) and null
+        // both mean "no lease"; a present-but-malformed lease is an
+        // error, never silently dropped provenance.
+        let lease = match v.get("lease") {
+            None | Some(Value::Null) => None,
+            Some(Value::Arr(ix)) => {
+                let mut out = Vec::with_capacity(ix.len());
+                for i in ix {
+                    out.push(i.as_usize().ok_or_else(|| {
+                        Error::Config(
+                            "invalid lease field in sweep report JSON — expected \
+                             an array of scenario indices"
+                                .into(),
+                        )
+                    })?);
+                }
+                Some(out)
+            }
+            Some(_) => {
+                return Err(Error::Config(
+                    "invalid lease field in sweep report JSON — expected an index array or null"
+                        .into(),
+                ))
+            }
+        };
         Ok(SweepReport {
             models: r_usize(v, "models")?,
             translations: r_usize(v, "translations")?,
@@ -300,6 +347,7 @@ impl SweepReport {
                 .unwrap_or_default()
                 .to_string(),
             shard,
+            lease,
             ranked,
         })
     }
@@ -459,6 +507,7 @@ impl SweepReport {
             grid_scenarios,
             grid_digest,
             shard: None,
+            lease: None,
             ranked,
         })
     }
@@ -509,6 +558,196 @@ impl SweepReport {
     }
 }
 
+/// Incremental reducer over per-lease reports — [`SweepReport::merge`]
+/// folded one batch at a time, under the same guard set, so the fleet
+/// orchestrator can maintain a live ranking while leases are still in
+/// flight instead of merging once after the last worker exits.
+///
+/// Guards enforced per [`StreamingMerge::absorb`] call (mirroring the
+/// batch merge): config-fingerprint equality, grid identity, per-lease
+/// coverage accounting (`simulated + bound-pruned + infeasible-pruned`
+/// must equal the lease size), disjoint lease index ranges, disjoint
+/// scenario keys, and — when the lease report echoes its index list —
+/// the echo must match what the scheduler dispatched. `finalize`
+/// additionally requires that the absorbed leases cover every grid
+/// scenario exactly once.
+///
+/// Under `--top K` the folded ranking is truncated to K after every
+/// batch; this loses nothing because each lease's report already ranks
+/// its local K best, and every eventual global winner is a local winner
+/// on its own lease. [`StreamingMerge::kth_best_ns`] exposes the
+/// current K-th best iteration time — the fleet-wide prune cutoff that
+/// tightens mid-run as batches arrive.
+#[derive(Debug)]
+pub struct StreamingMerge {
+    config: Value,
+    grid_scenarios: usize,
+    grid_digest: String,
+    top_k: Option<usize>,
+    covered: Vec<bool>,
+    covered_n: usize,
+    seen_keys: BTreeSet<String>,
+    translations: usize,
+    cache_loads: usize,
+    pruned: usize,
+    scenarios_simulated: usize,
+    scenarios_pruned: usize,
+    bounds_evaluated: usize,
+    ranked: Vec<ScenarioResult>,
+}
+
+impl StreamingMerge {
+    /// Start an empty merge for one design space: the config
+    /// fingerprint every lease must match, the full grid's deduplicated
+    /// scenario count, and its order-sensitive digest.
+    pub fn new(config: Value, grid_scenarios: usize, grid_digest: String) -> StreamingMerge {
+        let top_k = config.get("top_k").and_then(Value::as_usize);
+        StreamingMerge {
+            config,
+            grid_scenarios,
+            grid_digest,
+            top_k,
+            covered: vec![false; grid_scenarios],
+            covered_n: 0,
+            seen_keys: BTreeSet::new(),
+            translations: 0,
+            cache_loads: 0,
+            pruned: 0,
+            scenarios_simulated: 0,
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
+            ranked: Vec::new(),
+        }
+    }
+
+    /// Fold one lease report (covering exactly the grid-expansion
+    /// `indices` the scheduler dispatched) into the running merge.
+    pub fn absorb(&mut self, batch: &SweepReport, indices: &[usize]) -> Result<()> {
+        if batch.config != self.config {
+            return Err(Error::Config(
+                "lease report was produced under a different sweep configuration — \
+                 refusing to fold it into the streaming merge"
+                    .into(),
+            ));
+        }
+        if batch.grid_scenarios != self.grid_scenarios || batch.grid_digest != self.grid_digest {
+            return Err(Error::Config(format!(
+                "lease report covers a different grid ({} scenarios, digest {} vs {} \
+                 scenarios, digest {}) — refusing to merge across grids",
+                batch.grid_scenarios, batch.grid_digest, self.grid_scenarios, self.grid_digest
+            )));
+        }
+        if let Some(echo) = &batch.lease {
+            if echo != indices {
+                return Err(Error::Config(format!(
+                    "lease report echoes {} scenario index(es) that are not the {} \
+                     dispatched for this lease — stale or mixed-up report file",
+                    echo.len(),
+                    indices.len()
+                )));
+            }
+        }
+        let accounted = batch.scenarios_simulated + batch.scenarios_pruned + batch.pruned;
+        if accounted != indices.len() {
+            return Err(Error::Config(format!(
+                "lease report accounts for {accounted} of {} leased scenarios \
+                 (simulated + pruned) — a truncated or stale report file",
+                indices.len()
+            )));
+        }
+        for &i in indices {
+            if i >= self.grid_scenarios {
+                return Err(Error::Config(format!(
+                    "lease scenario index {i} is outside the {}-scenario grid",
+                    self.grid_scenarios
+                )));
+            }
+            if self.covered[i] {
+                return Err(Error::Config(format!(
+                    "scenario index {i} is already covered — leases overlap"
+                )));
+            }
+        }
+        for r in &batch.ranked {
+            if self.seen_keys.contains(&r.scenario.key()) {
+                return Err(Error::Config(format!(
+                    "duplicate scenario '{}' across leases — inputs overlap",
+                    r.scenario.key()
+                )));
+            }
+        }
+        // All guards passed: commit the batch atomically.
+        for &i in indices {
+            self.covered[i] = true;
+        }
+        self.covered_n += indices.len();
+        for r in &batch.ranked {
+            self.seen_keys.insert(r.scenario.key());
+        }
+        self.translations += batch.translations;
+        self.cache_loads += batch.cache_loads;
+        self.pruned += batch.pruned;
+        self.scenarios_simulated += batch.scenarios_simulated;
+        self.scenarios_pruned += batch.scenarios_pruned;
+        self.bounds_evaluated += batch.bounds_evaluated;
+        self.ranked.extend(batch.ranked.iter().cloned());
+        self.ranked.sort_by(ScenarioResult::rank_cmp);
+        if let Some(k) = self.top_k {
+            self.ranked.truncate(k);
+        }
+        Ok(())
+    }
+
+    /// Grid scenarios covered by the batches absorbed so far.
+    pub fn covered(&self) -> usize {
+        self.covered_n
+    }
+
+    /// The current fleet-wide K-th best simulated iteration time — a
+    /// sound prune cutoff for still-undispatched leases (`None` until K
+    /// results exist, or when the merge is exhaustive).
+    pub fn kth_best_ns(&self) -> Option<u64> {
+        let k = self.top_k?;
+        if self.ranked.len() >= k {
+            Some(self.ranked[k - 1].iteration_ns)
+        } else {
+            None
+        }
+    }
+
+    /// Close the merge: every grid scenario must have been covered by
+    /// exactly one absorbed lease. Produces the same report the batch
+    /// [`SweepReport::merge`] of a complete shard set would.
+    pub fn finalize(self) -> Result<SweepReport> {
+        if self.covered_n != self.grid_scenarios {
+            return Err(Error::Config(format!(
+                "streaming merge covers {} of {} grid scenarios — lease set incomplete \
+                 (a worker died without its lease being re-dispatched?)",
+                self.covered_n, self.grid_scenarios
+            )));
+        }
+        let mut model_names = BTreeSet::new();
+        for r in &self.ranked {
+            model_names.insert(r.scenario.model.as_str());
+        }
+        Ok(SweepReport {
+            models: model_names.len(),
+            translations: self.translations,
+            cache_loads: self.cache_loads,
+            pruned: self.pruned,
+            scenarios_simulated: self.scenarios_simulated,
+            scenarios_pruned: self.scenarios_pruned,
+            bounds_evaluated: self.bounds_evaluated,
+            config: self.config,
+            grid_scenarios: self.grid_scenarios,
+            grid_digest: self.grid_digest,
+            shard: None,
+            lease: None,
+            ranked: self.ranked,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -547,6 +786,7 @@ mod tests {
             grid_scenarios: 2,
             grid_digest: String::new(),
             shard: None,
+            lease: None,
             ranked: vec![mk("mlp", 10), mk("vgg16", 20)],
         }
     }
@@ -610,6 +850,7 @@ mod tests {
             grid_scenarios: 5,
             grid_digest: "g".into(),
             shard: Some((2, 2)),
+            lease: None,
             ranked: vec![full.ranked[1].clone()],
         };
         let shard_b = SweepReport {
@@ -624,6 +865,7 @@ mod tests {
             grid_scenarios: 5,
             grid_digest: "g".into(),
             shard: Some((1, 2)),
+            lease: None,
             ranked: vec![full.ranked[0].clone()],
         };
         let merged = SweepReport::merge(&[shard_a, shard_b]).unwrap();
@@ -657,6 +899,7 @@ mod tests {
             grid_scenarios: 2,
             grid_digest: "g".into(),
             shard: Some((k, n)),
+            lease: None,
             ranked,
         };
         // A forgotten shard is rejected, not silently merged — and the
@@ -764,6 +1007,7 @@ mod tests {
             grid_scenarios: 4,
             grid_digest: "g".into(),
             shard: Some((k, 2)),
+            lease: None,
             ranked,
         };
         let merged = SweepReport::merge(&[
@@ -821,6 +1065,8 @@ mod tests {
             scenarios_simulated: 5,
             scenarios_pruned: 3,
             bounds_evaluated: 8,
+            leases: 2,
+            idle_ms: 17,
         };
         let v = s.to_json();
         assert_eq!(v.get("shard").unwrap().as_str(), Some("2/4"));
@@ -830,6 +1076,8 @@ mod tests {
         assert_eq!(v.get("scenarios_simulated").unwrap().as_u64(), Some(5));
         assert_eq!(v.get("scenarios_pruned").unwrap().as_u64(), Some(3));
         assert_eq!(v.get("bounds_evaluated").unwrap().as_u64(), Some(8));
+        assert_eq!(v.get("leases").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("idle_ms").unwrap().as_u64(), Some(17));
         assert_eq!(v.get("stderr_tail").unwrap().as_str(), Some("failpoint: injected crash"));
         // Signal deaths have no exit code: null, not a fake number.
         let killed = ShardStatus { exit_code: None, ..s };
@@ -845,5 +1093,138 @@ mod tests {
         assert_eq!(text.lines().count(), 2 + r.ranked.len() + 1);
         let v = crate::json::parse(&r.to_json().to_json_pretty()).unwrap();
         assert_eq!(v.get("pruned").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn lease_field_round_trips_and_rejects_malformed_input() {
+        let mut r = sample();
+        r.lease = Some(vec![3, 1, 4]);
+        let emitted = r.to_json().to_json_pretty();
+        let parsed = SweepReport::from_json(&crate::json::parse(&emitted).unwrap()).unwrap();
+        assert_eq!(parsed.lease.as_deref(), Some(&[3, 1, 4][..]));
+        assert_eq!(parsed.to_json().to_json_pretty(), emitted);
+        // Absent (pre-lease report) and null both mean "no lease".
+        r.lease = None;
+        let parsed =
+            SweepReport::from_json(&crate::json::parse(&r.to_json().to_json_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(parsed.lease, None);
+        // Present-but-malformed is an error, not silently dropped.
+        let mut doc = crate::json::parse(&emitted).unwrap();
+        if let Value::Obj(map) = &mut doc {
+            map.insert("lease".into(), Value::Str("3,1,4".into()));
+        }
+        assert!(SweepReport::from_json(&doc).is_err());
+    }
+
+    /// One-lease report over the given grid indices, matching the
+    /// coverage accounting `StreamingMerge::absorb` enforces.
+    fn lease_batch(
+        full: &SweepReport,
+        indices: &[usize],
+        ranked: Vec<ScenarioResult>,
+    ) -> SweepReport {
+        SweepReport {
+            models: 1,
+            translations: 0,
+            cache_loads: 1,
+            pruned: 0,
+            scenarios_simulated: indices.len(),
+            scenarios_pruned: 0,
+            bounds_evaluated: 0,
+            config: full.config.clone(),
+            grid_scenarios: full.grid_scenarios,
+            grid_digest: full.grid_digest.clone(),
+            shard: None,
+            lease: Some(indices.to_vec()),
+            ranked,
+        }
+    }
+
+    #[test]
+    fn streaming_merge_matches_the_batch_merge() {
+        let full = sample();
+        let mut m = StreamingMerge::new(full.config.clone(), 2, full.grid_digest.clone());
+        m.absorb(&lease_batch(&full, &[1], vec![full.ranked[1].clone()]), &[1]).unwrap();
+        assert_eq!(m.covered(), 1);
+        m.absorb(&lease_batch(&full, &[0], vec![full.ranked[0].clone()]), &[0]).unwrap();
+        let merged = m.finalize().unwrap();
+        // Re-ranked fastest-first regardless of lease arrival order.
+        assert_eq!(merged.ranked[0].scenario.model, "mlp");
+        assert_eq!(merged.ranked[1].scenario.model, "vgg16");
+        assert_eq!(merged.models, 2);
+        assert_eq!(merged.cache_loads, 2);
+        assert_eq!(merged.scenarios_simulated, 2);
+        assert_eq!(merged.shard, None);
+        assert_eq!(merged.lease, None);
+    }
+
+    #[test]
+    fn streaming_merge_enforces_the_batch_merge_guard_set() {
+        let full = sample();
+        let mut m = StreamingMerge::new(full.config.clone(), 2, full.grid_digest.clone());
+        // Wrong config fingerprint.
+        let mut wrong_cfg = lease_batch(&full, &[0], vec![full.ranked[0].clone()]);
+        wrong_cfg.config =
+            crate::sweep::SweepConfig { npus: 64, ..Default::default() }.fingerprint();
+        let err = m.absorb(&wrong_cfg, &[0]).unwrap_err();
+        assert!(err.to_string().contains("different sweep configuration"), "got: {err}");
+        // Wrong grid identity.
+        let mut wrong_grid = lease_batch(&full, &[0], vec![full.ranked[0].clone()]);
+        wrong_grid.grid_digest = "feedface00000000".into();
+        let err = m.absorb(&wrong_grid, &[0]).unwrap_err();
+        assert!(err.to_string().contains("different grid"), "got: {err}");
+        // Lease echo must match the dispatched indices.
+        let err = m
+            .absorb(&lease_batch(&full, &[1], vec![full.ranked[1].clone()]), &[0])
+            .unwrap_err();
+        assert!(err.to_string().contains("not the"), "got: {err}");
+        // Coverage accounting: counters must equal the lease size.
+        let mut short = lease_batch(&full, &[0, 1], vec![full.ranked[0].clone()]);
+        short.scenarios_simulated = 1;
+        let err = m.absorb(&short, &[0, 1]).unwrap_err();
+        assert!(err.to_string().contains("accounts for 1 of 2"), "got: {err}");
+        // Out-of-range index.
+        let err = m
+            .absorb(&lease_batch(&full, &[9], vec![full.ranked[0].clone()]), &[9])
+            .unwrap_err();
+        assert!(err.to_string().contains("outside"), "got: {err}");
+        // A good batch lands; re-leasing the same index is rejected.
+        m.absorb(&lease_batch(&full, &[0], vec![full.ranked[0].clone()]), &[0]).unwrap();
+        let err = m
+            .absorb(&lease_batch(&full, &[0], vec![full.ranked[0].clone()]), &[0])
+            .unwrap_err();
+        assert!(err.to_string().contains("leases overlap"), "got: {err}");
+        // A different index but a duplicate scenario key is rejected.
+        let err = m
+            .absorb(&lease_batch(&full, &[1], vec![full.ranked[0].clone()]), &[1])
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate scenario"), "got: {err}");
+        // Finalizing with a hole is rejected, never a partial ranking.
+        let err = m.finalize().unwrap_err();
+        assert!(err.to_string().contains("covers 1 of 2"), "got: {err}");
+    }
+
+    #[test]
+    fn streaming_merge_keeps_a_live_top_k_cutoff() {
+        let full = sample();
+        let top1 = crate::sweep::SweepConfig { top_k: Some(1), ..Default::default() }.fingerprint();
+        let mut m = StreamingMerge::new(top1.clone(), 2, full.grid_digest.clone());
+        assert_eq!(m.kth_best_ns(), None);
+        let mut slow = lease_batch(&full, &[1], vec![full.ranked[1].clone()]);
+        slow.config = top1.clone();
+        m.absorb(&slow, &[1]).unwrap();
+        // One result in: the cutoff is the slow scenario's time.
+        assert_eq!(m.kth_best_ns(), Some(20));
+        let mut fast = lease_batch(&full, &[0], vec![full.ranked[0].clone()]);
+        fast.config = top1.clone();
+        m.absorb(&fast, &[0]).unwrap();
+        // The faster batch tightened the fleet-wide cutoff.
+        assert_eq!(m.kth_best_ns(), Some(10));
+        let merged = m.finalize().unwrap();
+        // Folded union truncated back to K = 1.
+        assert_eq!(merged.ranked.len(), 1);
+        assert_eq!(merged.ranked[0].scenario.model, "mlp");
+        assert_eq!(merged.scenarios_simulated, 2);
     }
 }

@@ -1,0 +1,164 @@
+//! Crash/resume acceptance for the fleet's persistent completion
+//! journal, against the real `modtrans` binary:
+//!
+//! * a fleet killed mid-run (failpoint) leaves committed lease records;
+//!   relaunching with `--resume` replays them, re-simulates **zero**
+//!   journaled scenarios, and still ranks byte-identically to the
+//!   monolithic sweep;
+//! * a fully journaled sweep resumes to the identical report without
+//!   launching a single worker process;
+//! * a journal recorded for a different config or grid is rejected, and
+//!   reusing a journal directory without `--resume` is refused.
+
+use modtrans::sim::TopologyKind;
+use modtrans::sweep::{
+    run_fleet, run_sweep, CollectiveAlgo, FleetOpts, SweepConfig, SweepGrid, SweepReport,
+};
+use modtrans::workload::Parallelism;
+use std::path::PathBuf;
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_modtrans"))
+}
+
+/// Same 8-scenario grid as `fleet_smoke.rs` — big enough for several
+/// leases, small enough to run the fleet many times.
+fn grid() -> SweepGrid {
+    SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    }
+}
+
+fn cfg() -> SweepConfig {
+    SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() }
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mt_resume_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn opts(tag: &str, procs: usize) -> FleetOpts {
+    FleetOpts {
+        procs,
+        binary: Some(bin()),
+        cache_dir: Some(scratch(&format!("{tag}_cache"))),
+        work_dir: Some(scratch(&format!("{tag}_work"))),
+        ..Default::default()
+    }
+}
+
+fn cleanup(opts: &FleetOpts) {
+    for d in [&opts.cache_dir, &opts.work_dir, &opts.journal].into_iter().flatten() {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+fn ranked(r: &SweepReport) -> String {
+    r.to_json().get("ranked").unwrap().to_json_pretty()
+}
+
+#[test]
+fn interrupted_fleet_resumes_with_zero_re_simulations() {
+    let (grid, cfg) = (grid(), cfg());
+    let mono = run_sweep(&grid, &cfg).unwrap();
+    let journal = scratch("interrupt_journal");
+
+    // Phase 1: a single worker, two scenarios per lease, and a crash on
+    // the worker's *second* launch with no retries — fully
+    // deterministic: the first lease commits to the journal, the second
+    // launch dies, the fleet fails hard.
+    let o1 = FleetOpts {
+        journal: Some(journal.clone()),
+        lease_size: Some(2),
+        failpoint: Some("1@2".into()),
+        retries: 0,
+        ..opts("interrupt_a", 1)
+    };
+    let err = run_fleet(&grid, &cfg, &o1).unwrap_err().to_string();
+    assert!(err.contains("worker 1/1"), "first run must die on the failpoint: {err}");
+    assert!(err.contains("exit code 42"), "the failpoint's exit code must surface: {err}");
+    let committed = std::fs::read_dir(&journal)
+        .unwrap()
+        .filter(|e| {
+            let name = e.as_ref().unwrap().file_name().to_string_lossy().into_owned();
+            name.starts_with("lease-") && name.ends_with(".json")
+        })
+        .count();
+    assert_eq!(committed, 1, "exactly the first lease must be committed");
+
+    // Phase 2: relaunch with --resume (wider fleet, adaptive leases —
+    // scheduling knobs are free to change). The journaled lease must be
+    // replayed, not re-simulated, and the ranking must be byte-identical
+    // to the monolithic sweep.
+    let o2 = FleetOpts { journal: Some(journal.clone()), resume: true, ..opts("interrupt_b", 2) };
+    let fleet = run_fleet(&grid, &cfg, &o2).unwrap();
+    assert_eq!(ranked(&fleet.merged), ranked(&mono), "resumed fleet diverged");
+    assert_eq!(fleet.merged.render_text(), mono.render_text());
+    assert_eq!(fleet.replayed_leases, 1);
+    assert_eq!(fleet.scenarios_from_journal, 2);
+    // Zero re-simulations: the fresh workers covered exactly the grid
+    // minus the journaled scenarios.
+    let fresh: usize = fleet.shards.iter().map(|s| s.scenarios).sum();
+    assert_eq!(fleet.scenarios_from_journal + fresh, mono.ranked.len());
+    // The merged counters still account for the whole grid.
+    assert_eq!(fleet.merged.scenarios_simulated, mono.ranked.len());
+    cleanup(&o1);
+    cleanup(&o2);
+}
+
+#[test]
+fn fully_journaled_sweep_resumes_without_launching_anything() {
+    let (grid, cfg) = (grid(), cfg());
+    let journal = scratch("full_journal");
+    let o1 = FleetOpts { journal: Some(journal.clone()), ..opts("full_a", 2) };
+    let first = run_fleet(&grid, &cfg, &o1).unwrap();
+    assert!(first.leases_completed >= 2);
+
+    let o2 = FleetOpts { journal: Some(journal.clone()), resume: true, ..opts("full_b", 2) };
+    let second = run_fleet(&grid, &cfg, &o2).unwrap();
+    assert_eq!(ranked(&second.merged), ranked(&first.merged));
+    assert_eq!(second.replayed_leases, first.leases_completed);
+    assert_eq!(second.scenarios_from_journal, first.merged.ranked.len());
+    assert_eq!(second.leases_completed, 0, "a complete journal leaves nothing to lease");
+    for s in &second.shards {
+        assert_eq!(s.attempts, 0, "worker {:?} launched against an empty queue", s.shard);
+        assert_eq!(s.exit_code, None);
+    }
+    cleanup(&o1);
+    cleanup(&o2);
+}
+
+#[test]
+fn stale_journals_and_unflagged_reuse_are_refused() {
+    let (grid, cfg) = (grid(), cfg());
+    let journal = scratch("stale_journal");
+    let o1 = FleetOpts { journal: Some(journal.clone()), ..opts("stale_a", 2) };
+    run_fleet(&grid, &cfg, &o1).unwrap();
+
+    // A different config (npus) under --resume: fingerprint mismatch.
+    let other_cfg = SweepConfig { npus: 16, ..cfg };
+    let o2 = FleetOpts { journal: Some(journal.clone()), resume: true, ..opts("stale_b", 2) };
+    let err = run_fleet(&grid, &other_cfg, &o2).unwrap_err().to_string();
+    assert!(err.contains("refusing to resume"), "stale config must be rejected: {err}");
+
+    // A different grid under --resume: grid-identity mismatch.
+    let other_grid = SweepGrid { models: vec!["mlp".into()], ..grid.clone() };
+    let o3 = FleetOpts { journal: Some(journal.clone()), resume: true, ..opts("stale_c", 2) };
+    let err = run_fleet(&other_grid, &cfg, &o3).unwrap_err().to_string();
+    assert!(err.contains("refusing to resume"), "stale grid must be rejected: {err}");
+
+    // Reusing the journal directory without --resume: explicit refusal,
+    // never a silent clobber of committed records.
+    let o4 = FleetOpts { journal: Some(journal.clone()), ..opts("stale_d", 2) };
+    let err = run_fleet(&grid, &cfg, &o4).unwrap_err().to_string();
+    assert!(err.contains("--resume"), "unflagged reuse must point at --resume: {err}");
+    for o in [&o1, &o2, &o3, &o4] {
+        cleanup(o);
+    }
+}

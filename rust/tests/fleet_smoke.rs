@@ -2,16 +2,21 @@
 //! `modtrans` binary (cargo builds it for integration tests and hands us
 //! the path via `CARGO_BIN_EXE_modtrans`):
 //!
-//! * the merged ranking is **byte-identical** to the monolithic sweep,
-//!   with every shard process reporting `translations == 0` after the
-//!   shared-cache pre-warm (cold and warm);
-//! * a shard killed mid-run is retried and the ranking is unchanged;
-//! * exhausted retries are a hard error naming the shard, its exit code
+//! * the work-stealing merged ranking is **byte-identical** to the
+//!   monolithic sweep, with every worker process reporting
+//!   `translations == 0` after the shared-cache pre-warm (cold and
+//!   warm), and the static `--static-shards` partition agrees;
+//! * a worker killed mid-lease is retried and the ranking is unchanged;
+//! * a worker that hangs is killed by the `--shard-timeout` watchdog,
+//!   its lease re-dispatched, and the ranking is unchanged;
+//! * exhausted retries are a hard error naming the worker, its exit code
 //!   and its stderr tail;
 //! * a corrupt shared-cache entry is invalidated and re-translated
 //!   exactly once, and the fleet still completes;
 //! * `--cache-from` copies entries in (warming a "fresh machine") and
 //!   publishes them back out.
+//!
+//! (Journal + `--resume` coverage lives in `tests/fleet_resume.rs`.)
 
 use modtrans::sim::TopologyKind;
 use modtrans::sweep::{
@@ -87,21 +92,55 @@ fn fleet_ranking_is_byte_identical_to_the_monolithic_sweep() {
         mono.render_text(),
         "fleet text report diverged from the monolithic run"
     );
-    // One cold translation pass, in the pre-warm — never in a shard.
+    // One cold translation pass, in the pre-warm — never in a worker.
     assert_eq!(fleet.prewarm_translations, 2);
     assert_eq!(fleet.shards.len(), 4);
     for s in &fleet.shards {
-        assert_eq!(s.translations, 0, "shard {:?} re-translated after pre-warm", s.shard);
+        assert_eq!(s.translations, 0, "worker {:?} re-translated after pre-warm", s.shard);
         assert_eq!(s.exit_code, Some(0));
-        assert_eq!(s.attempts, 1);
+        // Failure-free run: every launch completed a lease, and the
+        // 8-scenario queue gives each of 4 workers at least one.
+        assert_eq!(s.attempts, s.leases, "worker {:?} had a hidden failure", s.shard);
+        assert!(s.leases >= 1, "worker {:?} stole no lease", s.shard);
     }
     assert_eq!(fleet.merged.translations, 0);
     assert_eq!(fleet.shard_translations(), 0);
+    assert_eq!(fleet.shards.iter().map(|s| s.leases).sum::<usize>(), fleet.leases_completed);
+    assert_eq!(fleet.replayed_leases, 0);
     // The status document is machine-readable and carries the evidence.
     let status = fleet.status_json().to_json_pretty();
     let v = modtrans::json::parse(&status).unwrap();
     assert_eq!(v.get("procs").unwrap().as_u64(), Some(4));
     assert_eq!(v.get("shards").unwrap().as_arr().unwrap().len(), 4);
+    let sched = v.get("scheduler").unwrap();
+    assert_eq!(sched.get("mode").and_then(|m| m.as_str()), Some("stealing"));
+    assert_eq!(sched.get("leases").unwrap().as_u64(), Some(fleet.leases_completed as u64));
+    let journal = v.get("journal").unwrap();
+    assert_eq!(journal.get("replayed_leases").unwrap().as_u64(), Some(0));
+    assert_eq!(journal.get("scenarios_from_journal").unwrap().as_u64(), Some(0));
+    cleanup(&o);
+}
+
+#[test]
+fn static_partition_agrees_with_stealing_and_reports_its_mode() {
+    let (grid, cfg) = (grid(), cfg());
+    let mono = run_sweep(&grid, &cfg).unwrap();
+    let o = FleetOpts { static_shards: true, ..opts("static", 4) };
+    let fleet = run_fleet(&grid, &cfg, &o).unwrap();
+    assert_eq!(ranked(&fleet.merged), ranked(&mono), "static partition diverged");
+    assert!(fleet.static_shards);
+    // The once-only partition: exactly one contiguous lease per worker
+    // (8 scenarios over 4 workers), nothing left to steal afterwards.
+    assert_eq!(fleet.leases_completed, 4);
+    for s in &fleet.shards {
+        assert_eq!(s.leases, 1, "static worker {:?} must run exactly one chunk", s.shard);
+        assert_eq!(s.scenarios, 2);
+    }
+    let v = modtrans::json::parse(&fleet.status_json().to_json_pretty()).unwrap();
+    assert_eq!(
+        v.get("scheduler").unwrap().get("mode").and_then(|m| m.as_str()),
+        Some("static")
+    );
     cleanup(&o);
 }
 
@@ -126,11 +165,11 @@ fn warm_fleet_reuses_the_shared_cache_end_to_end() {
 }
 
 #[test]
-fn crashed_shard_is_retried_and_the_ranking_is_unchanged() {
+fn crashed_worker_is_retried_and_the_ranking_is_unchanged() {
     let (grid, cfg) = (grid(), cfg());
     let marker = scratch("crash_marker");
-    // Shard 2 dies mid-run exactly once (the marker file makes the
-    // second launch succeed) — the bounded-retry policy must absorb it.
+    // Worker 2 dies mid-lease exactly once (the marker file makes every
+    // later launch succeed) — the bounded-retry policy must absorb it.
     let o = FleetOpts {
         failpoint: Some(format!("2:once={}", marker.display())),
         retries: 2,
@@ -140,19 +179,58 @@ fn crashed_shard_is_retried_and_the_ranking_is_unchanged() {
     let mono = run_sweep(&grid, &cfg).unwrap();
     assert_eq!(ranked(&fleet.merged), ranked(&mono), "retried fleet diverged");
     let s2 = fleet.shards.iter().find(|s| s.shard.0 == 2).unwrap();
-    assert_eq!(s2.attempts, 2, "shard 2 must have been relaunched exactly once");
+    assert_eq!(s2.attempts, s2.leases + 1, "worker 2 must have exactly one extra launch");
     assert_eq!(s2.exit_code, Some(0));
     for s in fleet.shards.iter().filter(|s| s.shard.0 != 2) {
-        assert_eq!(s.attempts, 1, "only the crashed shard may be relaunched");
+        assert_eq!(s.attempts, s.leases, "only the crashed worker may be relaunched");
     }
     let _ = std::fs::remove_file(&marker);
     cleanup(&o);
 }
 
 #[test]
-fn exhausted_retries_name_the_shard_and_quote_its_stderr() {
+fn hung_worker_is_killed_by_the_watchdog_and_its_lease_re_dispatched() {
     let (grid, cfg) = (grid(), cfg());
-    // Shard 1 crashes on every launch; one retry is allowed, so the
+    // Worker 2's *first* launch hangs (bounded at 30s so a broken
+    // watchdog fails the test instead of deadlocking it); the watchdog
+    // must kill it within ~0.5s and the retried lease runs clean.
+    let o = FleetOpts {
+        failpoint: Some("2@1:hang=30".into()),
+        shard_timeout: Some(0.5),
+        retries: 1,
+        ..opts("hang", 2)
+    };
+    let fleet = run_fleet(&grid, &cfg, &o).unwrap();
+    let mono = run_sweep(&grid, &cfg).unwrap();
+    assert_eq!(ranked(&fleet.merged), ranked(&mono), "watchdog-retried fleet diverged");
+    let s2 = fleet.shards.iter().find(|s| s.shard.0 == 2).unwrap();
+    assert_eq!(s2.attempts, s2.leases + 1, "the hung launch must cost exactly one attempt");
+    assert_eq!(s2.exit_code, Some(0), "worker 2 must finish cleanly after the kill");
+    cleanup(&o);
+}
+
+#[test]
+fn watchdog_exhaustion_names_the_watchdog_in_the_error() {
+    let (grid, cfg) = (grid(), cfg());
+    // Every launch of worker 1 hangs and no retries are allowed: the
+    // fleet must fail hard and say the watchdog did the killing.
+    let o = FleetOpts {
+        failpoint: Some("1:hang=30".into()),
+        shard_timeout: Some(0.5),
+        retries: 0,
+        ..opts("hangfail", 2)
+    };
+    let err = run_fleet(&grid, &cfg, &o).unwrap_err().to_string();
+    assert!(err.contains("worker 1/2"), "error must name the worker: {err}");
+    assert!(err.contains("watchdog"), "error must name the watchdog: {err}");
+    assert!(err.contains("injected hang"), "error must quote the stderr tail: {err}");
+    cleanup(&o);
+}
+
+#[test]
+fn exhausted_retries_name_the_worker_and_quote_its_stderr() {
+    let (grid, cfg) = (grid(), cfg());
+    // Worker 1 crashes on every launch; one retry is allowed, so the
     // fleet must give up after two attempts and say exactly what died.
     let status_path = scratch("exhaust_status");
     let o = FleetOpts {
@@ -162,21 +240,21 @@ fn exhausted_retries_name_the_shard_and_quote_its_stderr() {
         ..opts("exhaust", 2)
     };
     let err = run_fleet(&grid, &cfg, &o).unwrap_err().to_string();
-    assert!(err.contains("shard 1/2"), "error must name the shard: {err}");
+    assert!(err.contains("worker 1/2"), "error must name the worker: {err}");
     assert!(err.contains("2 attempt(s)"), "error must count the attempts: {err}");
     assert!(err.contains("exit code 42"), "error must carry the exit code: {err}");
     assert!(
         err.contains("failpoint: injected crash"),
-        "error must quote the shard's stderr tail: {err}"
+        "error must quote the worker's stderr tail: {err}"
     );
     // The failure also leaves a machine-readable status document with
-    // the dead shard's record — not just prose in the error.
+    // the dead worker's record — not just prose in the error.
     let status = modtrans::json::parse(&std::fs::read_to_string(&status_path).unwrap()).unwrap();
     let shards = status.get("shards").unwrap().as_arr().unwrap();
     let dead = shards
         .iter()
         .find(|s| s.get("shard").and_then(|v| v.as_str()) == Some("1/2"))
-        .expect("dead shard missing from status document");
+        .expect("dead worker missing from status document");
     assert_eq!(dead.get("attempts").unwrap().as_u64(), Some(2));
     assert_eq!(dead.get("exit_code").unwrap().as_u64(), Some(42));
     assert!(dead
@@ -261,13 +339,18 @@ fn single_process_fleet_and_more_procs_than_scenarios_both_work() {
     let o1 = opts("one", 1);
     let f1 = run_fleet(&grid, &cfg, &o1).unwrap();
     assert_eq!(ranked(&f1.merged), ranked(&mono));
-    // More processes than scenarios: the surplus shards rank nothing
-    // but still count toward the complete shard set.
+    // More processes than scenarios: the surplus workers steal nothing
+    // but still appear in the complete slot set — attempts 0, no exit.
     let o5 = opts("surplus", 5);
     let f5 = run_fleet(&grid, &cfg, &o5).unwrap();
     assert_eq!(ranked(&f5.merged), ranked(&mono));
     assert_eq!(f5.shards.len(), 5);
     assert_eq!(f5.shards.iter().map(|s| s.scenarios).sum::<usize>(), mono.ranked.len());
+    for s in f5.shards.iter().filter(|s| s.leases == 0) {
+        assert_eq!(s.attempts, 0, "an idle slot must not have launched anything");
+        assert_eq!(s.exit_code, None, "an idle slot has no exit code");
+    }
+    assert!(f5.shards.iter().any(|s| s.leases == 0), "5 workers over 2 scenarios must idle");
     cleanup(&o1);
     cleanup(&o5);
 }

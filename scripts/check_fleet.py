@@ -1,16 +1,21 @@
 #!/usr/bin/env python3
 """Fleet-smoke acceptance check (CI `fleet-smoke` job / `make fleet-smoke`).
 
-Usage: check_fleet.py MONO_JSON FLEET_JSON STATUS_JSON [--warm]
+Usage: check_fleet.py MONO_JSON FLEET_JSON STATUS_JSON [--warm] [--resume] [--skew]
 
 Asserts the fleet contract:
   * the fleet's merged ranked report is byte-for-byte the monolithic
     sweep's (canonical JSON serialization of the "ranked" array);
-  * every shard process exited 0 first try and reported
-    translations == 0 — the shared-cache pre-warm did the only cold
-    work;
+  * every worker slot that ran reported attempts == leases (no hidden
+    failures), exit code 0, and translations == 0 — the shared-cache
+    pre-warm did the only cold work (idle slots report no exit at all);
+  * the per-slot scenario counts and the journal replay together cover
+    the grid exactly once — zero re-simulations;
   * cold runs: the pre-warm translated exactly the model count;
-    --warm runs: the pre-warm itself was load-only (0 translations).
+    --warm runs: the pre-warm itself was load-only (0 translations);
+  * --resume runs: the journal replayed at least one lease;
+  * --skew runs: the work-stealing scheduler split the queue finer than
+    one chunk per worker and left no worker without a lease.
 """
 
 import json
@@ -19,7 +24,9 @@ import sys
 
 def main(argv):
     warm = "--warm" in argv
-    args = [a for a in argv if a != "--warm"]
+    resume = "--resume" in argv
+    skew = "--skew" in argv
+    args = [a for a in argv if not a.startswith("--")]
     if len(args) != 3:
         sys.exit(__doc__.strip())
     mono_path, fleet_path, status_path = args
@@ -38,14 +45,56 @@ def main(argv):
     )
 
     shards = status["shards"]
-    assert shards, "status document has no shard records"
+    assert shards, "status document has no worker records"
     for s in shards:
-        assert s["exit_code"] == 0, f"shard {s['shard']} exited {s['exit_code']}"
-        assert s["attempts"] == 1, f"shard {s['shard']} needed {s['attempts']} attempts"
+        if s["leases"] == 0:
+            # A slot the queue never reached: it must not have launched.
+            assert s["attempts"] == 0, (
+                f"idle worker {s['shard']} still launched {s['attempts']} time(s)"
+            )
+            assert s["exit_code"] is None, (
+                f"idle worker {s['shard']} reports exit {s['exit_code']}"
+            )
+            continue
+        assert s["exit_code"] == 0, f"worker {s['shard']} exited {s['exit_code']}"
+        assert s["attempts"] == s["leases"], (
+            f"worker {s['shard']} needed {s['attempts']} launches for "
+            f"{s['leases']} lease(s) — a hidden failure"
+        )
         assert s["translations"] == 0, (
-            f"shard {s['shard']} ran {s['translations']} translation(s) after the "
+            f"worker {s['shard']} ran {s['translations']} translation(s) after the "
             "shared-cache pre-warm"
         )
+
+    # Zero re-simulations: journal replay + fresh worker scenarios must
+    # cover the ranked grid exactly once.
+    journal = status["journal"]
+    fresh = sum(s["scenarios"] for s in shards)
+    covered = journal["scenarios_from_journal"] + fresh
+    assert covered == len(fleet["ranked"]), (
+        f"coverage mismatch: {journal['scenarios_from_journal']} journaled + "
+        f"{fresh} fresh != {len(fleet['ranked'])} ranked scenarios"
+    )
+    if resume:
+        assert journal["replayed_leases"] > 0, "--resume run replayed no journal records"
+        assert journal["scenarios_from_journal"] > 0, (
+            "--resume run re-simulated everything (no scenarios came from the journal)"
+        )
+    else:
+        assert journal["replayed_leases"] == 0, "fresh run claims journal replays"
+
+    sched = status["scheduler"]
+    if skew:
+        assert sched["mode"] == "stealing", f"skew leg ran in {sched['mode']} mode"
+        assert sched["leases"] > len(shards), (
+            f"work stealing degenerated to one chunk per worker "
+            f"({sched['leases']} leases over {len(shards)} workers)"
+        )
+        for s in shards:
+            assert s["leases"] >= 1, (
+                f"worker {s['shard']} stole no lease on the skewed grid "
+                f"(idle {s['idle_ms']}ms) — the no-idle property failed"
+            )
 
     prewarm = status["prewarm"]
     if warm:
@@ -60,10 +109,13 @@ def main(argv):
             f"cold pre-warm ran {prewarm['translations']} translation(s) "
             f"for {mono['models']} model(s)"
         )
-    kind = "warm" if warm else "cold"
+    kind = "+".join(
+        k for k, on in [("warm", warm), ("cold", not warm), ("resume", resume), ("skew", skew)] if on
+    )
     print(
         f"fleet OK ({kind}): {len(fleet['ranked'])} scenarios across {len(shards)} "
-        "shard process(es), ranking byte-identical, every shard load-only"
+        f"worker slot(s) in {sched['leases']} lease(s) [{sched['mode']}], "
+        f"{journal['scenarios_from_journal']} from the journal, ranking byte-identical"
     )
 
 
