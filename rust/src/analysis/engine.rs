@@ -1,0 +1,246 @@
+//! The scope-aware rule engine: applies a [`Manifest`] to cleaned
+//! source files and collects [`Finding`]s.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::lexer::FileMap;
+use super::rules::{Manifest, Matcher, Rule, Scope};
+use crate::error::{Error, Result};
+
+/// One rule violation, pinned to a file and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The pattern (or construct) that fired.
+    pub pattern: String,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] `{}` — {}",
+            self.file, self.line, self.rule, self.pattern, self.message
+        )
+    }
+}
+
+/// Result of a lint run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Matches suppressed by `// lint: allow(...)` markers.
+    pub suppressed: usize,
+}
+
+/// True when `rel` (forward-slash repo-relative path) is covered by the
+/// rule's path prefixes minus its excludes.
+fn in_scope(rule: &Rule, rel: &str) -> bool {
+    if rule.exclude.iter().any(|p| rel.starts_with(p.as_str())) {
+        return false;
+    }
+    rule.paths.is_empty() || rule.paths.iter().any(|p| rel.starts_with(p.as_str()))
+}
+
+/// True when the cleaned line contains a direct index expression: a `[`
+/// immediately preceded (modulo spaces) by an identifier char, `)`, or
+/// `]` — i.e. `xs[i]`, `f(x)[0]`, `m[a][b]`, but not `#[attr]`, array
+/// literals, or types like `[u8; 4]`.
+fn has_index_expr(line: &str) -> bool {
+    let chars: Vec<char> = line.chars().collect();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 && chars[j - 1] == ' ' {
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let p = chars[j - 1];
+        if p.is_alphanumeric() || p == '_' || p == ')' || p == ']' {
+            return true;
+        }
+    }
+    false
+}
+
+/// Lints a single file's source text under its repo-relative path.
+/// This is the unit the fixture tests drive directly: the path decides
+/// which rules are in scope, the text is linted as if it lived there.
+pub fn lint_source(rel: &str, src: &str, manifest: &Manifest) -> Result<LintReport> {
+    let map = FileMap::build(src)
+        .map_err(|e| Error::lint(format!("{rel}: {e}")))?;
+    for (line, rule) in &map.allows {
+        if !manifest.has_rule(rule) {
+            return Err(Error::lint(format!(
+                "{rel}:{}: allow marker names unknown rule '{rule}'",
+                line + 1
+            )));
+        }
+    }
+    let mut report = LintReport {
+        files_scanned: 1,
+        ..LintReport::default()
+    };
+    for rule in &manifest.rules {
+        if !in_scope(rule, rel) {
+            continue;
+        }
+        for (idx, line) in map.lines.iter().enumerate() {
+            if map.test_mask[idx] && !rule.include_tests {
+                continue;
+            }
+            let in_span = match rule.scope {
+                Scope::Paths => true,
+                Scope::HotPath => map.hot_mask[idx],
+                Scope::FalliblePath => map.fallible_mask[idx],
+            };
+            if !in_span {
+                continue;
+            }
+            let hits: Vec<String> = match rule.matcher {
+                Matcher::Substring => rule
+                    .patterns
+                    .iter()
+                    .filter(|p| line.contains(p.as_str()))
+                    .cloned()
+                    .collect(),
+                Matcher::Index => {
+                    if has_index_expr(line) {
+                        vec!["indexing".to_string()]
+                    } else {
+                        Vec::new()
+                    }
+                }
+            };
+            for pattern in hits {
+                if map.allowed(idx, &rule.name) {
+                    report.suppressed += 1;
+                    continue;
+                }
+                report.findings.push(Finding {
+                    rule: rule.name.clone(),
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    pattern,
+                    message: rule.message.clone(),
+                });
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Collects every `.rs` file under `dir` (recursively), sorted for
+/// deterministic output.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| Error::lint(format!("cannot read {}: {e}", dir.display())))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| Error::lint(format!("walk error: {e}")))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lints every `rust/src/**/*.rs` file under the repo root `root`
+/// against `manifest`. Findings come back sorted by (file, line).
+pub fn lint_tree(root: &Path, manifest: &Manifest) -> Result<LintReport> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+    let mut report = LintReport::default();
+    for path in &files {
+        let rel = match path.strip_prefix(root) {
+            Ok(r) => r
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/"),
+            Err(_) => path.display().to_string(),
+        };
+        let src = fs::read_to_string(path)
+            .map_err(|e| Error::lint(format!("cannot read {rel}: {e}")))?;
+        let one = lint_source(&rel, &src, manifest)?;
+        report.findings.extend(one.findings);
+        report.files_scanned += 1;
+        report.suppressed += one.suppressed;
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::parse_manifest;
+
+    fn manifest() -> Manifest {
+        parse_manifest(
+            "[[rule]]\n\
+             name = \"no-panic\"\n\
+             paths = [\"rust/src/sim/\"]\n\
+             patterns = [\".unwrap()\"]\n\
+             message = \"no panics\"\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fires_in_scope_and_not_outside() {
+        let m = manifest();
+        let src = "fn f() { x.unwrap(); }\n";
+        let hit = lint_source("rust/src/sim/a.rs", src, &m).unwrap();
+        assert_eq!(hit.findings.len(), 1);
+        assert_eq!(hit.findings[0].line, 1);
+        let miss = lint_source("rust/src/cli.rs", src, &m).unwrap();
+        assert!(miss.findings.is_empty());
+    }
+
+    #[test]
+    fn allow_suppresses_and_counts() {
+        let m = manifest();
+        let src = "fn f() { x.unwrap(); } // lint: allow(no-panic) — provably non-empty\n";
+        let r = lint_source("rust/src/sim/a.rs", src, &m).unwrap();
+        assert!(r.findings.is_empty());
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn unknown_allow_rule_is_an_error() {
+        let m = manifest();
+        let src = "fn f() { x.unwrap(); } // lint: allow(no-such-rule) — oops\n";
+        assert!(lint_source("rust/src/sim/a.rs", src, &m).is_err());
+    }
+
+    #[test]
+    fn index_matcher_spots_indexing_only() {
+        assert!(has_index_expr("let a = xs[i];"));
+        assert!(has_index_expr("let a = f(x)[0];"));
+        assert!(!has_index_expr("#[derive(Debug)]"));
+        assert!(!has_index_expr("let a: [u8; 4] = *b;"));
+        assert!(!has_index_expr("let v = [1, 2, 3];"));
+    }
+}

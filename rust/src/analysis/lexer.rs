@@ -1,0 +1,512 @@
+//! Token-level source cleaning and region extraction.
+//!
+//! [`clean`] walks a Rust source file once, character by character, and
+//! produces a *cleaned* copy in which the contents of comments, string
+//! literals (plain, byte, and raw with any `#` depth), and char
+//! literals are replaced by spaces while line structure is preserved
+//! exactly. Rule patterns are then matched against the cleaned lines,
+//! so `"a.unwrap()"` inside a string or a doc comment can never fire a
+//! rule. Line comments are captured verbatim on the side because the
+//! `// lint: …` marker grammar lives in them.
+//!
+//! [`FileMap`] post-processes a cleaned file into the per-line masks
+//! the rule engine needs: `#[cfg(test)]` regions, hot-path /
+//! fallible-path function spans (brace-matched from their marker), and
+//! the per-line allow table.
+
+use crate::error::{Error, Result};
+
+/// A line comment captured during cleaning, verbatim (including the
+/// leading slashes), with the 0-based line it starts on and whether any
+/// code precedes it on that line (trailing vs. standalone comment).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+    pub code_before: bool,
+}
+
+/// Result of [`clean`]: blanked source split into lines, plus every
+/// line comment encountered.
+#[derive(Debug, Clone)]
+pub struct Cleaned {
+    pub lines: Vec<String>,
+    pub comments: Vec<Comment>,
+}
+
+/// Returns `Some((hashes, prefix_len))` when `chars[i..]` starts a raw
+/// (or raw byte) string literal: optional `b`, `r`, zero or more `#`,
+/// then `"`. `prefix_len` counts everything through the opening quote.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Blanks comments and literal contents out of `src`, preserving line
+/// structure, and captures line comments for marker parsing.
+pub fn clean(src: &str) -> Cleaned {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 0usize;
+    let mut line_has_code = false;
+    while i < n {
+        let c = chars[i];
+        // Raw / raw-byte strings first: `r"…"`, `r#"…"#`, `br##"…"##`.
+        // Skip when the `r`/`b` is the tail of an identifier.
+        let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        if (c == 'r' || c == 'b') && !prev_ident {
+            if let Some((hashes, prefix)) = raw_string_start(&chars, i) {
+                for _ in 0..prefix {
+                    out.push(' ');
+                }
+                i += prefix;
+                // Consume until `"` followed by `hashes` hash marks.
+                while i < n {
+                    if chars[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..(1 + hashes) {
+                                out.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                line_has_code = true;
+                continue;
+            }
+            if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                // Byte string: blank the `b`, fall through via plain
+                // string handling below on the quote.
+                out.push(' ');
+                i += 1;
+                line_has_code = true;
+                continue;
+            }
+            if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                out.push(' ');
+                i += 1;
+                line_has_code = true;
+                continue;
+            }
+        }
+        match c {
+            '\n' => {
+                out.push('\n');
+                line += 1;
+                line_has_code = false;
+                i += 1;
+            }
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                let start = i;
+                let mut j = i;
+                while j < n && chars[j] != '\n' {
+                    j += 1;
+                }
+                comments.push(Comment {
+                    line,
+                    text: chars[start..j].iter().collect(),
+                    code_before: line_has_code,
+                });
+                for _ in start..j {
+                    out.push(' ');
+                }
+                i = j;
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                let mut depth = 1usize;
+                out.push(' ');
+                out.push(' ');
+                i += 2;
+                while i < n && depth > 0 {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                    } else if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                        line_has_code = false;
+                        i += 1;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                out.push('"');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        // Escape: blank the backslash, then handle the
+                        // escaped char (a string-continuation newline
+                        // must still advance the line counter).
+                        out.push(' ');
+                        i += 1;
+                        if i < n {
+                            if chars[i] == '\n' {
+                                out.push('\n');
+                                line += 1;
+                            } else {
+                                out.push(' ');
+                            }
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    if chars[i] == '"' {
+                        out.push('"');
+                        i += 1;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                line_has_code = true;
+            }
+            '\'' => {
+                // Char literal vs. lifetime: a char literal is either
+                // `'\…'` (escaped) or `'x'` (closing quote two ahead).
+                if chars.get(i + 1) == Some(&'\\') {
+                    out.push('\'');
+                    i += 1;
+                    while i < n && chars[i] != '\'' {
+                        if chars[i] == '\\' && i + 1 < n && chars[i + 1] != '\n' {
+                            // Skip the escaped char so `'\''` closes on
+                            // its real quote, not the escaped one.
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                            continue;
+                        }
+                        if chars[i] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        i += 1;
+                    }
+                    if i < n {
+                        out.push('\'');
+                        i += 1;
+                    }
+                } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                    out.push('\'');
+                    out.push(' ');
+                    out.push('\'');
+                    i += 3;
+                } else {
+                    // Lifetime (`'a`) or stray quote: keep as-is.
+                    out.push('\'');
+                    i += 1;
+                }
+                line_has_code = true;
+            }
+            _ => {
+                if !c.is_whitespace() {
+                    line_has_code = true;
+                }
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    Cleaned {
+        lines: out.split('\n').map(str::to_string).collect(),
+        comments,
+    }
+}
+
+/// A parsed `// lint: …` marker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MarkerKind {
+    HotPath,
+    FalliblePath,
+    Allow { rule: String },
+}
+
+/// Parses the text of one line comment. Returns `Ok(None)` for
+/// ordinary comments, `Ok(Some(kind))` for a well-formed marker, and
+/// an error for a malformed one (unknown marker name, or an allow
+/// without the mandatory `— <reason>` tail).
+fn parse_marker(text: &str) -> Result<Option<MarkerKind>> {
+    let t = text.trim_start_matches('/').trim_start_matches('!').trim();
+    let Some(rest) = t.strip_prefix("lint:") else {
+        return Ok(None);
+    };
+    let rest = rest.trim();
+    if rest == "hot-path" {
+        return Ok(Some(MarkerKind::HotPath));
+    }
+    if rest == "fallible-path" {
+        return Ok(Some(MarkerKind::FalliblePath));
+    }
+    if let Some(r) = rest.strip_prefix("allow(") {
+        let Some(close) = r.find(')') else {
+            return Err(Error::lint(format!("unclosed allow marker: `{t}`")));
+        };
+        let rule = r[..close].trim();
+        if rule.is_empty() {
+            return Err(Error::lint(format!("allow marker names no rule: `{t}`")));
+        }
+        let after = r[close + 1..].trim();
+        let reason = after
+            .strip_prefix('\u{2014}') // em dash
+            .or_else(|| after.strip_prefix('-'))
+            .map(str::trim);
+        return match reason {
+            Some(s) if !s.is_empty() => Ok(Some(MarkerKind::Allow {
+                rule: rule.to_string(),
+            })),
+            _ => Err(Error::lint(format!(
+                "allow marker needs a reason (`// lint: allow({rule}) — <reason>`): `{t}`"
+            ))),
+        };
+    }
+    Err(Error::lint(format!("unknown lint marker: `{t}`")))
+}
+
+/// Finds the last line of the brace-delimited span opening at or after
+/// `start` (0-based). Counts braces over *cleaned* lines, so literals
+/// and comments cannot unbalance it. Returns the last line index, or
+/// the final line when no brace ever closes (truncated input).
+fn brace_span_end(lines: &[String], start: usize) -> usize {
+    let mut depth: i64 = 0;
+    let mut seen = false;
+    for (idx, l) in lines.iter().enumerate().skip(start) {
+        for ch in l.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    seen = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+            if seen && depth <= 0 {
+                return idx;
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Per-line view of one source file after cleaning: the masks and the
+/// allow table the rule engine consumes.
+#[derive(Debug)]
+pub struct FileMap {
+    pub lines: Vec<String>,
+    /// Line is inside a `#[cfg(test)]` item.
+    pub test_mask: Vec<bool>,
+    /// Line is inside a `// lint: hot-path` annotated function.
+    pub hot_mask: Vec<bool>,
+    /// Line is inside a `// lint: fallible-path` annotated function.
+    pub fallible_mask: Vec<bool>,
+    /// `(line, rule)` pairs: `rule` findings on `line` are suppressed.
+    pub allows: Vec<(usize, String)>,
+}
+
+impl FileMap {
+    /// Builds the map for one file. Errors on malformed markers so a
+    /// typo'd annotation fails the lint instead of silently doing
+    /// nothing.
+    pub fn build(src: &str) -> Result<FileMap> {
+        let cleaned = clean(src);
+        let lines = cleaned.lines;
+        let num = lines.len();
+        let mut test_mask = vec![false; num];
+        let mut hot_mask = vec![false; num];
+        let mut fallible_mask = vec![false; num];
+        let mut allows = Vec::new();
+
+        for (idx, l) in lines.iter().enumerate() {
+            if l.contains("#[cfg(test)]") {
+                let end = brace_span_end(&lines, idx);
+                for m in test_mask.iter_mut().take(end + 1).skip(idx) {
+                    *m = true;
+                }
+            }
+        }
+
+        for c in &cleaned.comments {
+            match parse_marker(&c.text)? {
+                None => {}
+                Some(MarkerKind::Allow { rule }) => {
+                    // Trailing form applies to its own line; standalone
+                    // form to the next line holding any code.
+                    let mut target = c.line;
+                    if !c.code_before {
+                        let mut j = c.line + 1;
+                        while j < num && lines[j].trim().is_empty() {
+                            j += 1;
+                        }
+                        if j >= num {
+                            return Err(Error::lint(format!(
+                                "allow({rule}) marker at end of file has no code line to apply to"
+                            )));
+                        }
+                        target = j;
+                    }
+                    allows.push((target, rule));
+                }
+                Some(kind) => {
+                    // hot-path / fallible-path: annotate the next `fn`
+                    // (the marker's own line counts, for the trailing
+                    // `fn f() { // lint: hot-path` form).
+                    let mut fl = c.line;
+                    while fl < num && !lines[fl].contains("fn ") {
+                        fl += 1;
+                    }
+                    if fl >= num {
+                        return Err(Error::lint(
+                            "hot-path/fallible-path marker is not followed by a fn".to_string(),
+                        ));
+                    }
+                    let end = brace_span_end(&lines, fl);
+                    let mask = if kind == MarkerKind::HotPath {
+                        &mut hot_mask
+                    } else {
+                        &mut fallible_mask
+                    };
+                    for m in mask.iter_mut().take(end + 1).skip(fl) {
+                        *m = true;
+                    }
+                }
+            }
+        }
+
+        Ok(FileMap {
+            lines,
+            test_mask,
+            hot_mask,
+            fallible_mask,
+            allows,
+        })
+    }
+
+    /// True when `rule` findings on 0-based `line` are suppressed by an
+    /// allow marker.
+    pub fn allowed(&self, line: usize, rule: &str) -> bool {
+        self.allows.iter().any(|(l, r)| *l == line && r == rule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let c = clean("let x = \"a.unwrap()\"; // b.unwrap()\nlet y = 1;\n");
+        assert!(!c.lines[0].contains("unwrap"));
+        assert_eq!(c.lines[1], "let y = 1;");
+        assert_eq!(c.comments.len(), 1);
+        assert!(c.comments[0].code_before);
+        assert!(c.comments[0].text.contains("b.unwrap()"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let c = clean("let s = r#\"panic!(\"x\")\"#; let ch = '{'; let lt: &'static str = s;");
+        assert!(!c.lines[0].contains("panic!"));
+        assert!(!c.lines[0].contains('{'));
+        assert!(c.lines[0].contains("'static"));
+    }
+
+    #[test]
+    fn string_continuation_keeps_line_count() {
+        let src = "let s = \"a \\\n   b\";\nlet t = 1;\n";
+        let c = clean(src);
+        assert_eq!(c.lines.len(), src.split('\n').count());
+        assert_eq!(c.lines[2], "let t = 1;");
+    }
+
+    #[test]
+    fn block_comments_can_nest() {
+        let c = clean("/* a /* b */ c.unwrap() */ let z = 2;");
+        assert!(!c.lines[0].contains("unwrap"));
+        assert!(c.lines[0].contains("let z = 2;"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_masked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {}\n}\nfn c() {}\n";
+        let map = FileMap::build(src).unwrap();
+        assert!(!map.test_mask[0]);
+        assert!(map.test_mask[1] && map.test_mask[2] && map.test_mask[3] && map.test_mask[4]);
+        assert!(!map.test_mask[5]);
+    }
+
+    #[test]
+    fn hot_path_span_covers_fn_body() {
+        let src = "// lint: hot-path\nfn hot(x: u64) -> u64 {\n  x + 1\n}\nfn cold() {}\n";
+        let map = FileMap::build(src).unwrap();
+        assert!(map.hot_mask[1] && map.hot_mask[2] && map.hot_mask[3]);
+        assert!(!map.hot_mask[4]);
+    }
+
+    #[test]
+    fn allow_marker_forms() {
+        let src = "let a = 1; // lint: allow(no-panic) — provably fine\n\
+                   // lint: allow(no-alloc) — cold path\nlet b = 2;\n";
+        let map = FileMap::build(src).unwrap();
+        assert!(map.allowed(0, "no-panic"));
+        assert!(map.allowed(2, "no-alloc"));
+        assert!(!map.allowed(2, "no-panic"));
+    }
+
+    #[test]
+    fn allow_without_reason_is_an_error() {
+        assert!(FileMap::build("// lint: allow(no-panic)\nlet a = 1;\n").is_err());
+        assert!(FileMap::build("// lint: frobnicate\n").is_err());
+    }
+
+    #[test]
+    fn marker_like_text_in_plain_comment_is_ignored() {
+        let map = FileMap::build("// this mentions lint markers but is not one\nlet a = 1;\n");
+        assert!(map.is_ok());
+    }
+}

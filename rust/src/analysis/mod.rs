@@ -1,0 +1,44 @@
+//! `modtrans-lint`: a dependency-free static analysis pass over the
+//! crate's own sources.
+//!
+//! The repo's two load-bearing contracts — the allocation-free sim /
+//! derivation hot path and byte-identical rankings across threads,
+//! shards, fleets and resumes — used to be enforced by a `sed | grep`
+//! over five hard-coded files plus reviewer vigilance. This module
+//! replaces that with a real (if deliberately small) analysis layer:
+//!
+//! * [`lexer`] — a token-level source cleaner: blanks the contents of
+//!   comments, string/char/raw-string literals (preserving line
+//!   structure), extracts `// lint: …` markers, and computes
+//!   `#[cfg(test)]` regions and marker-annotated function spans by
+//!   brace matching over the cleaned text. Rules therefore never fire
+//!   on text inside a literal, a doc comment or a test module.
+//! * [`rules`] — the declarative rule manifest (`analysis/rules.toml`
+//!   at the repo root), hand-parsed from a small TOML subset so the
+//!   default build stays dependency-free. Each rule names a scope
+//!   (path prefixes, hot-path functions, or fallible-path functions),
+//!   a pattern set and a message.
+//! * [`engine`] — applies every rule to every `rust/src/**/*.rs` file,
+//!   honoring three source markers:
+//!   - `// lint: hot-path` — the next `fn` is a hot-path function: the
+//!     `no-alloc` rule applies to its whole body.
+//!   - `// lint: fallible-path` — the next `fn` must not use direct
+//!     indexing (the `index-fallible` rule).
+//!   - `// lint: allow(<rule>) — <reason>` — suppress `<rule>` on the
+//!     same line (trailing form) or on the next code line (standalone
+//!     form). The reason is mandatory; an allow without one is a hard
+//!     error, so every suppression is self-documenting.
+//!
+//! The `modtrans-lint` binary (CI's gating `lint` job, `make lint`)
+//! runs [`engine::lint_tree`] against the checked-out tree and fails on
+//! any finding. See the "Static guarantees" section in the crate docs
+//! for the full rule list and the semantic-verifier half of the story
+//! ([`crate::ir::verify`] / [`crate::sim::verify_graph`], CLI
+//! `modtrans check`).
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{lint_source, lint_tree, Finding, LintReport};
+pub use rules::{Manifest, Matcher, Rule, Scope};

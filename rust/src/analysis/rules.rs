@@ -1,0 +1,386 @@
+//! The declarative rule manifest and its hand-rolled parser.
+//!
+//! `analysis/rules.toml` (repo root) is parsed by a deliberately small
+//! TOML-subset reader — tables of `[[rule]]` entries whose values are
+//! strings, booleans, integers, or (possibly multi-line) arrays of
+//! strings — keeping the default build dependency-free, exactly like
+//! the in-crate JSON and protobuf codecs. Unknown keys, unknown scope
+//! names, duplicate rule names, and empty pattern lists are hard
+//! errors: a manifest typo must fail the lint run, not silently skip a
+//! rule.
+
+use crate::error::{Error, Result};
+
+/// Where a rule applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Every line of every file matched by the rule's path prefixes.
+    Paths,
+    /// Only lines inside `// lint: hot-path` annotated functions.
+    HotPath,
+    /// Only lines inside `// lint: fallible-path` annotated functions.
+    FalliblePath,
+}
+
+/// How a rule matches a line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Matcher {
+    /// Any of the rule's `patterns` occurs as a substring.
+    Substring,
+    /// A direct index expression `expr[…]` occurs (no patterns).
+    Index,
+}
+
+/// One declarative rule from the manifest.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub name: String,
+    pub scope: Scope,
+    /// Path prefixes (repo-relative, forward slashes) the rule covers.
+    /// Empty means every scanned file.
+    pub paths: Vec<String>,
+    /// Path prefixes carved back out of `paths`.
+    pub exclude: Vec<String>,
+    /// Scan `#[cfg(test)]` regions too (default: skip them).
+    pub include_tests: bool,
+    pub matcher: Matcher,
+    pub patterns: Vec<String>,
+    pub message: String,
+}
+
+/// The parsed manifest: an ordered list of rules.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub rules: Vec<Rule>,
+}
+
+impl Manifest {
+    /// True when the manifest has a rule named `name`.
+    pub fn has_rule(&self, name: &str) -> bool {
+        self.rules.iter().any(|r| r.name == name)
+    }
+}
+
+/// One parsed `key = value` right-hand side.
+enum Val {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Arr(Vec<String>),
+}
+
+/// Unquotes one TOML basic string token (handles `\\` and `\"`).
+fn unquote(tok: &str, line_no: usize) -> Result<String> {
+    let inner = tok
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| Error::lint(format!("manifest line {line_no}: expected a string: {tok}")))?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                other => {
+                    return Err(Error::lint(format!(
+                        "manifest line {line_no}: unsupported escape \\{}",
+                        other.map(String::from).unwrap_or_default()
+                    )))
+                }
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Splits an array body `"a", "b", "c"` into unquoted strings, honoring
+/// quotes and escapes.
+fn split_array(body: &str, line_no: usize) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut esc = false;
+    for c in body.chars() {
+        if in_str {
+            cur.push(c);
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => {
+                cur.push(c);
+                in_str = true;
+            }
+            ',' => {
+                let t = cur.trim().to_string();
+                if !t.is_empty() {
+                    out.push(unquote(&t, line_no)?);
+                }
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    let t = cur.trim().to_string();
+    if !t.is_empty() {
+        out.push(unquote(&t, line_no)?);
+    }
+    if in_str {
+        return Err(Error::lint(format!(
+            "manifest line {line_no}: unterminated string in array"
+        )));
+    }
+    Ok(out)
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Val> {
+    let v = raw.trim();
+    if v == "true" {
+        return Ok(Val::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Val::Bool(false));
+    }
+    if v.starts_with('"') {
+        return Ok(Val::Str(unquote(v, line_no)?));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| {
+            Error::lint(format!("manifest line {line_no}: unterminated array"))
+        })?;
+        return Ok(Val::Arr(split_array(body, line_no)?));
+    }
+    v.parse::<i64>().map(Val::Int).map_err(|_| {
+        Error::lint(format!("manifest line {line_no}: unparseable value: {v}"))
+    })
+}
+
+/// Strips a trailing `# comment` that is outside any string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut esc = false;
+    for (i, c) in line.char_indices() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '#' => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Default-initialized rule, filled in key by key.
+fn blank_rule() -> Rule {
+    Rule {
+        name: String::new(),
+        scope: Scope::Paths,
+        paths: Vec::new(),
+        exclude: Vec::new(),
+        include_tests: false,
+        matcher: Matcher::Substring,
+        patterns: Vec::new(),
+        message: String::new(),
+    }
+}
+
+fn finish_rule(rule: Rule, line_no: usize) -> Result<Rule> {
+    if rule.name.is_empty() {
+        return Err(Error::lint(format!(
+            "manifest line {line_no}: rule has no name"
+        )));
+    }
+    if rule.matcher == Matcher::Substring && rule.patterns.is_empty() {
+        return Err(Error::lint(format!(
+            "manifest: rule '{}' has no patterns",
+            rule.name
+        )));
+    }
+    if rule.message.is_empty() {
+        return Err(Error::lint(format!(
+            "manifest: rule '{}' has no message",
+            rule.name
+        )));
+    }
+    Ok(rule)
+}
+
+/// Parses the manifest text. See the module docs for the grammar.
+pub fn parse_manifest(text: &str) -> Result<Manifest> {
+    let mut rules: Vec<Rule> = Vec::new();
+    let mut current: Option<Rule> = None;
+    let mut lines = text.lines().enumerate();
+    while let Some((idx, raw)) = lines.next() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[rule]]" {
+            if let Some(r) = current.take() {
+                rules.push(finish_rule(r, line_no)?);
+            }
+            current = Some(blank_rule());
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(Error::lint(format!(
+                "manifest line {line_no}: unknown table {line}"
+            )));
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(Error::lint(format!(
+                "manifest line {line_no}: expected `key = value`: {line}"
+            )));
+        };
+        let key = line[..eq].trim();
+        let mut value = line[eq + 1..].trim().to_string();
+        // Multi-line arrays: keep consuming until brackets balance.
+        if value.starts_with('[') {
+            while value.matches('[').count() > value.matches(']').count() {
+                let Some((_, next)) = lines.next() else {
+                    return Err(Error::lint(format!(
+                        "manifest line {line_no}: unterminated array"
+                    )));
+                };
+                value.push(' ');
+                value.push_str(strip_comment(next).trim());
+            }
+        }
+        let val = parse_value(&value, line_no)?;
+        match (&mut current, key, val) {
+            (None, "version", Val::Int(1)) => {}
+            (None, "version", _) => {
+                return Err(Error::lint(format!(
+                    "manifest line {line_no}: unsupported manifest version"
+                )));
+            }
+            (None, k, _) => {
+                return Err(Error::lint(format!(
+                    "manifest line {line_no}: key `{k}` outside a [[rule]] table"
+                )));
+            }
+            (Some(r), "name", Val::Str(s)) => r.name = s,
+            (Some(r), "scope", Val::Str(s)) => {
+                r.scope = match s.as_str() {
+                    "paths" => Scope::Paths,
+                    "hot-path" => Scope::HotPath,
+                    "fallible-path" => Scope::FalliblePath,
+                    other => {
+                        return Err(Error::lint(format!(
+                            "manifest line {line_no}: unknown scope `{other}`"
+                        )));
+                    }
+                }
+            }
+            (Some(r), "match", Val::Str(s)) => {
+                r.matcher = match s.as_str() {
+                    "substring" => Matcher::Substring,
+                    "index" => Matcher::Index,
+                    other => {
+                        return Err(Error::lint(format!(
+                            "manifest line {line_no}: unknown matcher `{other}`"
+                        )));
+                    }
+                }
+            }
+            (Some(r), "paths", Val::Arr(a)) => r.paths = a,
+            (Some(r), "exclude", Val::Arr(a)) => r.exclude = a,
+            (Some(r), "patterns", Val::Arr(a)) => r.patterns = a,
+            (Some(r), "include-tests", Val::Bool(b)) => r.include_tests = b,
+            (Some(r), "message", Val::Str(s)) => r.message = s,
+            (Some(_), k, _) => {
+                return Err(Error::lint(format!(
+                    "manifest line {line_no}: unknown or mistyped key `{k}`"
+                )));
+            }
+        }
+    }
+    if let Some(r) = current.take() {
+        rules.push(finish_rule(r, text.lines().count())?);
+    }
+    if rules.is_empty() {
+        return Err(Error::lint("manifest declares no rules".to_string()));
+    }
+    for (i, r) in rules.iter().enumerate() {
+        if rules[..i].iter().any(|p| p.name == r.name) {
+            return Err(Error::lint(format!(
+                "manifest: duplicate rule name '{}'",
+                r.name
+            )));
+        }
+    }
+    Ok(Manifest { rules })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+version = 1
+
+[[rule]]
+name = "no-panic"
+scope = "paths"
+paths = ["rust/src/ir/", "rust/src/sim/"]
+exclude = ["rust/src/sim/queue.rs"]
+patterns = [
+  ".unwrap()",  # inline comment
+  ".expect(",
+]
+message = "library code must return typed errors"
+
+[[rule]]
+name = "index-fallible"
+scope = "fallible-path"
+match = "index"
+message = "no direct indexing in fallible paths"
+"#;
+
+    #[test]
+    fn parses_rules_and_arrays() {
+        let m = parse_manifest(GOOD).unwrap();
+        assert_eq!(m.rules.len(), 2);
+        assert_eq!(m.rules[0].name, "no-panic");
+        assert_eq!(m.rules[0].patterns, vec![".unwrap()", ".expect("]);
+        assert_eq!(m.rules[0].exclude, vec!["rust/src/sim/queue.rs"]);
+        assert_eq!(m.rules[1].scope, Scope::FalliblePath);
+        assert_eq!(m.rules[1].matcher, Matcher::Index);
+        assert!(m.has_rule("no-panic") && !m.has_rule("no-such"));
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(parse_manifest("version = 2\n").is_err());
+        assert!(parse_manifest("name = \"x\"\n").is_err());
+        assert!(parse_manifest("[[rule]]\nscope = \"nope\"\n").is_err());
+        assert!(parse_manifest(
+            "[[rule]]\nname = \"a\"\npatterns = [\"x\"]\nmessage = \"m\"\n\
+             [[rule]]\nname = \"a\"\npatterns = [\"x\"]\nmessage = \"m\"\n"
+        )
+        .is_err());
+        assert!(
+            parse_manifest("[[rule]]\nname = \"a\"\nmessage = \"m\"\n").is_err(),
+            "substring rule with no patterns must be rejected"
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! `modtrans-lint` — the gating static-analysis binary.
+//!
+//! Walks `rust/src/**/*.rs` under the repo root and applies the rule
+//! manifest (`analysis/rules.toml`). Exit codes: 0 clean, 1 findings,
+//! 2 setup error (unreadable tree, malformed manifest or marker).
+//!
+//! ```text
+//! modtrans-lint [ROOT] [--manifest PATH] [--quiet]
+//! ```
+//!
+//! `ROOT` defaults to the current directory; CI and `make lint` run it
+//! from the repo root.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use modtrans::analysis::{lint_tree, rules};
+
+fn run() -> Result<ExitCode, String> {
+    let mut root = PathBuf::from(".");
+    let mut manifest_path: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--manifest" => {
+                let p = args
+                    .next()
+                    .ok_or_else(|| "--manifest needs a path".to_string())?;
+                manifest_path = Some(PathBuf::from(p));
+            }
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: modtrans-lint [ROOT] [--manifest PATH] [--quiet]");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other if !other.starts_with('-') => root = PathBuf::from(other),
+            other => return Err(format!("unknown flag: {other}")),
+        }
+    }
+    let manifest_path =
+        manifest_path.unwrap_or_else(|| root.join("analysis").join("rules.toml"));
+    let text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| format!("cannot read manifest {}: {e}", manifest_path.display()))?;
+    let manifest = rules::parse_manifest(&text).map_err(|e| e.to_string())?;
+    let report = lint_tree(&root, &manifest).map_err(|e| e.to_string())?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if !quiet {
+        eprintln!(
+            "modtrans-lint: {} file(s), {} rule(s), {} finding(s), {} suppressed",
+            report.files_scanned,
+            manifest.rules.len(),
+            report.findings.len(),
+            report.suppressed
+        );
+    }
+    if report.findings.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::FAILURE)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("modtrans-lint: error: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

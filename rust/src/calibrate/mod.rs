@@ -120,17 +120,21 @@ impl Calibration {
     pub fn estimate_ns(&self, g: Gemm) -> u64 {
         assert!(!self.entries.is_empty());
         let macs = g.macs().max(1) as f64;
-        let (best, best_ns) = self
-            .entries
-            .iter()
-            .min_by(|(a, _), (b, _)| {
-                let da = (macs.ln() - (a.macs().max(1) as f64).ln()).abs();
-                let db = (macs.ln() - (b.macs().max(1) as f64).ln()).abs();
-                da.partial_cmp(&db).unwrap()
-            })
-            .unwrap();
-        let scale = macs / best.macs().max(1) as f64;
-        ((*best_ns as f64) * scale).ceil().max(1.0) as u64
+        let mut best_d = f64::INFINITY;
+        let mut best_macs = 1u64;
+        let mut best_ns = 1u64;
+        for (e, ns) in &self.entries {
+            let d = (macs.ln() - (e.macs().max(1) as f64).ln()).abs();
+            // `<=` keeps the *last* of equal minima, matching the
+            // Iterator::min_by tie-break this fold replaced.
+            if d <= best_d {
+                best_d = d;
+                best_macs = e.macs().max(1);
+                best_ns = *ns;
+            }
+        }
+        let scale = macs / best_macs as f64;
+        ((best_ns as f64) * scale).ceil().max(1.0) as u64
     }
 }
 

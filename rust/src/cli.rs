@@ -19,6 +19,7 @@
 //!           [--lease N] [--static-shards]
 //!           (+ every sweep option; lease assignment is fleet-owned)
 //! modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (pjrt feature)
+//! modtrans check [trace.et.json | --cache-dir DIR]   (IR + task-graph invariants)
 //! ```
 
 use crate::calibrate::{Calibration, MeasuredCompute};
@@ -137,6 +138,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "memory" => cmd_memory(&args),
         "calibrate" => cmd_calibrate(&args),
         "validate" => cmd_validate(&args),
+        "check" => cmd_check(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -183,7 +185,12 @@ USAGE:
   modtrans memory <file.onnx|zoo:name> [--npus N] [--mp-group G] [--batch B]
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
   modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (needs --features pjrt)
-  modtrans validate                      (paper §4.4 ResNet-50 sanity check)";
+  modtrans validate                      (paper §4.4 ResNet-50 sanity check)
+  modtrans check [trace.et.json | --cache-dir DIR] [--batch B] [--quiet]
+            (data-level verification: bare form verifies IR + task-graph invariants
+             for every zoo model under every parallelism strategy; with a file it
+             verifies one et-json document or sweep-cache envelope; with --cache-dir
+             it verifies every .ir.json envelope in the directory)";
 
 /// Load a model from `zoo:<name>` or a `.onnx` path (metadata-only).
 fn load_model(spec: &str, full: bool) -> Result<onnx::Model> {
@@ -491,6 +498,7 @@ fn cmd_validate(_args: &Args) -> Result<()> {
     ];
     let m = zoo::get("resnet50", ZooOpts { weights: WeightFill::Zeros })?;
     let bytes = onnx::encode_model(&m);
+    // lint: allow(wall-clock) — reports real extraction wall time to the user
     let t0 = std::time::Instant::now();
     let summary = translator::extract_from_bytes(&bytes, 1)?;
     let dt = t0.elapsed();
@@ -512,6 +520,89 @@ fn cmd_validate(_args: &Args) -> Result<()> {
         return Err(Error::Translate(format!("{bad} layer size mismatches")));
     }
     println!("PASS — matches the ASTRA-sim reference model (paper §4.4)");
+    Ok(())
+}
+
+/// Data-level verification verb: run the IR verifier and the task-graph
+/// verifier over real inputs — the runtime twin of the `modtrans-lint`
+/// source pass (see *Static guarantees* in the crate docs).
+///
+/// * bare: every zoo model under every parallelism strategy — the IR is
+///   verified at each annotation stage, then the built task graph.
+/// * `<trace.et.json>`: one et-json document or sweep-cache envelope.
+/// * `--cache-dir DIR`: every `.ir.json` envelope under DIR.
+fn cmd_check(args: &Args) -> Result<()> {
+    if let Some(dir) = args.opt("cache-dir") {
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let is_entry = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.ends_with(sweep::cache::IR_CACHE_SUFFIX));
+            if is_entry && path.is_file() {
+                paths.push(path);
+            }
+        }
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Usage(format!("no cache entries (*.ir.json) under {dir}")));
+        }
+        for path in &paths {
+            let model = sweep::verify_envelope_file(path)?;
+            if !args.flag("quiet") {
+                println!("ok {model:<12} {}", path.display());
+            }
+        }
+        println!("check: {} cache envelope(s) verified", paths.len());
+        return Ok(());
+    }
+    if let Some(path) = args.positional.first() {
+        let model = sweep::verify_envelope_file(Path::new(path))?;
+        println!("check: {path}: IR invariants hold ({model})");
+        return Ok(());
+    }
+
+    // Bare form: the whole zoo under the whole strategy axis.
+    let batch: i64 = args.opt_parse("batch", 8)?;
+    let strategies = [
+        Parallelism::Data,
+        Parallelism::Model,
+        Parallelism::HybridDataModel,
+        Parallelism::HybridModelData,
+        Parallelism::Pipeline,
+    ];
+    let cfg = SimConfig::default();
+    let compute = SystolicCompute::new(batch);
+    let mut graphs = 0usize;
+    for name in zoo::MODELS {
+        let mut base = ir::frontend::from_zoo(name, batch)?;
+        ir::verify(&base)?;
+        ir::passes::annotate_compute(&mut base, &compute);
+        ir::verify(&base)?;
+        for p in strategies {
+            let mut annotated = base.clone();
+            ir::passes::annotate_comm(
+                &mut annotated,
+                TranslateOpts { parallelism: p, ..Default::default() },
+            );
+            ir::verify(&annotated)?;
+            let w = ir::emit::to_sim_workload(&annotated)?;
+            let check = sim::verify_workload(&w, &cfg)?;
+            graphs += 1;
+            if !args.flag("quiet") {
+                println!(
+                    "ok {name:<12} {p:?}: {} tasks / {} deps over {} resources",
+                    check.tasks, check.deps, check.resources
+                );
+            }
+        }
+    }
+    println!(
+        "check: {} model(s) x {} strategies = {graphs} task graphs verified",
+        zoo::MODELS.len(),
+        strategies.len()
+    );
     Ok(())
 }
 

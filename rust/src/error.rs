@@ -53,6 +53,14 @@ pub enum Error {
     /// CLI usage error.
     Usage(String),
 
+    /// Static-analysis (modtrans-lint) error: malformed manifest or
+    /// marker, or an unreadable source tree.
+    Lint(String),
+
+    /// Semantic-verifier rejection: an IR or task graph violates a
+    /// structural invariant (see `ir::verify` / `sim::verify_graph`).
+    Verify(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -76,6 +84,8 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Lint(m) => write!(f, "lint error: {m}"),
+            Error::Verify(m) => write!(f, "verify error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -108,6 +118,14 @@ impl Error {
     /// Shorthand constructor for translator errors.
     pub fn translate(msg: impl Into<String>) -> Self {
         Error::Translate(msg.into())
+    }
+    /// Shorthand constructor for static-analysis errors.
+    pub fn lint(msg: impl Into<String>) -> Self {
+        Error::Lint(msg.into())
+    }
+    /// Shorthand constructor for semantic-verifier errors.
+    pub fn verify(msg: impl Into<String>) -> Self {
+        Error::Verify(msg.into())
     }
 }
 

@@ -135,6 +135,13 @@ impl EtBuilder {
 /// `"parallelism": null` and a collective-free graph — the persistent
 /// cache's on-disk form.
 pub fn et_json(ir: &ModelIR) -> Result<Value> {
+    // Emit-boundary hook: never serialize an IR that violates its own
+    // invariants (debug builds; the always-on reader-side verify in
+    // `from_et_json` covers release round-trips).
+    debug_assert!(
+        crate::ir::verify::verify(ir).is_ok(),
+        "et_json asked to emit an invalid IR"
+    );
     if !ir.compute_annotated() {
         return Err(Error::translate("et-json: compute pass has not run on this IR"));
     }

@@ -9,8 +9,8 @@
 //!   caller-owned slice (from [`crate::ir::passes::plan_comm_into`]) and
 //!   refills a reusable [`Workload`], reusing the layer `Vec` and each
 //!   layer's name `String` capacity. Steady-state re-emission for a
-//!   model performs no heap allocation — this file is covered by CI's
-//!   `hot-path-alloc-guard`.
+//!   model performs no heap allocation — the `modtrans-lint`
+//!   `no-string-alloc` rule gates this file in CI.
 
 use crate::error::{Error, Result};
 use crate::ir::{ModelIR, PhaseCost};
@@ -35,6 +35,7 @@ pub fn to_sim_workload(ir: &ModelIR) -> Result<Workload> {
 /// (one entry per layer). The IR's own comm slots are ignored, so a
 /// cached IR can be shared read-only across scenarios while each worker
 /// supplies its scenario's plan.
+// lint: hot-path
 pub fn workload_into(
     ir: &ModelIR,
     comms: &[CommPlan],
@@ -71,6 +72,7 @@ pub fn workload_from_parts(
 
 /// The shared lowering loop. Reuses `out`'s existing layer slots (and
 /// their name-string capacity) before growing.
+// lint: hot-path
 fn lower(
     summary: &ModelSummary,
     costs: &[PhaseCost],

@@ -44,7 +44,15 @@ pub fn from_summary(summary: ModelSummary) -> ModelIR {
 
 /// Build IR from an in-memory ONNX model at the given batch size.
 pub fn from_model(model: &Model, batch: i64) -> Result<ModelIR> {
-    Ok(ModelIR::from_summary(translator::extract(model, batch)?))
+    let ir = ModelIR::from_summary(translator::extract(model, batch)?);
+    // Frontend-boundary hook: a structural extraction that violates the
+    // IR invariants is a bug here, not in the caller (debug builds only;
+    // `modtrans check` exercises the verifier in release).
+    debug_assert!(
+        super::verify::verify(&ir).is_ok(),
+        "extract() produced an invalid IR"
+    );
+    Ok(ir)
 }
 
 /// Build IR from raw `.onnx` bytes (metadata-only decode).
@@ -285,6 +293,11 @@ pub fn from_et_json(doc: &Value) -> Result<ModelIR> {
     if let Some(p) = parallelism {
         ir.mark_comm_annotated(p);
     }
+    // Disk-boundary hook, always on (not debug_assert): an et-json
+    // document is external input — the grammar replay above checks the
+    // graph's shape, this checks the *semantics* (collective-plan
+    // admissibility, flag/slot consistency) before anyone trusts it.
+    super::verify::verify(&ir)?;
     Ok(ir)
 }
 

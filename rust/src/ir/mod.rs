@@ -35,6 +35,9 @@
 pub mod emit;
 pub mod frontend;
 pub mod passes;
+pub mod verify;
+
+pub use verify::verify;
 
 use crate::translator::{CommPlan, LayerInfo, ModelSummary};
 use crate::workload::Parallelism;

@@ -8,8 +8,9 @@
 //! [`plan_comm_into`] plans into a caller-owned buffer without touching
 //! the shared IR — the sweep hot path, where one compute-annotated IR is
 //! shared read-only across worker threads and each scenario re-plans
-//! only this cheap, parallelism-dependent pass. This module is covered
-//! by CI's `hot-path-alloc-guard`: no per-layer string allocation.
+//! only this cheap, parallelism-dependent pass. The `modtrans-lint`
+//! `no-string-alloc` rule gates this module in CI: no per-layer string
+//! allocation.
 
 use super::{ModelIR, PhaseCost};
 use crate::translator::{
@@ -18,6 +19,7 @@ use crate::translator::{
 };
 
 /// The compute pass's per-layer unit: one layer's cost slot.
+// lint: hot-path
 fn cost_of(info: &LayerInfo, compute: &dyn ComputeTimeModel) -> PhaseCost {
     let (fwd_ns, ig_ns, wg_ns) = compute.layer_times(info);
     PhaseCost { fwd_ns, ig_ns, wg_ns, update_ns: compute.update_time(info) }
@@ -26,6 +28,7 @@ fn cost_of(info: &LayerInfo, compute: &dyn ComputeTimeModel) -> PhaseCost {
 /// Fill the per-phase compute-cost slots from a compute model. Valid for
 /// every parallelism strategy at the IR's (model, batch) — this is the
 /// annotation the sweep cache shares across scenarios.
+// lint: hot-path
 pub fn annotate_compute(ir: &mut ModelIR, compute: &dyn ComputeTimeModel) {
     let (summary, costs, _) = ir.parts_mut();
     for (info, slot) in summary.layers.iter().zip(costs.iter_mut()) {
@@ -38,6 +41,7 @@ pub fn annotate_compute(ir: &mut ModelIR, compute: &dyn ComputeTimeModel) {
 /// a caller-owned cost buffer. The IR-free form
 /// [`crate::translator::to_workload`] composes — no summary clone, no
 /// IR allocation.
+// lint: hot-path
 pub fn compute_costs_into(
     summary: &ModelSummary,
     compute: &dyn ComputeTimeModel,
@@ -48,6 +52,7 @@ pub fn compute_costs_into(
 }
 
 /// Fill the IR's comm slots for one parallelism strategy.
+// lint: hot-path
 pub fn annotate_comm(ir: &mut ModelIR, opts: TranslateOpts) {
     let (summary, _, comms) = ir.parts_mut();
     for (info, slot) in summary.layers.iter().zip(comms.iter_mut()) {
@@ -60,12 +65,14 @@ pub fn annotate_comm(ir: &mut ModelIR, opts: TranslateOpts) {
 /// (possibly shared) IR untouched. `out` is cleared and refilled; its
 /// capacity is reused, so steady-state re-planning performs no heap
 /// allocation.
+// lint: hot-path
 pub fn plan_comm_into(ir: &ModelIR, opts: TranslateOpts, out: &mut Vec<CommPlan>) {
     plan_comm_for_summary_into(ir.summary(), opts, out);
 }
 
 /// Slice-level comm pass over bare structural facts (the form
 /// [`crate::translator::to_workload`] composes).
+// lint: hot-path
 pub fn plan_comm_for_summary_into(
     summary: &ModelSummary,
     opts: TranslateOpts,

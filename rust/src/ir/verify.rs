@@ -1,0 +1,215 @@
+//! Semantic verifier for [`ModelIR`]: the data-level half of the
+//! static-guarantees story (see the crate docs).
+//!
+//! [`verify`] checks every structural invariant an IR must satisfy
+//! before the passes/emitters may trust it:
+//!
+//! * **Slot-array sync** — the compute and comm slot arrays are exactly
+//!   as long as the layer list (the IR is structure-of-arrays; a length
+//!   skew would silently mis-annotate layers).
+//! * **Structural sanity** — non-empty model name, `batch >= 1`, no
+//!   layer with an empty name (names key the et-json grammar replay).
+//! * **Annotation-flag consistency** — a cost slot may be nonzero only
+//!   after the compute pass marked the IR, and a comm slot non-`None`
+//!   only after the comm pass did; a plan of `CommType::None` must
+//!   carry zero bytes.
+//! * **Collective-plan admissibility** — every per-phase collective is
+//!   one the planner ([`crate::translator::comm_for_layer`]) could have
+//!   emitted for the annotated parallelism, ZeRO stages included (e.g.
+//!   a weight-gradient `AllReduce` under pure model parallelism is
+//!   rejected).
+//!
+//! It runs from `modtrans check`, from debug-build hooks at the
+//! frontend and emit boundaries, and unconditionally against every
+//! et-json / cache envelope the disk tier loads (a failing envelope is
+//! a cache miss, never a trusted IR).
+
+use super::ModelIR;
+use crate::error::{Error, Result};
+use crate::translator::CommPlan;
+use crate::workload::{CommType, Parallelism};
+
+/// Admissible non-`None` collectives for one (parallelism, phase).
+/// `CommType::None` is always admissible: small layers can legitimately
+/// plan no traffic for a phase.
+fn admissible(parallelism: Parallelism, phase: usize) -> &'static [CommType] {
+    use CommType::{AllGather, AllReduce, AllToAll, ReduceScatter};
+    const DATA: [&[CommType]; 3] = [
+        &[AllGather],                // fwd (ZeRO-2/3 parameter gather)
+        &[AllGather],                // ig  (ZeRO-3 re-gather)
+        &[AllReduce, ReduceScatter], // wg  (plain DP / ZeRO gradient shard)
+    ];
+    const MODEL: [&[CommType]; 3] = [&[AllGather, AllToAll], &[AllGather, AllToAll], &[]];
+    const HYBRID_DM: [&[CommType]; 3] = [&[AllGather, AllToAll], &[AllGather], &[AllReduce]];
+    const HYBRID_MD: [&[CommType]; 3] = [&[AllGather], &[AllGather], &[AllReduce]];
+    const PIPELINE: [&[CommType]; 3] = [&[], &[], &[AllReduce]];
+    let table = match parallelism {
+        Parallelism::Data => &DATA,
+        Parallelism::Model => &MODEL,
+        Parallelism::HybridDataModel => &HYBRID_DM,
+        Parallelism::HybridModelData => &HYBRID_MD,
+        Parallelism::Pipeline => &PIPELINE,
+    };
+    table.get(phase).copied().unwrap_or(&[])
+}
+
+fn check_phase(
+    layer: usize,
+    name: &str,
+    phase: usize,
+    slot: (CommType, u64),
+    parallelism: Parallelism,
+) -> Result<()> {
+    const PHASES: [&str; 3] = ["fwd", "ig", "wg"];
+    let phase_name = PHASES.get(phase).copied().unwrap_or("?");
+    let (ty, bytes) = slot;
+    if ty == CommType::None {
+        if bytes != 0 {
+            return Err(Error::verify(format!(
+                "layer {layer} ('{name}') {phase_name}: CommType::None with {bytes} bytes"
+            )));
+        }
+        return Ok(());
+    }
+    if !admissible(parallelism, phase).contains(&ty) {
+        return Err(Error::verify(format!(
+            "layer {layer} ('{name}') {phase_name}: {ty:?} is not admissible under {parallelism:?}"
+        )));
+    }
+    Ok(())
+}
+
+/// Verifies every structural invariant of `ir` (see the module docs).
+/// Cheap — O(layers) with no allocation beyond the error path.
+pub fn verify(ir: &ModelIR) -> Result<()> {
+    let n = ir.summary.layers.len();
+    if ir.costs.len() != n || ir.comms.len() != n {
+        return Err(Error::verify(format!(
+            "slot arrays out of sync: {n} layers, {} cost slots, {} comm slots",
+            ir.costs.len(),
+            ir.comms.len()
+        )));
+    }
+    if ir.summary.model_name.is_empty() {
+        return Err(Error::verify("empty model name"));
+    }
+    if ir.summary.batch < 1 {
+        return Err(Error::verify(format!(
+            "batch must be >= 1, got {}",
+            ir.summary.batch
+        )));
+    }
+    for (i, l) in ir.summary.layers.iter().enumerate() {
+        if l.name.is_empty() {
+            return Err(Error::verify(format!(
+                "layer {i} has an empty name (names key the et-json replay)"
+            )));
+        }
+    }
+    if !ir.compute_annotated {
+        if let Some(i) = ir.costs.iter().position(|c| *c != super::PhaseCost::default()) {
+            return Err(Error::verify(format!(
+                "layer {i} has nonzero cost slots but the compute pass has not run"
+            )));
+        }
+    }
+    match ir.comm_annotated {
+        None => {
+            if let Some(i) = ir.comms.iter().position(|p| *p != CommPlan::none()) {
+                return Err(Error::verify(format!(
+                    "layer {i} has a comm plan but the comm pass has not run"
+                )));
+            }
+        }
+        Some(parallelism) => {
+            for (i, (plan, l)) in ir.comms.iter().zip(ir.summary.layers.iter()).enumerate() {
+                check_phase(i, &l.name, 0, plan.fwd, parallelism)?;
+                check_phase(i, &l.name, 1, plan.ig, parallelism)?;
+                check_phase(i, &l.name, 2, plan.wg, parallelism)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::SystolicCompute;
+    use crate::ir::{frontend, passes, PhaseCost};
+    use crate::translator::TranslateOpts;
+
+    fn annotated(parallelism: Parallelism) -> ModelIR {
+        let mut ir = frontend::from_zoo("mlp", 4).unwrap();
+        passes::annotate_compute(&mut ir, &SystolicCompute::new(4));
+        passes::annotate_comm(
+            &mut ir,
+            TranslateOpts { parallelism, ..TranslateOpts::default() },
+        );
+        ir
+    }
+
+    #[test]
+    fn clean_irs_verify_at_every_stage() {
+        let mut ir = frontend::from_zoo("mlp", 4).unwrap();
+        verify(&ir).unwrap();
+        passes::annotate_compute(&mut ir, &SystolicCompute::new(4));
+        verify(&ir).unwrap();
+        for p in [
+            Parallelism::Data,
+            Parallelism::Model,
+            Parallelism::HybridDataModel,
+            Parallelism::HybridModelData,
+            Parallelism::Pipeline,
+        ] {
+            verify(&annotated(p)).unwrap();
+        }
+    }
+
+    #[test]
+    fn unflagged_cost_slots_are_rejected() {
+        let mut ir = frontend::from_zoo("mlp", 4).unwrap();
+        {
+            let (_, costs, _) = ir.parts_mut();
+            costs[0] = PhaseCost { fwd_ns: 1, ..PhaseCost::default() };
+        }
+        let e = verify(&ir).unwrap_err().to_string();
+        assert!(e.contains("compute pass has not run"), "{e}");
+    }
+
+    #[test]
+    fn unflagged_comm_slots_are_rejected() {
+        let mut ir = frontend::from_zoo("mlp", 4).unwrap();
+        {
+            let (_, _, comms) = ir.parts_mut();
+            comms[0].wg = (CommType::AllReduce, 64);
+        }
+        let e = verify(&ir).unwrap_err().to_string();
+        assert!(e.contains("comm pass has not run"), "{e}");
+    }
+
+    #[test]
+    fn inadmissible_collective_is_rejected() {
+        let mut ir = annotated(Parallelism::Model);
+        {
+            let (_, _, comms) = ir.parts_mut();
+            // A weight-gradient AllReduce is a data-parallel construct;
+            // pure model parallelism must reject it.
+            comms[0].wg = (CommType::AllReduce, 1024);
+        }
+        let e = verify(&ir).unwrap_err().to_string();
+        assert!(e.contains("not admissible under Model"), "{e}");
+        assert!(e.starts_with("verify error:"), "{e}");
+    }
+
+    #[test]
+    fn none_with_bytes_is_rejected() {
+        let mut ir = annotated(Parallelism::Data);
+        {
+            let (_, _, comms) = ir.parts_mut();
+            comms[0].fwd = (CommType::None, 8);
+        }
+        let e = verify(&ir).unwrap_err().to_string();
+        assert!(e.contains("CommType::None with 8 bytes"), "{e}");
+    }
+}

@@ -415,7 +415,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Value::Num)
             .map_err(|_| self.err("invalid number"))

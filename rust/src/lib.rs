@@ -154,6 +154,10 @@
 //!   (behind the `pjrt` feature; see below).
 //! * [`json`], [`util`], [`cli`] — config / infra substrates (no external
 //!   crates).
+//! * [`analysis`] — the in-crate static-analysis pass (`modtrans-lint`):
+//!   a dependency-free lexer + rule engine enforcing the crate's
+//!   hot-path/determinism/no-panic contracts from `analysis/rules.toml`
+//!   (see *Static guarantees* below).
 //!
 //! The three-layer architecture keeps Python strictly at build time:
 //! JAX/Pallas author + AOT-lower compute kernels to HLO text
@@ -182,12 +186,64 @@
 //! and the `measured:<cal.json>` compute model still loads previously
 //! saved calibration files (loading is pure JSON).
 //!
+//! # Static guarantees
+//!
+//! The crate's two load-bearing contracts — the allocation-free hot
+//! path and byte-identical rankings everywhere — are machine-checked by
+//! two layers, both dependency-free:
+//!
+//! **1. `modtrans-lint`** ([`analysis`]; CI's gating `lint` job,
+//! `make lint`) walks every `rust/src/**/*.rs` file with a token-level
+//! cleaner (string/char/raw-string literals and comments blanked,
+//! `#[cfg(test)]` regions excluded by default, function spans
+//! brace-matched) and enforces the declarative rules in
+//! `analysis/rules.toml`:
+//!
+//! * `no-alloc` — no `format!` / `vec!` / `to_string` / `to_owned` /
+//!   `String::…` / `Vec::…` / `Box::new` / `collect::<String>` inside
+//!   any function annotated `// lint: hot-path` (graph builders, the
+//!   calendar queue, the collective router, dispatch and the run loop).
+//! * `no-string-alloc` — whole-file string-allocation ban over the five
+//!   files the retired grep guard watched (parity superset).
+//! * `no-panic` — no `.unwrap()` / `.expect(` / `panic!` / `todo!` in
+//!   library code (ir/, sim/, sweep/, zoo/, analysis/, json, calibrate,
+//!   bench); typed [`error::Error`]s only.
+//! * `index-fallible` — no direct indexing inside functions annotated
+//!   `// lint: fallible-path`.
+//! * `no-label-string` — per-task label `String`s stay dead (tests
+//!   included).
+//! * `map-iter` / `wall-clock` / `float-cmp` — determinism hazards: no
+//!   hash-order containers in modules feeding ranked or serialized
+//!   output, no `Instant::now`/`SystemTime` outside bench/fleet/runtime,
+//!   no `partial_cmp` in ordering code (use `f64::total_cmp`).
+//!
+//! **Annotation grammar** (line comments; malformed markers fail the
+//! lint): `// lint: hot-path` / `// lint: fallible-path` annotate the
+//! next `fn`; `// lint: allow(<rule>) — <reason>` suppresses `<rule>`
+//! on its own line (trailing form) or the next code line (standalone
+//! form) — the reason is mandatory, so every suppression documents why
+//! the site is provably fine.
+//!
+//! **2. Semantic verifiers** (`modtrans check`; `debug_assert!`-style
+//! hooks at the frontend/emit boundaries; always-on at the disk-cache
+//! load boundary): [`ir::verify`] checks a [`ir::ModelIR`]'s structural
+//! invariants — slot arrays dense and in sync with the layer list,
+//! annotation flags consistent with slot contents, and every per-phase
+//! collective admissible for the planned parallelism — and
+//! [`sim::verify_graph`] checks a built [`sim::TaskGraph`]: CSR
+//! well-formedness, SoA slab sync, dense ids, in-range resources,
+//! backward-only dependencies, and acyclicity (Kahn's algorithm).
+//! `modtrans check` runs the whole zoo × strategy matrix through both;
+//! `modtrans check FILE` verifies an et-json trace or cache envelope;
+//! `modtrans check --cache-dir DIR` audits a disk cache — the same
+//! verification every cache load performs before trusting an envelope.
+//!
 //! ## CI
 //!
 //! `.github/workflows/ci.yml` runs build, test, `cargo fmt --check`,
 //! `cargo clippy -- -D warnings` (gating), `cargo doc --no-deps` with
-//! warnings denied (gating), the hot-path allocation guard (sim builders
-//! + IR derivation hot path), a bench smoke pass
+//! warnings denied (gating), the gating `modtrans-lint` static-analysis
+//! pass (see *Static guarantees*), a bench smoke pass
 //! (`MODTRANS_BENCH_SAMPLES=2` drops every bench target to seconds) that
 //! uploads `BENCH_*.json` artifacts, a **gating** perf-trajectory job
 //! that diffs those artifacts against the base branch's and fails on a
@@ -244,9 +300,9 @@
 //! * Tasks carry a compact `Copy` [`sim::TaskTag`]
 //!   (iteration × phase × layer × comm annotation) instead of a label
 //!   `String`; human-readable labels are rendered only on demand (error
-//!   paths, reports). CI's `hot-path-alloc-guard` job greps the graph
-//!   builders, the calendar queue and the collective router to keep it
-//!   that way.
+//!   paths, reports). The `no-alloc` and `no-label-string` lint rules
+//!   (gating `lint` CI job) keep the graph builders, the calendar queue
+//!   and the collective router that way.
 //! * Dependency lists live in one shared pool inside [`sim::TaskGraph`]
 //!   (CSR layout), not in per-task `Vec`s; the run loop's pending
 //!   counts, dependents CSR, calendar queue, wave batch and spans live
@@ -285,6 +341,7 @@
 //! samples — for real comparisons run the benches locally without
 //! `MODTRANS_BENCH_SAMPLES`.
 
+pub mod analysis;
 pub mod calibrate;
 pub mod cli;
 pub mod compute;

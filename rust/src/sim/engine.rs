@@ -102,6 +102,7 @@ impl TaskGraph {
     }
 
     /// Add a task; returns its id.
+    // lint: hot-path
     pub fn add(
         &mut self,
         tag: TaskTag,
@@ -127,6 +128,12 @@ impl TaskGraph {
     /// Number of tasks.
     pub fn len(&self) -> usize {
         self.tasks.len()
+    }
+
+    /// Number of entries in the shared dependency pool (total dep-list
+    /// length across all tasks).
+    pub fn num_deps(&self) -> usize {
+        self.dep_pool.len()
     }
 
     /// True when no tasks have been added.
@@ -201,6 +208,7 @@ impl Resource {
         self.backlog.push(id);
     }
 
+    // lint: hot-path
     fn pop(&mut self) -> TaskId {
         match self.policy {
             Policy::Fifo => {
@@ -213,6 +221,7 @@ impl Resource {
                 }
                 id
             }
+            // lint: allow(no-panic) — dispatch checks backlog_is_empty() first
             Policy::Lifo => self.backlog.pop().expect("pop on empty backlog"),
         }
     }
@@ -342,11 +351,13 @@ impl Engine {
     /// in `scratch.schedule`). Fails on dangling resource ids or if the
     /// graph deadlocks (dependency cycle). Steady-state reuse of the same
     /// scratch performs no heap allocation.
+    // lint: hot-path
     pub fn run_into(&mut self, graph: &TaskGraph, scratch: &mut RunScratch) -> Result<()> {
         let n = graph.len();
         let live = self.live;
         for (id, t) in graph.tasks.iter().enumerate() {
             if t.resource >= live {
+                // lint: allow(no-alloc) — cold error path
                 return Err(Error::sim(format!(
                     "task '{}' references unknown resource {}",
                     t.tag, t.resource
@@ -354,6 +365,7 @@ impl Engine {
             }
             for &d in graph.deps_of(id) {
                 if d >= n {
+                    // lint: allow(no-alloc) — cold error path
                     return Err(Error::sim(format!(
                         "task '{}' depends on unknown task {d}",
                         t.tag
@@ -467,6 +479,7 @@ impl Engine {
         }
 
         if completed != n {
+            // lint: allow(no-alloc) — cold error path
             return Err(Error::sim(format!(
                 "deadlock: {completed}/{n} tasks completed (dependency cycle?)"
             )));
@@ -482,6 +495,7 @@ impl Engine {
     }
 
     /// If `res` is idle and has backlog, start its next task per policy.
+    // lint: hot-path
     fn dispatch(
         res: &mut Resource,
         durs: &[u64],
@@ -502,6 +516,116 @@ impl Engine {
         queue.push(now + dur, *seq, id);
         *seq += 1;
     }
+}
+
+/// Structural verifier for a built [`TaskGraph`]: the data-level twin of
+/// the `modtrans-lint` source pass (see *Static guarantees* in the crate
+/// docs). Checks, in order:
+///
+/// 1. **Slab sync** — the SoA duration/resource slabs mirror the task
+///    records exactly (same length, same values).
+/// 2. **CSR well-formedness** — every task's dependency range is
+///    contiguous in the shared pool (no gaps, no overlap, no orphaned
+///    tail entries) and in bounds.
+/// 3. **Id ranges** — every resource id is `< num_resources` and every
+///    dependency id names an existing task.
+/// 4. **Acyclicity** — Kahn's algorithm over the dependency relation; a
+///    self-dependency counts as a cycle.
+/// 5. **Creation order** — dependencies point strictly backward, the
+///    invariant every builder in [`crate::sim::training`] maintains and
+///    the event loop's seeding logic relies on.
+///
+/// This is a cold-path diagnostic (it allocates freely); the engine's own
+/// `run_into` keeps only the cheap range checks on its hot path.
+pub fn verify_graph(g: &TaskGraph, num_resources: usize) -> Result<()> {
+    let n = g.tasks.len();
+    if g.durs.len() != n || g.ress.len() != n {
+        return Err(Error::verify(format!(
+            "task graph slabs out of sync: {n} tasks, {} duration slots, {} resource slots",
+            g.durs.len(),
+            g.ress.len()
+        )));
+    }
+    let pool = g.dep_pool.len();
+    let mut cursor = 0usize;
+    for (id, t) in g.tasks.iter().enumerate() {
+        let start = t.deps_start as usize;
+        let len = t.deps_len as usize;
+        let end = match start.checked_add(len) {
+            Some(end) if start == cursor && end <= pool => end,
+            _ => {
+                return Err(Error::verify(format!(
+                    "task {id}: dep range {start}+{len} is not contiguous in the \
+                     {pool}-entry pool (cursor at {cursor})"
+                )));
+            }
+        };
+        cursor = end;
+        if g.durs[id] != t.duration_ns || g.ress[id] != t.resource {
+            return Err(Error::verify(format!(
+                "task {id}: SoA slab diverges from the task record"
+            )));
+        }
+        if t.resource >= num_resources {
+            return Err(Error::verify(format!(
+                "task {id}: resource id {} out of range ({num_resources} registered)",
+                t.resource
+            )));
+        }
+        for &d in &g.dep_pool[start..end] {
+            if d >= n {
+                return Err(Error::verify(format!(
+                    "task {id}: dependency {d} out of range ({n} tasks)"
+                )));
+            }
+        }
+    }
+    if cursor != pool {
+        return Err(Error::verify(format!(
+            "{} orphaned dep-pool entries after the last task",
+            pool - cursor
+        )));
+    }
+
+    // Kahn's algorithm: peel zero-pending tasks until none remain. Runs
+    // before the creation-order check so a genuine cycle reports as a
+    // cycle, not as its incidental forward edge.
+    let mut pending: Vec<usize> = g.tasks.iter().map(|t| t.deps_len as usize).collect();
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for id in 0..n {
+        for &d in g.deps_of(id) {
+            dependents[d].push(id);
+        }
+    }
+    let mut ready: Vec<TaskId> = (0..n).filter(|&id| pending[id] == 0).collect();
+    let mut processed = 0usize;
+    while let Some(id) = ready.pop() {
+        processed += 1;
+        for &dep in &dependents[id] {
+            pending[dep] -= 1;
+            if pending[dep] == 0 {
+                ready.push(dep);
+            }
+        }
+    }
+    if processed != n {
+        let stuck = (0..n).find(|&id| pending[id] != 0).unwrap_or(0);
+        return Err(Error::verify(format!(
+            "dependency cycle involving task {stuck} ({processed}/{n} tasks orderable)"
+        )));
+    }
+
+    for id in 0..n {
+        for &d in g.deps_of(id) {
+            if d >= id {
+                return Err(Error::verify(format!(
+                    "task {id}: forward dependency on task {d} \
+                     (builders emit creation-ordered graphs)"
+                )));
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -756,5 +880,53 @@ mod tests {
         let b = g.add(tag(0), 0, 1, &[]);
         assert_eq!(b, 0);
         assert!(g.deps_of(b).is_empty());
+    }
+
+    #[test]
+    fn verify_graph_accepts_well_formed_graphs() {
+        let mut g = TaskGraph::new();
+        let a = g.add(tag(0), 0, 10, &[]);
+        let b = g.add(tag(1), 1, 20, &[a]);
+        g.add(tag(2), 0, 1, &[a, b]);
+        assert!(verify_graph(&g, 2).is_ok());
+        assert_eq!(g.num_deps(), 3);
+        g.clear();
+        assert!(verify_graph(&g, 0).is_ok());
+    }
+
+    #[test]
+    fn verify_graph_rejects_out_of_range_ids() {
+        let mut g = TaskGraph::new();
+        g.add(tag(0), 5, 1, &[]);
+        let err = verify_graph(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("resource id 5 out of range"), "{err}");
+
+        let mut g = TaskGraph::new();
+        g.add(tag(0), 0, 1, &[10]);
+        let err = verify_graph(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("dependency 10 out of range"), "{err}");
+    }
+
+    #[test]
+    fn verify_graph_rejects_cycles_and_forward_deps() {
+        // a → b → a: a genuine cycle reports as a cycle...
+        let mut g = TaskGraph::new();
+        let a = g.add(tag(0), 0, 1, &[1]);
+        g.add(tag(1), 0, 1, &[a]);
+        let err = verify_graph(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("dependency cycle"), "{err}");
+
+        // ...a self-dependency counts as one...
+        let mut g = TaskGraph::new();
+        g.add(tag(0), 0, 1, &[0]);
+        let err = verify_graph(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("dependency cycle"), "{err}");
+
+        // ...and an acyclic forward edge reports as an ordering defect.
+        let mut g = TaskGraph::new();
+        g.add(tag(0), 0, 1, &[1]);
+        g.add(tag(1), 0, 1, &[]);
+        let err = verify_graph(&g, 1).unwrap_err().to_string();
+        assert!(err.contains("forward dependency on task 1"), "{err}");
     }
 }

@@ -30,14 +30,14 @@ pub mod tag;
 pub mod training;
 
 pub use collectives::{collective_ns, ChunkCfg};
-pub use engine::{Engine, Policy, RunScratch, Schedule, TaskGraph};
+pub use engine::{verify_graph, Engine, Policy, RunScratch, Schedule, TaskGraph};
 pub use network::{NetDim, Network, TopologyKind};
 pub use queue::CalendarQueue;
 pub use system::{CommRouter, SystemConfig};
 pub use tag::{TagComm, TagPhase, TaskTag};
 pub use training::{
-    partition_compute_costs, simulate, simulate_with, LayerBreakdown, PipelineSchedule, SimConfig,
-    SimReport, SimScratch,
+    partition_compute_costs, simulate, simulate_with, verify_workload, GraphCheck, LayerBreakdown,
+    PipelineSchedule, SimConfig, SimReport, SimScratch,
 };
 
 #[cfg(test)]

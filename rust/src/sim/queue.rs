@@ -128,6 +128,7 @@ impl CalendarQueue {
     /// bucket width is kept too: repeat runs at the same timescale skip
     /// the first re-adaptation, and a changed timescale re-adapts on
     /// the first rotation anyway.
+    // lint: hot-path
     pub fn clear(&mut self) {
         for b in &mut self.buckets {
             b.clear();
@@ -143,6 +144,7 @@ impl CalendarQueue {
     /// Schedule `(time, seq, task)`. `time` must be `>= ` the last
     /// popped timestamp (the DES monotonicity contract — a completion
     /// can only be scheduled at or after *now*).
+    // lint: hot-path
     pub fn push(&mut self, time: u64, seq: u64, task: TaskId) {
         debug_assert!(
             time >= self.floor,
@@ -164,6 +166,7 @@ impl CalendarQueue {
 
     /// Pop the single minimum event by `(time, seq)`. Used by the
     /// differential tests; the engine uses [`CalendarQueue::pop_batch_into`].
+    // lint: hot-path
     pub fn pop(&mut self) -> Option<Event> {
         let slot = self.min_slot()?;
         let b = &mut self.buckets[slot];
@@ -181,6 +184,7 @@ impl CalendarQueue {
     /// events), clearing `out` first. Returns that timestamp, or `None`
     /// when the queue is empty. One bucket operation serves the whole
     /// completion wave.
+    // lint: hot-path
     pub fn pop_batch_into(&mut self, out: &mut Vec<TaskId>) -> Option<u64> {
         out.clear();
         let slot = self.min_slot()?;
@@ -199,6 +203,7 @@ impl CalendarQueue {
     /// Locate (and lazily sort) the slot holding the global minimum.
     /// Rotates the wheel first when every pending event sits in
     /// overflow.
+    // lint: hot-path
     fn min_slot(&mut self) -> Option<usize> {
         if self.len == 0 {
             return None;
@@ -220,6 +225,7 @@ impl CalendarQueue {
     /// overflow event into the (empty) wheel. Called only when
     /// `occupied == 0` and `overflow` is non-empty, so re-bucketing
     /// never has to merge with live slots.
+    // lint: hot-path
     fn rotate(&mut self) {
         debug_assert!(self.occupied == 0 && !self.overflow.is_empty());
         let mut ov = std::mem::take(&mut self.overflow);

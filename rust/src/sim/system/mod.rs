@@ -68,6 +68,7 @@ impl<'a> CommRouter<'a> {
     /// with a [`TagComm`] annotation. `prefer_scale_up` pins
     /// single-dimension collectives (activations) to dim 0; otherwise
     /// weight-grad traffic uses the hierarchical all-dim route.
+    // lint: hot-path
     pub fn issue(
         &self,
         g: &mut TaskGraph,
@@ -133,6 +134,7 @@ impl<'a> CommRouter<'a> {
     }
 
     /// Point-to-point stage-boundary transfer on the outermost dimension.
+    // lint: hot-path
     pub fn p2p(
         &self,
         g: &mut TaskGraph,

@@ -290,6 +290,7 @@ pub fn build_iteration_graph(
 
 /// [`build_iteration_graph`] with caller-owned temporaries: allocation-
 /// free once the buffers are warm.
+// lint: hot-path
 fn build_iteration_graph_into(
     workload: &Workload,
     iterations: usize,
@@ -417,6 +418,7 @@ pub fn build_pipeline_graph(
 
 /// [`build_pipeline_graph`] with caller-owned temporaries: allocation-
 /// free once the buffers are warm.
+// lint: hot-path
 fn build_pipeline_graph_into(
     workload: &Workload,
     cfg: &SimConfig,
@@ -538,6 +540,77 @@ fn build_pipeline_graph_into(
     }
 }
 
+/// Shape summary returned by [`verify_workload`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphCheck {
+    /// Tasks in the verified graph.
+    pub tasks: usize,
+    /// Total dependency-pool entries.
+    pub deps: usize,
+    /// Resources registered (compute streams + network dimensions).
+    pub resources: usize,
+}
+
+/// Build the task graph for `workload` under `cfg` exactly as
+/// [`simulate_with`] would — same resources, same builder, same router —
+/// then run [`super::engine::verify_graph`] over it instead of executing
+/// it. This is the data-level leg of `modtrans check`: it proves the
+/// schedule builders uphold the graph invariants for a concrete scenario
+/// without paying for the event loop.
+pub fn verify_workload(workload: &Workload, cfg: &SimConfig) -> Result<GraphCheck> {
+    cfg.network.validate()?;
+    if workload.layers.is_empty() {
+        return Err(Error::sim("workload has no layers"));
+    }
+    let mut scratch = SimScratch::default();
+    match workload.parallelism {
+        Parallelism::Pipeline => {
+            let stages = cfg.stages.clamp(1, workload.layers.len());
+            if cfg.microbatches == 0 {
+                return Err(Error::sim("pipeline needs >=1 microbatch"));
+            }
+            let bounds = partition_by_compute(workload, stages);
+            for _ in 0..stages {
+                scratch.stage_res.push(scratch.engine.add_resource(Policy::Fifo));
+            }
+            for _ in &cfg.network.dims {
+                scratch.dim_res.push(scratch.engine.add_resource(cfg.system.scheduling));
+            }
+            let router = CommRouter::new(&cfg.network, &scratch.dim_res, cfg.system.chunks);
+            build_pipeline_graph_into(
+                workload,
+                cfg,
+                &bounds,
+                &scratch.stage_res,
+                &router,
+                &mut scratch.graph,
+                &mut scratch.pipe,
+            );
+        }
+        _ => {
+            let cpu = scratch.engine.add_resource(Policy::Fifo);
+            for _ in &cfg.network.dims {
+                scratch.dim_res.push(scratch.engine.add_resource(cfg.system.scheduling));
+            }
+            let router = CommRouter::new(&cfg.network, &scratch.dim_res, cfg.system.chunks);
+            build_iteration_graph_into(
+                workload,
+                cfg.iterations,
+                cpu,
+                &router,
+                &mut scratch.graph,
+                &mut scratch.flat,
+            );
+        }
+    }
+    super::engine::verify_graph(&scratch.graph, scratch.engine.num_resources())?;
+    Ok(GraphCheck {
+        tasks: scratch.graph.len(),
+        deps: scratch.graph.num_deps(),
+        resources: scratch.engine.num_resources(),
+    })
+}
+
 /// Contiguous partition of layers into `stages` groups with balanced
 /// forward compute (greedy prefix split).
 pub fn partition_by_compute(workload: &Workload, stages: usize) -> Vec<usize> {
@@ -570,7 +643,7 @@ pub fn partition_compute_costs(
     // The greedy split can come up short when compute is concentrated in
     // the tail; force the remaining boundaries so every stage is nonempty.
     while bounds.len() < stages {
-        let last = *bounds.last().unwrap();
+        let last = *bounds.last().unwrap_or(&0);
         // Distribute remaining layers evenly over remaining stages.
         let remaining_stages = stages + 1 - bounds.len();
         let step = ((n - last) / remaining_stages).max(1);
@@ -760,6 +833,30 @@ mod tests {
     fn empty_workload_is_error() {
         let w = Workload { parallelism: Parallelism::Data, layers: vec![] };
         assert!(simulate(&w, &cfg_ring(4)).is_err());
+        assert!(verify_workload(&w, &cfg_ring(4)).is_err());
+    }
+
+    #[test]
+    fn verify_workload_matches_simulated_graph_shape() {
+        // Flat: the verified graph is the one simulate_with would run.
+        let dp = mk_workload(Parallelism::Data, 8, 20_000, 2 << 20);
+        let cfg = cfg_ring(8);
+        let check = verify_workload(&dp, &cfg).unwrap();
+        let r = simulate(&dp, &cfg).unwrap();
+        assert_eq!(check.tasks, r.events);
+        assert!(check.deps > 0);
+        assert_eq!(check.resources, 1 + cfg.network.dims.len());
+
+        // Pipeline: stage resources replace the single compute stream.
+        let mut pp = mk_workload(Parallelism::Data, 12, 30_000, 0);
+        pp.parallelism = Parallelism::Pipeline;
+        let mut cfg = cfg_ring(4);
+        cfg.stages = 4;
+        cfg.microbatches = 4;
+        let check = verify_workload(&pp, &cfg).unwrap();
+        let r = simulate(&pp, &cfg).unwrap();
+        assert_eq!(check.tasks, r.events);
+        assert_eq!(check.resources, 4 + cfg.network.dims.len());
     }
 
     #[test]

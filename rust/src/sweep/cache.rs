@@ -306,7 +306,47 @@ fn load_entry(dir: &Path, key: &CacheKey) -> Option<ModelIR> {
     if ir.batch() != key.batch || !ir.compute_annotated() {
         return None;
     }
+    // Load-boundary gate: `from_et_json` already verified the IR, but
+    // the disk tier's contract is *never trust an envelope*, so the
+    // semantic verifier runs here explicitly too — if the reader ever
+    // grows a lenient mode, a bad envelope still becomes a miss, not a
+    // trusted IR.
+    crate::ir::verify(&ir).ok()?;
     Some(ir)
+}
+
+/// Verify one on-disk document for `modtrans check`: either a
+/// `modtrans-ir-cache/v1` envelope (the `--cache-dir` disk tier's form)
+/// or a bare `modtrans-et-json/v2` trace. Runs the full reader +
+/// semantic-verifier stack — exactly what a cache load trusts — and
+/// returns the embedded model name on success.
+pub fn verify_envelope_file(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = crate::json::parse(&text)?;
+    let schema = doc.get("schema").and_then(Value::as_str).unwrap_or("");
+    let ir = if schema == IR_CACHE_SCHEMA {
+        let inner = doc
+            .get("ir")
+            .ok_or_else(|| Error::verify("cache envelope has no 'ir' document"))?;
+        let ir = frontend::from_et_json(inner)?;
+        let key_batch = doc
+            .get("key")
+            .and_then(|k| k.get("batch"))
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::verify("cache envelope has no key.batch"))?;
+        if key_batch != ir.batch() as f64 {
+            return Err(Error::verify(format!(
+                "cache envelope key.batch {key_batch} disagrees with the embedded IR's batch {}",
+                ir.batch()
+            )));
+        }
+        ir
+    } else {
+        // Bare et-json document; from_et_json rejects unknown schemas.
+        frontend::from_et_json(&doc)?
+    };
+    crate::ir::verify(&ir)?;
+    Ok(ir.model_name().to_string())
 }
 
 /// Spill one compute-annotated IR to the disk tier: an envelope stamping

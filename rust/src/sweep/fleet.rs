@@ -680,6 +680,7 @@ fn fleet_body(
             let exit_code = exited.and_then(|st| st.code());
             let slot = &mut slots[si];
             slot.exit_code = exit_code;
+            // lint: allow(no-panic) — the failure arm is only reachable for slots with a lease
             let mut run = slot.current.take().expect("failing slot had a running lease");
             run.failures += 1;
             if run.failures > opts.retries {

@@ -82,7 +82,7 @@ pub mod pool;
 pub mod report;
 
 pub use bound::{scenario_bound_ns, BoundMemo};
-pub use cache::{CacheKey, WorkloadCache};
+pub use cache::{verify_envelope_file, CacheKey, WorkloadCache};
 pub use fleet::{run_fleet, FleetOpts, FleetReport};
 pub use journal::Journal;
 pub use report::{ScenarioResult, ShardStatus, StreamingMerge, SweepReport};

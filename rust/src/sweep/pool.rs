@@ -83,6 +83,7 @@ where
                 loop {
                     // Hold the lock only while pulling the next index,
                     // never while running the job.
+                    // lint: allow(no-panic) — a poisoned queue means a worker already panicked
                     let next = { job_rx.lock().expect("job queue poisoned").recv() };
                     let Ok(i) = next else { break };
                     if res_tx.send((i, f(&mut scratch, i))).is_err() {

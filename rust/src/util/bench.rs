@@ -51,7 +51,7 @@ impl Stats {
             0.0
         };
         let mut sorted = samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Stats {
             name: name.to_string(),
             n,
@@ -163,6 +163,7 @@ impl BenchReport {
     pub fn run<F: FnMut(usize)>(&mut self, bench: &Bench, label: &str, f: F) -> &Stats {
         let s = bench.run(label, f);
         self.series.push(s);
+        // lint: allow(no-panic) — the element was pushed on the previous line
         self.series.last().expect("series just pushed")
     }
 

@@ -17,6 +17,7 @@ pub fn build(depth: usize, opts: ZooOpts) -> Model {
         50 => build_bottleneck(opts),
         18 => build_basic(&[2, 2, 2, 2], "resnet18", opts),
         34 => build_basic(&[3, 4, 6, 3], "resnet34", opts),
+        // lint: allow(no-panic) — closed depth table; zoo::get validates the name first
         _ => panic!("unsupported ResNet depth {depth}"),
     }
 }

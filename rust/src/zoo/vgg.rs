@@ -22,6 +22,7 @@ fn plan(depth: usize) -> &'static [i64] {
             64, 64, 0, 128, 128, 0, 256, 256, 256, 256, 0, 512, 512, 512, 512, 0, 512, 512,
             512, 512, 0,
         ],
+        // lint: allow(no-panic) — closed depth table; zoo::get validates the name first
         _ => panic!("unsupported VGG depth {depth}"),
     }
 }

@@ -1,0 +1,262 @@
+//! Integration tests for the `modtrans-lint` static analysis pass.
+//!
+//! Drives the fixture corpus in `tests/lint_fixtures/` — one
+//! deliberately-bad file and one clean twin per rule family — through
+//! [`modtrans::analysis::lint_source`] under synthetic repo-relative
+//! paths chosen to land in each rule's scope, then asserts the whole
+//! real tree is lint-clean via [`modtrans::analysis::lint_tree`] with
+//! the checked-in manifest.
+//!
+//! The fixtures are read as *text* (they are never compiled), so they
+//! are free to contain `panic!`, `todo!()` and unclosed logic that
+//! would not build.
+
+use modtrans::analysis::rules::parse_manifest;
+use modtrans::analysis::{lint_source, lint_tree, Finding, LintReport, Manifest};
+use std::path::Path;
+
+/// Repo root: the crate lives at `<root>/rust`.
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate directory has a parent")
+}
+
+/// The real checked-in manifest — the same one CI lints with.
+fn manifest() -> Manifest {
+    let path = repo_root().join("analysis").join("rules.toml");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    parse_manifest(&text).expect("checked-in manifest parses")
+}
+
+/// Load a fixture file from `tests/lint_fixtures/` as text.
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// Lint one fixture as if it lived at `rel` in the repo.
+fn lint_fixture(name: &str, rel: &str, manifest: &Manifest) -> LintReport {
+    lint_source(rel, &fixture(name), manifest)
+        .unwrap_or_else(|e| panic!("lint {name} as {rel}: {e}"))
+}
+
+/// The findings for one rule, in file order.
+fn of_rule<'r>(report: &'r LintReport, rule: &str) -> Vec<&'r Finding> {
+    report.findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+fn patterns(findings: &[&Finding]) -> Vec<String> {
+    findings.iter().map(|f| f.pattern.clone()).collect()
+}
+
+#[test]
+fn checked_in_manifest_parses_with_all_rules() {
+    let m = manifest();
+    for rule in [
+        "no-string-alloc",
+        "no-alloc",
+        "no-panic",
+        "index-fallible",
+        "no-label-string",
+        "map-iter",
+        "wall-clock",
+        "float-cmp",
+    ] {
+        assert!(m.has_rule(rule), "manifest is missing rule `{rule}`");
+    }
+}
+
+#[test]
+fn alloc_fixture_fires_no_alloc_and_no_string_alloc() {
+    let m = manifest();
+    // `rust/src/ir/passes.rs` is in the no-string-alloc path list, so
+    // the hot-path fixture trips both the per-function and the
+    // per-file allocation rules.
+    let report = lint_fixture("alloc_bad.rs", "rust/src/ir/passes.rs", &m);
+    let no_alloc = of_rule(&report, "no-alloc");
+    assert_eq!(
+        patterns(&no_alloc),
+        ["format!", "to_string(", "Vec::new", "Box::new"],
+        "hot-path allocations: {:#?}",
+        report.findings
+    );
+    let string_alloc = of_rule(&report, "no-string-alloc");
+    assert_eq!(patterns(&string_alloc), ["format!", "to_string("]);
+    assert_eq!(report.findings.len(), no_alloc.len() + string_alloc.len());
+
+    let clean = lint_fixture("alloc_clean.rs", "rust/src/ir/passes.rs", &m);
+    assert!(
+        clean.findings.is_empty(),
+        "clean twin must not fire (allocation outside the hot span, and \
+         pattern text in strings/comments, are not findings): {:#?}",
+        clean.findings
+    );
+}
+
+#[test]
+fn panic_fixture_fires_no_panic_only_outside_tests_and_allows() {
+    let m = manifest();
+    let report = lint_fixture("panic_bad.rs", "rust/src/ir/frontend.rs", &m);
+    let panics = of_rule(&report, "no-panic");
+    assert_eq!(
+        patterns(&panics),
+        [".unwrap()", ".expect(", "panic!(", "todo!("],
+        "findings: {:#?}",
+        report.findings
+    );
+    assert_eq!(report.findings.len(), panics.len());
+
+    let clean = lint_fixture("panic_clean.rs", "rust/src/ir/frontend.rs", &m);
+    assert!(
+        clean.findings.is_empty(),
+        "`?`/unwrap_or combinators, an allow-marked expect, string \
+         mentions, and #[cfg(test)] panics must all pass: {:#?}",
+        clean.findings
+    );
+    assert_eq!(clean.suppressed, 1, "the justified allow marker counts as a suppression");
+}
+
+#[test]
+fn determinism_fixture_fires_map_iter_wall_clock_and_float_cmp() {
+    let m = manifest();
+    let report = lint_fixture("determinism_bad.rs", "rust/src/ir/rank.rs", &m);
+    assert_eq!(patterns(&of_rule(&report, "map-iter")), ["HashMap", "HashSet"]);
+    assert_eq!(patterns(&of_rule(&report, "wall-clock")), ["Instant::now"]);
+    assert_eq!(patterns(&of_rule(&report, "float-cmp")), [".partial_cmp("]);
+    assert_eq!(report.findings.len(), 4, "findings: {:#?}", report.findings);
+
+    let clean = lint_fixture("determinism_clean.rs", "rust/src/ir/rank.rs", &m);
+    assert!(clean.findings.is_empty(), "BTreeMap + total_cmp twin: {:#?}", clean.findings);
+}
+
+#[test]
+fn wall_clock_respects_path_excludes() {
+    let m = manifest();
+    // The same hazard is legitimate in the fleet scheduler, which the
+    // manifest carves out via `exclude`.
+    let src = "pub fn now_ns() -> u128 {\n    std::time::Instant::now().elapsed().as_nanos()\n}\n";
+    let in_scope = lint_source("rust/src/sweep/mod.rs", src, &m).expect("lint");
+    assert_eq!(patterns(&of_rule(&in_scope, "wall-clock")), ["Instant::now"]);
+    let excluded = lint_source("rust/src/sweep/fleet.rs", src, &m).expect("lint");
+    assert!(of_rule(&excluded, "wall-clock").is_empty());
+}
+
+#[test]
+fn index_fixture_fires_only_inside_fallible_spans() {
+    let m = manifest();
+    let report = lint_fixture("index_bad.rs", "rust/src/translator/mod.rs", &m);
+    let hits = of_rule(&report, "index-fallible");
+    assert_eq!(patterns(&hits), ["indexing", "indexing"], "findings: {:#?}", report.findings);
+    assert_eq!(report.findings.len(), 2);
+
+    let clean = lint_fixture("index_clean.rs", "rust/src/translator/mod.rs", &m);
+    assert!(
+        clean.findings.is_empty(),
+        "get()/first() in the span, indexing outside it, attributes and \
+         array types must all pass: {:#?}",
+        clean.findings
+    );
+}
+
+#[test]
+fn label_fixture_fires_inside_test_regions_too() {
+    let m = manifest();
+    let report = lint_fixture("label_bad.rs", "rust/src/sim/engine.rs", &m);
+    let hits = of_rule(&report, "no-label-string");
+    // include-tests = true: the #[cfg(test)] resurrection is the second
+    // finding.
+    assert_eq!(hits.len(), 2, "findings: {:#?}", report.findings);
+    assert_eq!(report.findings.len(), 2);
+
+    let clean = lint_fixture("label_clean.rs", "rust/src/sim/engine.rs", &m);
+    assert!(clean.findings.is_empty(), "{:#?}", clean.findings);
+}
+
+#[test]
+fn retired_grep_guard_is_a_subset_of_no_string_alloc() {
+    let m = manifest();
+    // One line per pattern the retired `hot-path-alloc-guard` grepped
+    // for, linted under each of the five files it scanned: every old
+    // hit is still a finding, so deleting the grep loses no coverage.
+    let src = "pub fn build() {\n\
+               let a = format!(\"x\");\n\
+               let b = \"y\".to_string();\n\
+               let c = \"z\".to_owned();\n\
+               let d = String::new();\n\
+               let e = String::from(\"w\");\n\
+               let f = String::with_capacity(8);\n\
+               }\n";
+    for rel in [
+        "rust/src/sim/training/mod.rs",
+        "rust/src/sim/system/mod.rs",
+        "rust/src/sim/queue.rs",
+        "rust/src/ir/passes.rs",
+        "rust/src/ir/emit/sim.rs",
+    ] {
+        let report = lint_source(rel, src, &m).expect("lint");
+        assert_eq!(
+            patterns(&of_rule(&report, "no-string-alloc")),
+            [
+                "format!",
+                "to_string(",
+                "to_owned(",
+                "String::new",
+                "String::from",
+                "String::with_capacity",
+            ],
+            "guard parity broken at {rel}"
+        );
+    }
+}
+
+#[test]
+fn malformed_markers_are_hard_errors() {
+    let m = manifest();
+    let no_reason = lint_source("rust/src/ir/x.rs", "// lint: allow(no-panic)\nlet a = 1;\n", &m);
+    let msg = no_reason.expect_err("allow without a reason").to_string();
+    assert!(msg.contains("needs a reason"), "got: {msg}");
+
+    let unknown_kind = lint_source("rust/src/ir/x.rs", "// lint: hotpath\nfn f() {}\n", &m);
+    let msg = unknown_kind.expect_err("unknown marker kind").to_string();
+    assert!(msg.contains("unknown lint marker"), "got: {msg}");
+
+    let unknown_rule = lint_source(
+        "rust/src/ir/x.rs",
+        "let a = 1; // lint: allow(not-a-rule) — because\n",
+        &m,
+    );
+    let msg = unknown_rule.expect_err("allow naming an unknown rule").to_string();
+    assert!(msg.contains("not-a-rule"), "got: {msg}");
+}
+
+#[test]
+fn findings_render_with_file_line_and_rule() {
+    let m = manifest();
+    let report = lint_fixture("label_bad.rs", "rust/src/sim/engine.rs", &m);
+    let first = &report.findings[0];
+    let rendered = first.to_string();
+    assert!(
+        rendered.starts_with("rust/src/sim/engine.rs:") && rendered.contains("[no-label-string]"),
+        "got: {rendered}"
+    );
+    assert!(first.line >= 1, "lines are 1-based");
+}
+
+#[test]
+fn real_tree_is_lint_clean() {
+    let m = manifest();
+    let report = lint_tree(repo_root(), &m).expect("lint the real tree");
+    assert!(report.files_scanned > 30, "only scanned {} files", report.files_scanned);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "the real tree must be lint-clean (this is what CI gates on):\n{}",
+        rendered.join("\n")
+    );
+    assert!(report.suppressed > 0, "the tree carries justified allow markers");
+}

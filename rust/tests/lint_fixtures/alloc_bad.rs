@@ -1,0 +1,14 @@
+//! Fixture: hot-path allocation violations (`no-alloc` and, when linted
+//! under a guarded path, `no-string-alloc`). Read as text by the
+//! `analysis_lint` test — never compiled.
+
+// lint: hot-path
+pub fn emit_row(out: &mut String, id: usize) {
+    let label = format!("row-{id}");
+    out.push_str(&label);
+    let owned = label.as_str().to_string();
+    let mut parts = Vec::new();
+    parts.push(owned);
+    let boxed = Box::new(parts);
+    drop(boxed);
+}

@@ -1,0 +1,16 @@
+//! Fixture: allocation-free hot path — the clean twin of
+//! `alloc_bad.rs`. Read as text by the `analysis_lint` test — never
+//! compiled.
+
+// lint: hot-path
+pub fn emit_row(out: &mut Vec<usize>, id: usize) {
+    out.push(id);
+    out.extend_from_slice(&[id, id]);
+}
+
+pub fn cold_setup() -> Vec<usize> {
+    // Allocation outside an annotated hot path is not a finding, and
+    // pattern text inside strings or comments never is: format!
+    let _doc = "format! and Box::new are fine in here";
+    Vec::with_capacity(64)
+}

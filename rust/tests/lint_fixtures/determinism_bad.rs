@@ -1,0 +1,14 @@
+//! Fixture: determinism hazards (`map-iter`, `wall-clock`,
+//! `float-cmp`). Read as text by the `analysis_lint` test — never
+//! compiled.
+
+use std::time::Instant;
+
+pub fn rank(scores: &std::collections::HashMap<String, f64>) -> Vec<f64> {
+    let started = Instant::now();
+    let mut seen = std::collections::HashSet::new();
+    let mut out: Vec<f64> = scores.values().copied().collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    seen.insert(started.elapsed().as_nanos());
+    out
+}

@@ -1,0 +1,9 @@
+//! Fixture: the deterministic twin of `determinism_bad.rs` — ordered
+//! containers, no wall-clock reads, total float order. Read as text by
+//! the `analysis_lint` test — never compiled.
+
+pub fn rank(scores: &std::collections::BTreeMap<String, f64>) -> Vec<f64> {
+    let mut out: Vec<f64> = scores.values().copied().collect();
+    out.sort_by(|a, b| a.total_cmp(b));
+    out
+}

@@ -1,0 +1,10 @@
+//! Fixture: indexing inside an annotated fallible path
+//! (`index-fallible`). Read as text by the `analysis_lint` test —
+//! never compiled.
+
+// lint: fallible-path
+pub fn head_pair(values: &[u32]) -> (u32, u32) {
+    let first = values[0];
+    let second = values[1];
+    (first, second)
+}

@@ -1,0 +1,21 @@
+//! Fixture: the clean twin of `index_bad.rs` — fallible accessors in
+//! the annotated span, indexing only outside it. Read as text by the
+//! `analysis_lint` test — never compiled.
+
+// lint: fallible-path
+pub fn head_pair(values: &[u32]) -> Option<(u32, u32)> {
+    let first = values.first()?;
+    let second = values.get(1)?;
+    Some((*first, *second))
+}
+
+pub fn hot_index(values: &[u32]) -> u32 {
+    // Indexing outside a fallible-path span is not flagged; nor are
+    // attributes or array types.
+    values[0]
+}
+
+#[derive(Default)]
+pub struct Grid {
+    pub cells: [u32; 4],
+}

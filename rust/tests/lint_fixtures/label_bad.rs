@@ -1,0 +1,15 @@
+//! Fixture: label strings on tasks (`no-label-string`, which applies
+//! to tests too). Read as text by the `analysis_lint` test — never
+//! compiled.
+
+pub struct Task {
+    pub label: String,
+    pub duration_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    struct Probe {
+        label: String,
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: the clean twin of `label_bad.rs` — tasks carry a compact
+//! tag instead of a label string. Read as text by the `analysis_lint`
+//! test — never compiled.
+
+pub struct Task {
+    pub tag: u64,
+    pub duration_ns: u64,
+}

@@ -1,0 +1,15 @@
+//! Fixture: panics in library code (`no-panic`). Read as text by the
+//! `analysis_lint` test — never compiled.
+
+pub fn read_header(bytes: &[u8]) -> u32 {
+    let first = bytes.first().unwrap();
+    let second = bytes.get(1).expect("short header");
+    if *first == 0 {
+        panic!("zero magic");
+    }
+    u32::from(*first) + u32::from(*second)
+}
+
+pub fn unfinished() {
+    todo!()
+}

@@ -1,0 +1,27 @@
+//! Fixture: the clean twin of `panic_bad.rs` — fallible combinators,
+//! a justified allow marker, and test-only panics. Read as text by the
+//! `analysis_lint` test — never compiled.
+
+pub fn read_header(bytes: &[u8]) -> Option<u32> {
+    let first = bytes.first()?;
+    let second = bytes.get(1).copied().unwrap_or(0);
+    Some(u32::from(*first) + u32::from(second))
+}
+
+pub fn guarded(values: &[u32]) -> u32 {
+    // lint: allow(no-panic) — the caller checked is_empty() first
+    values.iter().max().copied().expect("nonempty slice")
+}
+
+pub fn describe() -> &'static str {
+    "strings mentioning .unwrap() or panic!( are not findings"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests for the semantic verifiers behind `modtrans check`:
+//! [`modtrans::ir::verify`] over every zoo model × strategy,
+//! [`modtrans::sim::verify_graph`] / [`modtrans::sim::verify_workload`]
+//! over corrupted task graphs, and the untrusted-envelope load path of
+//! the sweep's disk cache.
+
+use modtrans::compute::SystolicCompute;
+use modtrans::ir::{emit, frontend, passes};
+use modtrans::sim::{verify_graph, verify_workload, SimConfig, TaskGraph, TaskTag};
+use modtrans::sweep::{verify_envelope_file, CacheKey, WorkloadCache};
+use modtrans::translator::TranslateOpts;
+use modtrans::workload::Parallelism;
+use modtrans::zoo;
+use std::path::PathBuf;
+
+const STRATEGIES: [Parallelism; 5] = [
+    Parallelism::Data,
+    Parallelism::Model,
+    Parallelism::HybridDataModel,
+    Parallelism::HybridModelData,
+    Parallelism::Pipeline,
+];
+
+/// The acceptance sweep: every zoo model, annotated under every
+/// strategy, passes the IR verifier at each pipeline boundary and
+/// produces a task graph the graph verifier accepts.
+#[test]
+fn every_zoo_model_verifies_under_every_strategy() {
+    let batch = 8;
+    let compute = SystolicCompute::new(batch);
+    let cfg = SimConfig::default();
+    for name in zoo::MODELS {
+        let mut ir = frontend::from_zoo(name, batch)
+            .unwrap_or_else(|e| panic!("{name}: extract: {e}"));
+        modtrans::ir::verify(&ir).unwrap_or_else(|e| panic!("{name}: post-extract: {e}"));
+        passes::annotate_compute(&mut ir, &compute);
+        modtrans::ir::verify(&ir).unwrap_or_else(|e| panic!("{name}: post-compute: {e}"));
+        for p in STRATEGIES {
+            let mut annotated = ir.clone();
+            passes::annotate_comm(
+                &mut annotated,
+                TranslateOpts { parallelism: p, ..Default::default() },
+            );
+            modtrans::ir::verify(&annotated)
+                .unwrap_or_else(|e| panic!("{name}/{p:?}: post-comm: {e}"));
+            let w = emit::to_sim_workload(&annotated)
+                .unwrap_or_else(|e| panic!("{name}/{p:?}: emit: {e}"));
+            let check = verify_workload(&w, &cfg)
+                .unwrap_or_else(|e| panic!("{name}/{p:?}: graph: {e}"));
+            assert!(check.tasks > 0, "{name}/{p:?}: empty graph");
+            assert!(check.resources > 0, "{name}/{p:?}: no resources");
+        }
+    }
+}
+
+fn tag(i: usize) -> TaskTag {
+    TaskTag::adhoc(i)
+}
+
+#[test]
+fn graph_verifier_pinpoints_each_corruption_class() {
+    // Out-of-range resource id.
+    let mut g = TaskGraph::new();
+    g.add(tag(0), 5, 1, &[]);
+    let e = verify_graph(&g, 1).expect_err("resource out of range").to_string();
+    assert!(e.contains("resource id 5 out of range"), "{e}");
+
+    // Out-of-range dependency id.
+    let mut g = TaskGraph::new();
+    g.add(tag(0), 0, 1, &[10]);
+    let e = verify_graph(&g, 1).expect_err("dep out of range").to_string();
+    assert!(e.contains("dependency 10 out of range"), "{e}");
+
+    // Self-dependency is a one-task cycle.
+    let mut g = TaskGraph::new();
+    g.add(tag(0), 0, 1, &[0]);
+    let e = verify_graph(&g, 1).expect_err("self dep").to_string();
+    assert!(e.contains("dependency cycle"), "{e}");
+
+    // A forward (but acyclic) dependency breaks creation order.
+    let mut g = TaskGraph::new();
+    g.add(tag(0), 0, 1, &[1]);
+    g.add(tag(1), 0, 1, &[]);
+    let e = verify_graph(&g, 1).expect_err("forward dep").to_string();
+    assert!(e.contains("forward dependency on task 1"), "{e}");
+
+    // And a well-formed diamond passes.
+    let mut g = TaskGraph::new();
+    g.add(tag(0), 0, 1, &[]);
+    g.add(tag(1), 0, 2, &[0]);
+    g.add(tag(2), 0, 3, &[0]);
+    g.add(tag(3), 0, 1, &[1, 2]);
+    verify_graph(&g, 1).expect("diamond graph is well-formed");
+}
+
+/// Tampering a serialized trace's parallelism from DATA to MODEL makes
+/// the recorded all-reduce collectives inadmissible — the reader's
+/// verify hook must refuse to construct the IR.
+#[test]
+fn tampered_et_json_parallelism_is_rejected_on_load() {
+    let batch = 4;
+    let mut ir = frontend::from_zoo("mlp", batch).expect("extract mlp");
+    passes::annotate_compute(&mut ir, &SystolicCompute::new(batch));
+    passes::annotate_comm(
+        &mut ir,
+        TranslateOpts { parallelism: Parallelism::Data, ..Default::default() },
+    );
+    let text = emit::et_json(&ir).expect("emit et-json").to_json_pretty();
+
+    // Untampered round-trip loads cleanly.
+    frontend::from_et_json_str(&text).expect("clean round-trip");
+
+    let tampered = text.replace("\"DATA\"", "\"MODEL\"");
+    assert_ne!(tampered, text, "fixture must actually change");
+    let e = frontend::from_et_json_str(&tampered).expect_err("tampered doc").to_string();
+    assert!(e.contains("not admissible under Model"), "{e}");
+}
+
+/// A scratch directory under the system temp dir, unique per test.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mt_verify_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// The disk cache validates envelopes instead of trusting them: a
+/// corrupted entry is a miss (re-translate), never a loaded IR.
+#[test]
+fn corrupted_cache_envelope_is_a_miss_not_a_trusted_ir() {
+    let dir = scratch_dir("cache");
+    let batch = 4;
+    let compute = SystolicCompute::new(batch);
+    let models = vec!["mlp".to_string()];
+
+    // Cold build spills one envelope; warm build loads it.
+    let cold = WorkloadCache::build_with(&models, batch, &compute, Some(&dir)).expect("cold");
+    assert_eq!((cold.translations(), cold.disk_loads()), (1, 0));
+    let warm = WorkloadCache::build_with(&models, batch, &compute, Some(&dir)).expect("warm");
+    assert_eq!((warm.translations(), warm.disk_loads()), (0, 1));
+
+    // `modtrans check --cache-dir` accepts the fresh entry.
+    let entry = dir.join(CacheKey::new("mlp", batch, &compute).file_name());
+    assert!(entry.is_file(), "envelope exists at {}", entry.display());
+    assert_eq!(verify_envelope_file(&entry).expect("fresh entry verifies"), "mlp");
+
+    // Corrupt the envelope (truncate mid-document): check rejects it...
+    let bytes = std::fs::read(&entry).expect("read envelope");
+    std::fs::write(&entry, &bytes[..bytes.len() / 2]).expect("truncate envelope");
+    assert!(verify_envelope_file(&entry).is_err(), "truncated envelope must not verify");
+
+    // ...and the cache treats it as a miss, re-translating and
+    // repairing the entry on disk.
+    let repaired = WorkloadCache::build_with(&models, batch, &compute, Some(&dir)).expect("repair");
+    assert_eq!((repaired.translations(), repaired.disk_loads()), (1, 0));
+    assert_eq!(verify_envelope_file(&entry).expect("repaired entry verifies"), "mlp");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `modtrans check` end-to-end through the CLI: a written trace file
+/// verifies, a tampered one fails with a nonzero error.
+#[test]
+fn check_verb_accepts_clean_and_rejects_tampered_traces() {
+    let dir = scratch_dir("check");
+    let batch = 4;
+    let mut ir = frontend::from_zoo("mlp", batch).expect("extract mlp");
+    passes::annotate_compute(&mut ir, &SystolicCompute::new(batch));
+    passes::annotate_comm(
+        &mut ir,
+        TranslateOpts { parallelism: Parallelism::Data, ..Default::default() },
+    );
+    let text = emit::et_json(&ir).expect("emit").to_json_pretty();
+    let clean = dir.join("mlp.et.json");
+    std::fs::write(&clean, &text).expect("write trace");
+    modtrans::cli::run(&["check".to_string(), clean.display().to_string()])
+        .expect("clean trace passes `modtrans check`");
+
+    let bad = dir.join("tampered.et.json");
+    std::fs::write(&bad, text.replace("\"DATA\"", "\"MODEL\"")).expect("write tampered");
+    assert!(
+        modtrans::cli::run(&["check".to_string(), bad.display().to_string()]).is_err(),
+        "tampered trace must fail `modtrans check`"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
