@@ -71,8 +71,12 @@ sweep-determinism: build
 	./target/release/modtrans sweep --threads 8 --top 5 -o sweep_top_t8.json
 	diff sweep_top_t1.json sweep_top_t8.json
 	python3 scripts/check_prune.py sweep_t1.json sweep_top_t1.json 5
+	./target/release/modtrans sweep mlp --topologies "ring,ring:2x300g@700ns/rail:2x50g@2us/switch:4x1g@5us+direct" --threads 1 -o sweep_nd1.json
+	./target/release/modtrans sweep mlp --topologies "ring,ring:2x300g@700ns/rail:2x50g@2us/switch:4x1g@5us+direct" --threads 8 -o sweep_nd8.json
+	diff sweep_nd1.json sweep_nd8.json
+	./target/release/modtrans check --network rust/configs/ndim_codesign.json --quiet
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
-	rm -f sweep_top_t1.json sweep_top_t8.json
+	rm -f sweep_top_t1.json sweep_top_t8.json sweep_nd1.json sweep_nd8.json
 	rm -rf ircache
 
 # The fleet acceptance check, mirroring CI's fleet-smoke job: a cold
@@ -123,7 +127,7 @@ check-ci-sync:
 clean:
 	$(CARGO) clean
 	rm -f sweep_t1.json sweep_t8.json sweep_p1.json sweep_p8.json shard1.json shard2.json merged.json cache_cold.json cache_warm.json
-	rm -f sweep_top_t1.json sweep_top_t8.json
+	rm -f sweep_top_t1.json sweep_top_t8.json sweep_nd1.json sweep_nd8.json
 	rm -f fleet_mono.json fleet_merged.json fleet_status.json warm_merged.json warm_status.json
 	rm -f resume_merged.json resume_status.json skew_mono.json skew_merged.json skew_status.json
 	rm -f check_trace.et.json

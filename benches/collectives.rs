@@ -28,8 +28,8 @@ fn main() {
         for mb in [1u64, 16, 256, 1024] {
             let mut row = vec![format!("{mb} MiB")];
             for kind in kinds {
-                let dim = NetDim { kind, npus: 64, bandwidth_gbps: 100.0, latency_ns: 500.0 };
-                row.push(human_time(collective_ns(comm, mb * MB, &dim) as f64 * 1e-9));
+                let dim = NetDim::new(kind, 64, 100.0, 500.0);
+                row.push(human_time(collective_ns(comm, mb * MB, dim.algo, &dim) as f64 * 1e-9));
             }
             t.row(row);
         }
@@ -41,8 +41,8 @@ fn main() {
     for n in [2usize, 8, 32, 128, 512] {
         let mut row = vec![n.to_string()];
         for kind in kinds {
-            let dim = NetDim { kind, npus: n, bandwidth_gbps: 100.0, latency_ns: 500.0 };
-            row.push(human_time(collective_ns(CommType::AllReduce, 64 * MB, &dim) as f64 * 1e-9));
+            let dim = NetDim::new(kind, n, 100.0, 500.0);
+            row.push(human_time(collective_ns(CommType::AllReduce, 64 * MB, dim.algo, &dim) as f64 * 1e-9));
         }
         t.row(row);
     }
@@ -103,10 +103,10 @@ fn main() {
     report.run(&bench, "collective_ns 4 topologies x 4 sizes x 1k evals", |_| {
         let mut acc = 0u64;
         for kind in kinds {
-            let dim = NetDim { kind, npus: 64, bandwidth_gbps: 100.0, latency_ns: 500.0 };
+            let dim = NetDim::new(kind, 64, 100.0, 500.0);
             for mb in [1u64, 16, 256, 1024] {
                 for _ in 0..1000 {
-                    acc = acc.wrapping_add(collective_ns(CommType::AllReduce, mb * MB, &dim));
+                    acc = acc.wrapping_add(collective_ns(CommType::AllReduce, mb * MB, dim.algo, &dim));
                 }
             }
         }

@@ -9,9 +9,10 @@
 //! Emits `BENCH_sweep_throughput.json` for the CI-tracked perf
 //! trajectory.
 
+use modtrans::sim::NetworkSpec;
 use modtrans::sweep::fleet::locate_binary;
 use modtrans::sweep::{
-    run_fleet, run_sweep, run_sweep_cached, CollectiveAlgo, FleetOpts, SweepConfig, SweepGrid,
+    run_fleet, run_sweep, run_sweep_cached, CommSchedule, FleetOpts, SweepConfig, SweepGrid,
 };
 use modtrans::util::bench::{black_box, Bench, BenchReport};
 
@@ -43,9 +44,9 @@ fn main() {
     // only the comm pass + allocation-free emit before simulating.
     let wide = SweepGrid {
         collectives: vec![
-            CollectiveAlgo::Direct,
-            CollectiveAlgo::Pipelined,
-            CollectiveAlgo::PipelinedLifo,
+            CommSchedule::Direct,
+            CommSchedule::Pipelined,
+            CommSchedule::PipelinedLifo,
         ],
         ..SweepGrid::default()
     };
@@ -70,6 +71,41 @@ fn main() {
     println!(
         "     ({} of {wide_n} simulated, {} skipped by the analytic bound)",
         r.scenarios_simulated, r.scenarios_pruned
+    );
+
+    // Per-dimension co-design series: hierarchical multi-dimension
+    // fabrics with explicit per-dimension collective algorithms — the
+    // axis the NetworkSpec grammar adds. Every scenario takes the
+    // hierarchical chunked route (RS → per-dim AR → AG) instead of the
+    // single-dimension fast path, and the top-4 companion shows the
+    // analytic bound staying admissible (and so still pruning) when the
+    // bound must route across dimensions like the simulator.
+    let codesign = SweepGrid {
+        networks: vec![
+            NetworkSpec::parse("ring:4x300g@700ns/switch:4x25g@5us").unwrap(),
+            NetworkSpec::parse("ring:4x300g@700ns/switch:4x25g@5us+direct").unwrap(),
+            NetworkSpec::parse("ring:4x300g@700ns/rail:2x50g@2us/switch:2x25g@5us+direct")
+                .unwrap(),
+        ],
+        ..SweepGrid::default()
+    };
+    let codesign_n = codesign.expand().len();
+    let cfg = SweepConfig { threads: 1, ..Default::default() };
+    let s = report.run(&bench, &format!("sweep_{codesign_n}_scenarios_codesign_1thread"), |_| {
+        black_box(run_sweep(&codesign, &cfg).unwrap());
+    });
+    println!(
+        "  -> {:.1} scenarios/s over the per-dimension co-design grid (1 thread)",
+        codesign_n as f64 / s.mean
+    );
+    let cfg = SweepConfig { threads: 1, top_k: Some(4), ..Default::default() };
+    let s =
+        report.run(&bench, &format!("sweep_{codesign_n}_scenarios_codesign_top4_1thread"), |_| {
+            black_box(run_sweep(&codesign, &cfg).unwrap());
+        });
+    println!(
+        "  -> {:.1} scenarios/s with top-4 pruning on the co-design grid",
+        codesign_n as f64 / s.mean
     );
 
     // Calendar-queue pair: the same exhaustive widened grid. The legacy
@@ -148,11 +184,11 @@ fn main() {
                     modtrans::workload::Parallelism::Data,
                     modtrans::workload::Parallelism::Model,
                 ],
-                topologies: vec![
-                    modtrans::sim::TopologyKind::Ring,
-                    modtrans::sim::TopologyKind::Switch,
+                networks: vec![
+                    NetworkSpec::from_kind(modtrans::sim::TopologyKind::Ring),
+                    NetworkSpec::from_kind(modtrans::sim::TopologyKind::Switch),
                 ],
-                collectives: vec![CollectiveAlgo::Pipelined],
+                collectives: vec![CommSchedule::Pipelined],
             };
             let skew_n = skewed.expand().len();
             let skew_dir =

@@ -12,8 +12,8 @@
 //! cargo run --release --example sweep_grid
 //! ```
 
-use modtrans::sim::TopologyKind;
-use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid};
+use modtrans::sim::{NetworkSpec, TopologyKind};
+use modtrans::sweep::{run_sweep, CommSchedule, SweepConfig, SweepGrid};
 use modtrans::util::human_time;
 use modtrans::workload::Parallelism;
 use std::time::Instant;
@@ -22,18 +22,24 @@ fn main() -> modtrans::Result<()> {
     let grid = SweepGrid {
         models: vec!["mlp".into(), "resnet18".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
-        collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
+        // Two bare legacy tokens next to a 2-dimension hierarchy with an
+        // explicit per-dimension algorithm — one network axis covers both.
+        networks: vec![
+            NetworkSpec::from_kind(TopologyKind::Ring),
+            NetworkSpec::from_kind(TopologyKind::Switch),
+            NetworkSpec::parse("ring:4x300g@700ns/switch:4x25g@5us+direct")?,
+        ],
+        collectives: vec![CommSchedule::Direct, CommSchedule::Pipelined],
     };
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let cfg = SweepConfig { threads, batch: 16, ..Default::default() };
 
     let scenarios = grid.expand().len();
     println!(
-        "sweeping {scenarios} scenarios ({} models x {} parallelisms x {} topologies x {} collectives) on {threads} threads",
+        "sweeping {scenarios} scenarios ({} models x {} parallelisms x {} networks x {} collectives) on {threads} threads",
         grid.models.len(),
         grid.parallelisms.len(),
-        grid.topologies.len(),
+        grid.networks.len(),
         grid.collectives.len(),
     );
 

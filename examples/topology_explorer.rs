@@ -11,34 +11,59 @@
 //! ```
 
 use modtrans::compute::SystolicCompute;
-use modtrans::sim::{collective_ns, simulate, NetDim, Network, SimConfig, TopologyKind};
+use modtrans::sim::{
+    collective_ns, simulate, CollectiveAlgo, NetDim, Network, SimConfig, TopologyKind,
+};
 use modtrans::translator::{extract, to_workload, TranslateOpts};
 use modtrans::util::human_time;
 use modtrans::util::table::Table;
 use modtrans::workload::{CommType, Parallelism};
 use modtrans::zoo::{self, WeightFill, ZooOpts};
 
-const KINDS: [TopologyKind; 4] = [
+const KINDS: [TopologyKind; 6] = [
     TopologyKind::Ring,
     TopologyKind::FullyConnected,
     TopologyKind::Switch,
     TopologyKind::Torus2D,
+    TopologyKind::RailOptimized,
+    TopologyKind::Dragonfly,
 ];
 
 fn main() -> modtrans::Result<()> {
-    // Part 1: collective microcosts (100 MB all-reduce).
+    // Part 1: collective microcosts (100 MB all-reduce) under each
+    // topology's default algorithm.
     println!("== all-reduce of 100 MB, per topology (100 GB/s links, 500 ns hops) ==");
-    let mut t = Table::new(vec!["NPUs", "ring", "fully_connected", "switch", "torus2d"]);
+    let mut t = Table::new(vec![
+        "NPUs", "ring", "fully_connected", "switch", "torus2d", "rail", "dragonfly",
+    ]);
     for n in [4usize, 16, 64, 256] {
         let mut row = vec![n.to_string()];
         for kind in KINDS {
-            let dim = NetDim { kind, npus: n, bandwidth_gbps: 100.0, latency_ns: 500.0 };
-            let ns = collective_ns(CommType::AllReduce, 100 << 20, &dim);
+            let dim = NetDim::new(kind, n, 100.0, 500.0);
+            let ns = collective_ns(CommType::AllReduce, 100 << 20, dim.algo, &dim);
             row.push(human_time(ns as f64 * 1e-9));
         }
         t.row(row);
     }
     println!("{t}");
+
+    // Part 1b: the same fabric under different collective algorithms —
+    // the SW half of the co-design space. On a 64-port switch the
+    // latency-bound small payload favors halving-doubling's log2 steps
+    // while the bandwidth-bound large payload favors direct exchange.
+    println!("== algorithm choice on one 64-port switch (25 GB/s, 5 us) ==");
+    let mut ta = Table::new(vec!["Payload", "ring", "hd", "direct"]);
+    for bytes in [1u64 << 16, 100 << 20] {
+        let mut row = vec![modtrans::util::human_bytes(bytes)];
+        for algo in [CollectiveAlgo::Ring, CollectiveAlgo::HalvingDoubling, CollectiveAlgo::Direct]
+        {
+            let dim = NetDim::new(TopologyKind::Switch, 64, 25.0, 5000.0);
+            let ns = collective_ns(CommType::AllReduce, bytes, algo, &dim);
+            row.push(human_time(ns as f64 * 1e-9));
+        }
+        ta.row(row);
+    }
+    println!("{ta}");
 
     // Part 2: end-to-end VGG-16 DP iteration per topology. VGG's 528 MB
     // of weights over slow 10 GB/s links outruns the backward-overlap

@@ -7,7 +7,7 @@
 //! modtrans translate <file.onnx | zoo:name | trace.et.json> [-o out.txt]
 //!           [--from onnx|et-json] [--parallelism P]
 //!           [--npus N] [--mp-group G] [--batch B] [--compute MODEL]
-//! modtrans simulate <workload.txt> [--network net.json] [--topology T]
+//! modtrans simulate <workload.txt> [--network net.json|SPEC] [--topology SPEC]
 //!           [--npus N] [--iterations I] [--policy fifo|lifo] [--chunks C]
 //!           [--stages S] [--microbatches M] [--boundary-bytes B]
 //! modtrans sweep [model[,model...]] [--parallelisms L] [--topologies L]
@@ -29,8 +29,8 @@ use crate::ir;
 use crate::onnx;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
-use crate::sim::{self, Network, Policy, SimConfig, TopologyKind};
-use crate::sweep::{self, CollectiveAlgo, SweepConfig, SweepGrid, SweepReport};
+use crate::sim::{self, Network, NetworkSpec, Policy, SimConfig};
+use crate::sweep::{self, CommSchedule, SweepConfig, SweepGrid, SweepReport};
 use crate::translator::{
     self, ComputeTimeModel, ConstantCompute, RooflineCompute, TranslateOpts,
 };
@@ -160,11 +160,15 @@ USAGE:
             (--from et-json replays a modtrans-et-json/v2 trace: its durations and, when
              present, its comm plan are authoritative — comm-free documents are planned
              with the --parallelism options)
-  modtrans simulate <workload.txt> [--network net.json | --topology ring|fc|switch|torus2d --npus N]
+  modtrans simulate <workload.txt> [--network net.json|SPEC | --topology SPEC --npus N]
             [--iterations I] [--policy fifo|lifo] [--chunks C]
             [--stages S] [--microbatches M] [--boundary-bytes B]
+            (network SPEC grammar: dim[/dim/...], each dim kind[:NxBWg@LAT][+algo] with
+             kind ring|fc|switch|torus2d|rail|dragonfly and algo ring|hd|direct|dim-ordered,
+             e.g. ring:8x300g@700ns/switch:16x25g@5us+direct — a bare kind token is the
+             deprecated single-dimension alias, sized by --npus/--bandwidth-gbps/--latency-ns)
   modtrans sweep [model[,model...]] [--models LIST] [--parallelisms data,model,...]
-            [--topologies ring,fc,switch,torus2d] [--collectives direct|pipelined|pipelined-lifo]
+            [--topologies SPEC[,SPEC...]] [--collectives direct|pipelined|pipelined-lifo]
             [--npus N] [--batch B] [--mp-group G] [--iterations I] [--shard K/N]
             [--scenarios I,J,K] [--threads T] [--hbm-gib G] [--zero 0|1|2|3]
             [--skip-infeasible] [--top K] [--top-cutoff NS] [--cache-dir DIR]
@@ -186,11 +190,13 @@ USAGE:
             [--optimizer sgd|momentum|adam] [--zero 0|1|2|3] [--hbm-gib G]
   modtrans calibrate [--artifacts DIR] [-o cal.json] [--reps R]   (needs --features pjrt)
   modtrans validate                      (paper §4.4 ResNet-50 sanity check)
-  modtrans check [trace.et.json | --cache-dir DIR] [--batch B] [--quiet]
+  modtrans check [trace.et.json | --cache-dir DIR] [--network SPEC|net.json] [--batch B] [--quiet]
             (data-level verification: bare form verifies IR + task-graph invariants
-             for every zoo model under every parallelism strategy; with a file it
-             verifies one et-json document or sweep-cache envelope; with --cache-dir
-             it verifies every .ir.json envelope in the directory)";
+             for every zoo model under every parallelism strategy — with --network it
+             also validates the fabric, including per-dimension collective-algorithm
+             admissibility; with a file it verifies one et-json document or sweep-cache
+             envelope; with --cache-dir it verifies every .ir.json envelope in the
+             directory)";
 
 /// Load a model from `zoo:<name>` or a `.onnx` path (metadata-only).
 fn load_model(spec: &str, full: bool) -> Result<onnx::Model> {
@@ -400,19 +406,26 @@ fn cmd_translate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load the simulated fabric. `--network` takes either a JSON config
+/// file on disk or a [`NetworkSpec`] string
+/// (`ring:8x300g@700ns/switch:16x25g@5us+direct`); `--topology` takes a
+/// spec too — bare legacy tokens like `ring` or `torus2d` parse as
+/// single-dimension specs, sized by `--npus` / `--bandwidth-gbps` /
+/// `--latency-ns` exactly as before.
 fn load_network(args: &Args) -> Result<Network> {
-    if let Some(path) = args.opt("network") {
-        let text = std::fs::read_to_string(path)?;
-        return Network::from_json(&crate::json::parse(&text)?);
-    }
     let npus = args.opt_parse("npus", 16usize)?;
-    let kind = TopologyKind::from_token(args.opt("topology").unwrap_or("ring"))?;
-    Ok(Network::single(
-        kind,
-        npus,
-        args.opt_parse("bandwidth-gbps", 100.0f64)?,
-        args.opt_parse("latency-ns", 500.0f64)?,
-    ))
+    let bandwidth = args.opt_parse("bandwidth-gbps", 100.0f64)?;
+    let latency = args.opt_parse("latency-ns", 500.0f64)?;
+    if let Some(spec) = args.opt("network") {
+        // A file on disk is the JSON form; anything else is a spec.
+        if Path::new(spec).is_file() {
+            let text = std::fs::read_to_string(spec)?;
+            return Network::from_json(&crate::json::parse(&text)?);
+        }
+        return NetworkSpec::parse(spec)?.materialize(npus, bandwidth, latency);
+    }
+    NetworkSpec::parse(args.opt("topology").unwrap_or("ring"))?
+        .materialize(npus, bandwidth, latency)
 }
 
 fn sim_config(args: &Args) -> Result<SimConfig> {
@@ -572,7 +585,14 @@ fn cmd_check(args: &Args) -> Result<()> {
         Parallelism::HybridModelData,
         Parallelism::Pipeline,
     ];
-    let cfg = SimConfig::default();
+    // `--network`/`--topology` verify the task graphs over a chosen
+    // fabric — the network's own validation (dimension shape and
+    // per-dimension algorithm admissibility) runs at the same boundary.
+    let cfg = if args.opt("network").is_some() || args.opt("topology").is_some() {
+        SimConfig { network: load_network(args)?, ..SimConfig::default() }
+    } else {
+        SimConfig::default()
+    };
     let compute = SystolicCompute::new(batch);
     let mut graphs = 0usize;
     for name in zoo::MODELS {
@@ -642,13 +662,12 @@ fn parse_sweep_grid(args: &Args) -> Result<SweepGrid> {
             args.opt("parallelisms").unwrap_or("data,model,hybrid-dm"),
             parse_parallelism,
         )?,
-        topologies: parse_list(
-            args.opt("topologies").unwrap_or("ring,fc,switch"),
-            TopologyKind::from_token,
-        )?,
+        networks: parse_list(args.opt("topologies").unwrap_or("ring,fc,switch"), |s| {
+            NetworkSpec::parse(s)
+        })?,
         collectives: parse_list(
             args.opt("collectives").unwrap_or("pipelined"),
-            CollectiveAlgo::from_token,
+            CommSchedule::from_token,
         )?,
     })
 }
@@ -1113,6 +1132,55 @@ mod tests {
         let argv: Vec<String> =
             ["sweep", "zoo:mlp", "--npus", "8", "--batch", "4"].iter().map(|s| s.to_string()).collect();
         run(&argv).unwrap();
+    }
+
+    #[test]
+    fn network_flag_takes_a_spec_or_a_json_file() {
+        // A compact spec string materializes directly…
+        let a = args(&["--network", "ring:4x300g@700ns/switch:2x25g@5us+direct"]);
+        let net = load_network(&a).unwrap();
+        assert_eq!(net.dims.len(), 2);
+        assert_eq!(net.dims[0].npus, 4);
+        assert_eq!(net.dims[1].algo, crate::sim::CollectiveAlgo::Direct);
+        // …while a JSON file on disk still loads (legacy dims form).
+        let dir = std::env::temp_dir().join(format!("modtrans_netflag_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("net.json");
+        std::fs::write(
+            &path,
+            r#"{"dims": [{"topology": "ring", "npus": 8, "bandwidth_gbps": 100, "latency_ns": 500}]}"#,
+        )
+        .unwrap();
+        let a = args(&["--network", path.to_str().unwrap()]);
+        let net = load_network(&a).unwrap();
+        assert_eq!((net.dims.len(), net.dims[0].npus), (1, 8));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Legacy --topology tokens are bare one-dimension specs.
+        let a = args(&["--topology", "torus2d", "--npus", "16"]);
+        assert_eq!(load_network(&a).unwrap().dims[0].kind, crate::sim::TopologyKind::Torus2D);
+        // Malformed or inadmissible specs are typed errors, not panics.
+        assert!(load_network(&args(&["--topology", "blimp"])).is_err());
+        let err = load_network(&args(&["--topology", "torus2d+direct"])).unwrap_err();
+        assert!(err.to_string().contains("not realizable"), "{err}");
+    }
+
+    #[test]
+    fn sweep_topologies_accept_network_specs() {
+        let a = args(&["mlp", "--topologies", "ring, ring:4x300g@700ns/switch:2x25g@5us+hd"]);
+        let grid = parse_sweep_grid(&a).unwrap();
+        assert_eq!(grid.networks.len(), 2);
+        assert_eq!(grid.networks[0].label(), "ring");
+        assert_eq!(grid.networks[1].label(), "ring:4x300g@700ns/switch:2x25g@5us+hd");
+    }
+
+    #[test]
+    fn check_rejects_an_inadmissible_fabric_before_any_graph_work() {
+        let argv: Vec<String> = ["check", "--network", "torus2d:16x100g@500ns+direct", "--quiet"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = run(&argv).unwrap_err();
+        assert!(err.to_string().contains("not realizable"), "{err}");
     }
 
     #[test]

@@ -74,6 +74,45 @@
 //! top-K is byte-identical to the exhaustive ranking's first K rows
 //! (CI's prune-equivalence diff pins it).
 //!
+//! ## The network model: N-dimension fabrics × per-dimension algorithms
+//!
+//! The simulator's network layer ([`sim::network`]) models a cluster as
+//! an ordered hierarchy of up to [`sim::MAX_DIMS`] dimensions (scale-up
+//! first), each an independent exclusive resource with its own physical
+//! arrangement ([`sim::TopologyKind`]: ring, fully-connected, switch,
+//! 2-D torus, rail-optimized, dragonfly), link bandwidth, per-hop
+//! latency — and its own collective algorithm
+//! ([`sim::CollectiveAlgo`]: ring, halving-doubling, direct exchange,
+//! dimension-ordered). Topology and algorithm are orthogonal co-design
+//! axes: the same 64-port switch can run its all-reduce latency-bound
+//! (halving-doubling, `2·ceil(log2 N)` steps) or bandwidth-bound
+//! (direct exchange), and [`sim::collective_ns`] — a total function over
+//! `(comm, bytes, algo, dim)` — prices any pairing. Which pairings a
+//! fabric can *realize* is a separate, typed question:
+//! [`sim::CollectiveAlgo::admissible_on`] is enforced at the config
+//! boundaries (spec parse, config JSON, `simulate`, the sweep's bound
+//! pass) alongside the [`ir::verify`]-style checks, never inside the
+//! cost model, so the hot path stays branch-light.
+//!
+//! The one textual form of a network is the typed [`sim::NetworkSpec`]
+//! grammar — `ring:8x300g@700ns/switch:16x25g@5us+direct` — used
+//! uniformly by the CLI (`--network`, `--topology`, `--topologies`),
+//! config JSON (`{"spec": "..."}`), the sweep fingerprint and grid
+//! digest, and report scenario labels. Bare legacy tokens (`ring`,
+//! `fc`, `torus2d`, …) remain deprecated single-dimension aliases that
+//! round-trip byte-identically, and every topology's pre-redesign
+//! implicit algorithm is pinned as its default
+//! ([`sim::CollectiveAlgo::default_for`]), so legacy scenarios keep
+//! byte-identical rankings through the new API. The system layer
+//! ([`sim::system`]) maps workload collectives onto the hierarchy:
+//! scale-up traffic stays on dimension 0 while weight-gradient
+//! all-reduces take the chunked hierarchical route (reduce-scatter on
+//! dim 0 → per-dimension all-reduce across dims 1.. → all-gather on
+//! dim 0), each dimension priced by its own algorithm — and the
+//! analytic bound pass ([`sweep::bound`]) mirrors that routing
+//! statement for statement, so `--top K` pruning stays exact on
+//! co-design grids too.
+//!
 //! ## The orchestration layer: one command, N worker processes
 //!
 //! On top of the in-process worker pool sits a process-level
@@ -131,10 +170,14 @@
 //!   (see above).
 //! * [`workload`] — the ASTRA-sim DNN-description file format.
 //! * [`sim`] — a full discrete-event distributed-training simulator
-//!   (network, collectives, system scheduler, training loop).
+//!   (N-dimension hierarchical network with per-dimension collective
+//!   algorithms, algorithm-selected collective cost models, system
+//!   scheduler, training loop — see the network-model section above).
 //! * [`compute`] — SCALE-sim-style systolic-array compute-time model.
 //! * [`sweep`] — the experiment-scale batch runner: expands a
-//!   (model × parallelism × topology × collective) grid, caches one
+//!   (model × parallelism × network × schedule) grid — the network axis
+//!   takes [`sim::NetworkSpec`]s, so one grid can mix bare legacy
+//!   topologies with multi-dimension per-algorithm fabrics — caches one
 //!   compute-annotated IR per model (in memory, plus the persistent
 //!   `--cache-dir` disk tier), fans simulations out across a
 //!   `std::thread` worker pool (optionally sharded `--shard K/N` across
@@ -254,9 +297,13 @@
 //! 1-thread-vs-8-thread `sweep` determinism diff (plain,
 //! `--skip-infeasible`, sharded + `sweep-merge`, a warm-`--cache-dir`
 //! rerun that must report 0 translations with a byte-identical ranking,
-//! and a prune-equivalence diff: `sweep --top 5` must reproduce the
+//! a prune-equivalence diff: `sweep --top 5` must reproduce the
 //! exhaustive top-5 byte-identically while pruning scenarios,
-//! `scripts/check_prune.py`), a `fleet-smoke` job (`sweep fleet
+//! `scripts/check_prune.py`, and an N-dimension co-design leg: a grid
+//! mixing a bare legacy token with a 3-dimension per-algorithm
+//! `NetworkSpec` must diff byte-identically across thread counts, and
+//! `modtrans check --network rust/configs/ndim_codesign.json` must
+//! admit the shipped example fabric), a `fleet-smoke` job (`sweep fleet
 //! --procs 4` cold and warm must rank byte-for-byte like the monolithic
 //! sweep with every worker reporting 0 translations; a journaled fleet
 //! interrupted by a failpoint must `--resume` with zero re-simulations;

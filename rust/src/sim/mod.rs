@@ -8,10 +8,14 @@
 //! * [`queue`] — the allocation-free, monotone integer-time calendar
 //!   queue ordering the engine's completion events (byte-identical pop
 //!   order to a `(finish, seq, task)` min-heap).
-//! * [`network`] — analytical network layer: multi-dimensional topologies
-//!   with per-link latency + bandwidth (the Garnet/ns-3 stand-in).
-//! * [`collectives`] — topology-aware collective completion-time models
-//!   with chunk pipelining.
+//! * [`network`] — analytical network layer: N-dimension hierarchical
+//!   topologies (ring / fully-connected / switch / torus / rail-optimized
+//!   / dragonfly) with per-link latency + bandwidth, a per-dimension
+//!   [`CollectiveAlgo`] with an admissibility check, and the typed
+//!   [`NetworkSpec`] compact-string grammar (the Garnet/ns-3 stand-in).
+//! * [`collectives`] — algorithm-selected collective completion-time
+//!   models (`collective_ns(comm, bytes, algo, dim)`) with chunk
+//!   pipelining.
 //! * [`system`] — maps workload collectives onto network dimensions
 //!   (hierarchical all-reduce, scale-up activation traffic) and applies
 //!   the communication scheduling policy.
@@ -31,7 +35,9 @@ pub mod training;
 
 pub use collectives::{collective_ns, ChunkCfg};
 pub use engine::{verify_graph, Engine, Policy, RunScratch, Schedule, TaskGraph};
-pub use network::{NetDim, Network, TopologyKind};
+pub use network::{
+    CollectiveAlgo, DimSpec, NetDim, Network, NetworkSpec, TopologyKind, MAX_DIMS,
+};
 pub use queue::CalendarQueue;
 pub use system::{CommRouter, SystemConfig};
 pub use tag::{TagComm, TagPhase, TaskTag};

@@ -5,14 +5,37 @@
 //! backend — which this module reproduces — models each physical link as
 //! `latency + bytes/bandwidth` and composes collective phases over the
 //! logical dimensions. A [`Network`] is an ordered list of dimensions
-//! (e.g. intra-package ring + inter-package switch), mirroring the
-//! scale-up/scale-out fabric split of Fig. 1.
+//! (`dims[0]` innermost/scale-up, later dimensions scale out), mirroring
+//! the hierarchical fabric split of Fig. 1 — generalized to
+//! N ≤ [`MAX_DIMS`] dimensions.
+//!
+//! Each dimension is a *resource with a policy*: a [`TopologyKind`]
+//! (the physical arrangement) **plus** an explicit [`CollectiveAlgo`]
+//! (the schedule collectives run over that arrangement). The two are
+//! decoupled — ASTRA-sim 2.0's per-dimension collective co-design — and
+//! [`NetDim::validate`] rejects pairs the fabric cannot realize with a
+//! typed [`Error::Config`] (see [`CollectiveAlgo::admissible_on`]),
+//! enforced at the same boundaries as `ir::verify`: simulation entry,
+//! workload verification, config parsing, and `modtrans check`.
+//!
+//! The compact textual form of a network — used uniformly by the CLI,
+//! config JSON, the sweep fingerprint and report scenario labels — is
+//! the [`NetworkSpec`] grammar in [`spec`], e.g.
+//! `ring:8x300g@700ns/switch:16x25g@5us+hd`.
 
 use crate::error::{Error, Result};
 use crate::json::Value;
 
+pub mod spec;
+pub use spec::{DimSpec, NetworkSpec};
+
+/// Hard cap on network dimensions. Keeps the per-dimension accumulators
+/// in the sweep's analytic bound pass (and the router's leg math) in
+/// fixed stack buffers, like `MAX_CHUNKS` does for chunk pipelining.
+pub const MAX_DIMS: usize = 8;
+
 /// Physical arrangement of one network dimension.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum TopologyKind {
     /// Unidirectional ring (NVLink-style neighbor mesh).
     Ring,
@@ -20,18 +43,28 @@ pub enum TopologyKind {
     FullyConnected,
     /// All NPUs hang off one switch (store-and-forward).
     Switch,
-    /// 2-D torus; collectives run dimension-ordered rings.
+    /// 2-D torus; must factor into a non-degenerate rows×cols grid.
     Torus2D,
+    /// Rail-optimized: one parallel switch plane ("rail") per local NPU
+    /// index, so same-index peers across nodes reach each other in one
+    /// switch hop without crossing rails (the GPU-cluster scale-out
+    /// fabric ASTRA-sim 2.0 models).
+    RailOptimized,
+    /// Dragonfly: all-to-all connected router groups joined by global
+    /// links; any pair is reachable in ≤ 3 hops (local-global-local).
+    Dragonfly,
 }
 
 impl TopologyKind {
-    /// Parse a config token.
+    /// Parse a config token (canonical tokens plus deprecated aliases).
     pub fn from_token(s: &str) -> Result<TopologyKind> {
         Ok(match s {
             "ring" => TopologyKind::Ring,
             "fully_connected" | "fc" => TopologyKind::FullyConnected,
             "switch" => TopologyKind::Switch,
             "torus2d" => TopologyKind::Torus2D,
+            "rail" | "rail-optimized" | "rail_optimized" => TopologyKind::RailOptimized,
+            "dragonfly" => TopologyKind::Dragonfly,
             other => return Err(Error::Config(format!("unknown topology '{other}'"))),
         })
     }
@@ -43,15 +76,106 @@ impl TopologyKind {
             TopologyKind::FullyConnected => "fully_connected",
             TopologyKind::Switch => "switch",
             TopologyKind::Torus2D => "torus2d",
+            TopologyKind::RailOptimized => "rail",
+            TopologyKind::Dragonfly => "dragonfly",
         }
     }
 }
 
-/// One network dimension: topology + size + per-link characteristics.
+/// The collective *algorithm* a dimension's collectives run — decoupled
+/// from [`TopologyKind`], which only constrains what is realizable (see
+/// [`CollectiveAlgo::admissible_on`]). The α-β completion-time model for
+/// each algorithm lives in [`crate::sim::collectives::collective_ns`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CollectiveAlgo {
+    /// Bandwidth-optimal ring schedule: `2(N-1)` phases of `M/N`.
+    Ring,
+    /// Recursive halving/doubling: `2·log2(N)` latency-bound phases,
+    /// `2M(N-1)/N` total bytes serialized at each port.
+    HalvingDoubling,
+    /// Direct single-phase exchange: every peer pair moves its shard
+    /// concurrently over dedicated paths.
+    Direct,
+    /// Dimension-ordered (torus): reduce-scatter on rows, all-reduce on
+    /// columns over the row shard, all-gather on rows.
+    DimOrdered,
+}
+
+impl CollectiveAlgo {
+    /// Parse a config token (canonical tokens plus long-form aliases).
+    pub fn from_token(s: &str) -> Result<CollectiveAlgo> {
+        Ok(match s {
+            "ring" => CollectiveAlgo::Ring,
+            "hd" | "halving-doubling" | "halving_doubling" => CollectiveAlgo::HalvingDoubling,
+            "direct" => CollectiveAlgo::Direct,
+            "dim-ordered" | "dim_ordered" | "dimension-ordered" => CollectiveAlgo::DimOrdered,
+            other => return Err(Error::Config(format!("unknown collective algorithm '{other}'"))),
+        })
+    }
+
+    /// Canonical token (the `+algo` suffix spelling in the
+    /// [`NetworkSpec`] grammar).
+    pub fn token(self) -> &'static str {
+        match self {
+            CollectiveAlgo::Ring => "ring",
+            CollectiveAlgo::HalvingDoubling => "hd",
+            CollectiveAlgo::Direct => "direct",
+            CollectiveAlgo::DimOrdered => "dim-ordered",
+        }
+    }
+
+    /// The algorithm a topology ran *implicitly* before algorithms became
+    /// explicit — pinned by byte-identity tests so every legacy scenario
+    /// ranks exactly as it did when `collective_ns` matched on
+    /// [`TopologyKind`].
+    pub fn default_for(kind: TopologyKind) -> CollectiveAlgo {
+        match kind {
+            TopologyKind::Ring => CollectiveAlgo::Ring,
+            TopologyKind::FullyConnected => CollectiveAlgo::Direct,
+            TopologyKind::Switch => CollectiveAlgo::HalvingDoubling,
+            TopologyKind::Torus2D => CollectiveAlgo::DimOrdered,
+            // Rails are parallel non-blocking switch planes.
+            TopologyKind::RailOptimized => CollectiveAlgo::HalvingDoubling,
+            // Dragonfly's global links give all-to-all group reachability.
+            TopologyKind::Dragonfly => CollectiveAlgo::Direct,
+        }
+    }
+
+    /// Can this algorithm's communication pattern be realized on `kind`
+    /// without links the fabric does not have?
+    ///
+    /// * `Ring` embeds in every connected fabric (a logical ring needs
+    ///   only a Hamiltonian cycle), so it is admissible everywhere.
+    /// * `HalvingDoubling` needs distance-`2^i` partner exchanges every
+    ///   phase — congestion-free only through a switch, rails, a
+    ///   fully-connected mesh, or dragonfly global links; on a ring or
+    ///   torus the long-haul phases would multiplex one physical link.
+    /// * `Direct` needs a dedicated path per peer pair — fully-connected
+    ///   meshes, non-blocking switches, rails, and dragonfly only.
+    /// * `DimOrdered` is the torus schedule: it needs the rows×cols
+    ///   factorization, so it is admissible on `Torus2D` alone.
+    pub fn admissible_on(self, kind: TopologyKind) -> bool {
+        use CollectiveAlgo::*;
+        use TopologyKind::*;
+        match self {
+            Ring => true,
+            HalvingDoubling | Direct => {
+                matches!(kind, FullyConnected | Switch | RailOptimized | Dragonfly)
+            }
+            DimOrdered => kind == Torus2D,
+        }
+    }
+}
+
+/// One network dimension: topology + collective algorithm + size +
+/// per-link characteristics.
 #[derive(Debug, Clone, Copy)]
 pub struct NetDim {
     /// Physical arrangement.
     pub kind: TopologyKind,
+    /// Collective algorithm run over this dimension (must be admissible
+    /// on `kind`; checked by [`NetDim::validate`]).
+    pub algo: CollectiveAlgo,
     /// NPUs in this dimension's group.
     pub npus: usize,
     /// Per-link bandwidth in GB/s (= bytes/ns).
@@ -61,6 +185,12 @@ pub struct NetDim {
 }
 
 impl NetDim {
+    /// A dimension running `kind`'s default algorithm
+    /// ([`CollectiveAlgo::default_for`]) — the legacy implicit pairing.
+    pub fn new(kind: TopologyKind, npus: usize, bandwidth_gbps: f64, latency_ns: f64) -> NetDim {
+        NetDim { kind, algo: CollectiveAlgo::default_for(kind), npus, bandwidth_gbps, latency_ns }
+    }
+
     /// Serialization time for `bytes` on one link (ns), excluding latency.
     pub fn ser_ns(&self, bytes: f64) -> f64 {
         bytes / self.bandwidth_gbps
@@ -71,7 +201,9 @@ impl NetDim {
         self.latency_ns + self.ser_ns(bytes)
     }
 
-    /// Rows/cols factorization for Torus2D (nearest square).
+    /// Rows/cols factorization for Torus2D (nearest square). Degenerate
+    /// `(1, N)` results are rejected by [`NetDim::validate`], so a
+    /// validated torus dimension always has both factors > 1.
     pub fn torus_dims(&self) -> (usize, usize) {
         let mut r = (self.npus as f64).sqrt() as usize;
         while r > 1 && self.npus % r != 0 {
@@ -80,7 +212,9 @@ impl NetDim {
         (r.max(1), self.npus / r.max(1))
     }
 
-    /// Validate the dimension parameters.
+    /// Validate the dimension parameters: positive size/bandwidth,
+    /// non-negative latency, a factorable torus grid, and an
+    /// algorithm × topology pair the fabric can realize.
     pub fn validate(&self) -> Result<()> {
         if self.npus == 0 {
             return Err(Error::Config("dimension with 0 npus".into()));
@@ -91,8 +225,47 @@ impl NetDim {
         if self.latency_ns < 0.0 {
             return Err(Error::Config("latency must be non-negative".into()));
         }
+        if self.kind == TopologyKind::Torus2D && self.npus > 1 {
+            let (r, c) = self.torus_dims();
+            if r < 2 {
+                return Err(Error::Config(format!(
+                    "torus2d dimension of {} npus does not factor into a rows x cols grid \
+                     (prime size degenerates to 1x{}, which is a ring, not a torus): \
+                     use a composite npu count or a ring dimension",
+                    self.npus, c
+                )));
+            }
+        }
+        if !self.algo.admissible_on(self.kind) {
+            return Err(Error::Config(format!(
+                "collective algorithm '{}' is not realizable on a '{}' dimension \
+                 (admissible: {})",
+                self.algo.token(),
+                self.kind.token(),
+                admissible_tokens(self.kind)
+            )));
+        }
         Ok(())
     }
+}
+
+/// Comma-joined admissible algorithm tokens for `kind` (error messages).
+fn admissible_tokens(kind: TopologyKind) -> String {
+    let mut out = String::new();
+    for algo in [
+        CollectiveAlgo::Ring,
+        CollectiveAlgo::HalvingDoubling,
+        CollectiveAlgo::Direct,
+        CollectiveAlgo::DimOrdered,
+    ] {
+        if algo.admissible_on(kind) {
+            if !out.is_empty() {
+                out.push_str(", ");
+            }
+            out.push_str(algo.token());
+        }
+    }
+    out
 }
 
 /// A multi-dimensional network: `dims[0]` is the innermost (scale-up)
@@ -104,9 +277,9 @@ pub struct Network {
 }
 
 impl Network {
-    /// Single-dimension network.
+    /// Single-dimension network running the topology's default algorithm.
     pub fn single(kind: TopologyKind, npus: usize, bandwidth_gbps: f64, latency_ns: f64) -> Network {
-        Network { dims: vec![NetDim { kind, npus, bandwidth_gbps, latency_ns }] }
+        Network { dims: vec![NetDim::new(kind, npus, bandwidth_gbps, latency_ns)] }
     }
 
     /// A typical two-tier cluster: `local` NPUs on a fast ring per node,
@@ -114,18 +287,10 @@ impl Network {
     pub fn two_tier(local: usize, nodes: usize) -> Network {
         Network {
             dims: vec![
-                NetDim {
-                    kind: TopologyKind::Ring,
-                    npus: local,
-                    bandwidth_gbps: 300.0, // NVLink-class
-                    latency_ns: 700.0,
-                },
-                NetDim {
-                    kind: TopologyKind::Switch,
-                    npus: nodes,
-                    bandwidth_gbps: 25.0, // 200 Gb NIC-class
-                    latency_ns: 5000.0,
-                },
+                // NVLink-class scale-up ring.
+                NetDim::new(TopologyKind::Ring, local, 300.0, 700.0),
+                // 200 Gb NIC-class scale-out switch.
+                NetDim::new(TopologyKind::Switch, nodes, 25.0, 5000.0),
             ],
         }
     }
@@ -135,10 +300,17 @@ impl Network {
         self.dims.iter().map(|d| d.npus).product()
     }
 
-    /// Validate all dimensions.
+    /// Validate all dimensions (size, link parameters, torus
+    /// factorability, algorithm admissibility) and the dimension count.
     pub fn validate(&self) -> Result<()> {
         if self.dims.is_empty() {
             return Err(Error::Config("network needs at least one dimension".into()));
+        }
+        if self.dims.len() > MAX_DIMS {
+            return Err(Error::Config(format!(
+                "network has {} dimensions (max {MAX_DIMS})",
+                self.dims.len()
+            )));
         }
         for d in &self.dims {
             d.validate()?;
@@ -146,18 +318,35 @@ impl Network {
         Ok(())
     }
 
-    /// Parse from a JSON config value:
-    /// `{"dims": [{"topology": "ring", "npus": 8, "bandwidth_gbps": 300,
-    ///             "latency_ns": 700}, ...]}`
+    /// Parse from a JSON config value. Two forms:
+    ///
+    /// * the [`NetworkSpec`] grammar (canonical):
+    ///   `{"spec": "ring:8x300g@700ns/switch:4x25g@5us+hd"}` — every
+    ///   dimension must be fully specified (no config-level defaults to
+    ///   fill from here);
+    /// * the legacy per-dimension object array (deprecated alias):
+    ///   `{"dims": [{"topology": "ring", "npus": 8, "bandwidth_gbps":
+    ///   300, "latency_ns": 700, "algo": "ring"}, ...]}` — `"algo"` is
+    ///   optional and defaults to the topology's implicit algorithm.
     pub fn from_json(v: &Value) -> Result<Network> {
+        if let Some(s) = v.get("spec").and_then(Value::as_str) {
+            let spec = NetworkSpec::parse(s)?;
+            return spec.to_network();
+        }
         let dims_v = v
             .get("dims")
             .and_then(Value::as_arr)
-            .ok_or_else(|| Error::Config("network config: missing 'dims' array".into()))?;
+            .ok_or_else(|| Error::Config("network config: missing 'spec' or 'dims'".into()))?;
         let mut dims = Vec::with_capacity(dims_v.len());
         for d in dims_v {
+            let kind = TopologyKind::from_token(d.req_str("topology")?)?;
+            let algo = match d.get("algo").and_then(Value::as_str) {
+                Some(a) => CollectiveAlgo::from_token(a)?,
+                None => CollectiveAlgo::default_for(kind),
+            };
             dims.push(NetDim {
-                kind: TopologyKind::from_token(d.req_str("topology")?)?,
+                kind,
+                algo,
                 npus: d.req_u64("npus")? as usize,
                 bandwidth_gbps: d.req_f64("bandwidth_gbps")?,
                 latency_ns: d.req_f64("latency_ns")?,
@@ -168,23 +357,11 @@ impl Network {
         Ok(n)
     }
 
-    /// Emit the JSON config form.
+    /// Emit the JSON config form (canonical: the [`NetworkSpec`] string).
     pub fn to_json(&self) -> Value {
         use std::collections::BTreeMap;
-        let dims: Vec<Value> = self
-            .dims
-            .iter()
-            .map(|d| {
-                let mut m = BTreeMap::new();
-                m.insert("topology".to_string(), Value::Str(d.kind.token().into()));
-                m.insert("npus".to_string(), Value::Num(d.npus as f64));
-                m.insert("bandwidth_gbps".to_string(), Value::Num(d.bandwidth_gbps));
-                m.insert("latency_ns".to_string(), Value::Num(d.latency_ns));
-                Value::Obj(m)
-            })
-            .collect();
         let mut m = BTreeMap::new();
-        m.insert("dims".to_string(), Value::Arr(dims));
+        m.insert("spec".to_string(), Value::Str(NetworkSpec::from_network(self).to_string()));
         Value::Obj(m)
     }
 }
@@ -195,27 +372,121 @@ mod tests {
 
     #[test]
     fn link_time_math() {
-        let d = NetDim {
-            kind: TopologyKind::Ring,
-            npus: 8,
-            bandwidth_gbps: 100.0,
-            latency_ns: 500.0,
-        };
+        let d = NetDim::new(TopologyKind::Ring, 8, 100.0, 500.0);
         // 1 MB at 100 GB/s = 10486 ns serialization + 500 latency.
         assert!((d.hop_ns(1_048_576.0) - (500.0 + 10485.76)).abs() < 0.01);
     }
 
     #[test]
     fn torus_factorization() {
-        let mk = |n| NetDim {
-            kind: TopologyKind::Torus2D,
-            npus: n,
-            bandwidth_gbps: 1.0,
-            latency_ns: 0.0,
-        };
+        let mk = |n| NetDim::new(TopologyKind::Torus2D, n, 1.0, 0.0);
         assert_eq!(mk(16).torus_dims(), (4, 4));
         assert_eq!(mk(12).torus_dims(), (3, 4));
+        // Primes degenerate to (1, N) — which validate() now rejects.
         assert_eq!(mk(7).torus_dims(), (1, 7));
+    }
+
+    #[test]
+    fn torus_validate_rejects_non_factorable_sizes() {
+        for n in [2usize, 3, 5, 7, 13] {
+            let d = NetDim::new(TopologyKind::Torus2D, n, 1.0, 0.0);
+            let err = d.validate().expect_err("prime torus must be rejected");
+            let msg = err.to_string();
+            assert!(
+                msg.contains(&format!("{n} npus")),
+                "error must name the size: {msg}"
+            );
+        }
+        for n in [4usize, 6, 9, 12, 16, 64] {
+            assert!(NetDim::new(TopologyKind::Torus2D, n, 1.0, 0.0).validate().is_ok());
+        }
+        // A 1-NPU dimension is trivially fine (no collective runs).
+        assert!(NetDim::new(TopologyKind::Torus2D, 1, 1.0, 0.0).validate().is_ok());
+    }
+
+    #[test]
+    fn admissibility_matrix() {
+        use CollectiveAlgo::*;
+        use TopologyKind::*;
+        // Ring algorithm embeds everywhere.
+        for kind in [Ring, FullyConnected, Switch, Torus2D, RailOptimized, Dragonfly] {
+            assert!(CollectiveAlgo::Ring.admissible_on(kind));
+        }
+        // HD / Direct need switched or all-to-all fabrics.
+        for algo in [HalvingDoubling, Direct] {
+            for kind in [FullyConnected, Switch, RailOptimized, Dragonfly] {
+                assert!(algo.admissible_on(kind), "{algo:?} on {kind:?}");
+            }
+            for kind in [Ring, Torus2D] {
+                assert!(!algo.admissible_on(kind), "{algo:?} on {kind:?}");
+            }
+        }
+        // Dimension-ordered is the torus schedule, nothing else.
+        for kind in [Ring, FullyConnected, Switch, RailOptimized, Dragonfly] {
+            assert!(!DimOrdered.admissible_on(kind));
+        }
+        assert!(DimOrdered.admissible_on(Torus2D));
+        // The defaults are always admissible.
+        for kind in [Ring, FullyConnected, Switch, Torus2D, RailOptimized, Dragonfly] {
+            assert!(CollectiveAlgo::default_for(kind).admissible_on(kind));
+        }
+    }
+
+    #[test]
+    fn inadmissible_algo_is_a_typed_config_error() {
+        let d = NetDim {
+            kind: TopologyKind::Ring,
+            algo: CollectiveAlgo::HalvingDoubling,
+            npus: 8,
+            bandwidth_gbps: 100.0,
+            latency_ns: 500.0,
+        };
+        let err = d.validate().expect_err("hd on a ring must be rejected");
+        match err {
+            Error::Config(msg) => {
+                assert!(msg.contains("hd"), "{msg}");
+                assert!(msg.contains("ring"), "{msg}");
+            }
+            other => panic!("expected Error::Config, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn token_round_trips_cover_new_kinds_and_aliases() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+            TopologyKind::Switch,
+            TopologyKind::Torus2D,
+            TopologyKind::RailOptimized,
+            TopologyKind::Dragonfly,
+        ] {
+            assert_eq!(TopologyKind::from_token(kind.token()).unwrap(), kind);
+        }
+        // Deprecated aliases still parse.
+        assert_eq!(TopologyKind::from_token("fc").unwrap(), TopologyKind::FullyConnected);
+        assert_eq!(
+            TopologyKind::from_token("rail-optimized").unwrap(),
+            TopologyKind::RailOptimized
+        );
+        for algo in [
+            CollectiveAlgo::Ring,
+            CollectiveAlgo::HalvingDoubling,
+            CollectiveAlgo::Direct,
+            CollectiveAlgo::DimOrdered,
+        ] {
+            assert_eq!(CollectiveAlgo::from_token(algo.token()).unwrap(), algo);
+        }
+        assert_eq!(
+            CollectiveAlgo::from_token("halving-doubling").unwrap(),
+            CollectiveAlgo::HalvingDoubling
+        );
+        assert_eq!(
+            CollectiveAlgo::from_token("dimension-ordered").unwrap(),
+            CollectiveAlgo::DimOrdered
+        );
+        assert!(TopologyKind::from_token("blimp").is_err());
+        assert!(CollectiveAlgo::from_token("psychic").is_err());
     }
 
     #[test]
@@ -225,17 +496,43 @@ mod tests {
         assert!(n.validate().is_ok());
         let bad = Network::single(TopologyKind::Ring, 0, 1.0, 0.0);
         assert!(bad.validate().is_err());
+        let too_deep = Network {
+            dims: (0..=MAX_DIMS).map(|_| NetDim::new(TopologyKind::Ring, 2, 1.0, 0.0)).collect(),
+        };
+        assert!(too_deep.validate().is_err());
     }
 
     #[test]
     fn json_roundtrip() {
         let n = Network::two_tier(4, 2);
         let v = n.to_json();
+        // Canonical emission is the compact spec string; the default
+        // algorithm for each kind is omitted from the label.
+        assert_eq!(
+            v.get("spec").and_then(Value::as_str),
+            Some("ring:4x300g@700ns/switch:2x25g@5us")
+        );
         let n2 = Network::from_json(&v).unwrap();
         assert_eq!(n2.dims.len(), 2);
         assert_eq!(n2.dims[0].npus, 4);
         assert_eq!(n2.dims[1].kind, TopologyKind::Switch);
+        assert_eq!(n2.dims[1].algo, CollectiveAlgo::HalvingDoubling);
         assert_eq!(n2.dims[1].bandwidth_gbps, 25.0);
+    }
+
+    #[test]
+    fn json_legacy_dims_form_still_parses() {
+        let v = crate::json::parse(
+            r#"{"dims": [
+                {"topology": "ring", "npus": 8, "bandwidth_gbps": 300, "latency_ns": 700},
+                {"topology": "switch", "npus": 4, "bandwidth_gbps": 25, "latency_ns": 5000,
+                 "algo": "direct"}
+            ]}"#,
+        )
+        .unwrap();
+        let n = Network::from_json(&v).unwrap();
+        assert_eq!(n.dims[0].algo, CollectiveAlgo::Ring, "default algo fills in");
+        assert_eq!(n.dims[1].algo, CollectiveAlgo::Direct, "explicit algo wins");
     }
 
     #[test]
@@ -243,6 +540,12 @@ mod tests {
         let v = crate::json::parse(r#"{"dims": [{"topology": "blimp", "npus": 2, "bandwidth_gbps": 1, "latency_ns": 0}]}"#).unwrap();
         assert!(Network::from_json(&v).is_err());
         let v = crate::json::parse(r#"{}"#).unwrap();
+        assert!(Network::from_json(&v).is_err());
+        // Inadmissible algo × topology is rejected at the parse boundary.
+        let v = crate::json::parse(r#"{"dims": [{"topology": "ring", "npus": 4, "bandwidth_gbps": 1, "latency_ns": 0, "algo": "hd"}]}"#).unwrap();
+        assert!(Network::from_json(&v).is_err());
+        // Prime torus is rejected at the parse boundary too.
+        let v = crate::json::parse(r#"{"dims": [{"topology": "torus2d", "npus": 7, "bandwidth_gbps": 1, "latency_ns": 0}]}"#).unwrap();
         assert!(Network::from_json(&v).is_err());
     }
 }

@@ -1,0 +1,446 @@
+//! The typed `NetworkSpec` grammar — the one textual form of a network,
+//! used uniformly by the CLI (`--network`, `--topologies`), config JSON
+//! (`{"spec": "..."}`), the sweep fingerprint/grid digest, and report
+//! scenario labels.
+//!
+//! ## Grammar
+//!
+//! ```text
+//! spec  := dim ("/" dim)*
+//! dim   := kind [":" npus "x" bw "g" "@" lat] ["+" algo]
+//! kind  := ring | fully_connected | fc | switch | torus2d
+//!        | rail | rail-optimized | dragonfly
+//! algo  := ring | hd | halving-doubling | direct | dim-ordered
+//! lat   := <number> ("ns" | "us")
+//! ```
+//!
+//! Examples:
+//!
+//! * `ring` — a bare legacy token: one ring dimension whose size, link
+//!   parameters and algorithm are filled from sweep-config defaults
+//!   ([`NetworkSpec::materialize`]). Round-trips byte-identically, so
+//!   legacy grids keep their exact report labels and grid digests.
+//! * `ring:8x300g@700ns/switch:16x25g@5us` — a fully-specified two-tier
+//!   cluster, algorithms defaulted per topology.
+//! * `ring:4x300g@700ns/rail:4x50g@2us+hd/switch:2x25g@5us+direct` — a
+//!   3-dimension hierarchy with explicit per-dimension algorithms.
+//!
+//! [`std::fmt::Display`] emits the canonical spelling (aliases like `fc`
+//! and `halving-doubling` normalize; omitted fields stay omitted), and
+//! `parse ∘ Display` is the identity — pinned by round-trip tests here
+//! and in the CLI integration suite.
+
+use super::{CollectiveAlgo, Network, TopologyKind};
+use crate::error::{Error, Result};
+use std::fmt;
+
+/// One dimension of a [`NetworkSpec`]: the topology kind plus optional
+/// size / link / algorithm overrides. `None` fields are filled from
+/// sweep-config defaults at [`NetworkSpec::materialize`] time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DimSpec {
+    /// Physical arrangement (always explicit).
+    pub kind: TopologyKind,
+    /// NPUs in this dimension's group (`None` = config default).
+    pub npus: Option<usize>,
+    /// Per-link bandwidth in GB/s (`None` = config default).
+    pub bandwidth_gbps: Option<f64>,
+    /// Per-hop latency in ns (`None` = config default).
+    pub latency_ns: Option<f64>,
+    /// Collective algorithm (`None` = the topology's implicit default,
+    /// [`CollectiveAlgo::default_for`]).
+    pub algo: Option<CollectiveAlgo>,
+}
+
+impl DimSpec {
+    /// A bare legacy dimension: just the kind, everything else default.
+    pub fn bare(kind: TopologyKind) -> DimSpec {
+        DimSpec { kind, npus: None, bandwidth_gbps: None, latency_ns: None, algo: None }
+    }
+}
+
+/// A parsed network specification: an ordered list of [`DimSpec`]s plus
+/// the cached canonical label (so rank keys and report rows read the
+/// label without re-rendering or allocating).
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    dims: Vec<DimSpec>,
+    label: String,
+}
+
+impl NetworkSpec {
+    /// Build from dimension specs (canonicalizes the label).
+    pub fn new(dims: Vec<DimSpec>) -> Result<NetworkSpec> {
+        if dims.is_empty() {
+            return Err(Error::Config("network spec needs at least one dimension".into()));
+        }
+        if dims.len() > super::MAX_DIMS {
+            return Err(Error::Config(format!(
+                "network spec has {} dimensions (max {})",
+                dims.len(),
+                super::MAX_DIMS
+            )));
+        }
+        for d in &dims {
+            if let Some(algo) = d.algo {
+                if !algo.admissible_on(d.kind) {
+                    return Err(Error::Config(format!(
+                        "collective algorithm '{}' is not realizable on a '{}' dimension",
+                        algo.token(),
+                        d.kind.token()
+                    )));
+                }
+            }
+            if d.npus == Some(0) {
+                return Err(Error::Config("network spec: dimension with 0 npus".into()));
+            }
+            if matches!(d.bandwidth_gbps, Some(b) if b <= 0.0) {
+                return Err(Error::Config("network spec: bandwidth must be positive".into()));
+            }
+            if matches!(d.latency_ns, Some(l) if l < 0.0) {
+                return Err(Error::Config("network spec: latency must be non-negative".into()));
+            }
+        }
+        let label = render_label(&dims);
+        Ok(NetworkSpec { dims, label })
+    }
+
+    /// A single bare legacy dimension — `NetworkSpec::from_kind(Ring)`
+    /// displays as `"ring"`, exactly the pre-redesign token.
+    pub fn from_kind(kind: TopologyKind) -> NetworkSpec {
+        let dims = vec![DimSpec::bare(kind)];
+        let label = render_label(&dims);
+        NetworkSpec { dims, label }
+    }
+
+    /// Fully-explicit spec describing an existing [`Network`].
+    pub fn from_network(net: &Network) -> NetworkSpec {
+        let dims: Vec<DimSpec> = net
+            .dims
+            .iter()
+            .map(|d| DimSpec {
+                kind: d.kind,
+                npus: Some(d.npus),
+                bandwidth_gbps: Some(d.bandwidth_gbps),
+                latency_ns: Some(d.latency_ns),
+                // Emit the algorithm only when it differs from the
+                // topology default, keeping labels minimal and stable.
+                algo: if d.algo == CollectiveAlgo::default_for(d.kind) {
+                    None
+                } else {
+                    Some(d.algo)
+                },
+            })
+            .collect();
+        let label = render_label(&dims);
+        NetworkSpec { dims, label }
+    }
+
+    /// Parse the compact grammar (see module docs). Typed
+    /// [`Error::Config`]s name the offending fragment.
+    pub fn parse(s: &str) -> Result<NetworkSpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(Error::Config("empty network spec".into()));
+        }
+        let mut dims = Vec::new();
+        for part in s.split('/') {
+            dims.push(parse_dim(part.trim())?);
+        }
+        NetworkSpec::new(dims)
+    }
+
+    /// The canonical label (what `Display` prints) — cached, so callers
+    /// on the rank-key path borrow it without allocating.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The dimension specs.
+    pub fn dims(&self) -> &[DimSpec] {
+        &self.dims
+    }
+
+    /// Fill omitted fields from defaults and build a validated
+    /// [`Network`]. A bare legacy token (e.g. `"ring"`) materializes to
+    /// exactly `Network::single(kind, npus, bandwidth_gbps, latency_ns)`
+    /// — the pre-redesign construction, byte for byte.
+    pub fn materialize(&self, npus: usize, bandwidth_gbps: f64, latency_ns: f64) -> Result<Network> {
+        let dims: Vec<super::NetDim> = self
+            .dims
+            .iter()
+            .map(|d| super::NetDim {
+                kind: d.kind,
+                algo: d.algo.unwrap_or_else(|| CollectiveAlgo::default_for(d.kind)),
+                npus: d.npus.unwrap_or(npus),
+                bandwidth_gbps: d.bandwidth_gbps.unwrap_or(bandwidth_gbps),
+                latency_ns: d.latency_ns.unwrap_or(latency_ns),
+            })
+            .collect();
+        let net = Network { dims };
+        net.validate()?;
+        Ok(net)
+    }
+
+    /// Build a [`Network`] from a fully-specified spec (every dimension
+    /// carries explicit size, bandwidth, and latency) — the config-file
+    /// path, where there are no sweep defaults to fill from.
+    pub fn to_network(&self) -> Result<Network> {
+        for d in &self.dims {
+            if d.npus.is_none() || d.bandwidth_gbps.is_none() || d.latency_ns.is_none() {
+                return Err(Error::Config(format!(
+                    "network spec '{}': every dimension needs explicit size, bandwidth and \
+                     latency when used as a full config (e.g. '{}:8x300g@700ns')",
+                    self.label,
+                    d.kind.token()
+                )));
+            }
+        }
+        // All fields present, so the defaults below are never consulted.
+        self.materialize(1, 1.0, 0.0)
+    }
+}
+
+impl fmt::Display for NetworkSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label)
+    }
+}
+
+impl PartialEq for NetworkSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.label == other.label
+    }
+}
+
+impl Eq for NetworkSpec {}
+
+impl PartialOrd for NetworkSpec {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for NetworkSpec {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.label.cmp(&other.label)
+    }
+}
+
+/// Parse one `kind[:NxBWg@LAT][+algo]` fragment.
+fn parse_dim(part: &str) -> Result<DimSpec> {
+    if part.is_empty() {
+        return Err(Error::Config("network spec: empty dimension".into()));
+    }
+    let (head, algo) = match part.rsplit_once('+') {
+        Some((h, a)) => (h, Some(CollectiveAlgo::from_token(a)?)),
+        None => (part, None),
+    };
+    let (kind_tok, params) = match head.split_once(':') {
+        Some((k, p)) => (k, Some(p)),
+        None => (head, None),
+    };
+    let kind = TopologyKind::from_token(kind_tok)?;
+    let mut dim = DimSpec { kind, npus: None, bandwidth_gbps: None, latency_ns: None, algo };
+    if let Some(p) = params {
+        let (sizes, lat) = p.split_once('@').ok_or_else(|| {
+            Error::Config(format!("network spec dimension '{part}': expected 'NxBWg@LAT'"))
+        })?;
+        let (npus_s, bw_s) = sizes.split_once('x').ok_or_else(|| {
+            Error::Config(format!("network spec dimension '{part}': expected 'NxBWg' sizes"))
+        })?;
+        let npus: usize = npus_s.parse().map_err(|_| {
+            Error::Config(format!("network spec dimension '{part}': bad npu count '{npus_s}'"))
+        })?;
+        let bw_num = bw_s.strip_suffix('g').ok_or_else(|| {
+            Error::Config(format!(
+                "network spec dimension '{part}': bandwidth '{bw_s}' must end in 'g' (GB/s)"
+            ))
+        })?;
+        let bw: f64 = bw_num.parse().map_err(|_| {
+            Error::Config(format!("network spec dimension '{part}': bad bandwidth '{bw_s}'"))
+        })?;
+        let lat_ns: f64 = if let Some(us) = lat.strip_suffix("us") {
+            1000.0
+                * us.parse::<f64>().map_err(|_| {
+                    Error::Config(format!("network spec dimension '{part}': bad latency '{lat}'"))
+                })?
+        } else if let Some(ns) = lat.strip_suffix("ns") {
+            ns.parse().map_err(|_| {
+                Error::Config(format!("network spec dimension '{part}': bad latency '{lat}'"))
+            })?
+        } else {
+            return Err(Error::Config(format!(
+                "network spec dimension '{part}': latency '{lat}' must end in 'ns' or 'us'"
+            )));
+        };
+        dim.npus = Some(npus);
+        dim.bandwidth_gbps = Some(bw);
+        dim.latency_ns = Some(lat_ns);
+    }
+    Ok(dim)
+}
+
+/// Render the canonical label for a dimension list.
+fn render_label(dims: &[DimSpec]) -> String {
+    let mut out = String::new();
+    for (i, d) in dims.iter().enumerate() {
+        if i > 0 {
+            out.push('/');
+        }
+        out.push_str(d.kind.token());
+        if let (Some(n), Some(bw), Some(lat)) = (d.npus, d.bandwidth_gbps, d.latency_ns) {
+            out.push(':');
+            out.push_str(&n.to_string());
+            out.push('x');
+            out.push_str(&fmt_num(bw));
+            out.push('g');
+            out.push('@');
+            // Whole microseconds render as `Nus`, everything else `Nns`.
+            if lat >= 1000.0 && (lat / 1000.0).fract() == 0.0 {
+                out.push_str(&fmt_num(lat / 1000.0));
+                out.push_str("us");
+            } else {
+                out.push_str(&fmt_num(lat));
+                out.push_str("ns");
+            }
+        }
+        if let Some(algo) = d.algo {
+            out.push('+');
+            out.push_str(algo.token());
+        }
+    }
+    out
+}
+
+/// Minimal float rendering: whole values print as integers.
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_legacy_tokens_round_trip_unchanged() {
+        for tok in ["ring", "fully_connected", "switch", "torus2d", "rail", "dragonfly"] {
+            let spec = NetworkSpec::parse(tok).unwrap();
+            assert_eq!(spec.to_string(), tok, "bare token must round-trip byte-identically");
+            assert_eq!(spec.dims().len(), 1);
+            assert_eq!(spec.dims()[0].npus, None);
+            assert_eq!(spec.dims()[0].algo, None);
+        }
+        // Aliases normalize to the canonical token (the same spelling
+        // legacy `TopologyKind::token()` put in report labels).
+        assert_eq!(NetworkSpec::parse("fc").unwrap().to_string(), "fully_connected");
+        assert_eq!(NetworkSpec::parse("rail-optimized").unwrap().to_string(), "rail");
+    }
+
+    #[test]
+    fn full_grammar_round_trips() {
+        for s in [
+            "ring:8x300g@700ns",
+            "ring:8x300g@700ns/switch:16x25g@5us",
+            "ring:4x300g@700ns/rail:4x50g@2us+hd/switch:2x25g@5us+direct",
+            "torus2d:16x100g@900ns",
+            "fully_connected:8x200g@350ns+ring",
+            "dragonfly:32x12.5g@3500ns",
+            "switch:4x25g@1234ns",
+        ] {
+            let spec = NetworkSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "canonical spec must round-trip");
+            let re = NetworkSpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(re, spec);
+        }
+    }
+
+    #[test]
+    fn aliases_normalize_in_full_specs() {
+        let spec = NetworkSpec::parse("fc:8x200g@350ns+halving-doubling").unwrap();
+        assert_eq!(spec.to_string(), "fully_connected:8x200g@350ns+hd");
+        let spec = NetworkSpec::parse("switch:4x25g@5000ns").unwrap();
+        assert_eq!(spec.to_string(), "switch:4x25g@5us", "whole us canonicalize");
+    }
+
+    #[test]
+    fn materialize_fills_defaults_like_legacy_single() {
+        let spec = NetworkSpec::parse("ring").unwrap();
+        let net = spec.materialize(8, 100.0, 500.0).unwrap();
+        assert_eq!(net.dims.len(), 1);
+        let d = &net.dims[0];
+        assert_eq!(d.kind, TopologyKind::Ring);
+        assert_eq!(d.algo, CollectiveAlgo::Ring);
+        assert_eq!(d.npus, 8);
+        assert_eq!(d.bandwidth_gbps, 100.0);
+        assert_eq!(d.latency_ns, 500.0);
+    }
+
+    #[test]
+    fn explicit_fields_override_defaults() {
+        let spec = NetworkSpec::parse("ring:4x300g@700ns/switch:2x25g@5us+direct").unwrap();
+        let net = spec.materialize(64, 1.0, 1.0).unwrap();
+        assert_eq!(net.dims[0].npus, 4);
+        assert_eq!(net.dims[0].bandwidth_gbps, 300.0);
+        assert_eq!(net.dims[0].latency_ns, 700.0);
+        assert_eq!(net.dims[1].algo, CollectiveAlgo::Direct);
+        assert_eq!(net.total_npus(), 8);
+    }
+
+    #[test]
+    fn to_network_requires_full_specification() {
+        assert!(NetworkSpec::parse("ring").unwrap().to_network().is_err());
+        let net = NetworkSpec::parse("ring:8x300g@700ns").unwrap().to_network().unwrap();
+        assert_eq!(net.dims[0].npus, 8);
+    }
+
+    #[test]
+    fn from_network_round_trips_through_the_grammar() {
+        let net = Network::two_tier(8, 4);
+        let spec = NetworkSpec::from_network(&net);
+        assert_eq!(spec.to_string(), "ring:8x300g@700ns/switch:4x25g@5us");
+        let back = spec.to_network().unwrap();
+        assert_eq!(back.dims.len(), 2);
+        assert_eq!(back.dims[1].algo, CollectiveAlgo::HalvingDoubling);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_inadmissible_specs() {
+        for bad in [
+            "",
+            "/",
+            "blimp",
+            "ring:8",
+            "ring:8x300g",
+            "ring:8x300@700ns",
+            "ring:8x300g@700",
+            "ring:ax300g@700ns",
+            "ring+psychic",
+            "ring+hd",          // inadmissible algo × topology
+            "torus2d+direct",   // inadmissible algo × topology
+            "ring:0x300g@700ns",
+            "ring/ring/ring/ring/ring/ring/ring/ring/ring", // > MAX_DIMS
+        ] {
+            assert!(NetworkSpec::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn prime_torus_is_rejected_at_materialize_time() {
+        let spec = NetworkSpec::parse("torus2d:7x100g@900ns").unwrap();
+        let err = spec.to_network().expect_err("prime torus must fail validation");
+        assert!(err.to_string().contains("7 npus"), "{err}");
+    }
+
+    #[test]
+    fn ordering_is_by_canonical_label() {
+        let a = NetworkSpec::parse("fully_connected").unwrap();
+        let b = NetworkSpec::parse("ring").unwrap();
+        assert!(a < b);
+        assert_eq!(a, NetworkSpec::parse("fc").unwrap());
+    }
+}

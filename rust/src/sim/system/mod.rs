@@ -84,7 +84,7 @@ impl<'a> CommRouter<'a> {
         let dims = &self.net.dims;
         if dims.len() == 1 || prefer_scale_up {
             let d = &dims[0];
-            let ns = collective_ns(comm, bytes, d);
+            let ns = collective_ns(comm, bytes, d.algo, d);
             let tag = base.with_comm(TagComm::Coll { kind: comm, dim: 0 });
             return Some(g.add(tag, self.dim_resources[0], ns, deps));
         }
@@ -99,17 +99,17 @@ impl<'a> CommRouter<'a> {
                 let d0 = &dims[0];
                 let mut chunk_tails: [TaskId; MAX_CHUNKS] = [0; MAX_CHUNKS];
                 for (k, tail) in chunk_tails.iter_mut().enumerate().take(c) {
-                    let rs = collective_ns(CommType::ReduceScatter, chunk_bytes, d0);
+                    let rs = collective_ns(CommType::ReduceScatter, chunk_bytes, d0.algo, d0);
                     let rs_tag = base.with_comm(TagComm::Rs { chunk: k as u8 });
                     let mut last = g.add(rs_tag, self.dim_resources[0], rs, deps);
                     let mut shard = chunk_bytes / d0.npus.max(1) as u64;
                     for (i, d) in dims.iter().enumerate().skip(1) {
-                        let ar = collective_ns(CommType::AllReduce, shard, d);
+                        let ar = collective_ns(CommType::AllReduce, shard, d.algo, d);
                         let ar_tag = base.with_comm(TagComm::Ar { chunk: k as u8, dim: i as u8 });
                         last = g.add(ar_tag, self.dim_resources[i], ar, &[last]);
                         shard = (shard / d.npus.max(1) as u64).max(1);
                     }
-                    let ag = collective_ns(CommType::AllGather, chunk_bytes, d0);
+                    let ag = collective_ns(CommType::AllGather, chunk_bytes, d0.algo, d0);
                     let ag_tag = base.with_comm(TagComm::Ag { chunk: k as u8 });
                     *tail = g.add(ag_tag, self.dim_resources[0], ag, &[last]);
                 }
@@ -126,7 +126,7 @@ impl<'a> CommRouter<'a> {
             // scale-out request falls through to the outermost dimension.
             other => {
                 let i = dims.len() - 1;
-                let ns = collective_ns(other, bytes, &dims[i]);
+                let ns = collective_ns(other, bytes, dims[i].algo, &dims[i]);
                 let tag = base.with_comm(TagComm::Coll { kind: other, dim: i as u8 });
                 Some(g.add(tag, self.dim_resources[i], ns, deps))
             }

@@ -4,7 +4,7 @@
 //! The discrete-event makespan of any scenario is at least the total
 //! busy time of its busiest resource: the simulator schedules every
 //! compute phase of the flat strategies on one representative-NPU
-//! stream, every collective of a single-dimension fabric on one network
+//! stream, every collective leg on its network *dimension's* exclusive
 //! resource, and the pipeline path's per-stage work on one resource per
 //! stage. [`scenario_bound_ns`] therefore charges
 //!
@@ -13,16 +13,26 @@
 //!   update per layer) for the flat strategies, or the busiest stage of
 //!   the *identical* greedy partition the pipeline simulation uses
 //!   ([`crate::sim::partition_compute_costs`]); and
-//! * **communication** — the ideal-bandwidth α-β completion time
-//!   ([`collective_ns`]) of every collective in the scenario's comm plan
-//!   (plus the stage-boundary point-to-point transfers for pipeline),
+//! * **communication** — per network dimension, the algorithm-priced α-β
+//!   completion time ([`collective_ns`] with that dimension's
+//!   [`crate::sim::CollectiveAlgo`]) of every collective leg the
+//!   scenario's comm plan routes onto it, mirroring
+//!   [`crate::sim::CommRouter`] exactly: activation collectives on the
+//!   scale-up dimension, weight-grad all-reduces split into the same
+//!   chunked RS → per-dim AR → AG legs (chunk count from the scenario's
+//!   [`super::CommSchedule`]), stage-boundary point-to-point transfers
+//!   on the outermost dimension. The comm term is the **max over
+//!   dimensions** of the per-dimension busy sums — each dimension is one
+//!   exclusive resource, so the makespan is at least the busiest one,
+//!   whatever overlap the DES finds between dimensions,
 //!
 //! and the bound is the max of the two. Both terms are *exact* resource
 //! busy times, never optimistic models of them, so the bound is
-//! admissible: `bound(scenario) <= simulated iteration_ns`, always
-//! (asserted across the zoo in `tests/prune_equivalence.rs`). That
-//! admissibility is what makes `--top K` an **exact** mode rather than a
-//! heuristic — a scenario is skipped only when its bound already
+//! admissible: `bound(scenario) <= simulated iteration_ns`, always —
+//! per collective algorithm and per dimension count (asserted across
+//! the zoo and the co-design grid in `tests/prune_equivalence.rs`).
+//! That admissibility is what makes `--top K` an **exact** mode rather
+//! than a heuristic — a scenario is skipped only when its bound already
 //! exceeds the K-th best *simulated* iteration time, which no skipped
 //! scenario can beat.
 //!
@@ -30,54 +40,92 @@
 //! and the scenario's (cheap, parallelism-dependent) comm plan, so
 //! bounding a scenario costs microseconds where simulating it costs
 //! milliseconds. [`BoundMemo`] additionally memoizes every
-//! (topology × collective × size) completion time across sibling
-//! scenarios — grids vary parallelism and collective algorithm far more
+//! (dimension × algorithm × collective × size) completion time across
+//! sibling scenarios — grids vary parallelism and schedule far more
 //! often than payload sizes, so most scenarios hit the memo instead of
-//! the α-β model. The bound pass runs **in parallel** (one memo per
-//! pool worker): because the bound is a pure function of
-//! (scenario, cache, config), splitting the memo across workers changes
-//! only which worker pays each cache miss — every bound value, and
-//! therefore every pruning decision, is byte-identical to a serial
-//! pass.
+//! the α-β model. The memo key is the dimension's full content (kind,
+//! algorithm, size, bandwidth, latency), never a label hash: a
+//! collision between two different fabrics would silently price one
+//! with the other's latencies and break admissibility. The bound pass
+//! runs **in parallel** (one memo per pool worker): because the bound
+//! is a pure function of (scenario, cache, config), splitting the memo
+//! across workers changes only which worker pays each cache miss —
+//! every bound value, and therefore every pruning decision, is
+//! byte-identical to a serial pass.
 
 use super::{Scenario, SweepConfig, WorkloadCache};
 use crate::error::{Error, Result};
 use crate::ir::{passes, ModelIR};
 use crate::sim::collectives::p2p_ns;
-use crate::sim::{collective_ns, partition_compute_costs, NetDim, TopologyKind};
+use crate::sim::system::MAX_CHUNKS;
+use crate::sim::{
+    collective_ns, partition_compute_costs, CollectiveAlgo, NetDim, Network, TopologyKind,
+    MAX_DIMS,
+};
 use crate::translator::CommPlan;
 use crate::workload::{CommType, Parallelism};
 use std::collections::BTreeMap;
 
-/// Stable map key for one (topology, collective) pair — the enums don't
-/// carry `Ord`, and the memo must not depend on discriminant layout.
-fn code(topology: TopologyKind, comm: CommType) -> (u8, u8) {
-    let t = match topology {
+/// Stable scalar codes for the memo key — the enums don't carry `Ord`,
+/// and the memo must not depend on discriminant layout.
+fn kind_code(kind: TopologyKind) -> u8 {
+    match kind {
         TopologyKind::Ring => 0,
         TopologyKind::FullyConnected => 1,
         TopologyKind::Switch => 2,
         TopologyKind::Torus2D => 3,
-    };
-    let c = match comm {
+        TopologyKind::RailOptimized => 4,
+        TopologyKind::Dragonfly => 5,
+    }
+}
+
+fn algo_code(algo: CollectiveAlgo) -> u8 {
+    match algo {
+        CollectiveAlgo::Ring => 0,
+        CollectiveAlgo::HalvingDoubling => 1,
+        CollectiveAlgo::Direct => 2,
+        CollectiveAlgo::DimOrdered => 3,
+    }
+}
+
+fn comm_code(comm: CommType) -> u8 {
+    match comm {
         CommType::None => 0,
         CommType::AllReduce => 1,
         CommType::AllGather => 2,
         CommType::ReduceScatter => 3,
         CommType::AllToAll => 4,
-    };
-    (t, c)
+    }
+}
+
+/// Full-content memo key for one (dimension, collective, payload)
+/// lookup. Every field that feeds the α-β model is in the key — float
+/// params by bit pattern — so two dimensions price identically iff they
+/// *are* identical.
+type DimKey = (u8, u8, usize, u64, u64, u8, u64);
+
+fn dim_key(dim: &NetDim, comm: CommType, bytes: u64) -> DimKey {
+    (
+        kind_code(dim.kind),
+        algo_code(dim.algo),
+        dim.npus,
+        dim.bandwidth_gbps.to_bits(),
+        dim.latency_ns.to_bits(),
+        comm_code(comm),
+        bytes,
+    )
 }
 
 /// Memoized collective-latency table shared across one sweep's bound
-/// pass, keyed by (topology × collective × payload bytes). Valid within
-/// a single [`SweepConfig`] — NPU count, bandwidth and latency are
-/// config-fixed, so only the scenario axes vary — and carrying the
-/// comm-plan buffer too, so a worker's bound pass re-plans without heap
-/// allocation. The parallel bound pass builds one memo per pool worker
-/// (the memo is an accelerator, never an input: bounds are pure).
+/// pass, keyed by the dimension's full content × collective × payload.
+/// Valid across any mix of scenarios (the key carries everything the
+/// model reads), carrying the comm-plan buffer too, so a worker's bound
+/// pass re-plans without heap allocation. The parallel bound pass builds
+/// one memo per pool worker (the memo is an accelerator, never an
+/// input: bounds are pure).
 #[derive(Debug, Default)]
 pub struct BoundMemo {
-    coll: BTreeMap<(u8, u8, u64), u64>,
+    coll: BTreeMap<DimKey, u64>,
     comms: Vec<CommPlan>,
     lookups: usize,
     misses: usize,
@@ -99,24 +147,74 @@ impl BoundMemo {
         self.lookups
     }
 
-    /// Memoized [`collective_ns`].
+    /// Memoized [`collective_ns`] under the dimension's own algorithm —
+    /// exactly what [`crate::sim::CommRouter`] schedules.
     fn collective(&mut self, comm: CommType, bytes: u64, dim: &NetDim) -> u64 {
         if comm == CommType::None || bytes == 0 {
             return 0;
         }
         self.lookups += 1;
-        let (t, c) = code(dim.kind, comm);
-        *self.coll.entry((t, c, bytes)).or_insert_with(|| {
+        *self.coll.entry(dim_key(dim, comm, bytes)).or_insert_with(|| {
             self.misses += 1;
-            collective_ns(comm, bytes, dim)
+            collective_ns(comm, bytes, dim.algo, dim)
         })
     }
 }
 
+/// Per-dimension busy accumulator for one scenario's comm plan.
+type DimBusy = [u64; MAX_DIMS];
+
+/// Mirror of [`crate::sim::CommRouter::issue`]'s routing, charging each
+/// leg's duration to its dimension's busy counter instead of adding DES
+/// tasks. The byte math (chunk split, shard division) matches the
+/// router statement for statement — the bound prices exactly the tasks
+/// the DES would schedule.
+fn route_busy(
+    comm: CommType,
+    bytes: u64,
+    prefer_scale_up: bool,
+    net: &Network,
+    chunks: usize,
+    memo: &mut BoundMemo,
+    busy: &mut DimBusy,
+) {
+    if comm == CommType::None || bytes == 0 {
+        return;
+    }
+    let dims = &net.dims;
+    if dims.len() == 1 || prefer_scale_up {
+        busy[0] += memo.collective(comm, bytes, &dims[0]);
+        return;
+    }
+    match comm {
+        CommType::AllReduce => {
+            // Hierarchical chunked route: RS(dim0) → AR(dims 1..) on the
+            // shard → AG(dim0), `chunks` sub-collectives. Every chunk is
+            // the same size, so one pricing per leg × the chunk count.
+            let c = chunks.clamp(1, MAX_CHUNKS);
+            let chunk_bytes = (bytes / c as u64).max(1);
+            let d0 = &dims[0];
+            let rs = memo.collective(CommType::ReduceScatter, chunk_bytes, d0);
+            let ag = memo.collective(CommType::AllGather, chunk_bytes, d0);
+            busy[0] += c as u64 * (rs + ag);
+            let mut shard = chunk_bytes / d0.npus.max(1) as u64;
+            for (i, d) in dims.iter().enumerate().skip(1) {
+                busy[i] += c as u64 * memo.collective(CommType::AllReduce, shard, d);
+                shard = (shard / d.npus.max(1) as u64).max(1);
+            }
+        }
+        other => {
+            let i = dims.len() - 1;
+            busy[i] += memo.collective(other, bytes, &dims[i]);
+        }
+    }
+}
+
 /// Admissible lower bound on one scenario's simulated `iteration_ns`,
-/// computed from the cached IR without running the DES. Errors only on
-/// a model missing from the cache (the same error the simulation path
-/// raises).
+/// computed from the cached IR without running the DES. Errors on a
+/// model missing from the cache or a network the scenario's spec cannot
+/// materialize (inadmissible algorithm, non-factorable torus) — the
+/// same errors the simulation path raises.
 pub fn scenario_bound_ns(
     sc: &Scenario,
     cache: &WorkloadCache,
@@ -127,49 +225,57 @@ pub fn scenario_bound_ns(
         Error::Config(format!("model '{}' missing from the workload cache", sc.model))
     })?;
     let opts = super::scenario_opts(sc, cfg);
-    let dim = NetDim {
-        kind: sc.topology,
-        npus: cfg.npus,
-        bandwidth_gbps: cfg.bandwidth_gbps,
-        latency_ns: cfg.latency_ns,
-    };
+    // The same network the simulation path materializes — per-dim
+    // algorithms included, so every leg is priced under the algorithm
+    // the DES would run it with.
+    let net = sc.network.materialize(cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns)?;
+    let chunks = sc.collective.system().chunks.chunks;
     // The same comm plan the simulation path derives — the bound prices
     // exactly the collectives the DES would schedule, no re-modeling.
     let mut comms = std::mem::take(&mut memo.comms);
     passes::plan_comm_into(ir, opts, &mut comms);
     let ns = match sc.parallelism {
-        Parallelism::Pipeline => pipeline_bound_ns(ir, &comms, cfg, &dim, memo),
-        _ => flat_bound_ns(ir, &comms, &dim, memo),
+        Parallelism::Pipeline => pipeline_bound_ns(ir, &comms, cfg, &net, chunks, memo),
+        _ => flat_bound_ns(ir, &comms, &net, chunks, memo),
     };
     memo.comms = comms;
     Ok(ns)
 }
 
 /// DATA / MODEL / HYBRID: one compute stream runs every phase serially,
-/// one network resource runs every collective serially — the iteration
-/// is at least the busier of the two.
-fn flat_bound_ns(ir: &ModelIR, comms: &[CommPlan], dim: &NetDim, memo: &mut BoundMemo) -> u64 {
+/// and each network dimension's resource runs every leg routed onto it
+/// serially — the iteration is at least the busiest of them all.
+fn flat_bound_ns(
+    ir: &ModelIR,
+    comms: &[CommPlan],
+    net: &Network,
+    chunks: usize,
+    memo: &mut BoundMemo,
+) -> u64 {
     let compute = passes::serial_compute_ns(ir);
-    let comm: u64 = comms
-        .iter()
-        .map(|p| {
-            memo.collective(p.fwd.0, p.fwd.1, dim)
-                + memo.collective(p.ig.0, p.ig.1, dim)
-                + memo.collective(p.wg.0, p.wg.1, dim)
-        })
-        .sum();
+    let mut busy: DimBusy = [0; MAX_DIMS];
+    for p in comms {
+        // Activation collectives block on the scale-up dimension; the
+        // weight-grad reduction takes the hierarchical route.
+        route_busy(p.fwd.0, p.fwd.1, true, net, chunks, memo, &mut busy);
+        route_busy(p.ig.0, p.ig.1, true, net, chunks, memo, &mut busy);
+        route_busy(p.wg.0, p.wg.1, false, net, chunks, memo, &mut busy);
+    }
+    let comm = busy.iter().copied().max().unwrap_or(0);
     compute.max(comm)
 }
 
 /// PIPELINE: per-stage compute busy time under the *identical* greedy
 /// layer partition, microbatch rounding and all; network busy time is
-/// the per-stage gradient all-reduces plus the 2·(stages−1)·microbatch
-/// stage-boundary transfers the schedule issues per iteration.
+/// the per-stage gradient all-reduces (hierarchically routed, like the
+/// DES) plus the 2·(stages−1)·microbatch stage-boundary transfers on
+/// the outermost dimension, maxed across dimensions.
 fn pipeline_bound_ns(
     ir: &ModelIR,
     comms: &[CommPlan],
     cfg: &SweepConfig,
-    dim: &NetDim,
+    net: &Network,
+    chunks: usize,
     memo: &mut BoundMemo,
 ) -> u64 {
     let n = ir.num_layers();
@@ -179,7 +285,7 @@ fn pipeline_bound_ns(
     let bounds = partition_compute_costs(n, stages, |i| costs[i].fwd_ns);
     let micro_u = micro as u64;
     let mut compute = 0u64;
-    let mut comm = 0u64;
+    let mut busy: DimBusy = [0; MAX_DIMS];
     for s in 0..stages {
         let stage_costs = &costs[bounds[s]..bounds[s + 1]];
         // The simulator's stage_time divides the full-batch sums by the
@@ -197,16 +303,21 @@ fn pipeline_bound_ns(
             .filter(|p| p.wg.0 == CommType::AllReduce)
             .map(|p| p.wg.1)
             .sum();
-        comm += memo.collective(CommType::AllReduce, wg_bytes, dim);
+        route_busy(CommType::AllReduce, wg_bytes, false, net, chunks, memo, &mut busy);
     }
-    comm += 2 * (stages as u64 - 1) * micro_u * p2p_ns(boundary_bytes / micro_u, dim);
+    // Stage-boundary transfers run on the outermost dimension, exactly
+    // like `CommRouter::p2p`.
+    let last = net.dims.len() - 1;
+    busy[last] += 2 * (stages as u64 - 1) * micro_u * p2p_ns(boundary_bytes / micro_u, &net.dims[last]);
+    let comm = busy.iter().copied().max().unwrap_or(0);
     compute.max(comm)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sweep::{build_sweep_cache, CollectiveAlgo};
+    use crate::sim::NetworkSpec;
+    use crate::sweep::{build_sweep_cache, CommSchedule};
 
     fn cache_for(model: &str, cfg: &SweepConfig) -> WorkloadCache {
         build_sweep_cache(&[model.to_string()], cfg, None).unwrap()
@@ -220,16 +331,16 @@ mod tests {
         let sc = |c| Scenario {
             model: "mlp".into(),
             parallelism: Parallelism::Data,
-            topology: TopologyKind::Ring,
+            network: NetworkSpec::from_kind(TopologyKind::Ring),
             collective: c,
         };
-        let a = scenario_bound_ns(&sc(CollectiveAlgo::Direct), &cache, &cfg, &mut memo).unwrap();
+        let a = scenario_bound_ns(&sc(CommSchedule::Direct), &cache, &cfg, &mut memo).unwrap();
         assert_eq!(memo.hits(), memo.lookups() - memo.misses);
         let cold_misses = memo.misses;
-        // A sibling scenario differing only in collective algorithm
-        // prices the same payloads: every lookup hits the memo.
-        let b = scenario_bound_ns(&sc(CollectiveAlgo::Pipelined), &cache, &cfg, &mut memo).unwrap();
-        assert_eq!(a, b, "collective-algo axis cannot change a single-dim bound");
+        // A sibling scenario differing only in schedule prices the same
+        // payloads on a single-dim fabric: every lookup hits the memo.
+        let b = scenario_bound_ns(&sc(CommSchedule::Pipelined), &cache, &cfg, &mut memo).unwrap();
+        assert_eq!(a, b, "schedule axis cannot change a single-dim bound");
         assert_eq!(memo.misses, cold_misses, "sibling scenario should be all memo hits");
         assert!(memo.hits() > 0);
     }
@@ -243,8 +354,8 @@ mod tests {
             let sc = Scenario {
                 model: "mlp".into(),
                 parallelism: p,
-                topology: TopologyKind::Ring,
-                collective: CollectiveAlgo::Pipelined,
+                network: NetworkSpec::from_kind(TopologyKind::Ring),
+                collective: CommSchedule::Pipelined,
             };
             scenario_bound_ns(&sc, &cache, &cfg, &mut memo).unwrap()
         };
@@ -259,14 +370,63 @@ mod tests {
     }
 
     #[test]
+    fn multi_dim_bounds_route_like_the_simulator() {
+        let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        let cache = cache_for("mlp", &cfg);
+        let mut memo = BoundMemo::new();
+        let bound = |spec: &str, memo: &mut BoundMemo| {
+            let sc = Scenario {
+                model: "mlp".into(),
+                parallelism: Parallelism::Data,
+                network: NetworkSpec::parse(spec).unwrap(),
+                collective: CommSchedule::Pipelined,
+            };
+            scenario_bound_ns(&sc, &cache, &cfg, memo).unwrap()
+        };
+        // Multi-dim bounds exist and respect the serial-compute floor.
+        let two = bound("ring:4x300g@700ns/switch:2x25g@5us", &mut memo);
+        let three =
+            bound("ring:4x300g@700ns/rail:4x50g@2us+hd/switch:2x25g@5us+direct", &mut memo);
+        let ir = cache.ir("mlp").unwrap();
+        let floor = passes::serial_compute_ns(ir);
+        assert!(two >= floor && three >= floor);
+        // The per-dimension algorithm is part of the price: swapping the
+        // scale-out algorithm on an otherwise identical fabric moves the
+        // per-dim busy (and the memo sees distinct keys, never a
+        // colliding one).
+        let misses_before = memo.misses;
+        let hd = bound("ring:8x1g@700ns/switch:4x1g@5us+hd", &mut memo);
+        let direct = bound("ring:8x1g@700ns/switch:4x1g@5us+direct", &mut memo);
+        assert_ne!(hd, direct, "algorithm choice must reprice the scale-out legs");
+        assert!(memo.misses > misses_before);
+    }
+
+    #[test]
+    fn inadmissible_spec_is_a_config_error_at_bound_time() {
+        let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
+        let cache = cache_for("mlp", &cfg);
+        let sc = Scenario {
+            model: "mlp".into(),
+            parallelism: Parallelism::Data,
+            // Prime torus: parses (size is legal grammar) but cannot
+            // materialize — the bound surfaces the same typed error the
+            // simulation path would.
+            network: NetworkSpec::parse("torus2d:7x100g@500ns").unwrap(),
+            collective: CommSchedule::Pipelined,
+        };
+        let err = scenario_bound_ns(&sc, &cache, &cfg, &mut BoundMemo::new()).unwrap_err();
+        assert!(err.to_string().contains("factor"), "got: {err}");
+    }
+
+    #[test]
     fn unknown_model_is_a_config_error() {
         let cfg = SweepConfig::default();
         let cache = cache_for("mlp", &cfg);
         let sc = Scenario {
             model: "made-up".into(),
             parallelism: Parallelism::Data,
-            topology: TopologyKind::Ring,
-            collective: CollectiveAlgo::Pipelined,
+            network: NetworkSpec::from_kind(TopologyKind::Ring),
+            collective: CommSchedule::Pipelined,
         };
         assert!(scenario_bound_ns(&sc, &cache, &cfg, &mut BoundMemo::new()).is_err());
     }

@@ -902,7 +902,7 @@ fn lease_args(
 ) -> Vec<String> {
     let parallelisms: Vec<&str> =
         grid.parallelisms.iter().map(|&p| cli_parallelism_token(p)).collect();
-    let topologies: Vec<&str> = grid.topologies.iter().map(|&t| t.token()).collect();
+    let networks: Vec<&str> = grid.networks.iter().map(|n| n.label()).collect();
     let collectives: Vec<&str> = grid.collectives.iter().map(|&c| c.token()).collect();
     let scenario_list: Vec<String> = indices.iter().map(|i| i.to_string()).collect();
     let mut v = vec![
@@ -911,7 +911,7 @@ fn lease_args(
         "--parallelisms".to_string(),
         parallelisms.join(","),
         "--topologies".to_string(),
-        topologies.join(","),
+        networks.join(","),
         "--collectives".to_string(),
         collectives.join(","),
         "--npus".to_string(),
@@ -1201,11 +1201,14 @@ mod tests {
                 Parallelism::HybridModelData,
                 Parallelism::Pipeline,
             ],
-            topologies: vec![
-                crate::sim::TopologyKind::Ring,
-                crate::sim::TopologyKind::FullyConnected,
-                crate::sim::TopologyKind::Switch,
-                crate::sim::TopologyKind::Torus2D,
+            networks: vec![
+                crate::sim::NetworkSpec::from_kind(crate::sim::TopologyKind::Ring),
+                crate::sim::NetworkSpec::from_kind(crate::sim::TopologyKind::FullyConnected),
+                crate::sim::NetworkSpec::from_kind(crate::sim::TopologyKind::Switch),
+                crate::sim::NetworkSpec::parse(
+                    "ring:4x300g@700ns/rail:4x50g@2us+hd/switch:2x25g@5us+direct",
+                )
+                .unwrap(),
             ],
             collectives: vec![
                 super::super::CollectiveAlgo::Direct,
@@ -1240,7 +1243,10 @@ mod tests {
             );
         }
         for t in opt("--topologies").split(',') {
-            crate::sim::TopologyKind::from_token(t).unwrap();
+            // Every forwarded network label must round-trip through the
+            // NetworkSpec grammar the child CLI parses.
+            let spec = crate::sim::NetworkSpec::parse(t).unwrap();
+            assert_eq!(spec.label(), t);
         }
         for c in opt("--collectives").split(',') {
             super::super::CollectiveAlgo::from_token(c).unwrap();

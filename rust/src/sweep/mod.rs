@@ -91,18 +91,23 @@ use crate::error::{Error, Result};
 use crate::ir::{emit, passes};
 use crate::json::{obj, Value};
 use crate::sim::{
-    simulate_with, ChunkCfg, Network, PipelineSchedule, Policy, SimConfig, SimScratch,
+    simulate_with, ChunkCfg, NetworkSpec, PipelineSchedule, Policy, SimConfig, SimScratch,
     SystemConfig, TopologyKind,
 };
 use crate::translator::{CommPlan, MemoryOpts, TranslateOpts, ZeroStage};
 use crate::workload::{Parallelism, Workload};
 use std::collections::BTreeSet;
 
-/// Collective scheduling algorithm for a scenario — the system-layer
-/// knobs (chunked hierarchical pipelining + queue discipline) that
-/// ASTRA-sim exposes as its collective scheduler configuration.
+/// Communication *schedule* for a scenario — the system-layer knobs
+/// (chunked hierarchical pipelining + queue discipline) that ASTRA-sim
+/// exposes as its collective scheduler configuration. This is orthogonal
+/// to the per-dimension collective *algorithm*
+/// ([`crate::sim::CollectiveAlgo`], carried by the [`NetworkSpec`] axis):
+/// the algorithm prices one collective on one fabric dimension, the
+/// schedule decides how chunks of a hierarchical collective overlap
+/// across dimensions and in what order queued work drains.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum CollectiveAlgo {
+pub enum CommSchedule {
     /// Single-shot collectives (no chunk pipelining), FIFO queues.
     Direct,
     /// Chunk-pipelined hierarchical collectives (4 chunks), FIFO queues.
@@ -112,38 +117,43 @@ pub enum CollectiveAlgo {
     PipelinedLifo,
 }
 
-impl CollectiveAlgo {
+/// Deprecated alias for [`CommSchedule`] — the old name collided with
+/// the per-dimension [`crate::sim::CollectiveAlgo`] once the N-dim
+/// redesign made the actual collective algorithm an explicit axis.
+pub type CollectiveAlgo = CommSchedule;
+
+impl CommSchedule {
     /// Canonical config token.
     pub fn token(self) -> &'static str {
         match self {
-            CollectiveAlgo::Direct => "direct",
-            CollectiveAlgo::Pipelined => "pipelined",
-            CollectiveAlgo::PipelinedLifo => "pipelined-lifo",
+            CommSchedule::Direct => "direct",
+            CommSchedule::Pipelined => "pipelined",
+            CommSchedule::PipelinedLifo => "pipelined-lifo",
         }
     }
 
     /// Parse a config token.
-    pub fn from_token(s: &str) -> Result<CollectiveAlgo> {
+    pub fn from_token(s: &str) -> Result<CommSchedule> {
         Ok(match s {
-            "direct" => CollectiveAlgo::Direct,
-            "pipelined" => CollectiveAlgo::Pipelined,
-            "pipelined-lifo" | "lifo" => CollectiveAlgo::PipelinedLifo,
+            "direct" => CommSchedule::Direct,
+            "pipelined" => CommSchedule::Pipelined,
+            "pipelined-lifo" | "lifo" => CommSchedule::PipelinedLifo,
             other => {
-                return Err(Error::Config(format!("unknown collective algorithm '{other}'")))
+                return Err(Error::Config(format!("unknown collective schedule '{other}'")))
             }
         })
     }
 
-    /// The system-layer configuration this algorithm corresponds to.
+    /// The system-layer configuration this schedule corresponds to.
     pub fn system(self) -> SystemConfig {
         match self {
-            CollectiveAlgo::Direct => {
+            CommSchedule::Direct => {
                 SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks: 1 } }
             }
-            CollectiveAlgo::Pipelined => {
+            CommSchedule::Pipelined => {
                 SystemConfig { scheduling: Policy::Fifo, chunks: ChunkCfg { chunks: 4 } }
             }
-            CollectiveAlgo::PipelinedLifo => {
+            CommSchedule::PipelinedLifo => {
                 SystemConfig { scheduling: Policy::Lifo, chunks: ChunkCfg { chunks: 4 } }
             }
         }
@@ -157,10 +167,13 @@ pub struct Scenario {
     pub model: String,
     /// Parallelization strategy.
     pub parallelism: Parallelism,
-    /// Network topology (single-dimension fabric of `SweepConfig::npus`).
-    pub topology: TopologyKind,
-    /// Collective scheduling algorithm.
-    pub collective: CollectiveAlgo,
+    /// Network shape: an N-dimension [`NetworkSpec`], possibly with
+    /// per-dimension collective algorithms. Bare single-kind specs (the
+    /// pre-redesign topology tokens) materialize to a single-dimension
+    /// fabric of `SweepConfig::npus`.
+    pub network: NetworkSpec,
+    /// Communication schedule (chunking + queue discipline).
+    pub collective: CommSchedule,
 }
 
 impl Scenario {
@@ -171,7 +184,7 @@ impl Scenario {
             "{}/{}/{}/{}",
             self.model,
             self.parallelism.token(),
-            self.topology.token(),
+            self.network.label(),
             self.collective.token()
         )
     }
@@ -183,11 +196,14 @@ impl Scenario {
     /// differ from the joined [`Scenario::key`] string's order when one
     /// model name is a prefix of another (e.g. a future `gpt2` next to
     /// `gpt2-small`): `key()` is for identity/dedup, never for ordering.
-    pub fn rank_key(&self) -> (&str, &'static str, &'static str, &'static str) {
+    /// The network component is the canonical spec label, which for bare
+    /// legacy specs equals the old topology token — pre-redesign
+    /// rankings order identically.
+    pub fn rank_key(&self) -> (&str, &'static str, &str, &'static str) {
         (
             self.model.as_str(),
             self.parallelism.token(),
-            self.topology.token(),
+            self.network.label(),
             self.collective.token(),
         )
     }
@@ -201,14 +217,15 @@ pub struct SweepGrid {
     pub models: Vec<String>,
     /// Parallelism strategies.
     pub parallelisms: Vec<Parallelism>,
-    /// Topologies.
-    pub topologies: Vec<TopologyKind>,
-    /// Collective algorithms.
-    pub collectives: Vec<CollectiveAlgo>,
+    /// Network specs (each a full N-dim topology × per-dim algorithm
+    /// choice — the co-design axis).
+    pub networks: Vec<NetworkSpec>,
+    /// Communication schedules.
+    pub collectives: Vec<CommSchedule>,
 }
 
 impl Default for SweepGrid {
-    /// The CLI's default grid: 2 models × 3 strategies × 3 topologies —
+    /// The CLI's default grid: 2 models × 3 strategies × 3 networks —
     /// 18 scenarios sharing 2 translations.
     fn default() -> Self {
         SweepGrid {
@@ -218,12 +235,12 @@ impl Default for SweepGrid {
                 Parallelism::Model,
                 Parallelism::HybridDataModel,
             ],
-            topologies: vec![
-                TopologyKind::Ring,
-                TopologyKind::FullyConnected,
-                TopologyKind::Switch,
+            networks: vec![
+                NetworkSpec::from_kind(TopologyKind::Ring),
+                NetworkSpec::from_kind(TopologyKind::FullyConnected),
+                NetworkSpec::from_kind(TopologyKind::Switch),
             ],
-            collectives: vec![CollectiveAlgo::Pipelined],
+            collectives: vec![CommSchedule::Pipelined],
         }
     }
 }
@@ -236,12 +253,12 @@ impl SweepGrid {
         let mut out = Vec::new();
         for m in &self.models {
             for &p in &self.parallelisms {
-                for &t in &self.topologies {
+                for t in &self.networks {
                     for &c in &self.collectives {
                         let sc = Scenario {
                             model: m.clone(),
                             parallelism: p,
-                            topology: t,
+                            network: t.clone(),
                             collective: c,
                         };
                         if seen.insert(sc.key()) {
@@ -354,6 +371,11 @@ impl SweepConfig {
             // Prune mode is result-shaping: a pruned report ranks only K
             // scenarios, so it must never merge with exhaustive shards.
             ("top_k", self.top_k.map_or(Value::Null, |k| Value::Num(k as f64))),
+            // Network-axis grammar version. Bumped by the N-dim co-design
+            // redesign (topology tokens → NetworkSpec labels): a report
+            // written before the bump must never merge with one written
+            // after, even when every label happens to coincide.
+            ("net_grammar", Value::Num(2.0)),
         ])
     }
 }
@@ -385,7 +407,7 @@ pub(crate) fn grid_digest(scenarios: &[Scenario]) -> String {
         h = crate::util::fnv1a_extend(h, b"/");
         h = crate::util::fnv1a_extend(h, sc.parallelism.token().as_bytes());
         h = crate::util::fnv1a_extend(h, b"/");
-        h = crate::util::fnv1a_extend(h, sc.topology.token().as_bytes());
+        h = crate::util::fnv1a_extend(h, sc.network.label().as_bytes());
         h = crate::util::fnv1a_extend(h, b"/");
         h = crate::util::fnv1a_extend(h, sc.collective.token().as_bytes());
         h = crate::util::fnv1a_extend(h, b"\n");
@@ -458,7 +480,11 @@ fn run_scenario(
     emit::workload_into(ir, &scratch.comms, opts.parallelism, &mut scratch.workload)?;
     let (stages, microbatches, boundary_bytes) = scenario_pipeline_shape(ir.summary(), cfg);
     let sim_cfg = SimConfig {
-        network: Network::single(sc.topology, cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns),
+        // Unspecified dimension fields take the sweep-wide defaults, so a
+        // bare legacy spec materializes to exactly the old
+        // `Network::single` fabric. Admissibility (and the torus
+        // factorability check) is enforced here per scenario.
+        network: sc.network.materialize(cfg.npus, cfg.bandwidth_gbps, cfg.latency_ns)?,
         system: sc.collective.system(),
         iterations: cfg.iterations,
         stages,
@@ -811,7 +837,7 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into(), "mlp".into(), "resnet18".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring],
+            networks: vec![NetworkSpec::from_kind(TopologyKind::Ring)],
             collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Direct],
         };
         let scenarios = grid.expand();
@@ -862,7 +888,7 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring],
+            networks: vec![NetworkSpec::from_kind(TopologyKind::Ring)],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let base = SweepConfig { batch: 4, npus: 8, ..Default::default() };
@@ -890,7 +916,10 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into(), "resnet18".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            networks: vec![
+                NetworkSpec::from_kind(TopologyKind::Ring),
+                NetworkSpec::from_kind(TopologyKind::Switch),
+            ],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let base = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };
@@ -911,7 +940,7 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into()],
             parallelisms: vec![Parallelism::Data],
-            topologies: vec![TopologyKind::Ring],
+            networks: vec![NetworkSpec::from_kind(TopologyKind::Ring)],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let cfg = SweepConfig { batch: 4, npus: 8, shard: Some((2, 2)), ..Default::default() };
@@ -935,7 +964,10 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            networks: vec![
+                NetworkSpec::from_kind(TopologyKind::Ring),
+                NetworkSpec::from_kind(TopologyKind::Switch),
+            ],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
@@ -954,7 +986,10 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into(), "resnet18".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            networks: vec![
+                NetworkSpec::from_kind(TopologyKind::Ring),
+                NetworkSpec::from_kind(TopologyKind::Switch),
+            ],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let cfg = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };
@@ -986,7 +1021,7 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring],
+            networks: vec![NetworkSpec::from_kind(TopologyKind::Ring)],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let cfg = SweepConfig { batch: 4, npus: 8, ..Default::default() };
@@ -1004,7 +1039,10 @@ mod tests {
         let grid = SweepGrid {
             models: vec!["mlp".into(), "resnet18".into()],
             parallelisms: vec![Parallelism::Data, Parallelism::Model],
-            topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+            networks: vec![
+                NetworkSpec::from_kind(TopologyKind::Ring),
+                NetworkSpec::from_kind(TopologyKind::Switch),
+            ],
             collectives: vec![CollectiveAlgo::Pipelined],
         };
         let base = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };

@@ -7,10 +7,10 @@
 //! included — so a 1-thread run and an N-thread run of the same grid
 //! produce byte-identical output.
 
-use super::{CollectiveAlgo, Scenario};
+use super::{CommSchedule, Scenario};
 use crate::error::{Error, Result};
 use crate::json::{obj, Value};
-use crate::sim::TopologyKind;
+use crate::sim::NetworkSpec;
 use crate::util::table::Table;
 use crate::util::{human_bytes, human_time};
 use crate::workload::Parallelism;
@@ -210,7 +210,9 @@ impl SweepReport {
                     ("rank", Value::Num((i + 1) as f64)),
                     ("model", Value::Str(r.scenario.model.clone())),
                     ("parallelism", Value::Str(r.scenario.parallelism.token().into())),
-                    ("topology", Value::Str(r.scenario.topology.token().into())),
+                    // The "topology" field carries the canonical NetworkSpec label
+                    // (for bare legacy specs this is the old topology token).
+                    ("topology", Value::Str(r.scenario.network.label().to_string())),
                     ("collective", Value::Str(r.scenario.collective.token().into())),
                     ("iteration_ns", Value::Num(r.iteration_ns as f64)),
                     ("total_ns", Value::Num(r.total_ns as f64)),
@@ -268,8 +270,8 @@ impl SweepReport {
             let scenario = Scenario {
                 model: r.req_str("model")?.to_string(),
                 parallelism: Parallelism::from_token(r.req_str("parallelism")?)?,
-                topology: TopologyKind::from_token(r.req_str("topology")?)?,
-                collective: CollectiveAlgo::from_token(r.req_str("collective")?)?,
+                network: NetworkSpec::parse(r.req_str("topology")?)?,
+                collective: CommSchedule::from_token(r.req_str("collective")?)?,
             };
             let fits_hbm = r
                 .get("fits_hbm")
@@ -531,7 +533,7 @@ impl SweepReport {
                 (i + 1).to_string(),
                 r.scenario.model.clone(),
                 r.scenario.parallelism.token().to_string(),
-                r.scenario.topology.token().to_string(),
+                r.scenario.network.label().to_string(),
                 r.scenario.collective.token().to_string(),
                 human_time(r.iteration_ns as f64 * 1e-9),
                 format!("{:.1}%", r.compute_utilization * 100.0),
@@ -760,7 +762,7 @@ mod tests {
             scenario: Scenario {
                 model: model.into(),
                 parallelism: Parallelism::Data,
-                topology: TopologyKind::Ring,
+                network: NetworkSpec::from_kind(TopologyKind::Ring),
                 collective: CollectiveAlgo::Pipelined,
             },
             iteration_ns: ns,

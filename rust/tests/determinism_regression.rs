@@ -9,8 +9,8 @@
 //! ranked-JSON guarantee across worker-thread counts.
 
 use modtrans::sim::{
-    collective_ns, simulate, simulate_with, Engine, Network, Policy, SimConfig, SimScratch,
-    TaskGraph, TaskTag, TopologyKind,
+    collective_ns, simulate, simulate_with, Engine, Network, NetworkSpec, Policy, SimConfig,
+    SimScratch, TaskGraph, TaskTag, TopologyKind,
 };
 use modtrans::sweep::{run_sweep, CollectiveAlgo, SweepConfig, SweepGrid};
 use modtrans::workload::{CommType, LayerSpec, Parallelism, Phase, Workload};
@@ -77,7 +77,7 @@ fn golden_flat_serial_chain_makespan() {
 fn golden_dp_allreduce_overlap_makespan() {
     let bytes = 1u64 << 20;
     let cfg = ring_cfg(8, 1);
-    let c = collective_ns(CommType::AllReduce, bytes, &cfg.network.dims[0]);
+    let c = collective_ns(CommType::AllReduce, bytes, cfg.network.dims[0].algo, &cfg.network.dims[0]);
     assert!(c > 25, "payload too small for the overlap shape this golden pins");
     let w = Workload {
         parallelism: Parallelism::Data,
@@ -245,7 +245,7 @@ fn top_k_sweep_json_is_byte_identical_across_threads() {
     let grid = SweepGrid {
         models: vec!["mlp".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::Switch)],
         collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
     };
     let cfg = |threads: usize| SweepConfig {
@@ -272,7 +272,7 @@ fn sweep_ranked_json_is_byte_identical_across_threads_and_reruns() {
     let grid = SweepGrid {
         models: vec!["mlp".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::Switch)],
         collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
     };
     let cfg = |threads: usize| SweepConfig { threads, batch: 4, npus: 8, ..Default::default() };

@@ -10,7 +10,7 @@
 //! * a journal recorded for a different config or grid is rejected, and
 //!   reusing a journal directory without `--resume` is refused.
 
-use modtrans::sim::TopologyKind;
+use modtrans::sim::{NetworkSpec, TopologyKind};
 use modtrans::sweep::{
     run_fleet, run_sweep, CollectiveAlgo, FleetOpts, SweepConfig, SweepGrid, SweepReport,
 };
@@ -27,7 +27,7 @@ fn grid() -> SweepGrid {
     SweepGrid {
         models: vec!["mlp".into(), "alexnet".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::Switch)],
         collectives: vec![CollectiveAlgo::Pipelined],
     }
 }

@@ -18,7 +18,7 @@
 //!
 //! (Journal + `--resume` coverage lives in `tests/fleet_resume.rs`.)
 
-use modtrans::sim::TopologyKind;
+use modtrans::sim::{NetworkSpec, TopologyKind};
 use modtrans::sweep::{
     run_fleet, run_sweep, CollectiveAlgo, FleetOpts, SweepConfig, SweepGrid, SweepReport,
 };
@@ -37,7 +37,7 @@ fn grid() -> SweepGrid {
     SweepGrid {
         models: vec!["mlp".into(), "alexnet".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::Switch)],
         collectives: vec![CollectiveAlgo::Pipelined],
     }
 }
@@ -330,7 +330,7 @@ fn single_process_fleet_and_more_procs_than_scenarios_both_work() {
     let grid = SweepGrid {
         models: vec!["mlp".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring)],
         collectives: vec![CollectiveAlgo::Pipelined],
     };
     let cfg = cfg();

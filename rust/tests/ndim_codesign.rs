@@ -1,0 +1,202 @@
+//! N-dimension topology × per-dimension collective-algorithm co-design:
+//! the acceptance suite for the typed `NetworkSpec` API redesign.
+//!
+//! Pins the four contracts the redesign must keep:
+//! * legacy constructions (bare tokens, `dims`-form config JSON) are
+//!   byte-identical through the new spec grammar — deprecated aliases
+//!   included;
+//! * report labels for legacy grids are exactly the pre-redesign tokens
+//!   and reports round-trip through JSON;
+//! * a ≥3-dimension grid with per-dimension algorithm choice sweeps
+//!   deterministically across thread counts;
+//! * algorithm × topology admissibility is enforced at every config
+//!   boundary (spec parse, config JSON, simulate), never inside the
+//!   per-collective cost function.
+
+use modtrans::compute::SystolicCompute;
+use modtrans::sim::{
+    simulate, CollectiveAlgo, NetDim, Network, NetworkSpec, SimConfig, TopologyKind,
+};
+use modtrans::sweep::{run_sweep, CommSchedule, SweepConfig, SweepGrid, SweepReport};
+use modtrans::translator::{extract, to_workload, TranslateOpts};
+use modtrans::workload::{Parallelism, Workload};
+use modtrans::zoo::{self, WeightFill, ZooOpts};
+use std::path::PathBuf;
+
+fn assert_same_network(a: &Network, b: &Network, what: &str) {
+    assert_eq!(a.dims.len(), b.dims.len(), "{what}: dimension count");
+    for (i, (x, y)) in a.dims.iter().zip(b.dims.iter()).enumerate() {
+        assert_eq!(x.kind, y.kind, "{what}: dim {i} kind");
+        assert_eq!(x.algo, y.algo, "{what}: dim {i} algo");
+        assert_eq!(x.npus, y.npus, "{what}: dim {i} npus");
+        assert_eq!(x.bandwidth_gbps, y.bandwidth_gbps, "{what}: dim {i} bandwidth");
+        assert_eq!(x.latency_ns, y.latency_ns, "{what}: dim {i} latency");
+    }
+}
+
+fn mlp_workload(parallelism: Parallelism) -> Workload {
+    let model = zoo::get("mlp", ZooOpts { weights: WeightFill::Empty }).unwrap();
+    let summary = extract(&model, 4).unwrap();
+    let opts = TranslateOpts { parallelism, npus: 16, ..Default::default() };
+    to_workload(&summary, opts, &SystolicCompute::new(4)).unwrap()
+}
+
+#[test]
+fn legacy_constructions_are_identical_through_the_spec_grammar() {
+    // Every legacy topology token (canonical and alias spellings)
+    // materializes to exactly the pre-redesign Network::single.
+    for (token, kind) in [
+        ("ring", TopologyKind::Ring),
+        ("fully_connected", TopologyKind::FullyConnected),
+        ("fc", TopologyKind::FullyConnected),
+        ("switch", TopologyKind::Switch),
+        ("torus2d", TopologyKind::Torus2D),
+    ] {
+        let via_spec = NetworkSpec::parse(token).unwrap().materialize(16, 100.0, 500.0).unwrap();
+        let legacy = Network::single(kind, 16, 100.0, 500.0);
+        assert_same_network(&via_spec, &legacy, token);
+    }
+    // The dims-form config JSON (deprecated) and the spec form build the
+    // same network, and re-serialization emits the spec form.
+    let dims_form = modtrans::json::parse(
+        r#"{"dims": [
+            {"topology": "ring", "npus": 8, "bandwidth_gbps": 300, "latency_ns": 700},
+            {"topology": "switch", "npus": 4, "bandwidth_gbps": 25, "latency_ns": 5000}
+        ]}"#,
+    )
+    .unwrap();
+    let spec_form =
+        modtrans::json::parse(r#"{"spec": "ring:8x300g@700ns/switch:4x25g@5us"}"#).unwrap();
+    let a = Network::from_json(&dims_form).unwrap();
+    let b = Network::from_json(&spec_form).unwrap();
+    assert_same_network(&a, &b, "dims vs spec config form");
+    let round = Network::from_json(&a.to_json()).unwrap();
+    assert_same_network(&a, &round, "to_json round trip");
+}
+
+#[test]
+fn legacy_grid_report_labels_are_the_pre_redesign_tokens() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model],
+        networks: vec![
+            NetworkSpec::from_kind(TopologyKind::Ring),
+            NetworkSpec::from_kind(TopologyKind::FullyConnected),
+            NetworkSpec::from_kind(TopologyKind::Switch),
+        ],
+        collectives: vec![CommSchedule::Pipelined],
+    };
+    let cfg = SweepConfig { batch: 4, npus: 8, threads: 2, ..Default::default() };
+    let report = run_sweep(&grid, &cfg).unwrap();
+    let json = report.to_json();
+    let rows = json.get("ranked").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(rows.len(), grid.expand().len());
+    for row in rows {
+        let label = row.get("topology").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            ["ring", "fully_connected", "switch"].contains(&label),
+            "legacy grid leaked a non-legacy label: {label}"
+        );
+    }
+    // The JSON report round-trips losslessly through the spec grammar.
+    let back = SweepReport::from_json(&json).unwrap();
+    assert_eq!(back.to_json().to_json_pretty(), json.to_json_pretty());
+}
+
+#[test]
+fn three_dim_codesign_grid_is_deterministic_across_thread_counts() {
+    let grid = SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into()],
+        parallelisms: vec![Parallelism::Data, Parallelism::Model, Parallelism::Pipeline],
+        networks: vec![
+            NetworkSpec::parse("ring:4x300g@700ns/rail:2x50g@2us/switch:2x25g@5us").unwrap(),
+            NetworkSpec::parse("ring:4x300g@700ns/rail:2x50g@2us+ring/switch:2x25g@5us+direct")
+                .unwrap(),
+            NetworkSpec::parse("ring:4x300g@700ns/dragonfly:4x25g@3500ns+hd").unwrap(),
+        ],
+        collectives: vec![CommSchedule::Direct, CommSchedule::Pipelined],
+    };
+    let one = run_sweep(&grid, &SweepConfig { batch: 4, npus: 16, threads: 1, ..Default::default() })
+        .unwrap();
+    let eight =
+        run_sweep(&grid, &SweepConfig { batch: 4, npus: 16, threads: 8, ..Default::default() })
+            .unwrap();
+    assert_eq!(
+        one.to_json().to_json_pretty(),
+        eight.to_json().to_json_pretty(),
+        "3-dimension co-design sweep must not depend on thread count"
+    );
+    // Scenario labels carry the canonical per-dimension algorithms, so
+    // the same fabric under different algorithms ranks as distinct rows.
+    let labels: Vec<&str> =
+        one.ranked.iter().map(|r| r.scenario.network.label()).collect();
+    assert!(labels.contains(&"ring:4x300g@700ns/rail:2x50g@2us+ring/switch:2x25g@5us+direct"));
+    assert!(labels.contains(&"ring:4x300g@700ns/dragonfly:4x25g@3500ns+hd"));
+}
+
+#[test]
+fn simulating_a_three_dim_fabric_loads_every_dimension() {
+    let w = mlp_workload(Parallelism::Data);
+    let net = NetworkSpec::parse("ring:4x300g@700ns/rail:2x50g@2us/switch:2x25g@5us")
+        .unwrap()
+        .to_network()
+        .unwrap();
+    let cfg = SimConfig { network: net, iterations: 2, ..Default::default() };
+    let r = simulate(&w, &cfg).unwrap();
+    assert_eq!(r.net_busy_ns.len(), 3, "one busy counter per network dimension");
+    for (i, busy) in r.net_busy_ns.iter().enumerate() {
+        assert!(
+            *busy > 0,
+            "dim {i} idle: the hierarchical all-reduce must touch every dimension"
+        );
+    }
+}
+
+#[test]
+fn admissibility_is_enforced_at_every_config_boundary() {
+    // Spec parse rejects an explicitly inadmissible pairing.
+    assert!(NetworkSpec::parse("torus2d:16x100g@500ns+direct").is_err());
+    // Config JSON rejects it in both forms.
+    let spec_form =
+        modtrans::json::parse(r#"{"spec": "ring:8x300g@700ns+hd"}"#).unwrap();
+    assert!(Network::from_json(&spec_form).is_err());
+    let dims_form = modtrans::json::parse(
+        r#"{"dims": [{"topology": "torus2d", "npus": 16, "bandwidth_gbps": 100,
+                      "latency_ns": 500, "algo": "direct"}]}"#,
+    )
+    .unwrap();
+    assert!(Network::from_json(&dims_form).is_err());
+    // A hand-built inadmissible network is caught at the simulate
+    // boundary (the same place ir::verify-style checks run), not inside
+    // the cost model.
+    let w = mlp_workload(Parallelism::Data);
+    let mut dim = NetDim::new(TopologyKind::Torus2D, 16, 100.0, 500.0);
+    dim.algo = CollectiveAlgo::Direct;
+    let cfg = SimConfig { network: Network { dims: vec![dim] }, ..Default::default() };
+    let err = simulate(&w, &cfg).unwrap_err();
+    assert!(err.to_string().contains("admissible"), "{err}");
+    // Non-factorable (prime) torus dimensions are typed config errors
+    // that name the size.
+    let mut prime = NetDim::new(TopologyKind::Torus2D, 7, 100.0, 500.0);
+    prime.algo = CollectiveAlgo::DimOrdered;
+    let cfg = SimConfig { network: Network { dims: vec![prime] }, ..Default::default() };
+    let err = simulate(&w, &cfg).unwrap_err();
+    assert!(err.to_string().contains('7'), "{err}");
+}
+
+#[test]
+fn shipped_ndim_example_config_loads_and_validates() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/ndim_codesign.json");
+    let doc = modtrans::json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let net = Network::from_json(&doc).unwrap();
+    assert_eq!(net.dims.len(), 3);
+    assert_eq!(net.dims[0].kind, TopologyKind::Ring);
+    assert_eq!(net.dims[1].kind, TopologyKind::RailOptimized);
+    assert_eq!(net.dims[1].algo, CollectiveAlgo::HalvingDoubling, "rail defaults to hd");
+    assert_eq!(net.dims[2].algo, CollectiveAlgo::Direct, "explicit +direct suffix");
+    // The canonical label round-trips through re-serialization.
+    let label = NetworkSpec::from_network(&net).label().to_string();
+    assert_eq!(label, "ring:4x300g@700ns/rail:4x50g@2us/switch:2x25g@5us+direct");
+    let round = Network::from_json(&net.to_json()).unwrap();
+    assert_eq!(NetworkSpec::from_network(&round).label(), label);
+}

@@ -4,7 +4,7 @@
 //! ranking's first K rows, under any thread count, and through the
 //! process-level `sweep fleet` orchestrator.
 
-use modtrans::sim::TopologyKind;
+use modtrans::sim::{NetworkSpec, TopologyKind};
 use modtrans::sweep::{
     build_sweep_cache, run_fleet, run_sweep, scenario_bound_ns, BoundMemo, CollectiveAlgo,
     FleetOpts, SweepConfig, SweepGrid, SweepReport,
@@ -35,7 +35,7 @@ fn bound_is_admissible_across_zoo_models_strategies_and_batches() {
     let grid = SweepGrid {
         models: vec!["mlp".into(), "alexnet".into(), "gpt2-tiny".into()],
         parallelisms: ALL_PARALLELISMS.to_vec(),
-        topologies: vec![TopologyKind::Ring, TopologyKind::FullyConnected],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::FullyConnected)],
         collectives: vec![CollectiveAlgo::Pipelined],
     };
     for batch in [4i64, 32] {
@@ -63,10 +63,10 @@ fn top_k_is_byte_identical_to_the_exhaustive_prefix_under_1_and_8_threads() {
     let grid = SweepGrid {
         models: vec!["mlp".into(), "alexnet".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model, Parallelism::Pipeline],
-        topologies: vec![
-            TopologyKind::Ring,
-            TopologyKind::FullyConnected,
-            TopologyKind::Switch,
+        networks: vec![
+            NetworkSpec::from_kind(TopologyKind::Ring),
+            NetworkSpec::from_kind(TopologyKind::FullyConnected),
+            NetworkSpec::from_kind(TopologyKind::Switch),
         ],
         collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
     };
@@ -101,11 +101,85 @@ fn top_k_is_byte_identical_to_the_exhaustive_prefix_under_1_and_8_threads() {
 }
 
 #[test]
+fn top_k_is_exact_on_a_three_dimension_grid_with_per_dimension_algorithms() {
+    // The co-design axis end to end: 3-dimension hierarchical fabrics
+    // whose dimensions carry explicit collective algorithms, next to a
+    // bare legacy token — one network axis, one bound contract. The
+    // analytic bound must stay admissible per algorithm (it routes
+    // across dimensions exactly like the simulator's hierarchical
+    // chunked all-reduce), and `--top K` must stay byte-exact across
+    // thread counts.
+    let grid = SweepGrid {
+        models: vec!["mlp".into(), "alexnet".into()],
+        parallelisms: ALL_PARALLELISMS.to_vec(),
+        networks: vec![
+            NetworkSpec::from_kind(TopologyKind::Ring),
+            // A slow 4-port switch tier: its all-reduce is serialization-
+            // bound, so halving-doubling (default) vs direct exchange is
+            // visible end to end, not hidden by compute overlap.
+            NetworkSpec::parse("ring:2x300g@700ns/rail:2x50g@2us/switch:4x1g@5us").unwrap(),
+            NetworkSpec::parse("ring:2x300g@700ns/rail:2x50g@2us+hd/switch:4x1g@5us+direct")
+                .unwrap(),
+            NetworkSpec::parse("ring:2x300g@700ns/fully_connected:2x50g@2us+ring/dragonfly:2x25g@5us")
+                .unwrap(),
+        ],
+        collectives: vec![CollectiveAlgo::Pipelined],
+    };
+    let n = grid.expand().len();
+    let base = SweepConfig { batch: 4, npus: 8, threads: 1, ..Default::default() };
+    let full = run_sweep(&grid, &base).unwrap();
+    assert_eq!(full.ranked.len(), n);
+    // Admissibility over every (scenario × per-dimension algorithm).
+    let cache = build_sweep_cache(&grid.unique_models(), &base, None).unwrap();
+    let mut memo = BoundMemo::new();
+    for r in &full.ranked {
+        let bound = scenario_bound_ns(&r.scenario, &cache, &base, &mut memo).unwrap();
+        assert!(
+            bound > 0 && bound <= r.iteration_ns,
+            "inadmissible bound for {}: bound {} ns vs simulated {} ns",
+            r.scenario.key(),
+            bound,
+            r.iteration_ns
+        );
+    }
+    // Exact pruning, byte for byte, across thread counts.
+    let full_rows = ranked_rows(&full);
+    for threads in [1usize, 8] {
+        for k in [1usize, 5] {
+            let cfg = SweepConfig { threads, top_k: Some(k), ..base };
+            let top = run_sweep(&grid, &cfg).unwrap();
+            assert_eq!(
+                ranked_rows(&top),
+                full_rows[..k.min(n)],
+                "co-design top-{k} on {threads} thread(s) diverged"
+            );
+            assert_eq!(top.scenarios_simulated + top.scenarios_pruned, n);
+        }
+    }
+    // The algorithm axis is live: the same fabric shape under different
+    // per-dimension algorithms must not collapse to one ranking row.
+    let hd_direct = "ring:2x300g@700ns/rail:2x50g@2us+hd/switch:4x1g@5us+direct";
+    let defaults = "ring:2x300g@700ns/rail:2x50g@2us/switch:4x1g@5us";
+    let find = |label: &str| {
+        full.ranked
+            .iter()
+            .find(|r| r.scenario.network.label() == label && r.scenario.parallelism == Parallelism::Data && r.scenario.model == "alexnet")
+            .map(|r| r.iteration_ns)
+            .expect("scenario present")
+    };
+    assert_ne!(
+        find(hd_direct),
+        find(defaults),
+        "per-dimension algorithm choice changed nothing end to end"
+    );
+}
+
+#[test]
 fn fleet_top_k_matches_the_monolithic_exhaustive_prefix() {
     let grid = SweepGrid {
         models: vec!["mlp".into(), "alexnet".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::Switch)],
         collectives: vec![CollectiveAlgo::Pipelined],
     };
     let n = grid.expand().len();

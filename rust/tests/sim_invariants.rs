@@ -124,7 +124,7 @@ fn conservation_network_busy_equals_collective_cost() {
         .layers
         .iter()
         .map(|l| {
-            collective_ns(l.weight_grad.comm, l.weight_grad.comm_bytes, &c.network.dims[0])
+            collective_ns(l.weight_grad.comm, l.weight_grad.comm_bytes, c.network.dims[0].algo, &c.network.dims[0])
         })
         .sum();
     assert_eq!(r.net_busy_ns[0], per_iter * 2);

@@ -2,7 +2,7 @@
 //! complete, translate each model exactly once, and produce
 //! thread-count-independent ranked output.
 
-use modtrans::sim::TopologyKind;
+use modtrans::sim::{NetworkSpec, TopologyKind};
 use modtrans::sweep::{
     run_sweep, run_sweep_cached, CollectiveAlgo, SweepConfig, SweepGrid, SweepReport,
     WorkloadCache,
@@ -13,7 +13,7 @@ fn grid_2x2() -> SweepGrid {
     SweepGrid {
         models: vec!["mlp".into(), "resnet18".into()],
         parallelisms: vec![Parallelism::Data, Parallelism::Model],
-        topologies: vec![TopologyKind::Ring, TopologyKind::Switch],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring), NetworkSpec::from_kind(TopologyKind::Switch)],
         collectives: vec![CollectiveAlgo::Pipelined],
     }
 }
@@ -64,10 +64,10 @@ fn cache_reuse_scales_with_scenarios_not_models() {
             Parallelism::Model,
             Parallelism::HybridDataModel,
         ],
-        topologies: vec![
-            TopologyKind::Ring,
-            TopologyKind::FullyConnected,
-            TopologyKind::Switch,
+        networks: vec![
+            NetworkSpec::from_kind(TopologyKind::Ring),
+            NetworkSpec::from_kind(TopologyKind::FullyConnected),
+            NetworkSpec::from_kind(TopologyKind::Switch),
         ],
         collectives: vec![CollectiveAlgo::Direct, CollectiveAlgo::Pipelined],
     };
@@ -126,7 +126,7 @@ fn pipeline_scenarios_simulate_too() {
     let grid = SweepGrid {
         models: vec!["mlp".into()],
         parallelisms: vec![Parallelism::Pipeline],
-        topologies: vec![TopologyKind::Ring],
+        networks: vec![NetworkSpec::from_kind(TopologyKind::Ring)],
         collectives: vec![CollectiveAlgo::Pipelined],
     };
     let report = run_sweep(&grid, &cfg(2)).unwrap();
